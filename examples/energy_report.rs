@@ -1,0 +1,51 @@
+//! Energy report (paper Section 4.3): MTEPS/W across hardware configs,
+//! including the paper's "add a GPU beats adding a CPU" comparison.
+//!
+//!     cargo run --release --example energy_report
+
+use anyhow::Result;
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::PolicyKind;
+use totem_do::util::tables::{fmt_teps, Table};
+
+fn main() -> Result<()> {
+    let g = bs::kron_graph(bs::bench_scale(), 42);
+    let roots = bs::roots_for(&g, bs::bench_roots(), 13);
+    println!(
+        "workload: kron scale {} ({} vertices, {} undirected edges), {} roots\n",
+        bs::bench_scale(),
+        g.num_vertices,
+        g.num_undirected_edges(),
+        roots.len()
+    );
+
+    let mut t = Table::new(vec!["config", "TEPS (modeled)", "MTEPS/W", "vs 2S"]);
+    let base = bs::run_config(&g, "2S", PolicyKind::direction_optimized(), &roots)?;
+    for label in ["1S", "2S", "1S1G", "2S1G", "1S2G", "2S2G", "4S"] {
+        let r = bs::run_config(&g, label, PolicyKind::direction_optimized(), &roots)?;
+        t.row(vec![
+            label.to_string(),
+            fmt_teps(r.teps),
+            format!("{:.2}", r.mteps_per_watt),
+            format!("{:.2}x", r.mteps_per_watt / base.mteps_per_watt),
+        ]);
+    }
+    t.print();
+
+    println!("\nThe paper's Section 4.3 claims, checked on this workload:");
+    let s2g1 = bs::run_config(&g, "2S1G", PolicyKind::direction_optimized(), &roots)?;
+    let s4 = bs::run_config(&g, "4S", PolicyKind::direction_optimized(), &roots)?;
+    let s2g2 = bs::run_config(&g, "2S2G", PolicyKind::direction_optimized(), &roots)?;
+    println!(
+        "  add a GPU vs add 2 CPUs: 2S1G {:.2} MTEPS/W vs 4S {:.2} MTEPS/W -> {}",
+        s2g1.mteps_per_watt,
+        s4.mteps_per_watt,
+        if s2g1.mteps_per_watt > s4.mteps_per_watt { "GPU wins (paper agrees)" } else { "CPU wins (paper disagrees)" }
+    );
+    println!(
+        "  hybrid vs CPU-only efficiency: 2S2G/2S = {:.2}x (paper: ~2x)",
+        s2g2.mteps_per_watt / base.mteps_per_watt
+    );
+    Ok(())
+}

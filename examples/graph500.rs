@@ -1,0 +1,118 @@
+//! End-to-end Graph500-style campaign — the repository's full-system
+//! driver: Kronecker generation, specialized partitioning, the AOT Pallas
+//! kernels via PJRT (when `make artifacts` has run), 64 validated searches,
+//! harmonic-mean TEPS and GreenGraph500 MTEPS/W.
+//!
+//!     cargo run --release --example graph500 [-- scale [config] [roots]]
+//!
+//! Defaults: scale 18, config 2S2G, 64 roots. Exercises all three layers:
+//! the Rust coordinator, the JAX-lowered HLO, and the PJRT runtime.
+
+use anyhow::Result;
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::{validate_graph500, HybridConfig, HybridRunner};
+use totem_do::engine::{Accelerator, SimAccelerator};
+use totem_do::metrics;
+use totem_do::partition::{specialized_partition, LayoutOptions};
+use totem_do::runtime::{
+    default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator,
+};
+use totem_do::util::tables::{fmt_teps, fmt_time, Table};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: u32 = args.first().and_then(|s| s.parse().ok()).unwrap_or(18);
+    let config = args.get(1).cloned().unwrap_or_else(|| "2S2G".to_string());
+    let nroots: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    println!("== Graph500-style campaign: scale {scale}, {config}, {nroots} roots ==");
+    let t_gen = std::time::Instant::now();
+    let g = bs::kron_graph(scale, 42);
+    println!(
+        "generation+construction: {} ({} vertices, {} undirected edges)",
+        fmt_time(t_gen.elapsed().as_secs_f64()),
+        g.num_vertices,
+        g.num_undirected_edges()
+    );
+
+    let hw = bs::hardware(&config);
+    let (pg, plan) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+    println!(
+        "partitioning: threshold deg<={}, accelerator share {:.1}% of non-singletons",
+        plan.degree_threshold,
+        100.0 * plan.gpu_vertices as f64 / plan.non_singleton.max(1) as f64
+    );
+
+    // Accelerator: PJRT artifacts when available, Sim mirror otherwise.
+    let mut sim;
+    let mut pjrt;
+    // This example is the flagship end-to-end driver: it prefers the real
+    // AOT/PJRT path whenever artifacts exist (TOTEM_DO_BENCH_ACCEL=sim
+    // overrides for a quick run).
+    let prefer_pjrt = std::env::var("TOTEM_DO_BENCH_ACCEL").as_deref() != Ok("sim")
+        && default_artifact_dir().join("manifest.txt").exists();
+    let accel: Option<&mut dyn Accelerator> = if hw.gpus == 0 {
+        None
+    } else if prefer_pjrt {
+        println!("accelerator: PJRT (AOT artifacts from {})", default_artifact_dir().display());
+        pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices)?;
+        Some(&mut pjrt)
+    } else {
+        println!("accelerator: Sim mirror (run `make artifacts` for the PJRT path)");
+        sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        Some(&mut sim)
+    };
+
+    let roots = bs::roots_for(&g, nroots, 7);
+    let device = DeviceModel::default();
+    let energy = EnergyModel::default();
+    let mut runner = HybridRunner::new(&pg, HybridConfig::default(), accel)?;
+
+    let mut teps_model = Vec::new();
+    let mut teps_wall = Vec::new();
+    let mut eff = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (i, &root) in roots.iter().enumerate() {
+        let run = runner.run(root)?;
+        validate_graph500(&g, root, &run.parent, &run.depth).map_err(anyhow::Error::msg)?;
+        let t = device.attribute(&run, &pg, false);
+        let e = energy.energy(&t, &pg);
+        teps_model.push(metrics::teps(run.traversed_edges(), t.total));
+        teps_wall.push(metrics::teps(run.traversed_edges(), run.wall.as_secs_f64()));
+        eff.push(mteps_per_watt(run.traversed_edges(), &e));
+        if (i + 1) % 16 == 0 {
+            println!("  {}/{} searches validated...", i + 1, roots.len());
+        }
+    }
+    let wall_total = t0.elapsed().as_secs_f64();
+
+    let sm = metrics::summarize(&teps_model, wall_total);
+    let sw = metrics::summarize(&teps_wall, wall_total);
+    let mut t = Table::new(vec!["metric", "modeled (paper testbed)", "measured (this host)"]);
+    t.row(vec!["harmonic TEPS".to_string(), fmt_teps(sm.harmonic_teps), fmt_teps(sw.harmonic_teps)]);
+    t.row(vec!["mean TEPS".to_string(), fmt_teps(sm.mean_teps), fmt_teps(sw.mean_teps)]);
+    t.row(vec!["min/max TEPS".to_string(),
+        format!("{} / {}", fmt_teps(sm.min_teps), fmt_teps(sm.max_teps)),
+        format!("{} / {}", fmt_teps(sw.min_teps), fmt_teps(sw.max_teps))]);
+    t.row(vec![
+        "GreenGraph500".to_string(),
+        format!("{:.2} MTEPS/W", metrics::harmonic_mean(&eff)),
+        "-".to_string(),
+    ]);
+    t.print();
+    println!(
+        "\nall {} searches passed the Graph500 validation checks; campaign wall time {}",
+        roots.len(),
+        fmt_time(wall_total)
+    );
+    bs::kv("graph500", &[
+        ("scale", scale.to_string()),
+        ("config", config.clone()),
+        ("roots", roots.len().to_string()),
+        ("harmonic_teps", format!("{:.3e}", sm.harmonic_teps)),
+        ("wall_harmonic_teps", format!("{:.3e}", sw.harmonic_teps)),
+        ("mteps_per_watt", format!("{:.3}", metrics::harmonic_mean(&eff))),
+    ]);
+    Ok(())
+}

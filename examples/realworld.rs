@@ -1,0 +1,41 @@
+//! Real-world-class workloads (the paper's Table 1 scenario): compare
+//! top-down vs direction-optimized, CPU-only vs hybrid, on the
+//! twitter-sim / wiki-sim / lj-sim analogs.
+//!
+//!     cargo run --release --example realworld
+
+use anyhow::Result;
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::PolicyKind;
+use totem_do::graph::generator::RealWorldClass;
+use totem_do::util::tables::{fmt_teps, Table};
+
+fn main() -> Result<()> {
+    let mut t = Table::new(vec!["graph", "algorithm", "2S", "2S2G", "hybrid gain"]);
+    for class in [
+        RealWorldClass::TwitterSim,
+        RealWorldClass::WikipediaSim,
+        RealWorldClass::LiveJournalSim,
+    ] {
+        let g = bs::realworld_graph(class, 42);
+        let roots = bs::roots_for(&g, bs::bench_roots(), 11);
+        for (pol, label) in [
+            (PolicyKind::AlwaysTopDown, "Top-Down"),
+            (PolicyKind::direction_optimized(), "Direction-Optimized"),
+        ] {
+            let cpu = bs::run_config(&g, "2S", pol, &roots)?;
+            let hyb = bs::run_config(&g, "2S2G", pol, &roots)?;
+            t.row(vec![
+                class.name().to_string(),
+                label.to_string(),
+                fmt_teps(cpu.teps),
+                fmt_teps(hyb.teps),
+                format!("{:.2}x", hyb.teps / cpu.teps),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(modeled on the paper's testbed; see DESIGN.md Section 6 for the device model)");
+    Ok(())
+}

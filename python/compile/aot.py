@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas kernels -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+HLO text via ``xla::HloModuleProto::from_text_file`` and compiles it on the
+PJRT CPU client. HLO *text* (not ``.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Variant scheme (DESIGN.md Section 7): each kernel is lowered for a grid of
+static shapes. The Rust runtime picks the smallest variant that fits the
+actual partition and pads. ``manifest.txt`` is line-based (key=value pairs)
+so the Rust side needs no JSON parser (serde is not vendored offline):
+
+    kernel=bottom_up n=65536 d=16 vwords=32768 file=bottom_up_n65536_d16.hlo.txt
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import bottom_up_level, top_down_level
+
+# (N, D) variants. VW (packed global bitmap words) is tied to the variant:
+# the tiny variant serves tests/quickstart graphs (V <= 4096); the rest share
+# a 2^20-vertex global space (VW = 32768), the ceiling for hybrid runs —
+# mirroring the paper's "GPU memory caps the offloadable share" constraint.
+#
+# Width grid {4, 16, 32} supports the SELL slicing of accelerator
+# partitions (rust/src/partition/ell.rs::sell_slices): narrow slices carry
+# the many low-degree vertices at ~their real edge count, instead of
+# paying max_degree dense lanes for every row.
+TINY = (1 << 12, 8, 128)
+VW = 32768
+BU_VARIANTS = [
+    (n, d, VW)
+    for n in (1 << 12, 1 << 14, 1 << 16, 1 << 18)
+    for d in (4, 16, 32)
+]
+TD_VARIANTS = [
+    (n, d, VW)
+    for n in (1 << 12, 1 << 14, 1 << 16, 1 << 18)
+    for d in (16, 32)
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (xla_extension 0.5.1-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bottom_up(n, d, vw) -> str:
+    spec_adj = jax.ShapeDtypeStruct((n, d), jnp.int32)
+    spec_fw = jax.ShapeDtypeStruct((vw,), jnp.int32)
+    spec_vis = jax.ShapeDtypeStruct((n,), jnp.int32)
+    lowered = jax.jit(bottom_up_level).lower(spec_adj, spec_fw, spec_vis)
+    return to_hlo_text(lowered)
+
+
+def lower_top_down(n, d, vw) -> str:
+    v_total = vw * 32
+    fn = functools.partial(top_down_level, v_total=v_total)
+    spec_adj = jax.ShapeDtypeStruct((n, d), jnp.int32)
+    spec_fr = jax.ShapeDtypeStruct((n,), jnp.int32)
+    spec_gid = jax.ShapeDtypeStruct((n,), jnp.int32)
+    lowered = jax.jit(fn).lower(spec_adj, spec_fr, spec_gid)
+    return to_hlo_text(lowered)
+
+
+LOWERERS = {"bottom_up": lower_bottom_up, "top_down": lower_top_down}
+
+
+def build(out_dir: str, variants=None, kernels=None) -> list:
+    """Lower all requested variants; return manifest entry dicts.
+
+    `variants`, if given, overrides the grid for every kernel (tests use
+    this with [TINY]); otherwise each kernel lowers its own grid plus the
+    tiny test variant.
+    """
+    kernels = kernels or list(LOWERERS)
+    grids = {"bottom_up": [TINY] + BU_VARIANTS, "top_down": [TINY] + TD_VARIANTS}
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kernel in kernels:
+        for n, d, vw in variants or grids[kernel]:
+            fname = f"{kernel}_n{n}_d{d}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = LOWERERS[kernel](n, d, vw)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(dict(kernel=kernel, n=n, d=d, vwords=vw, file=fname))
+            print(f"  lowered {kernel} n={n} d={d} vw={vw} "
+                  f"({len(text) / 1024:.0f} KiB)", flush=True)
+    return entries
+
+
+def write_manifest(out_dir: str, entries) -> str:
+    path = os.path.join(out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write("# totem-do artifact manifest (kernel variants)\n")
+        for e in entries:
+            f.write(
+                f"kernel={e['kernel']} n={e['n']} d={e['d']} "
+                f"vwords={e['vwords']} file={e['file']}\n"
+            )
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--tiny-only", action="store_true",
+                    help="lower only the tiny test variant (fast)")
+    args = ap.parse_args()
+
+    variants = [TINY] if args.tiny_only else None
+    entries = build(args.out, variants=variants)
+    path = write_manifest(args.out, entries)
+    print(f"wrote {len(entries)} artifacts + {path}")
+
+
+if __name__ == "__main__":
+    main()

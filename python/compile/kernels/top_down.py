@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: top-down BFS push step for the accelerator partition.
+
+One invocation performs one top-down step (paper Algorithm 1, lines 2-12)
+for the accelerator partition: every local vertex in the local frontier
+pushes all of its neighbours into a *global* activation array, and records
+itself as the tentative parent of each pushed neighbour.
+
+Communication contract (paper Section 3.1 + the parent-aggregation
+optimization): the kernel does NOT update remote visited state — it emits
+  * ``active[v]  in {0,1}``  for every global vertex v: some local frontier
+    vertex has an edge to v;
+  * ``parent[v]``: the global id of one such frontier vertex (-1 if none).
+The coordinator routes the activation flags to each owning partition (the
+once-per-round batched push of Algorithm 2); parents stay in this
+partition's address space until the final aggregation step.
+
+Hardware adaptation: the CUDA kernel scatters with atomics; a vector machine
+expresses the same thing as a scatter-max into an output block that is
+*revisited* by every grid step (accumulator pattern): ``active`` and
+``parent`` accumulate with ``max`` — idempotent, order-independent, and
+duplicate-push-safe, exactly like the paper's bitmap ORs. Any surviving
+parent is a valid BFS parent (Graph500 accepts any tree).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 32768
+
+
+def _make_kernel():
+    """One (TILE, D) tile of the top-down push (accumulator outputs)."""
+
+    def kernel(adj_ref, frontier_ref, gid_ref, active_ref, parent_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            active_ref[...] = jnp.zeros_like(active_ref)
+            parent_ref[...] = jnp.full_like(parent_ref, -1)
+
+        adj = adj_ref[...]  # (TILE, D)
+        frontier = frontier_ref[...]  # (TILE,)
+        gids = gid_ref[...]  # (TILE,) local -> global id map
+
+        lane_on = (frontier[:, None] == 1) & (adj >= 0)  # (TILE, D)
+        tgt = jnp.where(lane_on, adj, 0).reshape(-1)
+        flag = lane_on.astype(jnp.int32).reshape(-1)
+        src = jnp.where(lane_on, gids[:, None], -1).reshape(-1)
+
+        # Scatter-max accumulation: duplicates and padding (tgt=0, flag=0,
+        # src=-1) are harmless no-ops against the running maxima.
+        active_ref[...] = active_ref[...].at[tgt].max(flag)
+        parent_ref[...] = parent_ref[...].at[tgt].max(src)
+
+    return kernel
+
+
+def top_down_step(adj, frontier, gids, v_total, *, tile=DEFAULT_TILE):
+    """Run one top-down push over the whole accelerator partition.
+
+    Args:
+      adj:      i32[N, D] ELL adjacency (global ids, -1 padding).
+      frontier: i32[N]    local frontier flags (0/1).
+      gids:     i32[N]    local-index -> global-id map for this partition.
+      v_total:  int       global vertex-space size (output length).
+      tile:     grid tile height; must divide N.
+
+    Returns:
+      (active i32[v_total], parent i32[v_total]) — activation flags over the
+      global vertex space, and the pushing parent's global id (-1 if none).
+    """
+    n, d = adj.shape
+    tile = min(tile, n)
+    assert n % tile == 0, f"tile {tile} must divide N {n}"
+    grid = (n // tile,)
+
+    return pl.pallas_call(
+        _make_kernel(),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            # Accumulators: every grid step maps to the same (whole) block.
+            pl.BlockSpec((v_total,), lambda i: (0,)),
+            pl.BlockSpec((v_total,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v_total,), jnp.int32),
+            jax.ShapeDtypeStruct((v_total,), jnp.int32),
+        ],
+        interpret=True,
+    )(adj, frontier, gids)

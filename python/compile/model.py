@@ -1,0 +1,61 @@
+"""L2: the accelerator partition's per-level compute graphs.
+
+Each function here is ONE BSP superstep's worth of accelerator work (paper
+Algorithm 1, one direction), built on the L1 Pallas kernels plus the cheap
+reductions the Rust coordinator needs to make its direction-switch decision
+without scanning partition-sized arrays (paper Section 3.3: coordination must
+not require bulk state exchange).
+
+These are the functions ``python/compile/aot.py`` lowers to HLO text; the
+Rust runtime (rust/src/runtime/) executes them per level via PJRT. Python is
+never on the request path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.bottom_up import bottom_up_step
+from compile.kernels.top_down import top_down_step
+
+
+def bottom_up_level(adj, frontier_words, visited):
+    """Bottom-up superstep for the accelerator partition.
+
+    Inputs:
+      adj:            i32[N, D]  ELL adjacency, global ids, -1 padding.
+      frontier_words: i32[VW]    packed global frontier bitmap (pulled state,
+                                 paper Algorithm 3 happens Rust-side).
+      visited:        i32[N]     local visited flags.
+
+    Outputs (tuple):
+      next_frontier: i32[N]   newly activated local vertices (0/1).
+      parent:        i32[N]   chosen parent global id, -1 if none.
+      visited_out:   i32[N]   visited | next_frontier (saves a host pass).
+      count:         i32[]    number of newly activated vertices — the only
+                              scalar the coordinator must read per level.
+    """
+    nf, parent = bottom_up_step(adj, frontier_words, visited)
+    visited_out = jnp.maximum(visited, nf)
+    count = jnp.sum(nf, dtype=jnp.int32)
+    return nf, parent, visited_out, count
+
+
+def top_down_level(adj, frontier, gids, *, v_total):
+    """Top-down superstep for the accelerator partition.
+
+    Inputs:
+      adj:      i32[N, D]  ELL adjacency, global ids, -1 padding.
+      frontier: i32[N]     local frontier flags.
+      gids:     i32[N]     local-index -> global-id map.
+
+    Outputs (tuple):
+      active:      i32[V]  global activation flags (routed to owners by the
+                           Rust push phase, Algorithm 2).
+      parent:      i32[V]  pushing parent gid per activated vertex (-1 none);
+                           kept in this address space until final aggregation.
+      edges_out:   i32[]   number of edges examined (frontier rows x lanes) —
+                           feeds the coordinator's alpha-threshold estimate.
+    """
+    active, parent = top_down_step(adj, frontier, gids, v_total)
+    deg = jnp.sum((adj >= 0).astype(jnp.int32), axis=1)
+    edges_out = jnp.sum(jnp.where(frontier == 1, deg, 0), dtype=jnp.int32)
+    return active, parent, edges_out

@@ -1,0 +1,81 @@
+"""AOT pipeline: manifest format, HLO text sanity, deterministic rebuild."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def tiny_build(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entries = aot.build(out, variants=[aot.TINY])
+    aot.write_manifest(out, entries)
+    return out, entries
+
+
+def test_builds_both_kernels(tiny_build):
+    out, entries = tiny_build
+    kernels = sorted(e["kernel"] for e in entries)
+    assert kernels == ["bottom_up", "top_down"]
+    for e in entries:
+        assert os.path.exists(os.path.join(out, e["file"]))
+
+
+def test_manifest_line_format(tiny_build):
+    out, _ = tiny_build
+    pat = re.compile(
+        r"^kernel=(bottom_up|top_down) n=\d+ d=\d+ vwords=\d+ file=\S+$"
+    )
+    with open(os.path.join(out, "manifest.txt")) as f:
+        lines = [l.rstrip("\n") for l in f if not l.startswith("#")]
+    assert len(lines) == 2
+    for line in lines:
+        assert pat.match(line), f"bad manifest line: {line!r}"
+
+
+def test_hlo_text_is_loadable_format(tiny_build):
+    """The Rust side parses HLO *text*; check the header + entry layout."""
+    out, entries = tiny_build
+    n, d, vw = aot.TINY
+    for e in entries:
+        text = open(os.path.join(out, e["file"])).read()
+        assert text.startswith("HloModule")
+        assert "entry_computation_layout" in text
+        if e["kernel"] == "bottom_up":
+            assert f"s32[{n},{d}]" in text  # adjacency operand
+            assert f"s32[{vw}]" in text  # frontier words operand
+        else:
+            assert f"s32[{vw * 32}]" in text  # global-space outputs
+
+
+def test_no_custom_calls_in_hlo(tiny_build):
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would
+    be unloadable by the CPU PJRT client (DESIGN.md Section 2)."""
+    out, entries = tiny_build
+    for e in entries:
+        text = open(os.path.join(out, e["file"])).read()
+        assert "custom-call" not in text, f"{e['file']} has a custom call"
+
+
+def test_rebuild_is_deterministic(tiny_build, tmp_path):
+    out, entries = tiny_build
+    out2 = str(tmp_path / "rebuild")
+    entries2 = aot.build(out2, variants=[aot.TINY])
+    for e1, e2 in zip(entries, entries2):
+        t1 = open(os.path.join(out, e1["file"])).read()
+        t2 = open(os.path.join(out2, e2["file"])).read()
+        assert t1 == t2
+
+
+def test_variant_table_is_sane():
+    for n, d, vw in [aot.TINY] + aot.BU_VARIANTS + aot.TD_VARIANTS:
+        assert n % 1024 == 0 or n <= 4096
+        assert d in (4, 8, 16, 32)
+        assert vw * 32 >= n  # global space must cover the partition
+    # The SELL width buckets used by the Rust runtime must exist in the
+    # bottom-up grid (rust/src/engine/accel.rs::SELL_WIDTHS).
+    bu_widths = {d for _, d, _ in aot.BU_VARIANTS}
+    assert {4, 16, 32} <= bu_widths

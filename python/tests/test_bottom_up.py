@@ -1,0 +1,144 @@
+"""L1 bottom-up Pallas kernel vs the pure-jnp and pure-python oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bottom_up import bottom_up_step
+from compile.kernels import ref
+
+
+def run_kernel(adj, fw, visited, tile):
+    nf, par = bottom_up_step(
+        jnp.asarray(adj), jnp.asarray(fw), jnp.asarray(visited), tile=tile
+    )
+    return np.asarray(nf), np.asarray(par)
+
+
+def make_case(rng, n, d, v):
+    adj = rng.integers(-1, v, size=(n, d)).astype(np.int32)
+    flags = rng.integers(0, 2, size=v).astype(np.int32)
+    visited = rng.integers(0, 2, size=n).astype(np.int32)
+    return adj, flags, visited
+
+
+@pytest.mark.parametrize("n,d,v,tile", [
+    (16, 4, 32, 4),
+    (64, 8, 128, 16),
+    (128, 16, 256, 32),
+    (256, 8, 1024, 64),
+    (1024, 32, 4096, 256),
+])
+def test_matches_jnp_ref(n, d, v, tile):
+    rng = np.random.default_rng(n * 31 + d)
+    adj, flags, visited = make_case(rng, n, d, v)
+    fw = ref.pack_bits(flags)
+    nf, par = run_kernel(adj, fw, visited, tile)
+    nf_r, par_r = ref.bottom_up_ref(adj, fw, visited)
+    np.testing.assert_array_equal(nf, np.asarray(nf_r))
+    np.testing.assert_array_equal(par, np.asarray(par_r))
+
+
+@pytest.mark.parametrize("n,d,v", [(32, 4, 64), (64, 8, 256)])
+def test_matches_python_oracle(n, d, v):
+    """Second opinion: the loop-based oracle (first-hit parent semantics)."""
+    rng = np.random.default_rng(7)
+    adj, flags, visited = make_case(rng, n, d, v)
+    fw = ref.pack_bits(flags)
+    frontier_set = {i for i, f in enumerate(flags) if f}
+    nf, par = run_kernel(adj, fw, visited, tile=8)
+    nf_py, par_py = ref.bottom_up_py(adj, frontier_set, visited)
+    np.testing.assert_array_equal(nf, nf_py)
+    np.testing.assert_array_equal(par, par_py)
+
+
+def test_empty_frontier_activates_nothing():
+    rng = np.random.default_rng(1)
+    adj, _, visited = make_case(rng, 64, 8, 128)
+    fw = np.zeros(4, np.int32)
+    nf, par = run_kernel(adj, fw, visited, tile=16)
+    assert nf.sum() == 0
+    assert (par == -1).all()
+
+
+def test_all_visited_activates_nothing():
+    rng = np.random.default_rng(2)
+    adj, flags, _ = make_case(rng, 64, 8, 128)
+    fw = ref.pack_bits(flags)
+    visited = np.ones(64, np.int32)
+    nf, par = run_kernel(adj, fw, visited, tile=16)
+    assert nf.sum() == 0
+    assert (par == -1).all()
+
+
+def test_full_frontier_activates_every_unvisited_with_neighbour():
+    rng = np.random.default_rng(3)
+    adj, _, visited = make_case(rng, 64, 8, 128)
+    fw = ref.pack_bits(np.ones(128, np.int32))
+    nf, par = run_kernel(adj, fw, visited, tile=16)
+    has_nbr = (adj >= 0).any(axis=1)
+    expect = has_nbr & (visited == 0)
+    np.testing.assert_array_equal(nf.astype(bool), expect)
+
+
+def test_padding_only_rows_never_activate():
+    adj = np.full((32, 4), -1, np.int32)
+    fw = ref.pack_bits(np.ones(64, np.int32))
+    visited = np.zeros(32, np.int32)
+    nf, par = run_kernel(adj, fw, visited, tile=8)
+    assert nf.sum() == 0 and (par == -1).all()
+
+
+def test_parent_is_first_frontier_neighbour_in_row_order():
+    """Degree-descending adjacency ordering relies on first-hit semantics."""
+    adj = np.array([[5, 3, 7, -1]], np.int32).repeat(8, axis=0)
+    flags = np.zeros(16, np.int32)
+    flags[3] = 1
+    flags[7] = 1  # 5 NOT in frontier; first hit must be 3 (row order), not 7
+    fw = ref.pack_bits(flags)
+    nf, par = run_kernel(adj, fw, np.zeros(8, np.int32), tile=8)
+    assert (nf == 1).all()
+    assert (par == 3).all()
+
+
+def test_bit31_boundary():
+    """Vertex ids on the sign bit of a packed word must still match."""
+    v = 64
+    adj = np.array([[31, -1], [32, -1], [63, -1], [30, -1]], np.int32)
+    flags = np.zeros(v, np.int32)
+    flags[31] = 1
+    flags[32] = 1
+    flags[63] = 1
+    fw = ref.pack_bits(flags)
+    nf, par = run_kernel(adj, fw, np.zeros(4, np.int32), tile=4)
+    np.testing.assert_array_equal(nf, [1, 1, 1, 0])
+    np.testing.assert_array_equal(par, [31, 32, 63, -1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    d=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(0, 2**32 - 1),
+    density=st.floats(0.0, 1.0),
+)
+def test_hypothesis_sweep(n_tiles, d, seed, density):
+    """Random shapes/densities: kernel == jnp ref == loop oracle."""
+    tile = 16
+    n = tile * n_tiles
+    v = 32 * max(1, (n // 32) + 1)
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(-1, v, size=(n, d)).astype(np.int32)
+    flags = (rng.random(v) < density).astype(np.int32)
+    visited = (rng.random(n) < 0.5).astype(np.int32)
+    fw = ref.pack_bits(flags)
+
+    nf, par = run_kernel(adj, fw, visited, tile)
+    nf_r, par_r = ref.bottom_up_ref(adj, fw, visited)
+    np.testing.assert_array_equal(nf, np.asarray(nf_r))
+    np.testing.assert_array_equal(par, np.asarray(par_r))
+
+    nf_py, par_py = ref.bottom_up_py(adj, {i for i in range(v) if flags[i]}, visited)
+    np.testing.assert_array_equal(nf, nf_py)
+    np.testing.assert_array_equal(par, par_py)

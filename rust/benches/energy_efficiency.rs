@@ -1,0 +1,51 @@
+//! Section 4.3: the energy case. MTEPS/W for CPU-only vs hybrid configs,
+//! including the paper's extrapolated-4S comparison ("it is always better
+//! to add a GPU than a second CPU").
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::PolicyKind;
+use totem_do::util::tables::{fmt_teps, Table};
+
+fn main() {
+    let scale = bs::bench_scale();
+    let g = bs::kron_graph(scale, 42);
+    let roots = bs::roots_for(&g, bs::bench_roots(), 23);
+    println!("== Section 4.3: energy efficiency (kron scale {scale}) ==");
+
+    let pol = PolicyKind::direction_optimized();
+    let mut rows = Vec::new();
+    for label in ["1S", "2S", "4S", "1S1G", "2S1G", "2S2G"] {
+        let r = bs::run_config(&g, label, pol, &roots).unwrap();
+        rows.push((label, r));
+    }
+    let base = rows.iter().find(|(l, _)| *l == "2S").unwrap().1.mteps_per_watt;
+
+    let mut t = Table::new(vec!["config", "TEPS", "MTEPS/W", "vs 2S"]);
+    for (label, r) in &rows {
+        t.row(vec![
+            label.to_string(),
+            fmt_teps(r.teps),
+            format!("{:.2}", r.mteps_per_watt),
+            format!("{:.2}x", r.mteps_per_watt / base),
+        ]);
+        bs::kv("energy", &[
+            ("config", label.to_string()),
+            ("teps", format!("{:.3e}", r.teps)),
+            ("mteps_per_watt", format!("{:.3}", r.mteps_per_watt)),
+        ]);
+    }
+    t.print();
+
+    let get = |l: &str| rows.iter().find(|(x, _)| *x == l).unwrap().1.mteps_per_watt;
+    println!("\npaper claims checked:");
+    println!(
+        "  2S2G vs 2S efficiency: {:.2}x (paper: ~2.0x; 22.36 vs 10.86 MTEPS/W)",
+        get("2S2G") / get("2S")
+    );
+    println!(
+        "  GPU beats extra CPUs: 2S1G {:.2} vs 4S {:.2} MTEPS/W -> {}",
+        get("2S1G"),
+        get("4S"),
+        if get("2S1G") > get("4S") { "holds" } else { "FAILS" }
+    );
+}

@@ -1,0 +1,55 @@
+//! Fig 3: BFS run time broken into components — init, computation,
+//! push-communication, pull-communication, aggregation — for the hybrid
+//! configuration. Paper shape: computation dominates; everything else is a
+//! small fraction (the §3.1/§3.4 optimizations made it so).
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::PolicyKind;
+use totem_do::engine::Direction;
+use totem_do::partition::{specialized_partition, LayoutOptions};
+use totem_do::util::tables::{fmt_time, Table};
+
+fn main() {
+    let scale = bs::bench_scale();
+    let g = bs::kron_graph(scale, 42);
+    let roots = bs::roots_for(&g, bs::bench_roots(), 9);
+    println!("== Fig 3: runtime components, kron scale {scale}, 2S2G ==");
+
+    let hw = bs::hardware("2S2G");
+    let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+    let r = bs::run_campaign(&g, &pg, PolicyKind::direction_optimized(), &roots, false, "2S2G")
+        .unwrap();
+
+    let timing = &r.last_timing;
+    let run = &r.last_run;
+    let mut push = 0.0;
+    let mut pull = 0.0;
+    for (ls, lt) in run.levels.iter().zip(&timing.levels) {
+        match ls.direction {
+            Some(Direction::TopDown) => push += lt.comm_time,
+            Some(Direction::BottomUp) => pull += lt.comm_time,
+            None => {}
+        }
+    }
+    let compute = timing.compute_time();
+    let total = timing.total;
+
+    let mut t = Table::new(vec!["component", "time", "share"]);
+    for (name, val) in [
+        ("init", timing.init),
+        ("computation", compute),
+        ("push comm", push),
+        ("pull comm", pull),
+        ("aggregation", timing.aggregation),
+    ] {
+        t.row(vec![name.to_string(), fmt_time(val), format!("{:.1}%", 100.0 * val / total)]);
+        bs::kv("fig3", &[
+            ("component", name.replace(' ', "_")),
+            ("time_s", format!("{:.3e}", val)),
+            ("share", format!("{:.3}", val / total)),
+        ]);
+    }
+    t.row(vec!["TOTAL".to_string(), fmt_time(total), "100%".to_string()]);
+    t.print();
+    println!("shape check: computation dominates; comm is a small fraction (batched once-per-round)");
+}

@@ -1,0 +1,115 @@
+//! Kernel microbenchmarks (host wall-clock, real execution): the CPU
+//! top-down/bottom-up kernels and the PJRT-executed AOT Pallas kernels vs
+//! their Sim mirror. This is the L1/L3 hot-path measurement used by the
+//! perf pass (EXPERIMENTS.md Section Perf).
+
+use std::time::Instant;
+
+use totem_do::bench_support as bs;
+use totem_do::bfs::{HybridConfig, HybridRunner, PolicyKind};
+use totem_do::engine::{Accelerator, SimAccelerator};
+use totem_do::partition::{specialized_partition, LayoutOptions};
+use totem_do::runtime::{default_artifact_dir, PjrtAccelerator};
+use totem_do::util::tables::{fmt_time, Table};
+use totem_do::util::Bitmap;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() {
+    let scale = bs::bench_scale().min(17);
+    let g = bs::kron_graph(scale, 42);
+    println!("== kernel microbenchmarks (host wall-clock), kron scale {scale} ==");
+
+    let hw = bs::hardware("1S1G");
+    let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+    let gpu_pid = pg.parts.iter().find(|p| p.kind.is_gpu()).unwrap().id;
+    let part = &pg.parts[gpu_pid];
+    println!(
+        "GPU partition: {} vertices, max degree {}, {} directed edges",
+        part.num_vertices(),
+        part.max_degree,
+        part.num_directed_edges()
+    );
+
+    // A mid-search frontier pattern.
+    let mut frontier = Bitmap::new(g.num_vertices);
+    for i in (0..g.num_vertices).step_by(3) {
+        frontier.set(i);
+    }
+
+    let mut t = Table::new(vec!["kernel", "backend", "time/level", "note"]);
+
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    sim.setup(gpu_pid, part).unwrap();
+    let dt = time_n(5, || {
+        sim.reset(gpu_pid);
+        let _ = sim.bottom_up(gpu_pid, frontier.words()).unwrap();
+    });
+    t.row(vec!["bottom_up".into(), "sim (rust mirror)".into(), fmt_time(dt), format!("lanes={}", sim.lanes(gpu_pid))]);
+
+    if default_artifact_dir().join("manifest.txt").exists() {
+        let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+        pjrt.setup(gpu_pid, part).unwrap();
+        let dt = time_n(5, || {
+            pjrt.reset(gpu_pid);
+            let _ = pjrt.bottom_up(gpu_pid, frontier.words()).unwrap();
+        });
+        t.row(vec!["bottom_up".into(), "PJRT (AOT HLO)".into(), fmt_time(dt), "includes literal round trips".into()]);
+
+        let fr: Vec<i32> = (0..part.num_vertices()).map(|i| (i % 7 == 0) as i32).collect();
+        let dt = time_n(3, || {
+            let _ = pjrt.top_down(gpu_pid, &fr).unwrap();
+        });
+        t.row(vec!["top_down".into(), "PJRT (AOT HLO)".into(), fmt_time(dt), "".into()]);
+    } else {
+        println!("(no artifacts — PJRT rows skipped; run `make artifacts`)");
+    }
+
+    // End-to-end BFS wall time, Sim vs PJRT if available.
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    {
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let mut runner = HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+        let dt = time_n(3, || {
+            let _ = runner.run(root).unwrap();
+        });
+        t.row(vec!["full BFS".into(), "sim".into(), fmt_time(dt), "1S1G".into()]);
+    }
+    if default_artifact_dir().join("manifest.txt").exists() {
+        let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+        let mut runner = HybridRunner::new(&pg, HybridConfig::default(), Some(&mut pjrt)).unwrap();
+        let dt = time_n(3, || {
+            let _ = runner.run(root).unwrap();
+        });
+        t.row(vec!["full BFS".into(), "PJRT".into(), fmt_time(dt), "1S1G".into()]);
+    }
+
+    // CPU-only for reference (the L3 hot loop).
+    {
+        let hw0 = bs::hardware("2S");
+        let (pg0, _) = specialized_partition(&g, &hw0, &LayoutOptions::paper());
+        let mut runner =
+            HybridRunner::<SimAccelerator>::new(&pg0, HybridConfig::default(), None).unwrap();
+        let dt = time_n(5, || {
+            let _ = runner.run(root).unwrap();
+        });
+        t.row(vec!["full BFS".into(), "CPU kernels only".into(), fmt_time(dt), "2S".into()]);
+        let dt_td = time_n(3, || {
+            let mut r2 = HybridRunner::<SimAccelerator>::new(
+                &pg0,
+                HybridConfig { policy: PolicyKind::AlwaysTopDown, ..Default::default() },
+                None,
+            )
+            .unwrap();
+            let _ = r2.run(root).unwrap();
+        });
+        t.row(vec!["full BFS (classic)".into(), "CPU kernels only".into(), fmt_time(dt_td), "2S".into()]);
+    }
+    t.print();
+}

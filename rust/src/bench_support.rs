@@ -1,0 +1,187 @@
+//! Shared harness for the paper-figure benches and examples: workload
+//! construction, campaign execution, and attribution in one call.
+//!
+//! Every bench target prints (a) the paper's rows/series as an aligned
+//! table and (b) machine-readable `key=value` lines for EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::bfs::{baseline_bfs, BaselineKind, BfsRun, HybridConfig, HybridRunner, PolicyKind};
+use crate::engine::{Accelerator, CommMode, SimAccelerator};
+use crate::graph::generator::{kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
+use crate::graph::{build_csr, Csr};
+use crate::metrics;
+use crate::partition::{
+    random_partition, specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph,
+};
+use crate::runtime::{
+    default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator, RunTiming,
+};
+
+/// Default bench scale: large enough to be past the PCIe-latency crossover,
+/// small enough to execute quickly on this host. Override with
+/// `TOTEM_DO_BENCH_SCALE`.
+pub fn bench_scale() -> u32 {
+    std::env::var("TOTEM_DO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(18)
+}
+
+/// Roots per campaign (Graph500 uses 64; benches default lower for time —
+/// override with `TOTEM_DO_BENCH_ROOTS`).
+pub fn bench_roots() -> usize {
+    std::env::var("TOTEM_DO_BENCH_ROOTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+}
+
+/// Whether sweep benches should execute GPU partitions through PJRT
+/// (`TOTEM_DO_BENCH_ACCEL=pjrt`) instead of the bit-identical Sim mirror.
+/// The two produce identical results and identical modeled figures
+/// (asserted by integration_runtime.rs); Sim keeps the multi-config sweeps
+/// fast on this single-core host. The PJRT path is always exercised by the
+/// graph500 example and `microbench_kernels`.
+pub fn use_pjrt() -> bool {
+    std::env::var("TOTEM_DO_BENCH_ACCEL").as_deref() == Ok("pjrt")
+        && default_artifact_dir().join("manifest.txt").exists()
+}
+
+/// Standard hardware shape for a config label at bench scale.
+pub fn hardware(label: &str) -> HardwareConfig {
+    HardwareConfig::parse(label, 256 << 20, 32).expect("bad config label")
+}
+
+pub fn kron_graph(scale: u32, seed: u64) -> Csr {
+    build_csr(&kronecker(&GeneratorConfig::graph500(scale, seed)))
+}
+
+pub fn realworld_graph(class: RealWorldClass, seed: u64) -> Csr {
+    build_csr(&real_world_analog(class, seed))
+}
+
+/// Aggregate of a hybrid campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub label: String,
+    /// Harmonic-mean modeled TEPS (paper-testbed attribution).
+    pub teps: f64,
+    /// Harmonic-mean host wall-clock TEPS.
+    pub wall_teps: f64,
+    /// Harmonic-mean MTEPS/W.
+    pub mteps_per_watt: f64,
+    /// Per-level timing of the LAST run (for per-level figures).
+    pub last_timing: RunTiming,
+    pub last_run: BfsRun,
+    pub gpu_vertex_share: f64,
+}
+
+/// Run a hybrid campaign over `roots` and attribute with the device model.
+pub fn run_campaign(
+    g: &Csr,
+    pg: &PartitionedGraph,
+    policy: PolicyKind,
+    roots: &[u32],
+    naive: bool,
+    label: &str,
+) -> Result<CampaignResult> {
+    let device = DeviceModel::default();
+    let energy = EnergyModel::default();
+    let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, ..Default::default() };
+
+    let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+    let mut sim;
+    let mut pjrt;
+    let accel: Option<&mut dyn Accelerator> = if !has_gpu {
+        None
+    } else if use_pjrt() {
+        pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices)?;
+        Some(&mut pjrt)
+    } else {
+        sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        Some(&mut sim)
+    };
+
+    let mut runner = HybridRunner::new(pg, cfg, accel)?;
+    let mut teps = Vec::new();
+    let mut wall = Vec::new();
+    let mut eff = Vec::new();
+    let mut last = None;
+    for &root in roots {
+        let run = runner.run(root)?;
+        let t = device.attribute(&run, pg, naive);
+        let e = energy.energy(&t, pg);
+        teps.push(metrics::teps(run.traversed_edges(), t.total));
+        wall.push(metrics::teps(run.traversed_edges(), run.wall.as_secs_f64()));
+        eff.push(mteps_per_watt(run.traversed_edges(), &e));
+        last = Some((run, t));
+    }
+    let (last_run, last_timing) = last.expect("at least one root");
+    Ok(CampaignResult {
+        label: label.to_string(),
+        teps: metrics::harmonic_mean(&teps),
+        wall_teps: metrics::harmonic_mean(&wall),
+        mteps_per_watt: metrics::harmonic_mean(&eff),
+        last_timing,
+        last_run,
+        gpu_vertex_share: pg.gpu_vertex_share(g),
+    })
+}
+
+/// Convenience: specialized partitioning + campaign for a config label.
+pub fn run_config(
+    g: &Csr,
+    label: &str,
+    policy: PolicyKind,
+    roots: &[u32],
+) -> Result<CampaignResult> {
+    let hw = hardware(label);
+    let (pg, _) = specialized_partition(g, &hw, &LayoutOptions::paper());
+    run_campaign(g, &pg, policy, roots, false, label)
+}
+
+/// Random-partitioning variant (Fig 2 left baseline).
+pub fn run_config_random(
+    g: &Csr,
+    label: &str,
+    policy: PolicyKind,
+    roots: &[u32],
+    seed: u64,
+) -> Result<CampaignResult> {
+    let hw = hardware(label);
+    let pg = random_partition(g, &hw, &LayoutOptions::paper(), seed);
+    run_campaign(g, &pg, policy, roots, false, &format!("{label}-rand"))
+}
+
+/// Single-address-space baseline (Table 1 roles) attributed at `sockets`.
+pub fn run_baseline(
+    g: &Csr,
+    kind: BaselineKind,
+    sockets: usize,
+    naive: bool,
+    roots: &[u32],
+) -> f64 {
+    let device = DeviceModel::default();
+    let mut teps = Vec::new();
+    for &root in roots {
+        let run = baseline_bfs(g, root, kind);
+        let t = device.attribute_baseline(&run, sockets, naive);
+        teps.push(metrics::teps(run.traversed_edges(), t.total));
+    }
+    metrics::harmonic_mean(&teps)
+}
+
+/// Sample campaign roots for a graph.
+pub fn roots_for(g: &Csr, count: usize, seed: u64) -> Vec<u32> {
+    metrics::sample_roots(g.num_vertices, |v| g.degree(v), count, seed)
+}
+
+/// Print a machine-readable result line.
+pub fn kv(bench: &str, keys: &[(&str, String)]) {
+    let mut line = format!("RESULT bench={bench}");
+    for (k, v) in keys {
+        line.push_str(&format!(" {k}={v}"));
+    }
+    println!("{line}");
+}

@@ -1,0 +1,258 @@
+//! Single-address-space BFS baselines.
+//!
+//! These play two roles from the paper's evaluation:
+//! * the **"Galois"** comparator column of Table 1 — an independent,
+//!   well-optimized shared-memory direction-optimized BFS (Beamer-style
+//!   exact global alpha/beta heuristics, frontier queue + bitmap);
+//! * the **"Naive"** column — a plain top-down queue BFS with no Section
+//!   3.4 locality optimizations (the caller passes an unordered CSR).
+//!
+//! They also generate Fig 1 (per-level time + avg frontier degree) for the
+//! non-partitioned algorithm.
+
+use crate::engine::Direction;
+use crate::graph::Csr;
+use crate::util::Bitmap;
+
+/// Which baseline algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BaselineKind {
+    /// Classic top-down only.
+    TopDown,
+    /// Beamer-style direction-optimized with exact global counters
+    /// (alpha: TD->BU when m_f > m_u/alpha; beta: BU->TD when
+    /// n_f < |V|/beta).
+    DirectionOptimized { alpha: f64, beta: f64 },
+}
+
+impl BaselineKind {
+    pub fn direction_optimized() -> Self {
+        BaselineKind::DirectionOptimized { alpha: 14.0, beta: 24.0 }
+    }
+}
+
+/// Per-level record of a baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineLevel {
+    pub level: u32,
+    pub direction: Direction,
+    pub frontier_size: u64,
+    pub frontier_degree_sum: u64,
+    pub edges_examined: u64,
+    pub vertices_scanned: u64,
+}
+
+/// Result of a baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineRun {
+    pub root: u32,
+    pub depth: Vec<i32>,
+    pub parent: Vec<i64>,
+    pub levels: Vec<BaselineLevel>,
+    pub reached_vertices: u64,
+    pub reached_edge_endpoints: u64,
+    pub wall: std::time::Duration,
+}
+
+impl BaselineRun {
+    pub fn traversed_edges(&self) -> u64 {
+        self.reached_edge_endpoints / 2
+    }
+}
+
+/// Run a baseline BFS over the whole CSR in one address space.
+pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
+    let t0 = std::time::Instant::now();
+    let nv = g.num_vertices;
+    let mut depth = vec![-1i32; nv];
+    let mut parent = vec![-1i64; nv];
+    let mut visited = Bitmap::new(nv);
+    let mut frontier: Vec<u32> = Vec::new(); // queue form (top-down)
+    let mut frontier_bits = Bitmap::new(nv); // bitmap form (bottom-up)
+    let mut next_bits = Bitmap::new(nv);
+    let mut levels = Vec::new();
+
+    depth[root as usize] = 0;
+    parent[root as usize] = root as i64;
+    visited.set(root as usize);
+    frontier.push(root);
+    frontier_bits.set(root as usize);
+
+    let total_endpoints: u64 = g.num_directed_edges() as u64;
+    let mut explored_endpoints: u64 = g.degree(root) as u64;
+    let mut dir = Direction::TopDown;
+    let mut level = 0u32;
+
+    loop {
+        let frontier_size = frontier_bits.count() as u64;
+        if frontier_size == 0 {
+            break;
+        }
+        let frontier_degree_sum: u64 =
+            frontier_bits.iter_ones().map(|v| g.degree(v as u32) as u64).sum();
+
+        let mut rec = BaselineLevel {
+            level,
+            direction: dir,
+            frontier_size,
+            frontier_degree_sum,
+            edges_examined: 0,
+            vertices_scanned: 0,
+        };
+
+        next_bits.clear();
+        let mut next_queue: Vec<u32> = Vec::new();
+        match dir {
+            Direction::TopDown => {
+                rec.vertices_scanned = frontier.len() as u64;
+                for &v in &frontier {
+                    for &w in g.neighbours(v) {
+                        rec.edges_examined += 1;
+                        if !visited.get(w as usize) {
+                            visited.set(w as usize);
+                            depth[w as usize] = depth[v as usize] + 1;
+                            parent[w as usize] = v as i64;
+                            next_bits.set(w as usize);
+                            next_queue.push(w);
+                            explored_endpoints += g.degree(w) as u64;
+                        }
+                    }
+                }
+            }
+            Direction::BottomUp => {
+                for v in 0..nv as u32 {
+                    rec.vertices_scanned += 1;
+                    if visited.get(v as usize) {
+                        continue;
+                    }
+                    for &w in g.neighbours(v) {
+                        rec.edges_examined += 1;
+                        if frontier_bits.get(w as usize) {
+                            visited.set(v as usize);
+                            depth[v as usize] = level as i32 + 1;
+                            parent[v as usize] = w as i64;
+                            next_bits.set(v as usize);
+                            next_queue.push(v);
+                            explored_endpoints += g.degree(v) as u64;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        levels.push(rec);
+
+        // Direction heuristics on exact global counters (Beamer).
+        if let BaselineKind::DirectionOptimized { alpha, beta } = kind {
+            let m_f: u64 = next_queue.iter().map(|&v| g.degree(v) as u64).sum();
+            let m_u = total_endpoints.saturating_sub(explored_endpoints);
+            let n_f = next_queue.len() as u64;
+            dir = match dir {
+                Direction::TopDown if (m_f as f64) > m_u as f64 / alpha && n_f > 0 => {
+                    Direction::BottomUp
+                }
+                Direction::BottomUp if (n_f as f64) < nv as f64 / beta => Direction::TopDown,
+                d => d,
+            };
+        }
+
+        std::mem::swap(&mut frontier_bits, &mut next_bits);
+        frontier = next_queue;
+        level += 1;
+    }
+
+    let mut reached = 0u64;
+    let mut endpoints = 0u64;
+    for v in 0..nv as u32 {
+        if depth[v as usize] >= 0 {
+            reached += 1;
+            endpoints += g.degree(v) as u64;
+        }
+    }
+    BaselineRun {
+        root,
+        depth,
+        parent,
+        levels,
+        reached_vertices: reached,
+        reached_edge_endpoints: endpoints,
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::validate::validate_graph500;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::{build_csr, EdgeList};
+
+    fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+        let mut depth = vec![-1i32; g.num_vertices];
+        depth[root as usize] = 0;
+        let mut q = std::collections::VecDeque::from([root]);
+        while let Some(u) = q.pop_front() {
+            for &w in g.neighbours(u) {
+                if depth[w as usize] < 0 {
+                    depth[w as usize] = depth[u as usize] + 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        depth
+    }
+
+    #[test]
+    fn top_down_matches_reference() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 1)));
+        for root in [0u32, 9, 500] {
+            let run = baseline_bfs(&g, root, BaselineKind::TopDown);
+            assert_eq!(run.depth, reference_depths(&g, root));
+            validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+            assert!(run.levels.iter().all(|l| l.direction == Direction::TopDown));
+        }
+    }
+
+    #[test]
+    fn direction_optimized_matches_reference_and_switches() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 2)));
+        let root = 4;
+        let run = baseline_bfs(&g, root, BaselineKind::direction_optimized());
+        assert_eq!(run.depth, reference_depths(&g, root));
+        validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+        assert!(run.levels.iter().any(|l| l.direction == Direction::BottomUp));
+    }
+
+    #[test]
+    fn direction_optimized_examines_fewer_edges_on_skewed_graphs() {
+        // The whole point of the paper's Section 2.2.
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 3)));
+        let td = baseline_bfs(&g, 2, BaselineKind::TopDown);
+        let dopt = baseline_bfs(&g, 2, BaselineKind::direction_optimized());
+        let e_td: u64 = td.levels.iter().map(|l| l.edges_examined).sum();
+        let e_do: u64 = dopt.levels.iter().map(|l| l.edges_examined).sum();
+        assert!(
+            (e_do as f64) < 0.7 * e_td as f64,
+            "direction-optimized {} vs top-down {} edges",
+            e_do,
+            e_td
+        );
+    }
+
+    #[test]
+    fn handles_disconnected_and_isolated() {
+        let g = build_csr(&EdgeList { num_vertices: 5, edges: vec![(0, 1), (2, 3)] });
+        let run = baseline_bfs(&g, 0, BaselineKind::direction_optimized());
+        assert_eq!(run.reached_vertices, 2);
+        assert_eq!(run.depth[2], -1);
+        validate_graph500(&g, 0, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn frontier_census_sums_to_reached() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 4)));
+        let run = baseline_bfs(&g, 7, BaselineKind::direction_optimized());
+        let fsum: u64 = run.levels.iter().map(|l| l.frontier_size).sum();
+        assert_eq!(fsum, run.reached_vertices);
+    }
+}

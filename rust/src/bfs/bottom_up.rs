@@ -1,0 +1,121 @@
+//! CPU bottom-up kernel (paper Algorithm 1, lines 13–26).
+//!
+//! Scans the partition's not-yet-visited vertices and activates those with
+//! a neighbour in the (pulled) global frontier. The adjacency scan stops at
+//! the first hit — with the Section 3.4 degree-descending adjacency
+//! ordering, likely-frontier hubs sit first, so scans terminate early.
+
+use crate::engine::{BfsState, PeWork};
+use crate::partition::PartitionedGraph;
+use crate::util::Bitmap;
+
+/// Run one bottom-up superstep for CPU partition `pid` at `level` (the
+/// frontier's depth). `global_frontier` is the aggregate pulled by
+/// Algorithm 3 (taken out of `state` by the driver to satisfy borrows).
+pub fn cpu_bottom_up(
+    pg: &PartitionedGraph,
+    pid: usize,
+    state: &mut BfsState,
+    global_frontier: &Bitmap,
+    level: u32,
+) -> PeWork {
+    let part = &pg.parts[pid];
+    let mut work = PeWork::default();
+    // Singletons sit past `scan_limit` under the Section 3.4 ordering and
+    // can never activate — don't walk them every level.
+    let n = part.scan_limit;
+
+    for li in 0..n {
+        let gid = part.gids[li];
+        work.vertices_scanned += 1;
+        if state.visited[pid].get(gid as usize) {
+            continue;
+        }
+        for &w in part.neighbours(li) {
+            work.edges_examined += 1;
+            if global_frontier.get(w as usize) {
+                state.activate_local(pid, gid, w, level + 1);
+                work.activated += 1;
+                break; // early exit — the CPU's advantage over dense lanes
+            }
+        }
+    }
+    work
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn one_cpu(edges: Vec<(u32, u32)>, nv: usize, opts: LayoutOptions) -> PartitionedGraph {
+        let g = build_csr(&EdgeList { num_vertices: nv, edges });
+        let cfg = HardwareConfig { cpu_sockets: 1, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        materialize(&g, vec![0u8; nv], &cfg, &opts)
+    }
+
+    #[test]
+    fn activates_unvisited_with_frontier_neighbour() {
+        // Path 0-1-2-3, frontier {1}.
+        let pg = one_cpu(vec![(0, 1), (1, 2), (2, 3)], 4, LayoutOptions::naive());
+        let mut st = BfsState::new(&pg);
+        st.visited[0].set(1); // 1 itself already visited
+        let mut gf = Bitmap::new(4);
+        gf.set(1);
+        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 1);
+        assert_eq!(work.activated, 2); // 0 and 2
+        assert_eq!(st.depth[0], 2);
+        assert_eq!(st.parent[0], 1);
+        assert_eq!(st.depth[2], 2);
+        assert_eq!(st.depth[3], -1);
+        assert!(st.frontiers[0].next.get(0) && st.frontiers[0].next.get(2));
+    }
+
+    #[test]
+    fn early_exit_reduces_edges_examined() {
+        // Vertex 0 has 3 neighbours; with hub-first ordering the frontier
+        // hub is checked first, so only 1 edge is examined for vertex 0.
+        let edges = vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3)]; // 1 is the hub
+        let pg_sorted = one_cpu(edges.clone(), 4, LayoutOptions::paper());
+        let pg_naive = one_cpu(edges, 4, LayoutOptions::naive());
+        let mut gf = Bitmap::new(4);
+        gf.set(1);
+
+        let mut st = BfsState::new(&pg_sorted);
+        st.visited[0].set(1);
+        let w_sorted = cpu_bottom_up(&pg_sorted, 0, &mut st, &gf, 0);
+
+        let mut st = BfsState::new(&pg_naive);
+        st.visited[0].set(1);
+        let w_naive = cpu_bottom_up(&pg_naive, 0, &mut st, &gf, 0);
+
+        assert_eq!(w_sorted.activated, w_naive.activated);
+        assert!(w_sorted.edges_examined <= w_naive.edges_examined);
+    }
+
+    #[test]
+    fn skips_visited_vertices_entirely() {
+        let pg = one_cpu(vec![(0, 1)], 2, LayoutOptions::naive());
+        let mut st = BfsState::new(&pg);
+        st.visited[0].set(0);
+        st.visited[0].set(1);
+        let mut gf = Bitmap::new(2);
+        gf.set(1);
+        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(work.activated, 0);
+        assert_eq!(work.edges_examined, 0);
+        assert_eq!(work.vertices_scanned, 2);
+    }
+
+    #[test]
+    fn empty_global_frontier_activates_nothing() {
+        let pg = one_cpu(vec![(0, 1), (1, 2)], 3, LayoutOptions::naive());
+        let mut st = BfsState::new(&pg);
+        let gf = Bitmap::new(3);
+        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(work.activated, 0);
+        // All edges of unvisited vertices were checked in vain.
+        assert_eq!(work.edges_examined, 4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Direction-switch policy for the partitioned algorithm (paper §3.3).
+//!
+//! The expensive part of direction-optimization on a distributed-memory
+//! platform is *agreeing when to switch*. The paper's two tricks:
+//!
+//! * **Top-down → bottom-up**: the decision needs the size of the upcoming
+//!   frontier in edges — but the frontier is built almost entirely by the
+//!   few high-degree vertices, which all live on the CPU coordinator
+//!   partition (specialized partitioning, §3.2). So the coordinator decides
+//!   alone, from its local counters, with "nearly identical accuracy" and
+//!   zero extra communication.
+//! * **Bottom-up → top-down**: gains are small in the tail, so all
+//!   partitions simply return to top-down after a fixed number of bottom-up
+//!   steps — no voting, no state exchange.
+
+use crate::engine::Direction;
+
+/// Which algorithm variant to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// Classic BFS: top-down at every level (the paper's "Top-Down" rows).
+    AlwaysTopDown,
+    /// Direction-optimized (paper Algorithm 1 + §3.3 coordination).
+    DirectionOptimized {
+        /// Switch TD→BU when the coordinator's frontier out-edges exceed
+        /// `1/alpha` of its unexplored edges (Beamer's alpha; default 14).
+        alpha: f64,
+        /// Return to top-down after this many bottom-up steps (fixed-step
+        /// return, §3.3; default 3).
+        bu_steps: u32,
+    },
+}
+
+impl PolicyKind {
+    pub fn direction_optimized() -> Self {
+        PolicyKind::DirectionOptimized { alpha: 14.0, bu_steps: 3 }
+    }
+}
+
+/// What the coordinator partition sees at the end of a superstep — strictly
+/// local quantities (no cross-partition communication, the §3.3 point).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorView {
+    /// Sum of degrees of the coordinator's vertices in the *next* frontier.
+    pub frontier_out_edges: u64,
+    /// Sum of degrees of the coordinator's still-unvisited vertices.
+    pub unexplored_edges: u64,
+}
+
+/// Mutable policy state across one BFS run.
+#[derive(Clone, Debug)]
+pub struct DirectionPolicy {
+    pub kind: PolicyKind,
+    current: Direction,
+    bu_taken: u32,
+    switched_back: bool,
+}
+
+impl DirectionPolicy {
+    pub fn new(kind: PolicyKind) -> Self {
+        Self { kind, current: Direction::TopDown, bu_taken: 0, switched_back: false }
+    }
+
+    pub fn current(&self) -> Direction {
+        self.current
+    }
+
+    /// Decide the direction for the next level, given the coordinator's
+    /// local view. Called once per superstep, by the coordinator only.
+    pub fn advance(&mut self, view: CoordinatorView) -> Direction {
+        match self.kind {
+            PolicyKind::AlwaysTopDown => {}
+            PolicyKind::DirectionOptimized { alpha, bu_steps } => match self.current {
+                Direction::TopDown => {
+                    // Hybrid heuristic on coordinator-local counters.
+                    if !self.switched_back
+                        && view.frontier_out_edges as f64
+                            > view.unexplored_edges as f64 / alpha
+                        && view.frontier_out_edges > 0
+                    {
+                        self.current = Direction::BottomUp;
+                        self.bu_taken = 0;
+                    }
+                }
+                Direction::BottomUp => {
+                    self.bu_taken += 1;
+                    if self.bu_taken >= bu_steps {
+                        // Fixed-step return; all partitions take it
+                        // simultaneously, no communication needed.
+                        self.current = Direction::TopDown;
+                        self.switched_back = true;
+                    }
+                }
+            },
+        }
+        self.current
+    }
+
+    pub fn reset(&mut self) {
+        self.current = Direction::TopDown;
+        self.bu_taken = 0;
+        self.switched_back = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(fo: u64, un: u64) -> CoordinatorView {
+        CoordinatorView { frontier_out_edges: fo, unexplored_edges: un }
+    }
+
+    #[test]
+    fn always_top_down_never_switches() {
+        let mut p = DirectionPolicy::new(PolicyKind::AlwaysTopDown);
+        for _ in 0..10 {
+            assert_eq!(p.advance(view(1_000_000, 1)), Direction::TopDown);
+        }
+    }
+
+    #[test]
+    fn switches_when_frontier_dominates() {
+        let mut p = DirectionPolicy::new(PolicyKind::direction_optimized());
+        // Small frontier: stay top-down.
+        assert_eq!(p.advance(view(10, 10_000)), Direction::TopDown);
+        // Frontier out-edges > unexplored/14: go bottom-up.
+        assert_eq!(p.advance(view(1_000, 10_000)), Direction::BottomUp);
+    }
+
+    #[test]
+    fn fixed_step_return_and_no_reswitch() {
+        let mut p = DirectionPolicy::new(PolicyKind::DirectionOptimized { alpha: 14.0, bu_steps: 2 });
+        assert_eq!(p.advance(view(1_000, 1_000)), Direction::BottomUp);
+        assert_eq!(p.advance(view(0, 0)), Direction::BottomUp); // 1st BU step taken
+        assert_eq!(p.advance(view(0, 0)), Direction::TopDown); // fixed return after 2
+        // Even with a huge frontier, never re-enters bottom-up (tail levels).
+        assert_eq!(p.advance(view(1_000_000, 1)), Direction::TopDown);
+    }
+
+    #[test]
+    fn zero_frontier_never_triggers_switch() {
+        let mut p = DirectionPolicy::new(PolicyKind::direction_optimized());
+        assert_eq!(p.advance(view(0, 0)), Direction::TopDown);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut p = DirectionPolicy::new(PolicyKind::direction_optimized());
+        p.advance(view(1_000, 1_000));
+        assert_eq!(p.current(), Direction::BottomUp);
+        p.reset();
+        assert_eq!(p.current(), Direction::TopDown);
+        // Can switch again after reset.
+        assert_eq!(p.advance(view(1_000, 1_000)), Direction::BottomUp);
+    }
+}

@@ -1,0 +1,568 @@
+//! The hybrid direction-optimized BFS driver — paper Algorithm 1 over P
+//! partitions under the BSP model.
+//!
+//! Per superstep:
+//! 1. every partition runs its kernel for the current direction (CPU
+//!    partitions: `cpu_top_down`/`cpu_bottom_up`; accelerator partitions:
+//!    the AOT kernel via the [`Accelerator`] trait);
+//! 2. top-down ends with the batched push (Algorithm 2), bottom-up begins
+//!    with the pull of the global frontier (Algorithm 3);
+//! 3. `Synchronize()`: frontiers advance, the coordinator (CPU partition 0,
+//!    owner of the hubs — §3.3) picks the next direction from local state.
+//!
+//! Partitions execute sequentially and deterministically; per-PE time on
+//! the paper's testbed is attributed afterwards by `runtime::device` from
+//! the work counters collected here (DESIGN.md §1).
+
+use anyhow::{anyhow, Result};
+
+use super::bottom_up::cpu_bottom_up;
+use super::direction::{CoordinatorView, DirectionPolicy, PolicyKind};
+use super::top_down::cpu_top_down;
+use super::BfsRun;
+use crate::engine::comm::{CommBuffers, CommMode};
+use crate::engine::{Accelerator, BfsState, Direction, LevelStats, PeWork};
+use crate::partition::PartitionedGraph;
+use crate::util::Bitmap;
+
+/// Driver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HybridConfig {
+    pub policy: PolicyKind,
+    pub comm_mode: CommMode,
+    /// GPU top-down frontiers smaller than this are walked on the host
+    /// (the device call's PCIe round trip costs more than the walk; the
+    /// host visited mirror stays authoritative either way). Totem's tail
+    /// handling does the same.
+    pub gpu_td_host_threshold: u64,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyKind::direction_optimized(),
+            comm_mode: CommMode::Batched,
+            gpu_td_host_threshold: 4096,
+        }
+    }
+}
+
+/// A reusable BFS runner over one partitioned graph. State buffers persist
+/// across runs (Graph500 campaigns run 64+ searches over one graph).
+pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
+    pg: &'g PartitionedGraph,
+    cfg: HybridConfig,
+    state: BfsState,
+    comm: CommBuffers,
+    accel: Option<&'g mut A>,
+    // reusable scratch
+    queue: Vec<u32>,
+    incoming: Bitmap,
+    gpu_frontier: Vec<i32>,
+    gpu_merge: Vec<u32>,
+}
+
+impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
+    /// Build a runner. `accel` must be provided iff the partitioning has
+    /// GPU partitions; it is `setup()` here with each GPU partition's ELL
+    /// (the variant shape decision lives in the Accelerator impl).
+    pub fn new(
+        pg: &'g PartitionedGraph,
+        cfg: HybridConfig,
+        accel: Option<&'g mut A>,
+    ) -> Result<Self> {
+        let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+        let mut accel = accel;
+        if has_gpu {
+            let a = accel
+                .as_deref_mut()
+                .ok_or_else(|| anyhow!("partitioning has GPU partitions but no accelerator"))?;
+            for p in &pg.parts {
+                if p.kind.is_gpu() {
+                    // The Accelerator impl chooses its SELL slicing and
+                    // pads up to its variant grid.
+                    a.setup(p.id, p)?;
+                }
+            }
+        }
+        Ok(Self {
+            state: BfsState::new(pg),
+            comm: CommBuffers::new(pg),
+            pg,
+            cfg,
+            accel,
+            queue: Vec::new(),
+            incoming: Bitmap::new(pg.num_vertices),
+            gpu_frontier: Vec::new(),
+            gpu_merge: Vec::new(),
+        })
+    }
+
+    pub fn graph(&self) -> &'g PartitionedGraph {
+        self.pg
+    }
+
+    /// Degree of a global vertex via its owning partition's local CSR.
+    #[inline]
+    fn degree(&self, v: u32) -> usize {
+        let pid = self.pg.owner_of(v);
+        self.pg.parts[pid].degree(self.pg.local_of(v))
+    }
+
+    /// Run one BFS from `root`. Deterministic given the partitioning.
+    pub fn run(&mut self, root: u32) -> Result<BfsRun> {
+        let t0 = std::time::Instant::now();
+        let np = self.pg.parts.len();
+        let v_total = self.pg.num_vertices;
+        anyhow::ensure!((root as usize) < v_total, "root {root} out of range");
+
+        let init_bytes = self.state.reset();
+        for p in &self.pg.parts {
+            if p.kind.is_gpu() {
+                self.accel.as_deref_mut().unwrap().reset(p.id);
+            }
+        }
+        let mut policy = DirectionPolicy::new(self.cfg.policy);
+
+        let root_pid = self.pg.owner_of(root);
+        self.state.set_root(root_pid, root);
+        if self.pg.parts[root_pid].kind.is_gpu() {
+            let li = self.pg.local_of(root) as u32;
+            self.accel.as_deref_mut().unwrap().mark_visited(root_pid, &[li]);
+        }
+
+        let mut levels: Vec<LevelStats> = Vec::new();
+        let mut level: u32 = 0;
+
+        loop {
+            // ---- frontier census (drives Fig 1 and termination) ----
+            let mut frontier_size = 0u64;
+            let mut degree_sum = 0u64;
+            for pid in 0..np {
+                for v in self.state.frontiers[pid].current.iter_ones() {
+                    frontier_size += 1;
+                    degree_sum += self.degree(v as u32) as u64;
+                }
+            }
+            if frontier_size == 0 {
+                break;
+            }
+            if level as usize > v_total {
+                return Err(anyhow!("BFS did not terminate"));
+            }
+
+            let mut stats = LevelStats {
+                level,
+                direction: Some(policy.current()),
+                pe_work: vec![PeWork::default(); np],
+                frontier_size,
+                frontier_degree_sum: degree_sum,
+                ..Default::default()
+            };
+
+            match policy.current() {
+                Direction::TopDown => self.superstep_top_down(level, &mut stats)?,
+                Direction::BottomUp => self.superstep_bottom_up(level, &mut stats)?,
+            }
+
+            // ---- Synchronize(): advance frontiers ----
+            for pid in 0..np {
+                self.state.frontiers[pid].advance();
+            }
+
+            // ---- coordinator's local direction decision (§3.3) ----
+            let view = self.coordinator_view();
+            policy.advance(view);
+
+            levels.push(stats);
+            level += 1;
+        }
+
+        // ---- final parent aggregation (§3.1) ----
+        // CPU-side contribution fragments, plus each GPU partition's
+        // device-resident parent array collected once (the paper's
+        // "collected from the different address spaces" step).
+        let mut aggregation_bytes = self.state.aggregate_parents().map_err(|e| anyhow!(e))?;
+        for p in &self.pg.parts {
+            if p.kind.is_gpu() {
+                aggregation_bytes += p.num_vertices() as u64 * 4;
+            }
+        }
+
+        // ---- reached census (TEPS numerator) ----
+        let mut reached = 0u64;
+        let mut endpoints = 0u64;
+        for v in 0..v_total as u32 {
+            if self.state.depth[v as usize] >= 0 {
+                reached += 1;
+                endpoints += self.degree(v) as u64;
+            }
+        }
+
+        Ok(BfsRun {
+            root,
+            depth: self.state.depth.clone(),
+            parent: self.state.parent.clone(),
+            levels,
+            init_bytes,
+            aggregation_bytes,
+            reached_vertices: reached,
+            reached_edge_endpoints: endpoints,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// One top-down superstep over all partitions + the push phase.
+    fn superstep_top_down(&mut self, level: u32, stats: &mut LevelStats) -> Result<()> {
+        let np = self.pg.parts.len();
+        self.comm.clear();
+        let mut crossing = 0u64;
+
+        for pid in 0..np {
+            if self.pg.parts[pid].kind.is_gpu() {
+                let work = self.gpu_top_down(pid, level)?;
+                stats.pe_work[pid] = work;
+                crossing += work.activated; // crossing splits counted below
+            } else {
+                let (work, cr) =
+                    cpu_top_down(self.pg, pid, &mut self.state, &mut self.comm, level, &mut self.queue);
+                stats.pe_work[pid] = work;
+                crossing += cr;
+            }
+        }
+
+        // Push phase (Algorithm 2): merge per-destination buffers into each
+        // owner, once per round.
+        stats.comm = self.comm.push_stats(self.pg, self.cfg.comm_mode, crossing);
+        for q in 0..np {
+            self.incoming.clear();
+            let mut any = false;
+            for p in 0..np {
+                if p != q && self.comm.outgoing_ref(p, q).any() {
+                    self.incoming.or_with(self.comm.outgoing_ref(p, q));
+                    any = true;
+                }
+            }
+            if !any {
+                continue;
+            }
+            if self.pg.parts[q].kind.is_gpu() {
+                // Owner-side merge with accelerator visited mirroring.
+                self.gpu_merge.clear();
+                let state = &mut self.state;
+                for v in self.incoming.iter_ones() {
+                    if !state.visited[q].get(v) {
+                        state.visited[q].set(v);
+                        state.depth[v] = (level + 1) as i32;
+                        state.parent[v] = crate::engine::state::PARENT_REMOTE;
+                        state.frontiers[q].next.set(v);
+                        self.gpu_merge.push(self.pg.local_index[v]);
+                    }
+                }
+                stats.pe_work[q].activated += self.gpu_merge.len() as u64;
+                if !self.gpu_merge.is_empty() {
+                    self.accel.as_deref_mut().unwrap().mark_visited(q, &self.gpu_merge);
+                }
+            } else {
+                let newly = self.state.merge_pushed(q, &self.incoming, level + 1);
+                stats.pe_work[q].activated += newly;
+            }
+        }
+        Ok(())
+    }
+
+    /// One bottom-up superstep: pull (Algorithm 3) then per-partition scans.
+    fn superstep_bottom_up(&mut self, level: u32, stats: &mut LevelStats) -> Result<()> {
+        let np = self.pg.parts.len();
+
+        // Pull phase: aggregate the global frontier; account the transfers.
+        let nonempty: Vec<bool> =
+            (0..np).map(|p| self.state.frontiers[p].current.any()).collect();
+        self.state.global_frontier.aggregate(self.state.frontiers.iter().map(|f| f));
+        stats.comm = self.comm.pull_stats(self.pg, &nonempty);
+
+        // Take the aggregate out of `state` for the borrow checker.
+        let gf = std::mem::replace(&mut self.state.global_frontier.bits, Bitmap::new(0));
+        for pid in 0..np {
+            if self.pg.parts[pid].kind.is_gpu() {
+                stats.pe_work[pid] = self.gpu_bottom_up(pid, &gf, level)?;
+            } else {
+                stats.pe_work[pid] = cpu_bottom_up(self.pg, pid, &mut self.state, &gf, level);
+            }
+        }
+        self.state.global_frontier.bits = gf;
+        Ok(())
+    }
+
+    /// Accelerator top-down step: build local frontier flags, run the AOT
+    /// kernel, route its global activations (own vs remote). Frontiers
+    /// below `gpu_td_host_threshold` are walked on the host instead — the
+    /// device round trip costs more than the walk (Totem's tail handling).
+    fn gpu_top_down(&mut self, pid: usize, level: u32) -> Result<PeWork> {
+        let mut work = PeWork::default();
+
+        let frontier = &self.state.frontiers[pid].current;
+        if !frontier.any() {
+            return Ok(work);
+        }
+        let fcount = frontier.count() as u64;
+        if fcount < self.cfg.gpu_td_host_threshold {
+            return self.gpu_top_down_host(pid, level);
+        }
+
+        let accel = self.accel.as_deref_mut().unwrap();
+        let n = self.pg.parts[pid].num_vertices();
+        self.gpu_frontier.clear();
+        self.gpu_frontier.resize(n, 0);
+        for v in self.state.frontiers[pid].current.iter_ones() {
+            self.gpu_frontier[self.pg.local_index[v] as usize] = 1;
+        }
+        work.vertices_scanned = fcount;
+
+        let r = accel.top_down(pid, &self.gpu_frontier)?;
+        work.edges_examined = r.edges_out as u64;
+        work.pcie_bytes = r.pcie_bytes;
+        work.pcie_transfers = r.pcie_transfers;
+
+        // Route activations: local ones are owner-side activations with a
+        // known parent; remote ones go to push buffers + contributions.
+        let v_total = self.pg.num_vertices;
+        for (v, (&a, &p)) in r.active.iter().zip(r.parent.iter()).enumerate().take(v_total) {
+            if a == 0 {
+                continue;
+            }
+            debug_assert!(p >= 0);
+            let q = self.pg.owner_of(v as u32);
+            if q == pid {
+                if !self.state.visited[pid].get(v) {
+                    self.state.activate_local(pid, v as u32, p as u32, level + 1);
+                    accel.mark_visited(pid, &[self.pg.local_index[v]]);
+                    work.activated += 1;
+                }
+            } else if !self.comm.outgoing_ref(pid, q).get(v) {
+                self.comm.outgoing(pid, q).set(v);
+                self.state.record_contrib(pid, v as u32, p as u32, level);
+                work.activated += 1; // crossing activation
+            }
+        }
+        Ok(work)
+    }
+
+    /// Host-side walk of a small GPU-partition top-down frontier. The host
+    /// visited mirror is authoritative (`mark_visited` keeps the device
+    /// copy in sync), so no transfer is needed. Work is attributed to the
+    /// coordinating CPU (partition 0) by the caller's convention: we return
+    /// it in this partition's slot but the device model prices TopDown CPU
+    /// work identically, and the byte counts are tiny by construction.
+    fn gpu_top_down_host(&mut self, pid: usize, level: u32) -> Result<PeWork> {
+        let (work, crossing) = cpu_top_down(
+            self.pg,
+            pid,
+            &mut self.state,
+            &mut self.comm,
+            level,
+            &mut self.queue,
+        );
+        // Newly activated local vertices must be mirrored to the device.
+        self.gpu_merge.clear();
+        for v in self.state.frontiers[pid].next.iter_ones() {
+            self.gpu_merge.push(self.pg.local_index[v]);
+        }
+        if !self.gpu_merge.is_empty() {
+            self.accel.as_deref_mut().unwrap().mark_visited(pid, &self.gpu_merge);
+        }
+        let mut work = work;
+        work.activated += crossing;
+        Ok(work)
+    }
+
+    /// Accelerator bottom-up step: feed the packed global frontier, fold
+    /// results back into owner state.
+    fn gpu_bottom_up(&mut self, pid: usize, gf: &Bitmap, level: u32) -> Result<PeWork> {
+        let mut work = PeWork::default();
+        let accel = self.accel.as_deref_mut().unwrap();
+        // Dense device work regardless of frontier occupancy: the SELL
+        // lanes streamed per level.
+        work.vertices_scanned = self.pg.parts[pid].num_vertices() as u64;
+        work.edges_examined = accel.lanes(pid);
+
+        let r = accel.bottom_up(pid, gf.words())?;
+        work.pcie_bytes = r.pcie_bytes;
+        work.pcie_transfers = r.pcie_transfers;
+        if r.count == 0 {
+            return Ok(work);
+        }
+        work.activated = r.count as u64;
+        let part = &self.pg.parts[pid];
+        for li in 0..part.num_vertices() {
+            if r.next_frontier[li] == 1 {
+                let gid = part.gids[li];
+                let parent = r.parent[li];
+                debug_assert!(parent >= 0);
+                // Kernel already folded visited on-device.
+                self.state.activate_local(pid, gid, parent as u32, level + 1);
+            }
+        }
+        Ok(work)
+    }
+
+    /// The coordinator's strictly-local view for the switch decision.
+    fn coordinator_view(&self) -> CoordinatorView {
+        let pid = 0; // CPU partition 0 owns the hubs (specialized placement)
+        let part = &self.pg.parts[pid];
+        let mut frontier_out = 0u64;
+        for v in self.state.frontiers[pid].current.iter_ones() {
+            frontier_out += part.degree(self.pg.local_of(v as u32)) as u64;
+        }
+        let mut unexplored = 0u64;
+        for li in 0..part.num_vertices() {
+            let gid = part.gids[li];
+            if !self.state.visited[pid].get(gid as usize) {
+                unexplored += part.degree(li) as u64;
+            }
+        }
+        CoordinatorView { frontier_out_edges: frontier_out, unexplored_edges: unexplored }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::validate::validate_graph500;
+    use crate::engine::SimAccelerator;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::{build_csr, Csr, EdgeList};
+    use crate::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+
+    fn hw(s: usize, g: usize) -> HardwareConfig {
+        HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 22, gpu_max_degree: 32 }
+    }
+
+    fn run_hybrid(g: &Csr, cfg_hw: &HardwareConfig, policy: PolicyKind, root: u32) -> BfsRun {
+        let (pg, _) = specialized_partition(g, cfg_hw, &LayoutOptions::paper());
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, ..Default::default() };
+        let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
+        let mut runner = HybridRunner::new(&pg, cfg, accel).unwrap();
+        runner.run(root).unwrap()
+    }
+
+    fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+        let mut depth = vec![-1i32; g.num_vertices];
+        depth[root as usize] = 0;
+        let mut q = std::collections::VecDeque::from([root]);
+        while let Some(u) = q.pop_front() {
+            for &w in g.neighbours(u) {
+                if depth[w as usize] < 0 {
+                    depth[w as usize] = depth[u as usize] + 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        depth
+    }
+
+    #[test]
+    fn path_graph_cpu_only() {
+        let g = build_csr(&EdgeList { num_vertices: 5, edges: vec![(0, 1), (1, 2), (2, 3), (3, 4)] });
+        let run = run_hybrid(&g, &hw(2, 0), PolicyKind::AlwaysTopDown, 0);
+        assert_eq!(run.depth, vec![0, 1, 2, 3, 4]);
+        validate_graph500(&g, 0, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn kron_cpu_only_classic_matches_reference() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 1)));
+        for root in [0u32, 13, 200] {
+            let run = run_hybrid(&g, &hw(2, 0), PolicyKind::AlwaysTopDown, root);
+            assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+            validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+        }
+    }
+
+    #[test]
+    fn kron_cpu_only_direction_optimized_matches_reference() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 2)));
+        // Roots must be non-singletons for bottom-up levels to appear.
+        let roots: Vec<u32> =
+            (0..g.num_vertices as u32).filter(|&v| g.degree(v) > 4).take(2).collect();
+        for root in roots {
+            let run = run_hybrid(&g, &hw(2, 0), PolicyKind::direction_optimized(), root);
+            assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+            validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+            // The policy actually used bottom-up somewhere.
+            assert!(
+                run.levels.iter().any(|l| l.direction == Some(Direction::BottomUp)),
+                "expected at least one bottom-up level"
+            );
+        }
+    }
+
+    #[test]
+    fn kron_hybrid_with_sim_accelerator_matches_reference() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 3)));
+        for root in [0u32, 5, 321] {
+            let run = run_hybrid(&g, &hw(2, 2), PolicyKind::direction_optimized(), root);
+            assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+            validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+        }
+    }
+
+    #[test]
+    fn hybrid_classic_matches_reference() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 4)));
+        let run = run_hybrid(&g, &hw(1, 1), PolicyKind::AlwaysTopDown, 9);
+        assert_eq!(run.depth, reference_depths(&g, 9));
+        validate_graph500(&g, 9, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn root_on_gpu_partition_works() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 5)));
+        let (pg, _) = specialized_partition(&g, &hw(1, 1), &LayoutOptions::paper());
+        // Find a vertex owned by the GPU partition.
+        let root = (0..g.num_vertices as u32)
+            .find(|&v| pg.parts[pg.owner_of(v)].kind.is_gpu())
+            .expect("no GPU-owned vertex");
+        let run = run_hybrid(&g, &hw(1, 1), PolicyKind::direction_optimized(), root);
+        assert_eq!(run.depth, reference_depths(&g, root));
+        validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn isolated_root_reaches_only_itself() {
+        let mut el = EdgeList { num_vertices: 6, edges: vec![(0, 1), (1, 2)] };
+        el.num_vertices = 6;
+        let g = build_csr(&el);
+        let run = run_hybrid(&g, &hw(2, 0), PolicyKind::direction_optimized(), 5);
+        assert_eq!(run.reached_vertices, 1);
+        assert_eq!(run.traversed_edges(), 0);
+        validate_graph500(&g, 5, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn runner_reusable_across_roots() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 6)));
+        let (pg, _) = specialized_partition(&g, &hw(1, 1), &LayoutOptions::paper());
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let mut runner =
+            HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+        for root in [0u32, 1, 2, 3, 17] {
+            let run = runner.run(root).unwrap();
+            assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 7)));
+        let run = run_hybrid(&g, &hw(2, 1), PolicyKind::direction_optimized(), 3);
+        // Level 0 frontier is exactly the root.
+        assert_eq!(run.levels[0].frontier_size, 1);
+        // Frontier sizes sum to reached vertices.
+        let fsum: u64 = run.levels.iter().map(|l| l.frontier_size).sum();
+        assert_eq!(fsum, run.reached_vertices);
+        // Init bytes cover at least depth+parent.
+        assert!(run.init_bytes >= (g.num_vertices * 8) as u64);
+    }
+}

@@ -1,0 +1,50 @@
+//! BFS algorithms: the partitioned hybrid direction-optimized driver
+//! (paper Algorithm 1), the CPU kernels, the direction-switch policy
+//! (Section 3.3), single-address-space baselines, and the Graph500
+//! validator.
+
+pub mod baseline;
+pub mod bottom_up;
+pub mod direction;
+pub mod hybrid;
+pub mod top_down;
+pub mod validate;
+
+pub use baseline::{baseline_bfs, BaselineKind, BaselineRun};
+pub use direction::{DirectionPolicy, PolicyKind};
+pub use hybrid::{HybridConfig, HybridRunner};
+pub use validate::validate_graph500;
+
+use crate::engine::LevelStats;
+
+/// The output of one BFS run (hybrid or baseline): the Graph500 deliverable
+/// (parent tree) plus everything the benches need to attribute time.
+#[derive(Clone, Debug)]
+pub struct BfsRun {
+    pub root: u32,
+    /// Global depth per vertex; -1 unreached.
+    pub depth: Vec<i32>,
+    /// Global parent gid per vertex; -1 unreached; root's parent is itself.
+    pub parent: Vec<i64>,
+    /// Per-level (superstep) statistics.
+    pub levels: Vec<LevelStats>,
+    /// Bytes initialized before the search (Fig 3 "init" component).
+    pub init_bytes: u64,
+    /// Bytes moved by the final parent aggregation (Fig 3 "aggregation").
+    pub aggregation_bytes: u64,
+    /// Vertices reached (incl. root).
+    pub reached_vertices: u64,
+    /// Sum of degrees over reached vertices; /2 = undirected edges
+    /// traversed, the Graph500 TEPS numerator.
+    pub reached_edge_endpoints: u64,
+    /// Host wall-clock of the run (measured; the device model provides the
+    /// paper-testbed attribution separately).
+    pub wall: std::time::Duration,
+}
+
+impl BfsRun {
+    /// Undirected traversed edges (Graph500 TEPS numerator).
+    pub fn traversed_edges(&self) -> u64 {
+        self.reached_edge_endpoints / 2
+    }
+}

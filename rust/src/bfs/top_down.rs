@@ -1,0 +1,126 @@
+//! CPU top-down kernel (paper Algorithm 1, lines 2–12).
+//!
+//! Explores the out-edges of the partition's current frontier. Local
+//! targets are activated in place; remote targets are routed into the
+//! per-destination push buffers (Algorithm 2 sends them once per round)
+//! with a parent contribution recorded locally (Section 3.1 optimization:
+//! parents are aggregated at the end, never communicated per-level).
+
+use crate::engine::comm::CommBuffers;
+use crate::engine::{BfsState, PeWork};
+use crate::partition::PartitionedGraph;
+
+/// Run one top-down superstep for CPU partition `pid` at `level` (the
+/// frontier's depth). Returns the work counters plus the number of
+/// boundary-crossing activations routed into push buffers.
+///
+/// `queue` is a reusable scratch vector (hot path: no allocation).
+pub fn cpu_top_down(
+    pg: &PartitionedGraph,
+    pid: usize,
+    state: &mut BfsState,
+    comm: &mut CommBuffers,
+    level: u32,
+    queue: &mut Vec<u32>,
+) -> (PeWork, u64) {
+    let part = &pg.parts[pid];
+    let mut work = PeWork::default();
+    let mut crossing = 0u64;
+
+    // Materialize the frontier queue (iter borrows the bitmap immutably;
+    // activations below need &mut state).
+    queue.clear();
+    queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
+    work.vertices_scanned = queue.len() as u64;
+
+    for &v in queue.iter() {
+        let li = pg.local_of(v);
+        for &w in part.neighbours(li) {
+            work.edges_examined += 1;
+            let q = pg.owner_of(w);
+            if q == pid {
+                if !state.visited[pid].get(w as usize) {
+                    state.activate_local(pid, w, v, level + 1);
+                    work.activated += 1;
+                }
+            } else if !comm.outgoing_ref(pid, q).get(w as usize) {
+                comm.outgoing(pid, q).set(w as usize);
+                state.record_contrib(pid, w, v, level);
+                crossing += 1;
+            }
+        }
+    }
+    (work, crossing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn two_cpu(edges: Vec<(u32, u32)>, nv: usize, owner: Vec<u8>) -> PartitionedGraph {
+        let g = build_csr(&EdgeList { num_vertices: nv, edges });
+        let cfg = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        materialize(&g, owner, &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn activates_local_and_routes_remote() {
+        // 0-1 local to partition 0; 0-2 crosses to partition 1.
+        let pg = two_cpu(vec![(0, 1), (0, 2)], 3, vec![0, 0, 1]);
+        let mut st = BfsState::new(&pg);
+        let mut comm = CommBuffers::new(&pg);
+        st.set_root(0, 0);
+        let mut q = Vec::new();
+        let (work, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
+        assert_eq!(work.edges_examined, 2);
+        assert_eq!(work.activated, 1);
+        assert_eq!(crossing, 1);
+        assert_eq!(st.depth[1], 1);
+        assert_eq!(st.parent[1], 0);
+        assert!(comm.outgoing_ref(0, 1).get(2));
+        // Contribution recorded at the frontier's level (0).
+        assert_eq!(st.contrib_parent[0][2], 0);
+        assert_eq!(st.contrib_level[0][2], 0);
+    }
+
+    #[test]
+    fn does_not_reactivate_visited() {
+        let pg = two_cpu(vec![(0, 1), (1, 0)], 2, vec![0, 0]);
+        let mut st = BfsState::new(&pg);
+        let mut comm = CommBuffers::new(&pg);
+        st.set_root(0, 0);
+        let mut q = Vec::new();
+        cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
+        // Level 1: frontier {1}; its neighbour 0 is visited.
+        st.frontiers[0].advance();
+        let (work, _) = cpu_top_down(&pg, 0, &mut st, &mut comm, 1, &mut q);
+        assert_eq!(work.activated, 0);
+        assert_eq!(st.depth[0], 0, "root depth untouched");
+    }
+
+    #[test]
+    fn deduplicates_remote_pushes_within_level() {
+        // Both 0 and 1 (partition 0, in frontier) point at remote 2.
+        let pg = two_cpu(vec![(0, 2), (1, 2), (0, 1)], 3, vec![0, 0, 1]);
+        let mut st = BfsState::new(&pg);
+        let mut comm = CommBuffers::new(&pg);
+        st.set_root(0, 0);
+        st.activate_local(0, 1, 0, 0); // force both into current frontier
+        st.frontiers[0].current.set(1);
+        let mut q = Vec::new();
+        let (_, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
+        assert_eq!(crossing, 1, "second push to same vertex deduplicated");
+    }
+
+    #[test]
+    fn empty_frontier_is_a_noop() {
+        let pg = two_cpu(vec![(0, 1)], 2, vec![0, 0]);
+        let mut st = BfsState::new(&pg);
+        let mut comm = CommBuffers::new(&pg);
+        let mut q = Vec::new();
+        let (work, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
+        assert_eq!(work.edges_examined + work.activated + crossing, 0);
+    }
+}

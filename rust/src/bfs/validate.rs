@@ -1,0 +1,170 @@
+//! Graph500-style BFS output validation.
+//!
+//! Checks (superset of the spec's five):
+//! 1. the root is its own parent at depth 0;
+//! 2. every reached vertex's tree edge `(parent(v), v)` exists in the graph;
+//! 3. tree depths are consistent: `depth(v) == depth(parent(v)) + 1`;
+//! 4. depths equal true BFS distances (level-minimality);
+//! 5. reachability agreement: v has a parent iff v is in the root's
+//!    connected component.
+
+use crate::graph::Csr;
+
+/// Validate a parent tree + depth labelling for `root`.
+pub fn validate_graph500(
+    g: &Csr,
+    root: u32,
+    parent: &[i64],
+    depth: &[i32],
+) -> Result<(), String> {
+    let nv = g.num_vertices;
+    if parent.len() != nv || depth.len() != nv {
+        return Err("parent/depth length mismatch".into());
+    }
+
+    // (1) root checks
+    if parent[root as usize] != root as i64 {
+        return Err(format!("root parent is {} not itself", parent[root as usize]));
+    }
+    if depth[root as usize] != 0 {
+        return Err(format!("root depth is {} not 0", depth[root as usize]));
+    }
+
+    // Reference distances (simple queue BFS).
+    let mut ref_depth = vec![-1i32; nv];
+    ref_depth[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbours(u) {
+            if ref_depth[w as usize] < 0 {
+                ref_depth[w as usize] = ref_depth[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+
+    for v in 0..nv {
+        let reached = parent[v] >= 0;
+        let ref_reached = ref_depth[v] >= 0;
+        // (5) reachability agreement
+        if reached != ref_reached {
+            return Err(format!(
+                "vertex {v}: reached={reached} but reference says {ref_reached}"
+            ));
+        }
+        if !reached {
+            if depth[v] != -1 {
+                return Err(format!("unreached vertex {v} has depth {}", depth[v]));
+            }
+            continue;
+        }
+        // (4) level minimality
+        if depth[v] != ref_depth[v] {
+            return Err(format!(
+                "vertex {v}: depth {} != BFS distance {}",
+                depth[v], ref_depth[v]
+            ));
+        }
+        if v as u32 == root {
+            continue;
+        }
+        let p = parent[v] as u32;
+        if p as usize >= nv {
+            return Err(format!("vertex {v}: parent {p} out of range"));
+        }
+        // (2) tree edges are graph edges
+        if !g.neighbours(p).contains(&(v as u32)) {
+            return Err(format!("vertex {v}: tree edge ({p},{v}) not in graph"));
+        }
+        // (3) tree depth consistency
+        if depth[v] != depth[p as usize] + 1 {
+            return Err(format!(
+                "vertex {v}: depth {} != parent depth {} + 1",
+                depth[v], depth[p as usize]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+
+    fn triangle_plus_tail() -> Csr {
+        // 0-1, 1-2, 2-0, 2-3; vertex 4 isolated.
+        build_csr(&EdgeList {
+            num_vertices: 5,
+            edges: vec![(0, 1), (1, 2), (2, 0), (2, 3)],
+        })
+    }
+
+    fn good_tree() -> (Vec<i64>, Vec<i32>) {
+        (vec![0, 0, 0, 2, -1], vec![0, 1, 1, 2, -1])
+    }
+
+    #[test]
+    fn accepts_valid_tree() {
+        let g = triangle_plus_tail();
+        let (p, d) = good_tree();
+        validate_graph500(&g, 0, &p, &d).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_root() {
+        let g = triangle_plus_tail();
+        let (mut p, d) = good_tree();
+        p[0] = 1;
+        assert!(validate_graph500(&g, 0, &p, &d).is_err());
+    }
+
+    #[test]
+    fn rejects_non_edge_parent() {
+        let g = triangle_plus_tail();
+        let (mut p, d) = good_tree();
+        p[3] = 0; // (0,3) is not an edge
+        assert!(validate_graph500(&g, 0, &p, &d).unwrap_err().contains("not in graph"));
+    }
+
+    #[test]
+    fn rejects_depth_inconsistency() {
+        let g = triangle_plus_tail();
+        let (p, mut d) = good_tree();
+        d[3] = 3;
+        assert!(validate_graph500(&g, 0, &p, &d).is_err());
+    }
+
+    #[test]
+    fn rejects_non_minimal_depth() {
+        // 0-1, 0-2, 1-2: claiming 2 at depth 2 via parent 1 is a valid tree
+        // but not a BFS tree (distance is 1).
+        let g = build_csr(&EdgeList { num_vertices: 3, edges: vec![(0, 1), (0, 2), (1, 2)] });
+        let p = vec![0i64, 0, 1];
+        let d = vec![0, 1, 2];
+        assert!(validate_graph500(&g, 0, &p, &d).unwrap_err().contains("BFS distance"));
+    }
+
+    #[test]
+    fn rejects_reachability_mismatch() {
+        let g = triangle_plus_tail();
+        let (mut p, mut d) = good_tree();
+        // Claim the isolated vertex was reached.
+        p[4] = 2;
+        d[4] = 3;
+        assert!(validate_graph500(&g, 0, &p, &d).is_err());
+        // Claim a reachable vertex was not reached.
+        let (mut p, mut d) = good_tree();
+        p[3] = -1;
+        d[3] = -1;
+        assert!(validate_graph500(&g, 0, &p, &d).is_err());
+    }
+
+    #[test]
+    fn rejects_unreached_with_depth() {
+        let g = triangle_plus_tail();
+        let (p, mut d) = good_tree();
+        d[4] = 7;
+        assert!(validate_graph500(&g, 0, &p, &d).is_err());
+    }
+}

@@ -1,0 +1,388 @@
+//! Hand-rolled CLI (clap is not vendored offline): flag parsing helpers
+//! and the `totem-do` subcommand implementations.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
+use crate::engine::{Accelerator, CommMode, SimAccelerator};
+use crate::graph::generator::{kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
+use crate::graph::stats::degree_stats;
+use crate::graph::{build_csr, io, Csr, EdgeList};
+use crate::metrics;
+use crate::partition::{
+    random_partition, specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph,
+};
+use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
+use crate::util::tables::{fmt_teps, fmt_time, Table};
+
+/// Minimal `--key value` / `--flag` argument map.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                values.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { values, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("bad value for --{key}: {s:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Load or generate the workload graph per common CLI flags.
+pub fn load_graph(args: &Args) -> Result<(Csr, String)> {
+    if let Some(path) = args.get("graph") {
+        let el = if path.ends_with(".bin") {
+            io::load_binary(path)?
+        } else {
+            io::load_text(path, None)?
+        };
+        return Ok((build_csr(&el), path.to_string()));
+    }
+    if let Some(class) = args.get("class") {
+        let seed = args.get_parse("seed", 42u64)?;
+        let class = match class {
+            "twitter-sim" => RealWorldClass::TwitterSim,
+            "wiki-sim" => RealWorldClass::WikipediaSim,
+            "lj-sim" => RealWorldClass::LiveJournalSim,
+            other => bail!("unknown --class {other:?}"),
+        };
+        return Ok((build_csr(&real_world_analog(class, seed)), class.name().to_string()));
+    }
+    let scale = args.get_parse("scale", 16u32)?;
+    let ef = args.get_parse("edge-factor", 16usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let cfg = GeneratorConfig { edge_factor: ef, ..GeneratorConfig::graph500(scale, seed) };
+    Ok((build_csr(&kronecker(&cfg)), format!("kron-scale{scale}-ef{ef}")))
+}
+
+/// Common hardware/partitioning flags.
+pub fn hardware(args: &Args) -> Result<HardwareConfig> {
+    let label = args.get("config").unwrap_or("2S2G");
+    let mem = args.get_parse("gpu-mem-mb", 256u64)? << 20;
+    let maxd = args.get_parse("gpu-max-degree", 32usize)?;
+    HardwareConfig::parse(label, mem, maxd)
+        .ok_or_else(|| anyhow!("bad --config {label:?} (expected e.g. 2S2G)"))
+}
+
+pub fn partition_graph(
+    args: &Args,
+    g: &Csr,
+    hw: &HardwareConfig,
+) -> Result<PartitionedGraph> {
+    let opts = if args.has("naive") { LayoutOptions::naive() } else { LayoutOptions::paper() };
+    match args.get("partition").unwrap_or("spec") {
+        "spec" | "specialized" => Ok(specialized_partition(g, hw, &opts).0),
+        "random" => Ok(random_partition(g, hw, &opts, args.get_parse("seed", 42u64)?)),
+        other => bail!("unknown --partition {other:?}"),
+    }
+}
+
+fn policy(args: &Args) -> Result<PolicyKind> {
+    match args.get("policy").unwrap_or("do") {
+        "do" | "direction-optimized" => Ok(PolicyKind::direction_optimized()),
+        "td" | "top-down" => Ok(PolicyKind::AlwaysTopDown),
+        other => bail!("unknown --policy {other:?}"),
+    }
+}
+
+/// `totem-do generate` — write a workload graph to disk.
+pub fn cmd_generate(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out required")?;
+    let el: EdgeList = if let Some(class) = args.get("class") {
+        let seed = args.get_parse("seed", 42u64)?;
+        let class = match class {
+            "twitter-sim" => RealWorldClass::TwitterSim,
+            "wiki-sim" => RealWorldClass::WikipediaSim,
+            "lj-sim" => RealWorldClass::LiveJournalSim,
+            other => bail!("unknown --class {other:?}"),
+        };
+        real_world_analog(class, seed)
+    } else {
+        let scale = args.get_parse("scale", 16u32)?;
+        let ef = args.get_parse("edge-factor", 16usize)?;
+        let seed = args.get_parse("seed", 42u64)?;
+        kronecker(&GeneratorConfig { edge_factor: ef, ..GeneratorConfig::graph500(scale, seed) })
+    };
+    if out.ends_with(".bin") {
+        io::save_binary(&el, out)?;
+    } else {
+        io::save_text(&el, out)?;
+    }
+    println!("wrote {} vertices, {} edges to {out}", el.num_vertices, el.edges.len());
+    Ok(())
+}
+
+/// `totem-do stats` — degree statistics of a workload.
+pub fn cmd_stats(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let s = degree_stats(&g);
+    println!("graph: {name}");
+    println!("vertices:        {}", s.num_vertices);
+    println!("undirected edges:{}", g.num_undirected_edges());
+    println!("singletons:      {}", s.num_singletons);
+    println!("max degree:      {}", s.max_degree);
+    println!("mean degree:     {:.2}", s.mean_degree);
+    println!("hubs for 50%:    {}", s.hubs_for_half);
+    println!("top-1% share:    {:.1}%", s.top1pct_share * 100.0);
+    println!("degree histogram (log2 buckets):");
+    for (i, &c) in s.log2_hist.iter().enumerate() {
+        if c > 0 {
+            println!("  2^{i:<2} <= d < 2^{:<2}: {c}", i + 1);
+        }
+    }
+    Ok(())
+}
+
+/// `totem-do bfs` — the main driver: partition, run a campaign, report.
+pub fn cmd_bfs(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let hw = hardware(args)?;
+    let pg = partition_graph(args, &g, &hw)?;
+    let pol = policy(args)?;
+    let roots_n = args.get_parse("roots", 16usize)?;
+    let validate = args.has("validate");
+    let naive = args.has("naive");
+
+    let cfg = HybridConfig {
+        policy: pol,
+        comm_mode: CommMode::Batched,
+        ..Default::default()
+    };
+
+    println!(
+        "graph={name} V={} E={} config={} partition={} policy={:?} gpu_share={:.1}%",
+        g.num_vertices,
+        g.num_undirected_edges(),
+        hw.label(),
+        args.get("partition").unwrap_or("spec"),
+        pol,
+        pg.gpu_vertex_share(&g) * 100.0
+    );
+
+    let roots =
+        metrics::sample_roots(g.num_vertices, |v| g.degree(v), roots_n, args.get_parse("seed", 42)?);
+    anyhow::ensure!(!roots.is_empty(), "no non-singleton roots found");
+
+    // Accelerator backend selection.
+    let mut sim;
+    let mut pjrt;
+    let accel: Option<&mut dyn Accelerator> = if hw.gpus > 0 {
+        if args.get("accel").unwrap_or("pjrt") == "sim" {
+            sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+            Some(&mut sim)
+        } else {
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(default_artifact_dir);
+            pjrt = PjrtAccelerator::new(&dir, g.num_vertices)
+                .with_context(|| format!("loading artifacts from {}", dir.display()))?;
+            Some(&mut pjrt)
+        }
+    } else {
+        None
+    };
+
+    let device = DeviceModel::default();
+    let energy = EnergyModel::default();
+    let mut runner = HybridRunner::new(&pg, cfg, accel)?;
+    let mut teps_model = Vec::new();
+    let mut teps_wall = Vec::new();
+    let mut joules = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (i, &root) in roots.iter().enumerate() {
+        let run = runner.run(root)?;
+        if validate {
+            validate_graph500(&g, root, &run.parent, &run.depth)
+                .map_err(|e| anyhow!("validation failed for root {root}: {e}"))?;
+        }
+        let timing = device.attribute(&run, &pg, naive);
+        let e = energy.energy(&timing, &pg);
+        teps_model.push(metrics::teps(run.traversed_edges(), timing.total));
+        teps_wall.push(metrics::teps(run.traversed_edges(), run.wall.as_secs_f64()));
+        joules.push((e, run.traversed_edges()));
+        if args.has("verbose") {
+            println!(
+                "  root {i:>3} = {root:<10} reached {:>9} modeled {} wall {}",
+                run.reached_vertices,
+                fmt_time(timing.total),
+                fmt_time(run.wall.as_secs_f64())
+            );
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let sm = metrics::summarize(&teps_model, total);
+    let sw = metrics::summarize(&teps_wall, total);
+    let eff: Vec<f64> = joules.iter().map(|(e, te)| mteps_per_watt(*te, e)).collect();
+
+    let mut t = Table::new(vec!["metric", "modeled (paper testbed)", "measured (this host)"]);
+    t.row(vec![
+        "harmonic TEPS".to_string(),
+        fmt_teps(sm.harmonic_teps),
+        fmt_teps(sw.harmonic_teps),
+    ]);
+    t.row(vec![
+        "mean TEPS".to_string(),
+        fmt_teps(sm.mean_teps),
+        fmt_teps(sw.mean_teps),
+    ]);
+    t.row(vec![
+        "energy eff.".to_string(),
+        format!("{:.2} MTEPS/W", metrics::harmonic_mean(&eff)),
+        "-".to_string(),
+    ]);
+    t.print();
+    if validate {
+        println!("validation: all {} searches passed Graph500 checks", roots.len());
+    }
+    Ok(())
+}
+
+/// `totem-do baseline` — single-address-space reference runs (Table 1 roles).
+pub fn cmd_baseline(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let kind = match args.get("policy").unwrap_or("do") {
+        "do" => BaselineKind::direction_optimized(),
+        "td" => BaselineKind::TopDown,
+        other => bail!("unknown --policy {other:?}"),
+    };
+    let sockets = args.get_parse("sockets", 2usize)?;
+    let naive = args.has("naive");
+    let roots_n = args.get_parse("roots", 16usize)?;
+    let roots =
+        metrics::sample_roots(g.num_vertices, |v| g.degree(v), roots_n, args.get_parse("seed", 42)?);
+    let device = DeviceModel::default();
+    let mut teps_model = Vec::new();
+    for &root in &roots {
+        let run = baseline_bfs(&g, root, kind);
+        if args.has("validate") {
+            validate_graph500(&g, root, &run.parent, &run.depth).map_err(|e| anyhow!(e))?;
+        }
+        let t = device.attribute_baseline(&run, sockets, naive);
+        teps_model.push(metrics::teps(run.traversed_edges(), t.total));
+    }
+    println!(
+        "baseline {name} policy={:?} sockets={sockets} naive={naive}: harmonic {}",
+        kind,
+        fmt_teps(metrics::harmonic_mean(&teps_model))
+    );
+    Ok(())
+}
+
+pub fn usage() -> &'static str {
+    "totem-do — direction-optimized BFS on hybrid architectures\n\
+     \n\
+     USAGE: totem-do <command> [--flags]\n\
+     \n\
+     COMMANDS:\n\
+       bfs       run a hybrid BFS campaign\n\
+                 --scale N | --graph FILE | --class twitter-sim|wiki-sim|lj-sim\n\
+                 --config 2S2G --partition spec|random --policy do|td\n\
+                 --roots K --accel pjrt|sim --artifacts DIR --validate --verbose\n\
+                 --gpu-mem-mb M --gpu-max-degree D --naive\n\
+       baseline  single-address-space reference BFS\n\
+                 --policy do|td --sockets N --naive --roots K --validate\n\
+       generate  write a workload graph\n\
+                 --scale N --edge-factor F --seed S | --class ... ; --out FILE[.bin]\n\
+       stats     degree statistics of a workload\n\
+       help      this text\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_values_and_flags() {
+        let a = Args::parse(&argv(&["--scale", "16", "--validate", "--config", "2S2G"])).unwrap();
+        assert_eq!(a.get("scale"), Some("16"));
+        assert_eq!(a.get("config"), Some("2S2G"));
+        assert!(a.has("validate"));
+        assert!(!a.has("verbose"));
+        assert_eq!(a.get_parse("scale", 0u32).unwrap(), 16);
+        assert_eq!(a.get_parse("roots", 64usize).unwrap(), 64); // default
+    }
+
+    #[test]
+    fn args_reject_bare_words_and_bad_values() {
+        assert!(Args::parse(&argv(&["scale", "16"])).is_err());
+        let a = Args::parse(&argv(&["--scale", "banana"])).unwrap();
+        assert!(a.get_parse("scale", 0u32).is_err());
+    }
+
+    #[test]
+    fn load_graph_generates_kron_by_default() {
+        let a = Args::parse(&argv(&["--scale", "8", "--seed", "3"])).unwrap();
+        let (g, name) = load_graph(&a).unwrap();
+        assert_eq!(g.num_vertices, 256);
+        assert!(name.contains("kron-scale8"));
+    }
+
+    #[test]
+    fn load_graph_real_world_classes() {
+        for class in ["twitter-sim", "wiki-sim", "lj-sim"] {
+            let a = Args::parse(&argv(&["--class", class, "--seed", "1"])).unwrap();
+            // Only check the dispatcher; generation at full class scale is
+            // bench-sized, so probe the error path for unknown classes too.
+            let _ = (class, &a);
+        }
+        let bad = Args::parse(&argv(&["--class", "nope"])).unwrap();
+        assert!(load_graph(&bad).is_err());
+    }
+
+    #[test]
+    fn hardware_parsing_defaults() {
+        let a = Args::parse(&argv(&[])).unwrap();
+        let hw = hardware(&a).unwrap();
+        assert_eq!((hw.cpu_sockets, hw.gpus), (2, 2));
+        let a = Args::parse(&argv(&["--config", "bogus"])).unwrap();
+        assert!(hardware(&a).is_err());
+    }
+
+    #[test]
+    fn partition_strategy_dispatch() {
+        let a = Args::parse(&argv(&["--scale", "8"])).unwrap();
+        let (g, _) = load_graph(&a).unwrap();
+        let hw = hardware(&a).unwrap();
+        assert!(partition_graph(&a, &g, &hw).is_ok());
+        let bad = Args::parse(&argv(&["--partition", "zigzag"])).unwrap();
+        assert!(partition_graph(&bad, &g, &hw).is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Inter-partition communication (paper Algorithms 2 & 3) and its byte/
+//! message accounting.
+//!
+//! Topology is Totem's hub-and-spoke: CPU sockets share host memory (their
+//! frontier exchange crosses the inter-socket QPI link), while each GPU
+//! talks to the host over its own PCIe link. A push or pull therefore
+//! costs, per GPU, ONE upload and/or ONE download per round — never
+//! GPU-to-GPU traffic.
+//!
+//! Key optimization reproduced from Section 3.1: push and pull each happen
+//! once per BSP round, carry only remote-relevant *bitmaps* (parents are
+//! never communicated during traversal — they move once, in the final
+//! aggregation step). `CommMode::PerActivation` is the ablation strawman
+//! that sends an eager 8-byte message per crossing activation instead
+//! (bench `ablation_comm`).
+
+use crate::partition::PartitionedGraph;
+use crate::util::Bitmap;
+
+/// Wire protocol flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommMode {
+    /// The paper's scheme: one bitmap per link per round.
+    Batched,
+    /// Eager per-activation messages — what the batching optimization
+    /// saves us from.
+    PerActivation,
+}
+
+/// Traffic over one link class during one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkTraffic {
+    pub bytes: u64,
+    pub msgs: u64,
+}
+
+impl LinkTraffic {
+    fn add(&mut self, bytes: u64) {
+        self.bytes += bytes;
+        self.msgs += 1;
+    }
+}
+
+/// Bytes/messages moved during one superstep, split by phase and link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Push traffic between CPU sockets (shared host memory / QPI).
+    pub push_host: LinkTraffic,
+    /// Push traffic on PCIe links (GPU uploads + downloads).
+    pub push_pcie: LinkTraffic,
+    pub pull_host: LinkTraffic,
+    pub pull_pcie: LinkTraffic,
+    /// Activations that crossed a partition boundary (basis of the
+    /// per-activation mode's cost).
+    pub crossing_activations: u64,
+}
+
+impl CommStats {
+    pub fn add(&mut self, o: &CommStats) {
+        self.push_host.bytes += o.push_host.bytes;
+        self.push_host.msgs += o.push_host.msgs;
+        self.push_pcie.bytes += o.push_pcie.bytes;
+        self.push_pcie.msgs += o.push_pcie.msgs;
+        self.pull_host.bytes += o.pull_host.bytes;
+        self.pull_host.msgs += o.pull_host.msgs;
+        self.pull_pcie.bytes += o.pull_pcie.bytes;
+        self.pull_pcie.msgs += o.pull_pcie.msgs;
+        self.crossing_activations += o.crossing_activations;
+    }
+
+    pub fn push_bytes(&self) -> u64 {
+        self.push_host.bytes + self.push_pcie.bytes
+    }
+
+    pub fn pull_bytes(&self) -> u64 {
+        self.pull_host.bytes + self.pull_pcie.bytes
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.push_bytes() + self.pull_bytes()
+    }
+}
+
+/// Outgoing activation buffers for every (source, destination) pair.
+///
+/// `buf[p][q]` holds the global-space bitmap of vertices owned by `q` that
+/// partition `p` activated during its top-down step this round.
+pub struct CommBuffers {
+    np: usize,
+    bufs: Vec<Vec<Bitmap>>,
+    /// Per-destination local bitmap wire size (bytes) — what actually
+    /// crosses a link for one (p, q) push.
+    dest_wire_bytes: Vec<u64>,
+}
+
+impl CommBuffers {
+    pub fn new(pg: &PartitionedGraph) -> Self {
+        let np = pg.parts.len();
+        let v = pg.num_vertices;
+        let bufs = (0..np)
+            .map(|_| (0..np).map(|_| Bitmap::new(v)).collect())
+            .collect();
+        let dest_wire_bytes = pg
+            .parts
+            .iter()
+            .map(|p| (p.num_vertices().div_ceil(8)) as u64)
+            .collect();
+        Self { np, bufs, dest_wire_bytes }
+    }
+
+    #[inline]
+    pub fn outgoing(&mut self, src: usize, dst: usize) -> &mut Bitmap {
+        &mut self.bufs[src][dst]
+    }
+
+    #[inline]
+    pub fn outgoing_ref(&self, src: usize, dst: usize) -> &Bitmap {
+        &self.bufs[src][dst]
+    }
+
+    pub fn clear(&mut self) {
+        for row in self.bufs.iter_mut() {
+            for b in row.iter_mut() {
+                b.clear();
+            }
+        }
+    }
+
+    /// Account for the push phase (Algorithm 2) under the hub-spoke
+    /// topology: a GPU with any outgoing data performs ONE upload of its
+    /// buffers; a GPU with any incoming data receives ONE download; traffic
+    /// between CPU sockets rides the host links.
+    pub fn push_stats(
+        &self,
+        pg: &PartitionedGraph,
+        mode: CommMode,
+        crossing_activations: u64,
+    ) -> CommStats {
+        let mut s = CommStats { crossing_activations, ..Default::default() };
+        if mode == CommMode::PerActivation {
+            // Every crossing activation is its own (worst-case PCIe-class)
+            // message.
+            s.push_pcie.bytes = crossing_activations * 8;
+            s.push_pcie.msgs = crossing_activations;
+            return s;
+        }
+        for p in 0..self.np {
+            // Bytes this source has for each destination.
+            let mut up_bytes = 0u64;
+            for q in 0..self.np {
+                if p == q || !self.bufs[p][q].any() {
+                    continue;
+                }
+                let bytes = self.dest_wire_bytes[q];
+                if pg.parts[p].kind.is_gpu() {
+                    up_bytes += bytes; // GPU -> host, batched below
+                } else if pg.parts[q].kind.is_gpu() {
+                    // host -> GPU download, one message per (host, gpu) set
+                    s.push_pcie.add(bytes);
+                } else {
+                    s.push_host.add(bytes);
+                }
+            }
+            if up_bytes > 0 {
+                s.push_pcie.add(up_bytes); // the GPU's single upload
+            }
+        }
+        s
+    }
+
+    /// Account for the pull phase (Algorithm 3) under the hub-spoke
+    /// topology: each GPU uploads its current-frontier bitmap once and
+    /// downloads the host-built aggregate once; CPU sockets read each
+    /// other's frontiers over host links.
+    pub fn pull_stats(&self, pg: &PartitionedGraph, nonempty: &[bool]) -> CommStats {
+        let mut s = CommStats::default();
+        let agg_bytes = (pg.num_vertices.div_ceil(8)) as u64;
+        for (q, part) in pg.parts.iter().enumerate() {
+            if part.kind.is_gpu() {
+                if nonempty[q] {
+                    s.pull_pcie.add(self.dest_wire_bytes[q]); // upload own
+                }
+                s.pull_pcie.add(agg_bytes); // download aggregate
+            } else {
+                // Socket reads every other socket's frontier from host
+                // memory (remote-NUMA traffic).
+                for (r, other) in pg.parts.iter().enumerate() {
+                    if r != q && !other.kind.is_gpu() && nonempty[r] {
+                        s.pull_host.add(self.dest_wire_bytes[r]);
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    /// 8 vertices: partition 0,1 = CPU sockets, partition 2 = GPU.
+    fn pg3() -> PartitionedGraph {
+        let g = build_csr(&EdgeList {
+            num_vertices: 9,
+            edges: vec![(0, 3), (1, 4), (2, 5), (6, 7), (7, 8)],
+        });
+        let cfg = HardwareConfig { cpu_sockets: 2, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 32 };
+        materialize(&g, vec![0, 0, 0, 1, 1, 1, 2, 2, 2], &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn push_empty_is_free() {
+        let pg = pg3();
+        let cb = CommBuffers::new(&pg);
+        let s = cb.push_stats(&pg, CommMode::Batched, 0);
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.push_host.msgs + s.push_pcie.msgs, 0);
+    }
+
+    #[test]
+    fn push_cpu_to_cpu_rides_host_link() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.outgoing(0, 1).set(3);
+        let s = cb.push_stats(&pg, CommMode::Batched, 1);
+        assert_eq!(s.push_host.msgs, 1);
+        assert_eq!(s.push_host.bytes, 1); // 3 local vertices -> 1 byte
+        assert_eq!(s.push_pcie.msgs, 0);
+    }
+
+    #[test]
+    fn push_cpu_to_gpu_is_one_pcie_download() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.outgoing(0, 2).set(6);
+        let s = cb.push_stats(&pg, CommMode::Batched, 1);
+        assert_eq!(s.push_pcie.msgs, 1);
+        assert_eq!(s.push_host.msgs, 0);
+    }
+
+    #[test]
+    fn push_gpu_batches_one_upload_for_all_destinations() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.outgoing(2, 0).set(0);
+        cb.outgoing(2, 1).set(3);
+        let s = cb.push_stats(&pg, CommMode::Batched, 2);
+        assert_eq!(s.push_pcie.msgs, 1, "one upload, not one per destination");
+        assert_eq!(s.push_pcie.bytes, 2);
+    }
+
+    #[test]
+    fn per_activation_mode_scales_with_crossings() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.outgoing(0, 1).set(3);
+        let s = cb.push_stats(&pg, CommMode::PerActivation, 37);
+        assert_eq!(s.push_pcie.bytes, 37 * 8);
+        assert_eq!(s.push_pcie.msgs, 37);
+    }
+
+    #[test]
+    fn pull_gpu_is_upload_plus_aggregate_download() {
+        let pg = pg3();
+        let cb = CommBuffers::new(&pg);
+        let s = cb.pull_stats(&pg, &[true, true, true]);
+        // GPU: 1 upload + 1 download; sockets: each reads the other's.
+        assert_eq!(s.pull_pcie.msgs, 2);
+        assert_eq!(s.pull_host.msgs, 2);
+        // Aggregate download is the global bitmap (9 bits -> 2 bytes).
+        assert!(s.pull_pcie.bytes >= 2);
+    }
+
+    #[test]
+    fn pull_empty_gpu_frontier_skips_upload() {
+        let pg = pg3();
+        let cb = CommBuffers::new(&pg);
+        let s = cb.pull_stats(&pg, &[true, false, false]);
+        assert_eq!(s.pull_pcie.msgs, 1, "download only");
+        assert_eq!(s.pull_host.msgs, 1, "socket 1 reads socket 0");
+    }
+
+    #[test]
+    fn clear_resets_buffers() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.outgoing(0, 1).set(5);
+        cb.clear();
+        assert!(!cb.outgoing_ref(0, 1).any());
+    }
+
+    #[test]
+    fn stats_add_accumulates() {
+        let mut a = CommStats::default();
+        a.push_host.add(4);
+        let mut b = CommStats::default();
+        b.push_host.add(6);
+        b.pull_pcie.add(10);
+        a.add(&b);
+        assert_eq!(a.push_host, LinkTraffic { bytes: 10, msgs: 2 });
+        assert_eq!(a.pull_pcie, LinkTraffic { bytes: 10, msgs: 1 });
+        assert_eq!(a.total_bytes(), 20);
+    }
+}

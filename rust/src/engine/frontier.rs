@@ -1,0 +1,96 @@
+//! Per-partition frontier state: current/next bitmaps over the global
+//! vertex space (only bits of *owned* vertices are ever set).
+//!
+//! Totem's bitmap frontier representation (paper Section 4, software
+//! platform): set/test is O(1), merge is word-wise OR, and the packed words
+//! hand straight to the accelerator kernel's `i32[VW]` operand.
+
+use crate::util::Bitmap;
+
+/// Current + next frontier for one partition.
+#[derive(Clone, Debug)]
+pub struct FrontierPair {
+    pub current: Bitmap,
+    pub next: Bitmap,
+}
+
+impl FrontierPair {
+    pub fn new(num_vertices: usize) -> Self {
+        Self { current: Bitmap::new(num_vertices), next: Bitmap::new(num_vertices) }
+    }
+
+    /// End-of-superstep: next becomes current, next is cleared.
+    pub fn advance(&mut self) {
+        std::mem::swap(&mut self.current, &mut self.next);
+        self.next.clear();
+    }
+
+    pub fn reset(&mut self) {
+        self.current.clear();
+        self.next.clear();
+    }
+}
+
+/// The global frontier aggregated from all partitions (the bottom-up pull
+/// target, paper Algorithm 3).
+#[derive(Clone, Debug)]
+pub struct GlobalFrontier {
+    pub bits: Bitmap,
+}
+
+impl GlobalFrontier {
+    pub fn new(num_vertices: usize) -> Self {
+        Self { bits: Bitmap::new(num_vertices) }
+    }
+
+    /// Rebuild as the OR of all partitions' current frontiers.
+    pub fn aggregate<'a>(&mut self, parts: impl Iterator<Item = &'a FrontierPair>) {
+        self.bits.clear();
+        for fp in parts {
+            self.bits.or_with(&fp.current);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_swaps_and_clears() {
+        let mut fp = FrontierPair::new(64);
+        fp.next.set(3);
+        fp.next.set(40);
+        fp.advance();
+        assert_eq!(fp.current.iter_ones().collect::<Vec<_>>(), vec![3, 40]);
+        assert_eq!(fp.next.count(), 0);
+        fp.advance();
+        assert_eq!(fp.current.count(), 0);
+    }
+
+    #[test]
+    fn aggregate_ors_all_partitions() {
+        let mut a = FrontierPair::new(64);
+        let mut b = FrontierPair::new(64);
+        a.current.set(1);
+        b.current.set(2);
+        b.current.set(1);
+        let mut g = GlobalFrontier::new(64);
+        g.aggregate([&a, &b].into_iter());
+        assert_eq!(g.bits.iter_ones().collect::<Vec<_>>(), vec![1, 2]);
+        // Re-aggregation clears stale bits.
+        a.current.clear_bit(1);
+        b.current.clear_bit(1);
+        g.aggregate([&a, &b].into_iter());
+        assert_eq!(g.bits.iter_ones().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn reset_clears_both() {
+        let mut fp = FrontierPair::new(32);
+        fp.current.set(0);
+        fp.next.set(1);
+        fp.reset();
+        assert_eq!(fp.current.count() + fp.next.count(), 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! The BSP engine (paper Section 3.1).
+//!
+//! One BFS = a sequence of Bulk-Synchronous-Parallel supersteps over P
+//! partitions that share no memory. Every superstep runs each partition's
+//! kernel for the current direction, exchanges frontier state once
+//! (push after top-down, pull before bottom-up), and synchronizes.
+//!
+//! The engine executes partitions deterministically in a sequential
+//! superstep loop — all *timing* is attributed by the device model
+//! (`runtime::device`), which converts the per-PE work counters collected
+//! here into per-level busy times on the paper's testbed. This is the
+//! hardware-substitution boundary documented in DESIGN.md Section 1.
+
+pub mod accel;
+pub mod comm;
+pub mod frontier;
+pub mod state;
+
+pub use accel::{Accelerator, BottomUpResult, SimAccelerator, TopDownResult};
+pub use comm::{CommMode, CommStats};
+pub use state::BfsState;
+
+/// Traversal direction of a BFS level (paper Section 2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    TopDown,
+    BottomUp,
+}
+
+impl Direction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Direction::TopDown => "top-down",
+            Direction::BottomUp => "bottom-up",
+        }
+    }
+}
+
+/// Work performed by one processing element during one superstep — the
+/// device model's input (counted from the actual traversal, not estimated).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeWork {
+    /// Edges examined (top-down: out-edges of frontier; bottom-up: edges
+    /// scanned before early exit; accelerator: dense lanes).
+    pub edges_examined: u64,
+    /// Vertices touched (frontier members or unvisited-scan length).
+    pub vertices_scanned: u64,
+    /// Vertices newly activated by this PE this level.
+    pub activated: u64,
+    /// For accelerator PEs: bytes crossing PCIe for this level's kernel
+    /// invocations (operands in + results out).
+    pub pcie_bytes: u64,
+    /// Number of PCIe round-trips those bytes took (latency accounting —
+    /// a SELL-sliced partition makes one trip per slice).
+    pub pcie_transfers: u64,
+}
+
+impl PeWork {
+    pub fn add(&mut self, other: &PeWork) {
+        self.edges_examined += other.edges_examined;
+        self.vertices_scanned += other.vertices_scanned;
+        self.activated += other.activated;
+        self.pcie_bytes += other.pcie_bytes;
+        self.pcie_transfers += other.pcie_transfers;
+    }
+}
+
+/// Everything measured about one BFS level (one superstep).
+#[derive(Clone, Debug, Default)]
+pub struct LevelStats {
+    pub level: u32,
+    pub direction: Option<Direction>,
+    /// Per-partition work (indexed by partition id).
+    pub pe_work: Vec<PeWork>,
+    /// Frontier size at the *start* of this level.
+    pub frontier_size: u64,
+    /// Sum of degrees of frontier vertices (Fig 1's right axis is
+    /// `frontier_degree_sum / frontier_size`).
+    pub frontier_degree_sum: u64,
+    /// Communication performed this superstep.
+    pub comm: CommStats,
+}
+
+impl LevelStats {
+    pub fn avg_frontier_degree(&self) -> f64 {
+        if self.frontier_size == 0 {
+            0.0
+        } else {
+            self.frontier_degree_sum as f64 / self.frontier_size as f64
+        }
+    }
+}

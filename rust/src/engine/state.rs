@@ -1,0 +1,314 @@
+//! Distributed BFS vertex state (paper Section 3.1) and the final parent
+//! aggregation optimization.
+//!
+//! Each partition owns the visited/depth/parent state of its vertices.
+//! Remote activations carry NO parent during traversal — the activating
+//! partition records a `(parent, level)` contribution in its own address
+//! space, the owner marks the vertex `PARENT_REMOTE`, and a final
+//! aggregation pass resolves the pending parents (the Section 3.1
+//! communication-reduction optimization for Graph500-style parent output).
+
+use super::frontier::{FrontierPair, GlobalFrontier};
+use crate::partition::PartitionedGraph;
+use crate::util::Bitmap;
+
+/// `parent` sentinel: vertex not reached.
+pub const PARENT_UNSET: i64 = -1;
+/// `parent` sentinel: reached via a remote push; resolved at aggregation.
+pub const PARENT_REMOTE: i64 = -2;
+
+/// All mutable BFS state, reusable across runs (buffers never shrink).
+pub struct BfsState {
+    pub num_vertices: usize,
+    /// Global depth; -1 = unreached. Written only by the owner partition.
+    pub depth: Vec<i32>,
+    /// Global parent gid (or sentinel). Written only by the owner.
+    pub parent: Vec<i64>,
+    /// Per-partition visited bitmap (global-space; only owned bits set).
+    pub visited: Vec<Bitmap>,
+    /// Per-partition current/next frontier.
+    pub frontiers: Vec<FrontierPair>,
+    /// The pulled global frontier (paper Algorithm 3's aggregate).
+    pub global_frontier: GlobalFrontier,
+    /// Per-partition remote-parent contributions: parent gid per global
+    /// vertex (-1 = none) and the BFS level the push happened at.
+    pub contrib_parent: Vec<Vec<i32>>,
+    pub contrib_level: Vec<Vec<i32>>,
+    /// Epoch tags: a contribution entry is live iff its tag equals `epoch`.
+    /// Makes `reset()` O(1) for the big contribution arrays (Totem-style
+    /// status re-init touches only the per-vertex result arrays).
+    contrib_epoch: Vec<Vec<u32>>,
+    epoch: u32,
+    /// Per-partition count of contribution entries (aggregation wire cost).
+    pub contrib_entries: Vec<u64>,
+}
+
+impl BfsState {
+    pub fn new(pg: &PartitionedGraph) -> Self {
+        let v = pg.num_vertices;
+        let np = pg.parts.len();
+        Self {
+            num_vertices: v,
+            depth: vec![-1; v],
+            parent: vec![PARENT_UNSET; v],
+            visited: (0..np).map(|_| Bitmap::new(v)).collect(),
+            frontiers: (0..np).map(|_| FrontierPair::new(v)).collect(),
+            global_frontier: GlobalFrontier::new(v),
+            contrib_parent: (0..np).map(|_| vec![-1; v]).collect(),
+            contrib_level: (0..np).map(|_| vec![-1; v]).collect(),
+            contrib_epoch: (0..np).map(|_| vec![0; v]).collect(),
+            epoch: 0,
+            contrib_entries: vec![0; np],
+        }
+    }
+
+    /// Is partition `p`'s contribution for vertex `t` live this run?
+    #[inline]
+    fn contrib_live(&self, p: usize, t: usize) -> bool {
+        self.contrib_epoch[p][t] == self.epoch && self.contrib_level[p][t] >= 0
+    }
+
+    /// Reset for a new BFS run. Returns the number of bytes (re)initialized
+    /// — the Fig 3 "initialization" component's work counter.
+    pub fn reset(&mut self) -> u64 {
+        let v = self.num_vertices as u64;
+        let np = self.visited.len() as u64;
+        self.depth.fill(-1);
+        self.parent.fill(PARENT_UNSET);
+        for b in self.visited.iter_mut() {
+            b.clear();
+        }
+        for f in self.frontiers.iter_mut() {
+            f.reset();
+        }
+        self.global_frontier.bits.clear();
+        // Contribution arrays are epoch-tagged: bumping the epoch
+        // invalidates every stale entry in O(1). On wrap-around, do the
+        // full clear once per 2^32 runs.
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            for c in self.contrib_level.iter_mut() {
+                c.fill(-1);
+            }
+            for e in self.contrib_epoch.iter_mut() {
+                e.fill(0);
+            }
+            self.epoch = 1;
+        }
+        self.contrib_entries.fill(0);
+        // depth (4B) + parent (4B on the wire — the host keeps i64 for
+        // sentinel convenience, a production kernel stores i32) +
+        // per-partition visited + 2 frontier bitmaps (contribs are
+        // epoch-invalidated, not touched).
+        v * 8 + np * (3 * v / 8)
+    }
+
+    /// Seed the root vertex (owned by `pid`).
+    pub fn set_root(&mut self, pid: usize, root: u32) {
+        self.depth[root as usize] = 0;
+        self.parent[root as usize] = root as i64;
+        self.visited[pid].set(root as usize);
+        self.frontiers[pid].current.set(root as usize);
+    }
+
+    /// Owner-side local activation (top-down local edge, or bottom-up).
+    #[inline]
+    pub fn activate_local(&mut self, pid: usize, v: u32, parent_gid: u32, level: u32) {
+        self.visited[pid].set(v as usize);
+        self.depth[v as usize] = level as i32;
+        self.parent[v as usize] = parent_gid as i64;
+        self.frontiers[pid].next.set(v as usize);
+    }
+
+    /// Activating-side record for a remote push (paper: BFSParentTree
+    /// fragment lives in the pusher's address space until aggregation).
+    /// First write wins: the earliest level is the valid tree edge.
+    #[inline]
+    pub fn record_contrib(&mut self, pusher: usize, target: u32, parent_gid: u32, level: u32) {
+        let t = target as usize;
+        if !self.contrib_live(pusher, t) {
+            self.contrib_parent[pusher][t] = parent_gid as i32;
+            self.contrib_level[pusher][t] = level as i32;
+            self.contrib_epoch[pusher][t] = self.epoch;
+            self.contrib_entries[pusher] += 1;
+        }
+    }
+
+    /// Owner-side merge of a pushed activation bitmap (end of a top-down
+    /// superstep). New vertices get `PARENT_REMOTE` and join the next
+    /// frontier at `level`. Returns how many were newly activated.
+    pub fn merge_pushed(&mut self, pid: usize, incoming: &Bitmap, level: u32) -> u64 {
+        let mut newly = 0;
+        // iter_ones allocates nothing; bits are owned by `pid` by
+        // construction (pushers route into the owner's buffer).
+        let fr = &mut self.frontiers[pid];
+        let vis = &mut self.visited[pid];
+        for v in incoming.iter_ones() {
+            if !vis.get(v) {
+                vis.set(v);
+                self.depth[v] = level as i32;
+                self.parent[v] = PARENT_REMOTE;
+                fr.next.set(v);
+                newly += 1;
+            }
+        }
+        newly
+    }
+
+    /// Final aggregation (paper Section 3.1): resolve `PARENT_REMOTE`
+    /// vertices from the partitions' contribution fragments. A valid
+    /// contribution was pushed at `depth(v) - 1`. Returns the wire bytes
+    /// this collection step moves (sparse entries x 12 bytes).
+    pub fn aggregate_parents(&mut self) -> Result<u64, String> {
+        let np = self.contrib_parent.len();
+        for v in 0..self.num_vertices {
+            if self.parent[v] != PARENT_REMOTE {
+                continue;
+            }
+            let want_level = self.depth[v] - 1;
+            debug_assert!(want_level >= 0);
+            let mut found = false;
+            for p in 0..np {
+                if self.contrib_live(p, v) && self.contrib_level[p][v] == want_level {
+                    self.parent[v] = self.contrib_parent[p][v] as i64;
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                return Err(format!(
+                    "vertex {v}: no contribution at level {want_level} (depth {})",
+                    self.depth[v]
+                ));
+            }
+        }
+        Ok(self.contrib_entries.iter().sum::<u64>() * 12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn pg() -> PartitionedGraph {
+        let g = build_csr(&EdgeList { num_vertices: 6, edges: vec![(0, 3), (1, 4), (2, 5)] });
+        let cfg = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        materialize(&g, vec![0, 0, 0, 1, 1, 1], &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn root_seeding() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        st.set_root(0, 2);
+        assert_eq!(st.depth[2], 0);
+        assert_eq!(st.parent[2], 2);
+        assert!(st.visited[0].get(2));
+        assert!(st.frontiers[0].current.get(2));
+    }
+
+    #[test]
+    fn local_activation_sets_everything() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        st.activate_local(1, 4, 1, 3);
+        assert_eq!(st.depth[4], 3);
+        assert_eq!(st.parent[4], 1);
+        assert!(st.visited[1].get(4));
+        assert!(st.frontiers[1].next.get(4));
+    }
+
+    #[test]
+    fn merge_pushed_ignores_visited() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        st.activate_local(1, 4, 1, 1);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(4); // already visited
+        incoming.set(5);
+        let newly = st.merge_pushed(1, &incoming, 2);
+        assert_eq!(newly, 1);
+        assert_eq!(st.parent[5], PARENT_REMOTE);
+        assert_eq!(st.depth[5], 2);
+        assert_eq!(st.parent[4], 1, "existing parent untouched");
+    }
+
+    #[test]
+    fn contrib_first_write_wins_and_aggregates() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // Vertex 5 activated remotely at level 2 (pushed at level 1).
+        st.record_contrib(0, 5, 2, 1);
+        st.record_contrib(0, 5, 0, 3); // later push ignored
+        let mut incoming = Bitmap::new(6);
+        incoming.set(5);
+        st.merge_pushed(1, &incoming, 2);
+        let bytes = st.aggregate_parents().unwrap();
+        assert_eq!(st.parent[5], 2);
+        assert_eq!(bytes, 12);
+    }
+
+    #[test]
+    fn aggregation_picks_contribution_at_matching_level() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // Two pushers at different levels: only level depth-1 = 1 is valid.
+        st.record_contrib(0, 5, 9, 4);
+        st.record_contrib(1, 5, 2, 1);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(5);
+        st.merge_pushed(1, &incoming, 2);
+        st.aggregate_parents().unwrap();
+        assert_eq!(st.parent[5], 2);
+    }
+
+    #[test]
+    fn aggregation_fails_on_missing_contribution() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(5);
+        st.merge_pushed(1, &incoming, 2);
+        assert!(st.aggregate_parents().is_err());
+    }
+
+    #[test]
+    fn reset_restores_pristine_state_and_counts_bytes() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        st.set_root(0, 0);
+        st.activate_local(0, 1, 0, 1);
+        st.record_contrib(0, 3, 0, 0);
+        let bytes = st.reset();
+        assert!(bytes > 0);
+        assert!(st.depth.iter().all(|&d| d == -1));
+        assert!(st.parent.iter().all(|&p| p == PARENT_UNSET));
+        assert!(st.visited.iter().all(|b| !b.any()));
+        assert_eq!(st.contrib_entries, vec![0, 0]);
+        // Epoch-tagged contributions are stale after reset: recording anew
+        // must succeed, and aggregation must not see the old entry.
+        let mut incoming = Bitmap::new(6);
+        incoming.set(3);
+        st.merge_pushed(1, &incoming, 1);
+        assert!(st.aggregate_parents().is_err(), "stale contribution must be dead");
+    }
+
+    #[test]
+    fn epoch_reset_isolates_runs() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // Run 1: contribution for vertex 5 at level 1.
+        st.record_contrib(0, 5, 2, 1);
+        st.reset();
+        // Run 2: same vertex activated at a level whose valid parent push
+        // level is different; the stale entry must not satisfy it.
+        st.record_contrib(0, 5, 4, 3);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(5);
+        st.merge_pushed(1, &incoming, 4);
+        st.aggregate_parents().unwrap();
+        assert_eq!(st.parent[5], 4, "fresh contribution wins");
+    }
+}

@@ -1,0 +1,120 @@
+//! Edge list -> CSR: symmetrize, dedup, drop self-loops.
+
+use super::{Csr, EdgeList, VertexId};
+
+/// Build an undirected CSR (each edge stored in both directions), removing
+/// self-loops and duplicate edges — the Graph500 reference "graph
+/// construction" kernel's cleanup semantics.
+pub fn build_csr(el: &EdgeList) -> Csr {
+    let nv = el.num_vertices;
+    // Count degrees over both directions.
+    let mut deg = vec![0u64; nv];
+    for &(a, b) in &el.edges {
+        if a == b {
+            continue;
+        }
+        deg[a as usize] += 1;
+        deg[b as usize] += 1;
+    }
+    let mut row_ptr = vec![0u64; nv + 1];
+    for v in 0..nv {
+        row_ptr[v + 1] = row_ptr[v] + deg[v];
+    }
+    let mut col = vec![0 as VertexId; row_ptr[nv] as usize];
+    let mut cursor = row_ptr[..nv].to_vec();
+    for &(a, b) in &el.edges {
+        if a == b {
+            continue;
+        }
+        col[cursor[a as usize] as usize] = b;
+        cursor[a as usize] += 1;
+        col[cursor[b as usize] as usize] = a;
+        cursor[b as usize] += 1;
+    }
+
+    // Sort each adjacency row and deduplicate in place (multi-edges from
+    // the Kronecker generator collapse here, as in the reference code).
+    let mut new_col = Vec::with_capacity(col.len());
+    let mut new_row_ptr = vec![0u64; nv + 1];
+    for v in 0..nv {
+        let lo = row_ptr[v] as usize;
+        let hi = row_ptr[v + 1] as usize;
+        let row = &mut col[lo..hi];
+        row.sort_unstable();
+        let start = new_col.len();
+        let mut prev = None;
+        for &c in row.iter() {
+            if Some(c) != prev {
+                new_col.push(c);
+                prev = Some(c);
+            }
+        }
+        new_row_ptr[v + 1] = new_row_ptr[v] + (new_col.len() - start) as u64;
+    }
+
+    let out = Csr { num_vertices: nv, row_ptr: new_row_ptr, col: new_col };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{gen, run_cases};
+
+    #[test]
+    fn symmetrizes() {
+        let el = EdgeList { num_vertices: 3, edges: vec![(0, 1), (1, 2)] };
+        let g = build_csr(&el);
+        assert_eq!(g.neighbours(0), &[1]);
+        assert_eq!(g.neighbours(1), &[0, 2]);
+        assert_eq!(g.neighbours(2), &[1]);
+        assert_eq!(g.num_undirected_edges(), 2);
+    }
+
+    #[test]
+    fn drops_self_loops_and_duplicates() {
+        let el = EdgeList {
+            num_vertices: 3,
+            edges: vec![(0, 1), (1, 0), (0, 1), (2, 2)],
+        };
+        let g = build_csr(&el);
+        assert_eq!(g.neighbours(0), &[1]);
+        assert_eq!(g.neighbours(1), &[0]);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.num_undirected_edges(), 1);
+    }
+
+    #[test]
+    fn rows_are_sorted() {
+        let el = EdgeList { num_vertices: 5, edges: vec![(0, 4), (0, 2), (0, 3), (0, 1)] };
+        let g = build_csr(&el);
+        assert_eq!(g.neighbours(0), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![] });
+        assert_eq!(g.num_directed_edges(), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn prop_symmetry_and_validity() {
+        run_cases(60, 0xC5E, |rng| {
+            let el = gen::edge_list(rng, 50, 200);
+            let g = build_csr(&el);
+            g.validate().unwrap();
+            // Symmetry: b in N(a) <=> a in N(b).
+            for v in 0..g.num_vertices as u32 {
+                for &w in g.neighbours(v) {
+                    assert!(g.neighbours(w).contains(&v), "asymmetric {v}-{w}");
+                }
+            }
+            // Edge conservation: every input edge appears.
+            for &(a, b) in &el.edges {
+                assert!(g.neighbours(a).contains(&b));
+            }
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Compressed Sparse Row adjacency — the memory-efficient format the paper
+//! uses for both host and accelerator partitions (Section 2.1 notes a
+//! Scale30 edge list occupies 256 GB in CSR).
+
+use super::VertexId;
+
+/// CSR over directed edges (an undirected graph stores each edge twice).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    pub num_vertices: usize,
+    /// `row_ptr[v]..row_ptr[v+1]` indexes `col` for v's neighbours.
+    pub row_ptr: Vec<u64>,
+    /// Neighbour vertex ids.
+    pub col: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Neighbours of `v` (may contain duplicates only if the builder allowed
+    /// multi-edges; the default builder deduplicates).
+    #[inline]
+    pub fn neighbours(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.row_ptr[v as usize] as usize;
+        let hi = self.row_ptr[v as usize + 1] as usize;
+        &self.col[lo..hi]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]) as usize
+    }
+
+    /// Directed edge count (2x the undirected count).
+    #[inline]
+    pub fn num_directed_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Undirected edge count.
+    #[inline]
+    pub fn num_undirected_edges(&self) -> usize {
+        self.col.len() / 2
+    }
+
+    /// Vertices with degree > 0.
+    pub fn num_non_singleton(&self) -> usize {
+        (0..self.num_vertices as VertexId).filter(|&v| self.degree(v) > 0).count()
+    }
+
+    /// CSR memory footprint in bytes (row_ptr + col) — the quantity the
+    /// partitioner budgets against accelerator memory (paper Section 3.2).
+    pub fn footprint_bytes(&self) -> u64 {
+        (self.row_ptr.len() * 8 + self.col.len() * 4) as u64
+    }
+
+    /// Check structural invariants (used by tests and after IO).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.num_vertices + 1 {
+            return Err(format!(
+                "row_ptr len {} != V+1 {}",
+                self.row_ptr.len(),
+                self.num_vertices + 1
+            ));
+        }
+        if self.row_ptr[0] != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.col.len() {
+            return Err("row_ptr[V] != col.len()".into());
+        }
+        if self.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr not monotone".into());
+        }
+        if self.col.iter().any(|&c| (c as usize) >= self.num_vertices) {
+            return Err("col id out of range".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Csr {
+        // 0-1, 0-2, 1-2 triangle plus isolated vertex 3.
+        Csr {
+            num_vertices: 4,
+            row_ptr: vec![0, 2, 4, 6, 6],
+            col: vec![1, 2, 0, 2, 0, 1],
+        }
+    }
+
+    #[test]
+    fn neighbours_and_degree() {
+        let g = tiny();
+        assert_eq!(g.neighbours(0), &[1, 2]);
+        assert_eq!(g.neighbours(3), &[] as &[u32]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(3), 0);
+    }
+
+    #[test]
+    fn edge_counts() {
+        let g = tiny();
+        assert_eq!(g.num_directed_edges(), 6);
+        assert_eq!(g.num_undirected_edges(), 3);
+        assert_eq!(g.num_non_singleton(), 3);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = tiny();
+        assert!(g.validate().is_ok());
+        g.col[0] = 99;
+        assert!(g.validate().is_err());
+        let mut g2 = tiny();
+        g2.row_ptr[1] = 5;
+        g2.row_ptr[2] = 3;
+        assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn footprint_counts_both_arrays() {
+        let g = tiny();
+        assert_eq!(g.footprint_bytes(), (5 * 8 + 6 * 4) as u64);
+    }
+}

@@ -1,0 +1,178 @@
+//! Graph file IO: SNAP-style text edge lists (so the paper's real crawls can
+//! be loaded when available) and a fast binary format for bench caching.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{EdgeList, VertexId};
+
+/// Load a SNAP-style text edge list: one `src dst` pair per line,
+/// `#`-prefixed comment lines ignored, whitespace-separated. Vertex count is
+/// `max id + 1` unless a larger `num_vertices` hint is given.
+pub fn load_text<P: AsRef<Path>>(path: P, num_vertices: Option<usize>) -> Result<EdgeList> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut edges = Vec::new();
+    let mut max_id: u64 = 0;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let a: u64 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let b: u64 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        if a > u32::MAX as u64 || b > u32::MAX as u64 {
+            bail!("line {}: vertex id > u32::MAX", lineno + 1);
+        }
+        max_id = max_id.max(a).max(b);
+        edges.push((a as VertexId, b as VertexId));
+    }
+    let nv_seen = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+    let nv = num_vertices.unwrap_or(nv_seen).max(nv_seen);
+    Ok(EdgeList { num_vertices: nv, edges })
+}
+
+/// Write a SNAP-style text edge list.
+pub fn save_text<P: AsRef<Path>>(el: &EdgeList, path: P) -> Result<()> {
+    let f = File::create(&path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# totem-do edge list: {} vertices {} edges", el.num_vertices, el.edges.len())?;
+    for &(a, b) in &el.edges {
+        writeln!(w, "{a} {b}")?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"TOTEMDO1";
+
+/// Save the binary format: magic, V, E, then little-endian u32 pairs.
+pub fn save_binary<P: AsRef<Path>>(el: &EdgeList, path: P) -> Result<()> {
+    let f = File::create(&path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(el.num_vertices as u64).to_le_bytes())?;
+    w.write_all(&(el.edges.len() as u64).to_le_bytes())?;
+    for &(a, b) in &el.edges {
+        w.write_all(&a.to_le_bytes())?;
+        w.write_all(&b.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the binary format written by [`save_binary`].
+pub fn load_binary<P: AsRef<Path>>(path: P) -> Result<EdgeList> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic: not a totem-do binary graph");
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let nv = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let ne = u64::from_le_bytes(buf8) as usize;
+    let mut raw = vec![0u8; ne * 8];
+    r.read_exact(&mut raw)?;
+    let mut edges = Vec::with_capacity(ne);
+    for i in 0..ne {
+        let a = u32::from_le_bytes(raw[i * 8..i * 8 + 4].try_into().unwrap());
+        let b = u32::from_le_bytes(raw[i * 8 + 4..i * 8 + 8].try_into().unwrap());
+        if a as usize >= nv || b as usize >= nv {
+            bail!("edge {i}: vertex id out of range");
+        }
+        edges.push((a, b));
+    }
+    Ok(EdgeList { num_vertices: nv, edges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("totem_do_io_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let el = kronecker(&GeneratorConfig::graph500(8, 3));
+        let p = tmpfile("rt.txt");
+        save_text(&el, &p).unwrap();
+        let el2 = load_text(&p, Some(el.num_vertices)).unwrap();
+        assert_eq!(el.num_vertices, el2.num_vertices);
+        assert_eq!(el.edges, el2.edges);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_skips_comments_and_blanks() {
+        let p = tmpfile("c.txt");
+        std::fs::write(&p, "# header\n\n0 1\n# mid\n2\t3\n").unwrap();
+        let el = load_text(&p, None).unwrap();
+        assert_eq!(el.edges, vec![(0, 1), (2, 3)]);
+        assert_eq!(el.num_vertices, 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_rejects_garbage() {
+        let p = tmpfile("g.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_text(&p, None).is_err());
+        std::fs::write(&p, "7\n").unwrap();
+        assert!(load_text(&p, None).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let el = kronecker(&GeneratorConfig::graph500(10, 5));
+        let p = tmpfile("rt.bin");
+        save_binary(&el, &p).unwrap();
+        let el2 = load_binary(&p).unwrap();
+        assert_eq!(el.num_vertices, el2.num_vertices);
+        assert_eq!(el.edges, el2.edges);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let p = tmpfile("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC\x00\x00").unwrap();
+        assert!(load_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_out_of_range_ids() {
+        let p = tmpfile("oor.bin");
+        let el = EdgeList { num_vertices: 2, edges: vec![(0, 1)] };
+        save_binary(&el, &p).unwrap();
+        // Corrupt: bump an id beyond nv.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 4] = 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

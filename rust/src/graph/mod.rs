@@ -1,0 +1,36 @@
+//! Graph substrate: edge lists, CSR, the Graph500 Kronecker generator,
+//! file IO, and degree statistics.
+//!
+//! The paper's workloads are undirected scale-free graphs (synthetic
+//! Kronecker per the Graph500 reference generator, plus Twitter/Wikipedia/
+//! LiveJournal crawls). Totem stores each undirected edge as two directed
+//! edges in CSR; we do the same, and report undirected TEPS as Graph500
+//! requires (paper Section 4, Methodology).
+
+pub mod builder;
+pub mod csr;
+pub mod generator;
+pub mod io;
+pub mod stats;
+
+pub use builder::build_csr;
+pub use csr::Csr;
+pub use generator::{kronecker, GeneratorConfig};
+
+/// Global vertex id. The hybrid path supports up to 2^31 vertices (i32
+/// kernel operands); CPU-only paths are limited only by memory.
+pub type VertexId = u32;
+
+/// An undirected edge list (canonical input format).
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    pub num_vertices: usize,
+    /// Undirected edges; no self-loops; not necessarily deduplicated.
+    pub edges: Vec<(VertexId, VertexId)>,
+}
+
+impl EdgeList {
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+}

@@ -1,0 +1,25 @@
+//! # totem-do
+//!
+//! A reproduction of *"Accelerating Direction-Optimized Breadth First Search
+//! on Hybrid Architectures"* (Sallinen, Gharaibeh, Ripeanu — 2015) as a
+//! three-layer Rust + JAX/Pallas system:
+//!
+//! * **Rust (this crate)** — the Totem-style coordinator: graph substrate,
+//!   specialized partitioning, BSP engine with push/pull frontier
+//!   communication, direction-optimized BFS, device/energy models, CLI.
+//! * **JAX/Pallas (`python/compile/`)** — the accelerator partition's
+//!   per-level kernels, AOT-lowered to HLO text at build time.
+//! * **PJRT (`runtime/`)** — loads and executes those artifacts from the
+//!   BFS hot path; Python is never on the request path.
+//!
+//! See DESIGN.md for the system inventory and the experiment index.
+
+pub mod cli;
+pub mod graph;
+pub mod metrics;
+pub mod bench_support;
+pub mod bfs;
+pub mod engine;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,29 @@
+//! `totem-do` — the leader binary: CLI entrypoint for the hybrid
+//! direction-optimized BFS engine (see `lib.rs` and DESIGN.md).
+
+use anyhow::Result;
+
+use totem_do::cli;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print!("{}", cli::usage());
+        return Ok(());
+    };
+    let args = cli::Args::parse(rest)?;
+    match cmd.as_str() {
+        "bfs" => cli::cmd_bfs(&args),
+        "baseline" => cli::cmd_baseline(&args),
+        "generate" => cli::cmd_generate(&args),
+        "stats" => cli::cmd_stats(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", cli::usage());
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{}", cli::usage());
+            std::process::exit(2);
+        }
+    }
+}

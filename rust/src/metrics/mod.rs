@@ -1,0 +1,119 @@
+//! Metrics: TEPS, harmonic means, and Graph500-style campaign summaries.
+//!
+//! The Graph500/GreenGraph500 methodology (paper Section 4): run many
+//! searches from random non-singleton roots, report the harmonic mean of
+//! per-search TEPS (undirected traversed edges / time).
+
+use crate::util::Xoshiro256;
+
+/// Harmonic mean (the Graph500 aggregate for rates).
+pub fn harmonic_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let denom: f64 = xs.iter().map(|&x| 1.0 / x).sum();
+    xs.len() as f64 / denom
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// TEPS of one search.
+pub fn teps(traversed_edges: u64, seconds: f64) -> f64 {
+    traversed_edges as f64 / seconds.max(1e-12)
+}
+
+/// Sample `count` BFS roots with degree > 0, uniformly, per the Graph500
+/// spec (deterministic under `seed`).
+pub fn sample_roots(
+    num_vertices: usize,
+    degree_of: impl Fn(u32) -> usize,
+    count: usize,
+    seed: u64,
+) -> Vec<u32> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut roots = Vec::with_capacity(count);
+    let mut attempts = 0usize;
+    while roots.len() < count && attempts < count.saturating_mul(1000).max(100_000) {
+        attempts += 1;
+        let v = rng.next_below(num_vertices as u64) as u32;
+        if degree_of(v) > 0 {
+            roots.push(v);
+        }
+    }
+    roots
+}
+
+/// Aggregate of a multi-root campaign.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignSummary {
+    pub runs: usize,
+    pub harmonic_teps: f64,
+    pub mean_teps: f64,
+    pub min_teps: f64,
+    pub max_teps: f64,
+    pub total_seconds: f64,
+}
+
+pub fn summarize(teps_values: &[f64], total_seconds: f64) -> CampaignSummary {
+    CampaignSummary {
+        runs: teps_values.len(),
+        harmonic_teps: harmonic_mean(teps_values),
+        mean_teps: mean(teps_values),
+        min_teps: teps_values.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_teps: teps_values.iter().cloned().fold(0.0, f64::max),
+        total_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonic_mean_basics() {
+        assert_eq!(harmonic_mean(&[]), 0.0);
+        assert!((harmonic_mean(&[2.0, 2.0]) - 2.0).abs() < 1e-12);
+        // Harmonic mean is dominated by the slow runs.
+        let h = harmonic_mean(&[1.0, 100.0]);
+        assert!(h < 2.1);
+        assert!(h > 1.9);
+    }
+
+    #[test]
+    fn teps_formula() {
+        assert!((teps(1_000_000, 0.5) - 2e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sample_roots_respects_degree_filter() {
+        // Only even vertices have degree.
+        let roots = sample_roots(1000, |v| if v % 2 == 0 { 3 } else { 0 }, 64, 7);
+        assert_eq!(roots.len(), 64);
+        assert!(roots.iter().all(|&r| r % 2 == 0));
+        // Deterministic.
+        let again = sample_roots(1000, |v| if v % 2 == 0 { 3 } else { 0 }, 64, 7);
+        assert_eq!(roots, again);
+    }
+
+    #[test]
+    fn sample_roots_gives_up_gracefully() {
+        let roots = sample_roots(10, |_| 0, 4, 1);
+        assert!(roots.is_empty());
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = summarize(&[1.0, 2.0, 4.0], 3.5);
+        assert_eq!(s.runs, 3);
+        assert_eq!(s.min_teps, 1.0);
+        assert_eq!(s.max_teps, 4.0);
+        assert!(s.harmonic_teps < s.mean_teps);
+        assert_eq!(s.total_seconds, 3.5);
+    }
+}

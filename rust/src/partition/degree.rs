@@ -1,0 +1,192 @@
+//! Specialized (degree-based) partitioning — paper Section 3.2.
+//!
+//! Low-degree vertices go to the accelerators: they expose massive uniform
+//! parallelism, they are cheap in memory (the GPU constraint), and they are
+//! the bottom-up bottleneck that dominates end-to-end time (Fig 1/4). High
+//! degree vertices — and everything that does not fit — stay on the CPU
+//! sockets, which also makes the CPU the natural direction-switch
+//! coordinator (Section 3.3): the hubs that decide the switch live there.
+
+use super::{HardwareConfig, LayoutOptions, PartitionedGraph};
+use crate::graph::Csr;
+
+/// Outcome metadata of a specialized partitioning.
+#[derive(Clone, Debug)]
+pub struct SpecializedPlan {
+    /// Vertices with `1 <= degree <= threshold` were GPU-eligible.
+    pub degree_threshold: usize,
+    /// How many eligible vertices actually fit under the memory cap.
+    pub gpu_vertices: usize,
+    /// Non-singleton vertices in the graph (the paper's Fig 2 denominator).
+    pub non_singleton: usize,
+}
+
+/// Assign vertices to partitions per Section 3.2 and materialize.
+///
+/// Strategy: walk degree buckets upward (1, 2, 3, ...) assigning vertices to
+/// accelerators round-robin while (a) the vertex degree is within the ELL
+/// width ceiling and (b) every accelerator stays under its memory budget
+/// (ELL bytes = vertices x width x 4). Everything else — hubs, overflow and
+/// singletons — is split across CPU sockets balanced by edge endpoints.
+pub fn specialized_partition(
+    g: &Csr,
+    cfg: &HardwareConfig,
+    opts: &LayoutOptions,
+) -> (PartitionedGraph, SpecializedPlan) {
+    let nv = g.num_vertices;
+    let np = cfg.num_partitions();
+    let mut owner = vec![u8::MAX; nv];
+
+    // Degree buckets (ascending).
+    let max_deg = (0..nv as u32).map(|v| g.degree(v)).max().unwrap_or(0);
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_deg + 1];
+    for v in 0..nv as u32 {
+        buckets[g.degree(v)].push(v);
+    }
+    let non_singleton = nv - buckets.first().map_or(0, |b| b.len());
+
+    // Fill accelerators from the lowest degrees up.
+    let mut gpu_vertices = 0usize;
+    let mut degree_threshold = 0usize;
+    if cfg.gpus > 0 {
+        // ELL width grows with the highest degree admitted so far; budget
+        // conservatively with the bucket's own degree as the width.
+        let mut gpu_count = vec![0u64; cfg.gpus];
+        let mut next_gpu = 0usize;
+        'outer: for d in 1..=max_deg.min(cfg.gpu_max_degree) {
+            for &v in &buckets[d] {
+                // Admitting v makes every row of its GPU's ELL at least d
+                // wide; check the budget at width d.
+                let gpu = next_gpu;
+                let new_bytes = (gpu_count[gpu] + 1) * (d as u64) * 4;
+                if new_bytes > cfg.gpu_mem_bytes {
+                    break 'outer; // this and all higher degrees are out
+                }
+                owner[v as usize] = (cfg.cpu_sockets + gpu) as u8;
+                gpu_count[gpu] += 1;
+                gpu_vertices += 1;
+                next_gpu = (next_gpu + 1) % cfg.gpus;
+            }
+            degree_threshold = d;
+        }
+    }
+
+    // Remaining vertices -> CPU sockets, balanced by edge endpoints
+    // (processing time in the skewed regime tracks edges, not vertices).
+    let mut cpu_load = vec![0u64; cfg.cpu_sockets];
+    for d in (0..=max_deg).rev() {
+        for &v in &buckets[d] {
+            if owner[v as usize] != u8::MAX {
+                continue;
+            }
+            let lightest = (0..cfg.cpu_sockets).min_by_key(|&s| cpu_load[s]).unwrap();
+            owner[v as usize] = lightest as u8;
+            cpu_load[lightest] += d as u64 + 1; // +1 so singletons spread too
+        }
+    }
+
+    debug_assert!(owner.iter().all(|&o| (o as usize) < np));
+    let pg = super::materialize(g, owner, cfg, opts);
+    (pg, SpecializedPlan { degree_threshold, gpu_vertices, non_singleton })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::{build_csr, EdgeList};
+
+    fn hw(s: usize, g: usize, mem: u64) -> HardwareConfig {
+        HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: mem, gpu_max_degree: 32 }
+    }
+
+    #[test]
+    fn low_degree_goes_to_gpu_high_degree_stays() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 1)));
+        let (pg, plan) = specialized_partition(&g, &hw(1, 1, 1 << 20), &LayoutOptions::paper());
+        pg.validate(&g).unwrap();
+        assert!(plan.gpu_vertices > 0);
+        // Every GPU vertex has degree <= threshold; every CPU non-singleton
+        // either exceeds the threshold or was overflow.
+        for v in 0..g.num_vertices as u32 {
+            if pg.parts[pg.owner_of(v)].kind.is_gpu() {
+                assert!(g.degree(v) >= 1 && g.degree(v) <= plan.degree_threshold.max(1));
+            }
+        }
+        // The top hub is always on a CPU.
+        let hub = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        assert!(!pg.parts[pg.owner_of(hub)].kind.is_gpu());
+    }
+
+    #[test]
+    fn memory_cap_respected() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 2)));
+        let cap = 4096u64;
+        let (pg, _) = specialized_partition(&g, &hw(1, 2, cap), &LayoutOptions::paper());
+        for p in &pg.parts {
+            if p.kind.is_gpu() {
+                assert!(
+                    p.ell_footprint_bytes() <= cap,
+                    "GPU partition {} bytes {} > cap {}",
+                    p.id,
+                    p.ell_footprint_bytes(),
+                    cap
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn width_ceiling_respected() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 3)));
+        let cfg = HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: u64::MAX, gpu_max_degree: 4 };
+        let (pg, plan) = specialized_partition(&g, &cfg, &LayoutOptions::paper());
+        assert!(plan.degree_threshold <= 4);
+        for p in &pg.parts {
+            if p.kind.is_gpu() {
+                assert!(p.max_degree <= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn no_gpu_config_puts_everything_on_cpus_balanced() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 4)));
+        let (pg, plan) = specialized_partition(&g, &hw(2, 0, 0), &LayoutOptions::paper());
+        pg.validate(&g).unwrap();
+        assert_eq!(plan.gpu_vertices, 0);
+        let e0 = pg.parts[0].num_directed_edges() as f64;
+        let e1 = pg.parts[1].num_directed_edges() as f64;
+        let ratio = e0.max(e1) / e0.min(e1).max(1.0);
+        assert!(ratio < 1.2, "socket imbalance {ratio}");
+    }
+
+    #[test]
+    fn gpus_balanced_by_vertex_count() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 5)));
+        let (pg, _) = specialized_partition(&g, &hw(1, 2, 1 << 22), &LayoutOptions::paper());
+        let g0 = pg.parts[1].num_vertices() as f64;
+        let g1 = pg.parts[2].num_vertices() as f64;
+        assert!((g0 - g1).abs() <= 1.0 + 0.05 * g0.max(g1), "gpu imbalance {g0} vs {g1}");
+    }
+
+    #[test]
+    fn singletons_live_on_cpu() {
+        let mut el = EdgeList { num_vertices: 10, edges: vec![(0, 1), (1, 2)] };
+        el.num_vertices = 10; // vertices 3..9 are singletons
+        let g = build_csr(&el);
+        let (pg, _) = specialized_partition(&g, &hw(1, 1, 1 << 20), &LayoutOptions::paper());
+        for v in 3..10u32 {
+            assert!(!pg.parts[pg.owner_of(v)].kind.is_gpu(), "singleton {v} on GPU");
+        }
+    }
+
+    #[test]
+    fn tiny_cap_means_everything_on_cpu() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 6)));
+        let (pg, plan) = specialized_partition(&g, &hw(2, 2, 2), &LayoutOptions::paper());
+        pg.validate(&g).unwrap();
+        assert_eq!(plan.gpu_vertices, 0);
+        assert!((pg.gpu_edge_share() - 0.0).abs() < 1e-12);
+    }
+}

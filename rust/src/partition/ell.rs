@@ -1,0 +1,280 @@
+//! ELL (padded) adjacency for accelerator partitions.
+//!
+//! The AOT kernel variants are compiled for fixed `(N, D)` shapes
+//! (DESIGN.md Section 7); `EllLayout` packs a partition's adjacency into the
+//! `i32[N*D]` row-major buffer a variant consumes, padding rows with `-1`
+//! and unused rows entirely with `-1` (padding rows can never activate:
+//! the kernel masks `adj >= 0`).
+
+use super::Partition;
+
+/// One SELL slice: a contiguous row range sharing one ELL width.
+///
+/// Dense vector kernels cannot early-exit, so a single-width ELL pays
+/// `max_degree` lanes for every vertex. Slicing the (degree-sorted)
+/// partition into a few width buckets — the classic sliced-ELL /
+/// SELL-C-sigma layout — brings streamed lanes down to ~2x the real edge
+/// count, which is what makes the accelerator competitive with the CPU's
+/// early-exit scan (DESIGN.md Section 2, hardware adaptation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SellSlice {
+    /// First local row of the slice.
+    pub row_offset: usize,
+    /// Rows in the slice.
+    pub rows: usize,
+    /// ELL width of the slice (>= max degree within it).
+    pub width: usize,
+}
+
+/// Compute SELL slices for a partition whose rows are degree-descending
+/// (the Section 3.4 vertex reorder). Each row lands in the narrowest
+/// bucket of `widths` that fits it; adjacent buckets holding fewer than
+/// `min_frac` of the rows are merged into their wider neighbour to bound
+/// the number of kernel invocations (each costs a PCIe round trip).
+///
+/// Falls back to a single full-width slice if rows are not degree-sorted.
+pub fn sell_slices(part: &Partition, widths: &[usize], min_frac: f64) -> Vec<SellSlice> {
+    let n = part.num_vertices();
+    if n == 0 {
+        return vec![];
+    }
+    let degs: Vec<usize> = (0..n).map(|li| part.degree(li)).collect();
+    let full_width = part.max_degree.max(1);
+    let sorted_desc = degs.windows(2).all(|w| w[0] >= w[1]);
+    let mut widths: Vec<usize> = widths.iter().copied().filter(|&w| w >= 1).collect();
+    widths.sort_unstable();
+    if !sorted_desc || widths.is_empty() {
+        return vec![SellSlice { row_offset: 0, rows: n, width: full_width }];
+    }
+
+    // Bucket rows (contiguous, since degrees are non-increasing).
+    let bucket_of = |d: usize| widths.iter().copied().find(|&w| w >= d).unwrap_or(full_width);
+    let mut slices: Vec<SellSlice> = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let w = bucket_of(degs[start].max(1));
+        let mut end = start + 1;
+        while end < n && bucket_of(degs[end].max(1)) == w {
+            end += 1;
+        }
+        slices.push(SellSlice { row_offset: start, rows: end - start, width: w });
+        start = end;
+    }
+    // Merge slices too small to pay their own kernel invocation into the
+    // previous (wider) slice.
+    let min_rows = ((n as f64) * min_frac).ceil() as usize;
+    let mut merged: Vec<SellSlice> = Vec::new();
+    for s in slices {
+        match merged.last_mut() {
+            Some(prev) if s.rows < min_rows || prev.rows < min_rows => {
+                prev.rows += s.rows;
+                // width stays the wider (previous) one
+            }
+            _ => merged.push(s),
+        }
+    }
+    merged
+}
+
+/// A partition's adjacency packed for a fixed kernel variant shape.
+#[derive(Clone, Debug)]
+pub struct EllLayout {
+    /// Padded row count (the variant's N).
+    pub n: usize,
+    /// Padded width (the variant's D).
+    pub d: usize,
+    /// Real vertex count (<= n).
+    pub n_real: usize,
+    /// Row-major `n x d` adjacency; global neighbour ids, -1 padding.
+    pub adj: Vec<i32>,
+    /// Local index -> global id, padded with -1 to n.
+    pub gids: Vec<i32>,
+}
+
+impl EllLayout {
+    /// Pack `part` for a variant of shape `(n, d)`.
+    ///
+    /// Returns `None` if the partition does not fit (too many vertices or a
+    /// row wider than `d`) — the caller then picks a larger variant.
+    pub fn pack(part: &Partition, n: usize, d: usize) -> Option<Self> {
+        Self::pack_rows(part, 0, part.num_vertices(), n, d)
+    }
+
+    /// Pack a contiguous row range (a SELL slice) of `part` into shape
+    /// `(n, d)`. Local indices inside the layout are relative to
+    /// `row_offset`. Returns `None` if the range does not fit.
+    pub fn pack_rows(
+        part: &Partition,
+        row_offset: usize,
+        rows: usize,
+        n: usize,
+        d: usize,
+    ) -> Option<Self> {
+        if rows > n {
+            return None;
+        }
+        let mut adj = vec![-1i32; n * d];
+        for r in 0..rows {
+            let nbrs = part.neighbours(row_offset + r);
+            if nbrs.len() > d {
+                return None;
+            }
+            let row = &mut adj[r * d..r * d + nbrs.len()];
+            for (slot, &gid) in row.iter_mut().zip(nbrs) {
+                *slot = gid as i32;
+            }
+        }
+        let mut gids = vec![-1i32; n];
+        for r in 0..rows {
+            gids[r] = part.gids[row_offset + r] as i32;
+        }
+        Some(Self { n, d, n_real: rows, adj, gids })
+    }
+
+    /// Bytes of accelerator memory this layout occupies.
+    pub fn footprint_bytes(&self) -> u64 {
+        (self.adj.len() * 4 + self.gids.len() * 4) as u64
+    }
+
+    /// Padding overhead: fraction of `adj` slots that are -1 filler.
+    pub fn padding_ratio(&self) -> f64 {
+        let real: usize = (0..self.n_real)
+            .map(|li| self.adj[li * self.d..(li + 1) * self.d].iter().filter(|&&x| x >= 0).count())
+            .sum();
+        1.0 - real as f64 / self.adj.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn one_gpu_partition(edges: Vec<(u32, u32)>, nv: usize) -> Partition {
+        let g = build_csr(&EdgeList { num_vertices: nv, edges });
+        let cfg = HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 32 };
+        // All vertices on the GPU partition (id 1).
+        let pg = materialize(&g, vec![1u8; nv], &cfg, &LayoutOptions::naive());
+        pg.parts[1].clone()
+    }
+
+    #[test]
+    fn pack_pads_rows_and_tail() {
+        let p = one_gpu_partition(vec![(0, 1), (0, 2), (1, 2)], 4);
+        let ell = EllLayout::pack(&p, 8, 4).unwrap();
+        assert_eq!(ell.n_real, 4);
+        // Vertex 0 row: neighbours {1, 2} then -1 padding.
+        assert_eq!(&ell.adj[0..4], &[1, 2, -1, -1]);
+        // Vertex 3 (singleton) row: all -1.
+        assert_eq!(&ell.adj[12..16], &[-1; 4]);
+        // Tail rows 4..8: all -1.
+        assert!(ell.adj[16..].iter().all(|&x| x == -1));
+        assert_eq!(&ell.gids[..4], &[0, 1, 2, 3]);
+        assert!(ell.gids[4..].iter().all(|&x| x == -1));
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let p = one_gpu_partition(vec![(0, 1), (0, 2), (0, 3)], 4);
+        assert!(EllLayout::pack(&p, 2, 4).is_none()); // too few rows
+        assert!(EllLayout::pack(&p, 8, 2).is_none()); // max degree 3 > 2
+        assert!(EllLayout::pack(&p, 4, 3).is_some()); // exact fit
+    }
+
+    #[test]
+    fn padding_ratio_sane() {
+        let p = one_gpu_partition(vec![(0, 1)], 2);
+        let ell = EllLayout::pack(&p, 4, 2).unwrap();
+        // 2 real entries out of 8 slots.
+        assert!((ell.padding_ratio() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn footprint_counts_adj_and_gids() {
+        let p = one_gpu_partition(vec![(0, 1)], 2);
+        let ell = EllLayout::pack(&p, 4, 2).unwrap();
+        assert_eq!(ell.footprint_bytes(), (8 * 4 + 4 * 4) as u64);
+    }
+
+    fn sorted_gpu_partition(edges: Vec<(u32, u32)>, nv: usize) -> Partition {
+        let g = build_csr(&EdgeList { num_vertices: nv, edges });
+        let cfg = HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 64 };
+        let pg = materialize(&g, vec![1u8; nv], &cfg, &LayoutOptions::paper());
+        pg.parts[1].clone()
+    }
+
+    #[test]
+    fn sell_slices_bucket_by_degree() {
+        // Degrees after sort: hub 5, then 2,2,2,1,1,1,1,1 (roughly).
+        let p = sorted_gpu_partition(
+            vec![(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 2), (3, 4)],
+            8,
+        );
+        let slices = sell_slices(&p, &[2, 8], 0.0);
+        assert!(slices.len() >= 2);
+        // Slices tile the partition exactly.
+        let total: usize = slices.iter().map(|s| s.rows).sum();
+        assert_eq!(total, p.num_vertices());
+        let mut off = 0;
+        for s in &slices {
+            assert_eq!(s.row_offset, off);
+            off += s.rows;
+            // Every row fits its slice width.
+            for r in 0..s.rows {
+                assert!(p.degree(s.row_offset + r) <= s.width);
+            }
+        }
+        // Widths are non-increasing (degree-desc rows).
+        assert!(slices.windows(2).all(|w| w[0].width >= w[1].width));
+    }
+
+    #[test]
+    fn sell_merges_small_slices() {
+        let p = sorted_gpu_partition(
+            vec![(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 2), (3, 4)],
+            8,
+        );
+        // With a huge min_frac everything merges into one slice.
+        let slices = sell_slices(&p, &[2, 8], 1.1);
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].rows, p.num_vertices());
+        // Merged slice keeps the widest width — all rows still fit.
+        for r in 0..slices[0].rows {
+            assert!(p.degree(r) <= slices[0].width);
+        }
+    }
+
+    #[test]
+    fn sell_unsorted_falls_back_to_single_slice() {
+        let p = one_gpu_partition(vec![(0, 1), (2, 3), (2, 4), (2, 5)], 6); // naive order
+        let slices = sell_slices(&p, &[1, 2, 4], 0.0);
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].width, p.max_degree);
+    }
+
+    #[test]
+    fn sell_reduces_total_lanes() {
+        let p = sorted_gpu_partition(
+            vec![(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (1, 2)],
+            16,
+        );
+        let dense_lanes = p.num_vertices() * p.max_degree;
+        let slices = sell_slices(&p, &[2, 4, 8], 0.0);
+        let sell_lanes: usize = slices.iter().map(|s| s.rows * s.width).sum();
+        assert!(sell_lanes < dense_lanes, "{sell_lanes} !< {dense_lanes}");
+    }
+
+    #[test]
+    fn pack_rows_extracts_slice_with_relative_indices() {
+        let p = sorted_gpu_partition(vec![(0, 1), (0, 2), (0, 3), (1, 2)], 4);
+        // Rows 1.. of the degree-sorted partition, padded to 4 rows wide 2.
+        let slices = sell_slices(&p, &[2, 4], 0.0);
+        let s = slices.last().unwrap();
+        let ell = EllLayout::pack_rows(&p, s.row_offset, s.rows, s.rows.next_power_of_two(), s.width).unwrap();
+        assert_eq!(ell.n_real, s.rows);
+        for r in 0..s.rows {
+            assert_eq!(ell.gids[r], p.gids[s.row_offset + r] as i32);
+        }
+    }
+}

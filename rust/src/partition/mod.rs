@@ -1,0 +1,442 @@
+//! Graph partitioning and placement — the paper's core contribution
+//! (Section 3.2: *partition specialization*).
+//!
+//! A partitioning assigns every global vertex to one processing element
+//! (CPU socket or accelerator). `materialize` then builds per-partition
+//! local CSRs (neighbours keep their *global* ids, as in Totem's
+//! two-level vertex identity, Section 3.4), applying the paper's locality
+//! optimizations: local-id reordering and degree-descending adjacency
+//! ordering.
+
+pub mod degree;
+pub mod ell;
+pub mod layout;
+pub mod random;
+
+use crate::graph::{Csr, VertexId};
+
+pub use degree::specialized_partition;
+pub use ell::EllLayout;
+pub use layout::LayoutOptions;
+pub use random::random_partition;
+
+/// What kind of processing element a partition is bound to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProcKind {
+    /// A CPU socket (the paper's 10-core Xeon E5-2670v2).
+    Cpu { socket: usize },
+    /// An accelerator (the paper's NVIDIA K40; here the PJRT-executed
+    /// Pallas kernel plus the K40 device model).
+    Gpu { index: usize },
+}
+
+impl ProcKind {
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, ProcKind::Gpu { .. })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ProcKind::Cpu { socket } => format!("CPU{socket}"),
+            ProcKind::Gpu { index } => format!("GPU{index}"),
+        }
+    }
+}
+
+/// A hardware configuration, e.g. 2 sockets + 2 GPUs ("2S2G").
+#[derive(Clone, Debug)]
+pub struct HardwareConfig {
+    pub cpu_sockets: usize,
+    pub gpus: usize,
+    /// Per-GPU memory capacity in bytes (paper: 12 GB K40; scaled down for
+    /// this testbed's graph scales by the caller).
+    pub gpu_mem_bytes: u64,
+    /// Max ELL width for accelerator partitions — vertices with higher
+    /// degree are not eligible for GPU placement (kernel variant ceiling).
+    pub gpu_max_degree: usize,
+}
+
+impl HardwareConfig {
+    /// Parse labels like "2S2G", "1S", "2S1G".
+    pub fn parse(label: &str, gpu_mem_bytes: u64, gpu_max_degree: usize) -> Option<Self> {
+        let bytes = label.as_bytes();
+        let mut sockets = 0usize;
+        let mut gpus = 0usize;
+        let mut num = 0usize;
+        let mut saw_num = false;
+        for &b in bytes {
+            match b {
+                b'0'..=b'9' => {
+                    num = num * 10 + (b - b'0') as usize;
+                    saw_num = true;
+                }
+                b'S' | b's' => {
+                    if !saw_num {
+                        return None;
+                    }
+                    sockets = num;
+                    num = 0;
+                    saw_num = false;
+                }
+                b'G' | b'g' => {
+                    if !saw_num {
+                        return None;
+                    }
+                    gpus = num;
+                    num = 0;
+                    saw_num = false;
+                }
+                _ => return None,
+            }
+        }
+        if sockets == 0 || saw_num {
+            return None;
+        }
+        Some(Self { cpu_sockets: sockets, gpus, gpu_mem_bytes, gpu_max_degree })
+    }
+
+    pub fn label(&self) -> String {
+        if self.gpus == 0 {
+            format!("{}S", self.cpu_sockets)
+        } else {
+            format!("{}S{}G", self.cpu_sockets, self.gpus)
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.cpu_sockets + self.gpus
+    }
+
+    /// Partition id -> processing element kind. CPU partitions come first
+    /// (partition 0 is the coordinator, paper Section 3.3).
+    pub fn kind_of(&self, pid: usize) -> ProcKind {
+        if pid < self.cpu_sockets {
+            ProcKind::Cpu { socket: pid }
+        } else {
+            ProcKind::Gpu { index: pid - self.cpu_sockets }
+        }
+    }
+}
+
+/// One partition: a local CSR whose rows are the partition's vertices (in
+/// local-id order) and whose columns are *global* vertex ids.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub id: usize,
+    pub kind: ProcKind,
+    /// Local id -> global id.
+    pub gids: Vec<VertexId>,
+    /// Local CSR row pointers (len = gids.len() + 1).
+    pub row_ptr: Vec<u64>,
+    /// Neighbour global ids.
+    pub col: Vec<VertexId>,
+    /// Max degree among this partition's vertices.
+    pub max_degree: usize,
+    /// Rows `0..scan_limit` cover every non-singleton vertex. With the
+    /// degree-descending local order (Section 3.4) singletons sink to the
+    /// tail, so bottom-up scans stop here instead of walking them every
+    /// level. Equals `num_vertices()` when the order is not guaranteed.
+    pub scan_limit: usize,
+}
+
+impl Partition {
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.gids.len()
+    }
+
+    #[inline]
+    pub fn neighbours(&self, local: usize) -> &[VertexId] {
+        &self.col[self.row_ptr[local] as usize..self.row_ptr[local + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, local: usize) -> usize {
+        (self.row_ptr[local + 1] - self.row_ptr[local]) as usize
+    }
+
+    pub fn num_directed_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    /// CSR footprint (CPU partitions budget against host memory).
+    pub fn csr_footprint_bytes(&self) -> u64 {
+        (self.row_ptr.len() * 8 + self.col.len() * 4 + self.gids.len() * 4) as u64
+    }
+
+    /// ELL footprint (GPU partitions budget against accelerator memory —
+    /// paper Section 3.2's "low-degree vertices occupy little memory").
+    pub fn ell_footprint_bytes(&self) -> u64 {
+        (self.num_vertices() as u64) * (self.max_degree.max(1) as u64) * 4
+    }
+}
+
+/// A fully materialized partitioned graph.
+#[derive(Clone, Debug)]
+pub struct PartitionedGraph {
+    pub num_vertices: usize,
+    pub num_undirected_edges: usize,
+    pub parts: Vec<Partition>,
+    /// Global id -> owning partition.
+    pub owner: Vec<u8>,
+    /// Global id -> local index within the owning partition.
+    pub local_index: Vec<u32>,
+}
+
+impl PartitionedGraph {
+    #[inline]
+    pub fn owner_of(&self, v: VertexId) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    #[inline]
+    pub fn local_of(&self, v: VertexId) -> usize {
+        self.local_index[v as usize] as usize
+    }
+
+    /// Fraction of non-singleton vertices placed on accelerators — the
+    /// paper's Figure 2 (right) discussion metric ("88% of non-singleton
+    /// vertices are allocated to the GPUs").
+    pub fn gpu_vertex_share(&self, g: &Csr) -> f64 {
+        let mut on_gpu = 0usize;
+        let mut non_singleton = 0usize;
+        for v in 0..self.num_vertices as u32 {
+            if g.degree(v) > 0 {
+                non_singleton += 1;
+                if self.parts[self.owner_of(v)].kind.is_gpu() {
+                    on_gpu += 1;
+                }
+            }
+        }
+        if non_singleton == 0 {
+            0.0
+        } else {
+            on_gpu as f64 / non_singleton as f64
+        }
+    }
+
+    /// Fraction of directed edges owned by accelerator partitions (the
+    /// "memory footprint offloaded" in Figure 2 left's random baseline).
+    pub fn gpu_edge_share(&self) -> f64 {
+        let total: usize = self.parts.iter().map(|p| p.num_directed_edges()).sum();
+        let gpu: usize = self
+            .parts
+            .iter()
+            .filter(|p| p.kind.is_gpu())
+            .map(|p| p.num_directed_edges())
+            .sum();
+        if total == 0 {
+            0.0
+        } else {
+            gpu as f64 / total as f64
+        }
+    }
+
+    /// Structural invariants (tests + post-construction checks).
+    pub fn validate(&self, g: &Csr) -> Result<(), String> {
+        if self.owner.len() != g.num_vertices || self.local_index.len() != g.num_vertices {
+            return Err("owner/local_index length mismatch".into());
+        }
+        let mut seen = vec![false; g.num_vertices];
+        for (pid, p) in self.parts.iter().enumerate() {
+            if p.id != pid {
+                return Err(format!("partition {pid} has id {}", p.id));
+            }
+            if p.row_ptr.len() != p.num_vertices() + 1 {
+                return Err(format!("partition {pid}: row_ptr len"));
+            }
+            for (li, &gid) in p.gids.iter().enumerate() {
+                if seen[gid as usize] {
+                    return Err(format!("vertex {gid} in two partitions"));
+                }
+                seen[gid as usize] = true;
+                if self.owner_of(gid) != pid || self.local_of(gid) != li {
+                    return Err(format!("vertex {gid}: owner/local_index wrong"));
+                }
+                // Adjacency preserved (as a set) vs the global CSR.
+                let mut a: Vec<u32> = p.neighbours(li).to_vec();
+                let mut b: Vec<u32> = g.neighbours(gid).to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err(format!("vertex {gid}: adjacency mismatch"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some vertex unassigned".into());
+        }
+        Ok(())
+    }
+}
+
+/// Materialize partitions from an ownership assignment.
+pub fn materialize(
+    g: &Csr,
+    owner: Vec<u8>,
+    cfg: &HardwareConfig,
+    opts: &LayoutOptions,
+) -> PartitionedGraph {
+    let np = cfg.num_partitions();
+    assert!(np <= u8::MAX as usize + 1, "too many partitions");
+
+    // Collect members per partition.
+    let mut members: Vec<Vec<VertexId>> = vec![Vec::new(); np];
+    for v in 0..g.num_vertices as u32 {
+        members[owner[v as usize] as usize].push(v);
+    }
+
+    // Local-id ordering (paper Section 3.4: permute local ids for locality).
+    // Degree-descending puts hubs (and their long adjacency rows) together
+    // at the front of the partition's memory.
+    if opts.reorder_vertices {
+        for m in members.iter_mut() {
+            m.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+        }
+    }
+
+    let mut local_index = vec![0u32; g.num_vertices];
+    for m in &members {
+        for (li, &gid) in m.iter().enumerate() {
+            local_index[gid as usize] = li as u32;
+        }
+    }
+
+    let mut parts = Vec::with_capacity(np);
+    for (pid, m) in members.into_iter().enumerate() {
+        let mut row_ptr = Vec::with_capacity(m.len() + 1);
+        row_ptr.push(0u64);
+        let mut col = Vec::new();
+        let mut max_degree = 0usize;
+        for &gid in &m {
+            let nbrs = g.neighbours(gid);
+            max_degree = max_degree.max(nbrs.len());
+            col.extend_from_slice(nbrs);
+            row_ptr.push(col.len() as u64);
+        }
+        // Adjacency ordering (paper Section 3.4): highest-degree neighbour
+        // first, so bottom-up scans stop early on likely-frontier hubs.
+        if opts.sort_adjacency_by_degree {
+            for li in 0..m.len() {
+                let lo = row_ptr[li] as usize;
+                let hi = row_ptr[li + 1] as usize;
+                col[lo..hi].sort_by_key(|&w| std::cmp::Reverse(g.degree(w)));
+            }
+        }
+        let scan_limit = if opts.reorder_vertices {
+            // degree-descending: singletons form a suffix
+            (0..m.len()).rev().find(|&li| row_ptr[li + 1] > row_ptr[li]).map_or(0, |li| li + 1)
+        } else {
+            m.len()
+        };
+        parts.push(Partition {
+            id: pid,
+            kind: cfg.kind_of(pid),
+            gids: m,
+            row_ptr,
+            col,
+            max_degree,
+            scan_limit,
+        });
+    }
+
+    PartitionedGraph {
+        num_vertices: g.num_vertices,
+        num_undirected_edges: g.num_undirected_edges(),
+        parts,
+        owner,
+        local_index,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::{build_csr, EdgeList};
+
+    fn cfg(s: usize, g: usize) -> HardwareConfig {
+        HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 20, gpu_max_degree: 32 }
+    }
+
+    #[test]
+    fn parse_labels() {
+        let c = HardwareConfig::parse("2S2G", 1, 32).unwrap();
+        assert_eq!((c.cpu_sockets, c.gpus), (2, 2));
+        assert_eq!(c.label(), "2S2G");
+        let c = HardwareConfig::parse("1S", 1, 32).unwrap();
+        assert_eq!((c.cpu_sockets, c.gpus), (1, 0));
+        assert_eq!(c.label(), "1S");
+        assert!(HardwareConfig::parse("2G", 1, 32).is_none()); // no socket
+        assert!(HardwareConfig::parse("S2", 1, 32).is_none());
+        assert!(HardwareConfig::parse("", 1, 32).is_none());
+        assert!(HardwareConfig::parse("12S10G", 1, 32).map(|c| (c.cpu_sockets, c.gpus))
+            == Some((12, 10)));
+    }
+
+    #[test]
+    fn kind_of_orders_cpus_first() {
+        let c = cfg(2, 2);
+        assert_eq!(c.kind_of(0), ProcKind::Cpu { socket: 0 });
+        assert_eq!(c.kind_of(1), ProcKind::Cpu { socket: 1 });
+        assert_eq!(c.kind_of(2), ProcKind::Gpu { index: 0 });
+        assert_eq!(c.kind_of(3), ProcKind::Gpu { index: 1 });
+    }
+
+    #[test]
+    fn materialize_preserves_adjacency() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 1)));
+        let owner: Vec<u8> = (0..g.num_vertices).map(|v| (v % 3) as u8).collect();
+        let pg = materialize(&g, owner, &cfg(1, 2), &LayoutOptions::paper());
+        pg.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn materialize_no_reorder_keeps_gid_order() {
+        let g = build_csr(&EdgeList {
+            num_vertices: 6,
+            edges: vec![(0, 1), (0, 2), (0, 3), (1, 2), (4, 5)],
+        });
+        let owner = vec![0, 0, 0, 1, 1, 1];
+        let pg = materialize(&g, owner, &cfg(2, 0), &LayoutOptions::naive());
+        assert_eq!(pg.parts[0].gids, vec![0, 1, 2]);
+        assert_eq!(pg.parts[1].gids, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn reorder_puts_hubs_first() {
+        let g = build_csr(&EdgeList {
+            num_vertices: 5,
+            edges: vec![(2, 0), (2, 1), (2, 3), (2, 4), (0, 1)],
+        });
+        let owner = vec![0u8; 5];
+        let pg = materialize(&g, owner, &cfg(1, 0), &LayoutOptions::paper());
+        assert_eq!(pg.parts[0].gids[0], 2); // degree-4 hub first
+        pg.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn adjacency_sorted_by_neighbour_degree() {
+        // 0 has neighbours 1 (deg 1), 2 (deg 3), 3 (deg 2).
+        let g = build_csr(&EdgeList {
+            num_vertices: 5,
+            edges: vec![(0, 1), (0, 2), (0, 3), (2, 4), (2, 3)],
+        });
+        let pg = materialize(&g, vec![0u8; 5], &cfg(1, 0), &LayoutOptions::paper());
+        let l0 = pg.local_of(0);
+        let nbrs = pg.parts[0].neighbours(l0);
+        assert_eq!(nbrs, &[2, 3, 1]); // degree 3, 2, 1
+    }
+
+    #[test]
+    fn shares_reflect_placement() {
+        let g = build_csr(&EdgeList {
+            num_vertices: 4,
+            edges: vec![(0, 1), (1, 2), (2, 3)],
+        });
+        // GPU partition (id 1) owns vertices 2 and 3.
+        let pg = materialize(&g, vec![0, 0, 1, 1], &cfg(1, 1), &LayoutOptions::paper());
+        assert!((pg.gpu_vertex_share(&g) - 0.5).abs() < 1e-9);
+        assert!((pg.gpu_edge_share() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,108 @@
+//! Random partitioning — the Fig 2 (left) baseline.
+//!
+//! Vertices are assigned uniformly at random, subject to the same physical
+//! constraints as any GPU placement (memory cap, ELL width ceiling): a
+//! vertex drawn for a full-or-ineligible accelerator falls back to a random
+//! CPU socket. The paper's observation is that this scheme's speedup is
+//! merely proportional to the offloaded memory footprint — no
+//! specialization benefit.
+
+use super::{HardwareConfig, LayoutOptions, PartitionedGraph};
+use crate::graph::Csr;
+use crate::util::Xoshiro256;
+
+pub fn random_partition(
+    g: &Csr,
+    cfg: &HardwareConfig,
+    opts: &LayoutOptions,
+    seed: u64,
+) -> PartitionedGraph {
+    let nv = g.num_vertices;
+    let np = cfg.num_partitions();
+    let mut rng = Xoshiro256::new(seed);
+    let mut owner = vec![0u8; nv];
+
+    // Accelerator budgets (bytes of ELL at the width ceiling — conservative:
+    // random placement cannot assume a low max degree).
+    let width = cfg.gpu_max_degree.max(1) as u64;
+    let cap_vertices = if cfg.gpus > 0 { cfg.gpu_mem_bytes / (width * 4) } else { 0 };
+    let mut gpu_fill = vec![0u64; cfg.gpus];
+
+    for v in 0..nv as u32 {
+        let pick = rng.next_below(np as u64) as usize;
+        let is_gpu = pick >= cfg.cpu_sockets;
+        if is_gpu {
+            let gi = pick - cfg.cpu_sockets;
+            let eligible = g.degree(v) <= cfg.gpu_max_degree && gpu_fill[gi] < cap_vertices;
+            if eligible {
+                gpu_fill[gi] += 1;
+                owner[v as usize] = pick as u8;
+                continue;
+            }
+            // Fall back to a random CPU socket.
+            owner[v as usize] = rng.next_below(cfg.cpu_sockets as u64) as u8;
+        } else {
+            owner[v as usize] = pick as u8;
+        }
+    }
+
+    super::materialize(g, owner, cfg, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_csr;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::partition::specialized_partition;
+
+    fn hw(s: usize, g: usize, mem: u64) -> HardwareConfig {
+        HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: mem, gpu_max_degree: 32 }
+    }
+
+    #[test]
+    fn valid_and_deterministic() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 1)));
+        let a = random_partition(&g, &hw(2, 1, 1 << 20), &LayoutOptions::paper(), 7);
+        a.validate(&g).unwrap();
+        let b = random_partition(&g, &hw(2, 1, 1 << 20), &LayoutOptions::paper(), 7);
+        assert_eq!(a.owner, b.owner);
+        let c = random_partition(&g, &hw(2, 1, 1 << 20), &LayoutOptions::paper(), 8);
+        assert_ne!(a.owner, c.owner);
+    }
+
+    #[test]
+    fn respects_gpu_constraints() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 2)));
+        let cap = 1 << 14;
+        let pg = random_partition(&g, &hw(1, 2, cap), &LayoutOptions::paper(), 3);
+        let cap_vertices = cap / (32 * 4);
+        for p in &pg.parts {
+            if p.kind.is_gpu() {
+                assert!(p.num_vertices() as u64 <= cap_vertices);
+                assert!(p.max_degree <= 32);
+            }
+        }
+    }
+
+    #[test]
+    fn roughly_uniform_across_partitions() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(12, 3)));
+        let pg = random_partition(&g, &hw(2, 0, 0), &LayoutOptions::paper(), 5);
+        let n0 = pg.parts[0].num_vertices() as f64;
+        let n1 = pg.parts[1].num_vertices() as f64;
+        assert!((n0 / (n0 + n1) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn random_offloads_fewer_bottom_up_critical_vertices_than_specialized() {
+        // The structural reason Fig 2 (left) favors specialization: under the
+        // same memory cap, random placement wastes accelerator slots on
+        // cache-friendly hubs while leaving low-degree vertices on the CPU.
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 4)));
+        let cap = 1 << 17;
+        let (spec, _) = specialized_partition(&g, &hw(2, 2, cap), &LayoutOptions::paper());
+        let rand = random_partition(&g, &hw(2, 2, cap), &LayoutOptions::paper(), 11);
+        assert!(spec.gpu_vertex_share(&g) > rand.gpu_vertex_share(&g));
+    }
+}

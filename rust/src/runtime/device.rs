@@ -1,0 +1,345 @@
+//! The device timing model — the hardware-substitution boundary.
+//!
+//! The engine executes every kernel for real and counts its work; this
+//! module attributes *time on the paper's testbed* (2x Xeon E5-2670v2 +
+//! 2x NVIDIA K40, PCIe 3.0) to those counters. BFS is bandwidth-bound on
+//! every processing element, so each level's busy time is modeled as
+//! bytes-touched / effective-bandwidth — the same roofline reasoning the
+//! paper uses when analyzing Fig 3/4. Parameters are calibrated once
+//! against the paper's anchors (DESIGN.md Section 6) and then frozen; no
+//! bench fits them to its target.
+
+use crate::bfs::{BaselineRun, BfsRun};
+use crate::engine::{Direction, PeWork};
+use crate::partition::{PartitionedGraph, ProcKind};
+
+/// Model parameters (defaults = the paper's hardware).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Per-socket effective sequential bandwidth (bytes/s). Host peak is
+    /// 59.7 GB/s over two sockets.
+    pub cpu_socket_bw: f64,
+    /// Efficiency of the top-down kernel's mixed access pattern.
+    pub cpu_eff_top_down: f64,
+    /// Efficiency of the bottom-up kernel (random frontier gathers).
+    pub cpu_eff_bottom_up: f64,
+    /// Extra locality penalty multiplier for un-optimized layouts (the
+    /// Table 1 "Naive" kernel: no Section 3.4 vertex/adjacency ordering).
+    pub cpu_naive_penalty: f64,
+    /// Streaming (memset/merge) efficiency — init and aggregation are
+    /// sequential passes, not random probes.
+    pub cpu_eff_stream: f64,
+    /// K40 effective bandwidth (peak 288 GB/s).
+    pub gpu_bw: f64,
+    /// ELL rows are coalesced; efficiency of the dense kernel.
+    pub gpu_eff: f64,
+    /// PCIe 3.0 x16 effective bandwidth.
+    pub pcie_bw: f64,
+    /// Per-transfer latency (s).
+    pub pcie_lat: f64,
+    /// Per-kernel-launch overhead on the device stream (a SELL-sliced
+    /// level launches one kernel per slice but transfers only twice).
+    pub gpu_launch_lat: f64,
+    /// Inter-socket (QPI) bandwidth for CPU<->CPU frontier exchange.
+    pub qpi_bw: f64,
+    pub qpi_lat: f64,
+    /// BSP barrier cost per superstep (s).
+    pub sync_lat: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        // CPU efficiencies are calibrated to the paper's *working-set
+        // regime* (Scale30: every bitmap probe and adjacency hop misses
+        // LLC/TLB), anchored to the paper's measured 2S rates (~1.4-2.8
+        // GTEPS direction-optimized). The GPU keeps a high efficiency —
+        // its thousands of resident threads hide exactly that latency,
+        // which is the asymmetry the paper's specialization exploits.
+        Self {
+            cpu_socket_bw: 29.85e9,
+            cpu_eff_top_down: 0.35,
+            cpu_eff_bottom_up: 0.08,
+            cpu_naive_penalty: 0.20,
+            cpu_eff_stream: 0.90,
+            gpu_bw: 288.0e9,
+            gpu_eff: 0.60,
+            pcie_bw: 10.0e9,
+            pcie_lat: 8e-6,
+            gpu_launch_lat: 3e-6,
+            qpi_bw: 16.0e9,
+            qpi_lat: 1e-6,
+            sync_lat: 5e-6,
+        }
+    }
+}
+
+/// Bytes a CPU kernel touches for the counted work.
+fn cpu_bytes(work: &PeWork, dir: Direction) -> f64 {
+    match dir {
+        // queue reads + per-edge: col read (4B) + visited probe/activate
+        // (~8B of random traffic incl. parent/depth writes amortized).
+        Direction::TopDown => work.vertices_scanned as f64 * 4.0 + work.edges_examined as f64 * 12.0,
+        // per-vertex: row_ptr + visited-bit probe; per-edge: col read +
+        // frontier-bitmap gather (cache-line amortized random read).
+        Direction::BottomUp => {
+            work.vertices_scanned as f64 * 5.0 + work.edges_examined as f64 * 8.0
+        }
+    }
+}
+
+/// Bytes the accelerator kernel streams for the counted work (dense).
+fn gpu_bytes(work: &PeWork, dir: Direction) -> f64 {
+    match dir {
+        // dense ELL stream + visited/nf/parent rows + frontier words
+        Direction::BottomUp => work.edges_examined as f64 * 4.0 + work.vertices_scanned as f64 * 12.0,
+        // frontier flags + ELL rows of frontier vertices + scatter traffic
+        Direction::TopDown => work.vertices_scanned as f64 * 8.0 + work.edges_examined as f64 * 12.0,
+    }
+}
+
+/// Per-level attributed time.
+#[derive(Clone, Debug)]
+pub struct LevelTiming {
+    pub level: u32,
+    pub direction: Option<Direction>,
+    /// Busy seconds per partition (same index as `pg.parts`).
+    pub pe_time: Vec<f64>,
+    /// Communication seconds (push or pull + PCIe kernel transfers).
+    pub comm_time: f64,
+    /// max(pe) + comm + sync.
+    pub total: f64,
+}
+
+/// Attributed timing of a whole run.
+#[derive(Clone, Debug)]
+pub struct RunTiming {
+    pub init: f64,
+    pub levels: Vec<LevelTiming>,
+    pub aggregation: f64,
+    pub total: f64,
+}
+
+impl RunTiming {
+    pub fn compute_time(&self) -> f64 {
+        self.levels.iter().map(|l| l.pe_time.iter().cloned().fold(0.0, f64::max)).sum()
+    }
+
+    pub fn comm_time(&self) -> f64 {
+        self.levels.iter().map(|l| l.comm_time).sum()
+    }
+}
+
+impl DeviceModel {
+    /// Attribute a hybrid run on a `cfg`-shaped machine.
+    ///
+    /// `naive_layout` applies the locality penalty to CPU kernels (Table 1
+    /// "Naive" column).
+    pub fn attribute(&self, run: &BfsRun, pg: &PartitionedGraph, naive_layout: bool) -> RunTiming {
+        let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+
+        // Init: clearing status arrays, parallel across CPU sockets,
+        // sequential-bandwidth bound.
+        let sockets = pg.parts.iter().filter(|p| !p.kind.is_gpu()).count().max(1);
+        let init =
+            run.init_bytes as f64 / (self.cpu_socket_bw * sockets as f64 * self.cpu_eff_stream);
+
+        let mut levels = Vec::with_capacity(run.levels.len());
+        for ls in &run.levels {
+            let dir = ls.direction.unwrap_or(Direction::TopDown);
+            let mut pe_time = vec![0.0f64; pg.parts.len()];
+            for (pid, work) in ls.pe_work.iter().enumerate() {
+                match pg.parts[pid].kind {
+                    ProcKind::Cpu { .. } => {
+                        let mut eff = match dir {
+                            Direction::TopDown => self.cpu_eff_top_down,
+                            Direction::BottomUp => self.cpu_eff_bottom_up,
+                        };
+                        if naive_layout {
+                            eff *= self.cpu_naive_penalty;
+                        }
+                        pe_time[pid] = cpu_bytes(work, dir) / (self.cpu_socket_bw * eff);
+                    }
+                    ProcKind::Gpu { .. } => {
+                        if dir == Direction::TopDown && work.pcie_transfers == 0 {
+                            // Host-walked tail frontier (no device call):
+                            // priced at the host's top-down rate.
+                            pe_time[pid] =
+                                cpu_bytes(work, dir) / (self.cpu_socket_bw * self.cpu_eff_top_down);
+                        } else {
+                            // Kernel time + this device's own PCIe
+                            // transfers (each GPU has its own x16 link;
+                            // devices overlap with each other). One upload
+                            // + one download per level; per-slice kernel
+                            // launches ride the stream.
+                            let mut t = gpu_bytes(work, dir) / (self.gpu_bw * self.gpu_eff);
+                            t += work.pcie_bytes as f64 / self.pcie_bw
+                                + 2.0 * self.pcie_lat
+                                + work.pcie_transfers as f64 * self.gpu_launch_lat;
+                            pe_time[pid] = t;
+                        }
+                    }
+                }
+            }
+            // Frontier exchange (push or pull), serialized after compute,
+            // split by link class (hub-spoke: GPUs never talk directly).
+            // PCIe traffic spreads across the per-GPU x16 links.
+            let gpus = pg.parts.iter().filter(|p| p.kind.is_gpu()).count().max(1) as f64;
+            let c = &ls.comm;
+            let comm_time = (c.push_host.bytes + c.pull_host.bytes) as f64 / self.qpi_bw
+                + (c.push_host.msgs + c.pull_host.msgs) as f64 * self.qpi_lat
+                + (c.push_pcie.bytes + c.pull_pcie.bytes) as f64 / (self.pcie_bw * gpus)
+                + ((c.push_pcie.msgs + c.pull_pcie.msgs) as f64 / gpus).ceil() * self.pcie_lat;
+            let busy = pe_time.iter().cloned().fold(0.0, f64::max);
+            levels.push(LevelTiming {
+                level: ls.level,
+                direction: ls.direction,
+                pe_time,
+                comm_time,
+                total: busy + comm_time + self.sync_lat,
+            });
+        }
+
+        // Aggregation: contribution fragments cross the interconnect once
+        // (GPU parent arrays ride their parallel PCIe links), then a
+        // bandwidth-bound merge on the sockets.
+        let gpus = pg.parts.iter().filter(|p| p.kind.is_gpu()).count().max(1) as f64;
+        let link_bw =
+            if has_gpu { self.pcie_bw * gpus } else { self.qpi_bw };
+        let aggregation = run.aggregation_bytes as f64 / link_bw
+            + run.aggregation_bytes as f64
+                / (self.cpu_socket_bw * sockets as f64 * self.cpu_eff_stream);
+
+        let total = init + levels.iter().map(|l| l.total).sum::<f64>() + aggregation;
+        RunTiming { init, levels, aggregation, total }
+    }
+
+    /// Attribute a single-address-space baseline run on `sockets` sockets.
+    pub fn attribute_baseline(
+        &self,
+        run: &BaselineRun,
+        sockets: usize,
+        naive_layout: bool,
+    ) -> RunTiming {
+        let bw = self.cpu_socket_bw * sockets as f64;
+        let nv = run.depth.len() as f64;
+        let init = nv * 12.0 / (bw * self.cpu_eff_stream);
+        let mut levels = Vec::with_capacity(run.levels.len());
+        for l in &run.levels {
+            let work = PeWork {
+                edges_examined: l.edges_examined,
+                vertices_scanned: l.vertices_scanned,
+                activated: 0,
+                pcie_bytes: 0,
+                pcie_transfers: 0,
+            };
+            let mut eff = match l.direction {
+                Direction::TopDown => self.cpu_eff_top_down,
+                Direction::BottomUp => self.cpu_eff_bottom_up,
+            };
+            if naive_layout {
+                eff *= self.cpu_naive_penalty;
+            }
+            let t = cpu_bytes(&work, l.direction) / (bw * eff);
+            levels.push(LevelTiming {
+                level: l.level,
+                direction: Some(l.direction),
+                pe_time: vec![t],
+                comm_time: 0.0,
+                total: t,
+            });
+        }
+        let total = init + levels.iter().map(|l| l.total).sum::<f64>();
+        RunTiming { init, levels, aggregation: 0.0, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::baseline::{baseline_bfs, BaselineKind};
+    use crate::bfs::{HybridConfig, HybridRunner};
+    use crate::engine::SimAccelerator;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::build_csr;
+    use crate::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+
+    fn hybrid_run(
+        sockets: usize,
+        gpus: usize,
+        scale: u32,
+    ) -> (crate::bfs::BfsRun, PartitionedGraph) {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(scale, 11)));
+        let hw = HardwareConfig {
+            cpu_sockets: sockets,
+            gpus,
+            gpu_mem_bytes: 1 << 24,
+            gpu_max_degree: 32,
+        };
+        let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+        let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let accel = if gpus > 0 { Some(&mut sim) } else { None };
+        let mut runner = HybridRunner::new(&pg, HybridConfig::default(), accel).unwrap();
+        let run = runner.run(root).unwrap();
+        (run, pg)
+    }
+
+    #[test]
+    fn times_are_positive_and_total_adds_up() {
+        let (run, pg) = hybrid_run(2, 2, 10);
+        let t = DeviceModel::default().attribute(&run, &pg, false);
+        assert!(t.init > 0.0 && t.total > 0.0);
+        let sum: f64 =
+            t.init + t.levels.iter().map(|l| l.total).sum::<f64>() + t.aggregation;
+        assert!((sum - t.total).abs() < 1e-12);
+        for l in &t.levels {
+            assert!(l.total >= l.pe_time.iter().cloned().fold(0.0, f64::max));
+        }
+    }
+
+    #[test]
+    fn more_sockets_is_faster_for_baseline() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 12)));
+        let run = baseline_bfs(&g, 3, BaselineKind::direction_optimized());
+        let m = DeviceModel::default();
+        let t1 = m.attribute_baseline(&run, 1, false).total;
+        let t2 = m.attribute_baseline(&run, 2, false).total;
+        assert!(t2 < t1);
+        assert!((t1 / t2 - 2.0).abs() < 0.3, "near-linear socket scaling");
+    }
+
+    #[test]
+    fn naive_layout_is_slower() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 13)));
+        let run = baseline_bfs(&g, 3, BaselineKind::TopDown);
+        let m = DeviceModel::default();
+        assert!(
+            m.attribute_baseline(&run, 2, true).total
+                > 3.0 * m.attribute_baseline(&run, 2, false).total
+        );
+    }
+
+    #[test]
+    fn hybrid_beats_cpu_only_on_skewed_graph() {
+        // The paper's headline direction: adding accelerators must reduce
+        // modeled time on a scale-free graph. Needs a graph large enough
+        // that per-level PCIe latency doesn't dominate (the paper's own
+        // point about small graphs — Table 1's LiveJournal row).
+        let m = DeviceModel::default();
+        let (run_cpu, pg_cpu) = hybrid_run(2, 0, 16);
+        let (run_gpu, pg_gpu) = hybrid_run(2, 2, 16);
+        let t_cpu = m.attribute(&run_cpu, &pg_cpu, false).total;
+        let t_gpu = m.attribute(&run_gpu, &pg_gpu, false).total;
+        assert!(
+            t_gpu < t_cpu,
+            "2S2G modeled {t_gpu} should beat 2S {t_cpu}"
+        );
+    }
+
+    #[test]
+    fn comm_time_present_only_with_multiple_partitions() {
+        let (run, pg) = hybrid_run(2, 1, 9);
+        let t = DeviceModel::default().attribute(&run, &pg, false);
+        assert!(t.comm_time() > 0.0);
+    }
+}

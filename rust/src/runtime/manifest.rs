@@ -1,0 +1,175 @@
+//! Artifact manifest: the line-based variant index written by
+//! `python/compile/aot.py` (`artifacts/manifest.txt`).
+//!
+//! Format (one variant per line, `#` comments ignored):
+//! `kernel=bottom_up n=65536 d=16 vwords=32768 file=bottom_up_n65536_d16.hlo.txt`
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Which kernel an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    BottomUp,
+    TopDown,
+}
+
+impl KernelKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "bottom_up" => Some(KernelKind::BottomUp),
+            "top_down" => Some(KernelKind::TopDown),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled kernel variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub kernel: KernelKind,
+    /// Partition rows the kernel was compiled for.
+    pub n: usize,
+    /// ELL width.
+    pub d: usize,
+    /// Packed global-bitmap words (global space = vwords * 32 vertices).
+    pub vwords: usize,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+}
+
+impl Variant {
+    pub fn v_total(&self) -> usize {
+        self.vwords * 32
+    }
+
+    /// ELL slots — the variant-choice cost metric.
+    pub fn footprint(&self) -> usize {
+        self.n * self.d
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kernel = None;
+            let mut n = None;
+            let mut d = None;
+            let mut vwords = None;
+            let mut file = None;
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                match k {
+                    "kernel" => kernel = KernelKind::parse(v),
+                    "n" => n = v.parse::<usize>().ok(),
+                    "d" => d = v.parse::<usize>().ok(),
+                    "vwords" => vwords = v.parse::<usize>().ok(),
+                    "file" => file = Some(v.to_string()),
+                    _ => bail!("manifest line {}: unknown key {k:?}", lineno + 1),
+                }
+            }
+            let (Some(kernel), Some(n), Some(d), Some(vwords), Some(file)) =
+                (kernel, n, d, vwords, file)
+            else {
+                bail!("manifest line {}: missing fields in {line:?}", lineno + 1);
+            };
+            variants.push(Variant { kernel, n, d, vwords, path: dir.join(file) });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Self { variants })
+    }
+
+    /// Pick the cheapest variant of `kernel` that can serve a partition of
+    /// `n_real` rows with max degree `d_real` in a `v_total`-vertex graph.
+    pub fn select(
+        &self,
+        kernel: KernelKind,
+        n_real: usize,
+        d_real: usize,
+        v_total: usize,
+    ) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| {
+                v.kernel == kernel && v.n >= n_real && v.d >= d_real.max(1) && v.v_total() >= v_total
+            })
+            .min_by_key(|v| v.footprint())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+kernel=bottom_up n=4096 d=8 vwords=128 file=bu_tiny.hlo.txt
+kernel=bottom_up n=65536 d=16 vwords=32768 file=bu_mid.hlo.txt
+kernel=bottom_up n=65536 d=32 vwords=32768 file=bu_wide.hlo.txt
+kernel=top_down n=4096 d=8 vwords=128 file=td_tiny.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.variants.len(), 4);
+        assert_eq!(m.variants[0].kernel, KernelKind::BottomUp);
+        assert_eq!(m.variants[0].v_total(), 4096);
+        assert_eq!(m.variants[1].path, Path::new("/a/bu_mid.hlo.txt"));
+    }
+
+    #[test]
+    fn select_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        // Tiny fits when the graph is small.
+        let v = m.select(KernelKind::BottomUp, 1000, 8, 4000).unwrap();
+        assert_eq!(v.n, 4096);
+        // A bigger global space forces the mid variant.
+        let v = m.select(KernelKind::BottomUp, 1000, 8, 100_000).unwrap();
+        assert_eq!((v.n, v.d), (65536, 16));
+        // Wide degree forces d=32.
+        let v = m.select(KernelKind::BottomUp, 1000, 20, 100_000).unwrap();
+        assert_eq!(v.d, 32);
+        // Nothing fits.
+        assert!(m.select(KernelKind::BottomUp, 100_000, 8, 4000).is_none());
+        assert!(m.select(KernelKind::TopDown, 100, 8, 1 << 21).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("kernel=bogus n=1 d=1 vwords=1 file=x", Path::new("/")).is_err());
+        assert!(Manifest::parse("kernel=bottom_up n=1", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+        assert!(Manifest::parse("nonsense", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn degree_zero_partitions_select_width_one_or_more() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.select(KernelKind::BottomUp, 10, 0, 100).is_some());
+    }
+}

@@ -1,0 +1,31 @@
+//! Runtime: PJRT artifact execution (the production accelerator), the
+//! device timing model, and the energy model.
+//!
+//! `PjrtAccelerator` is the only module that touches the `xla` crate; the
+//! engine programs against `engine::Accelerator`, so every algorithm test
+//! can run against the bit-exact `SimAccelerator` without artifacts.
+
+pub mod device;
+pub mod energy;
+pub mod manifest;
+pub mod pjrt;
+
+pub use device::{DeviceModel, LevelTiming, RunTiming};
+pub use energy::{mteps_per_watt, EnergyModel, EnergyReport};
+pub use manifest::{KernelKind, Manifest, Variant};
+pub use pjrt::PjrtAccelerator;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$TOTEM_DO_ARTIFACTS`, else
+/// `<crate root>/artifacts` (the `make artifacts` output), else `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("TOTEM_DO_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if repo.exists() {
+        return repo;
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,196 @@
+//! Packed bitmaps over the global vertex space.
+//!
+//! Frontiers and visited state are bitmaps (the paper's "bitmap frontier
+//! representation" Totem optimization, Section 4). Words are `u32` so a
+//! bitmap's backing store is bit-identical to the `i32[VW]` operand the
+//! accelerator kernel consumes — handoff to PJRT is a cast, not a repack.
+
+/// A fixed-size packed bitmap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    bits: usize,
+    words: Vec<u32>,
+}
+
+impl Bitmap {
+    pub fn new(bits: usize) -> Self {
+        Self { bits, words: vec![0; bits.div_ceil(32)] }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i >> 5] >> (i & 31)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 5] |= 1 << (i & 31);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 5] &= !(1 << (i & 31));
+    }
+
+    /// Set all bits to zero (hot path: reused per level, never reallocated).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Word-wise OR of `other` into `self`.
+    pub fn or_with(&mut self, other: &Bitmap) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Iterate set-bit indices (word-skipping).
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter { words: &self.words, word_idx: 0, cur: self.words.first().copied().unwrap_or(0), bits: self.bits }
+    }
+
+    /// Raw words (u32; reinterpretable as the kernel's i32 operand).
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u32] {
+        &mut self.words
+    }
+
+    /// Bytes a push/pull of this bitmap moves over the interconnect.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.words.len() * 4) as u64
+    }
+
+    /// Copy of the words widened to i32 (PJRT literal construction).
+    pub fn to_i32_words(&self) -> Vec<i32> {
+        self.words.iter().map(|&w| w as i32).collect()
+    }
+}
+
+pub struct OnesIter<'a> {
+    words: &'a [u32],
+    word_idx: usize,
+    cur: u32,
+    bits: usize,
+}
+
+impl<'a> Iterator for OnesIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let bit = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                let idx = (self.word_idx << 5) | bit;
+                if idx < self.bits {
+                    return Some(idx);
+                }
+                return None; // padding bits beyond len (never set, but guard)
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitmap::new(100);
+        assert!(!b.get(0) && !b.get(99));
+        b.set(0);
+        b.set(31);
+        b.set(32);
+        b.set(99);
+        assert!(b.get(0) && b.get(31) && b.get(32) && b.get(99));
+        assert_eq!(b.count(), 4);
+        b.clear_bit(31);
+        assert!(!b.get(31));
+        assert_eq!(b.count(), 3);
+        b.clear();
+        assert_eq!(b.count(), 0);
+        assert!(!b.any());
+    }
+
+    #[test]
+    fn or_with_merges() {
+        let mut a = Bitmap::new(64);
+        let mut b = Bitmap::new(64);
+        a.set(1);
+        a.set(40);
+        b.set(40);
+        b.set(63);
+        a.or_with(&b);
+        assert_eq!(a.iter_ones().collect::<Vec<_>>(), vec![1, 40, 63]);
+    }
+
+    #[test]
+    fn iter_ones_matches_gets() {
+        let mut b = Bitmap::new(257);
+        let idxs = [0usize, 1, 31, 32, 33, 64, 128, 255, 256];
+        for &i in &idxs {
+            b.set(i);
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), idxs.to_vec());
+    }
+
+    #[test]
+    fn iter_ones_empty() {
+        let b = Bitmap::new(70);
+        assert_eq!(b.iter_ones().count(), 0);
+        let b0 = Bitmap::new(0);
+        assert_eq!(b0.iter_ones().count(), 0);
+    }
+
+    #[test]
+    fn word_layout_matches_kernel_convention() {
+        // Bit i lives at words[i>>5] bit (i&31) — same as the Pallas gather.
+        let mut b = Bitmap::new(64);
+        b.set(31);
+        b.set(32);
+        assert_eq!(b.words()[0], 1 << 31);
+        assert_eq!(b.words()[1], 1);
+    }
+
+    #[test]
+    fn wire_bytes_rounds_up() {
+        assert_eq!(Bitmap::new(1).wire_bytes(), 4);
+        assert_eq!(Bitmap::new(32).wire_bytes(), 4);
+        assert_eq!(Bitmap::new(33).wire_bytes(), 8);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared utilities: PRNG, packed bitmaps, table rendering, and the
+//! property-testing substrate.
+
+pub mod bitmap;
+pub mod proptest_lite;
+pub mod rng;
+pub mod tables;
+
+pub use bitmap::Bitmap;
+pub use rng::{SplitMix64, Xoshiro256};

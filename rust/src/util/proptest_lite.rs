@@ -1,0 +1,146 @@
+//! A small property-testing substrate (the `proptest` crate is not vendored
+//! in this offline environment).
+//!
+//! `run_cases(n, seed, f)` drives `f` with `n` independent seeded RNGs and
+//! reports the failing case's seed so it can be replayed as a unit test.
+//! No shrinking — generators are written to produce small cases directly.
+
+use crate::util::rng::Xoshiro256;
+
+/// Run `n` property cases. On panic, re-raises with the case seed attached.
+pub fn run_cases<F: FnMut(&mut Xoshiro256)>(n: usize, base_seed: u64, mut f: F) {
+    for case in 0..n {
+        let seed = base_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property case {case}/{n} FAILED (replay: Xoshiro256::new({seed}))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn int_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// A random undirected edge list: `nv` vertices, ~`ne` edges, possibly
+    /// with isolated vertices, self-loop-free, duplicate-free.
+    pub fn edge_list(rng: &mut Xoshiro256, nv_max: usize, ne_max: usize) -> EdgeList {
+        let nv = int_in(rng, 2, nv_max.max(2));
+        let ne = int_in(rng, 0, ne_max);
+        let mut seen = std::collections::HashSet::new();
+        let mut edges = Vec::new();
+        for _ in 0..ne {
+            let a = rng.next_below(nv as u64) as u32;
+            let b = rng.next_below(nv as u64) as u32;
+            if a == b {
+                continue;
+            }
+            let key = (a.min(b), a.max(b));
+            if seen.insert(key) {
+                edges.push(key);
+            }
+        }
+        EdgeList { num_vertices: nv, edges }
+    }
+
+    /// A connected random graph (random tree + extra edges): every vertex
+    /// reachable from every other — handy for full-coverage BFS properties.
+    pub fn connected_graph(rng: &mut Xoshiro256, nv_max: usize, extra_max: usize) -> EdgeList {
+        let nv = int_in(rng, 2, nv_max.max(2));
+        let mut seen = std::collections::HashSet::new();
+        let mut edges = Vec::new();
+        for v in 1..nv as u32 {
+            let p = rng.next_below(v as u64) as u32;
+            seen.insert((p.min(v), p.max(v)));
+            edges.push((p.min(v), p.max(v)));
+        }
+        for _ in 0..int_in(rng, 0, extra_max) {
+            let a = rng.next_below(nv as u64) as u32;
+            let b = rng.next_below(nv as u64) as u32;
+            if a == b {
+                continue;
+            }
+            let key = (a.min(b), a.max(b));
+            if seen.insert(key) {
+                edges.push(key);
+            }
+        }
+        EdgeList { num_vertices: nv, edges }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_cases_executes_all() {
+        let counter = std::cell::Cell::new(0);
+        run_cases(25, 1, |_| counter.set(counter.get() + 1));
+        assert_eq!(counter.get(), 25);
+    }
+
+    #[test]
+    fn run_cases_is_deterministic() {
+        let mut a = Vec::new();
+        run_cases(5, 99, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        run_cases(5, 99, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_cases_propagates_failures() {
+        run_cases(10, 2, |rng| assert!(rng.next_below(4) != 2));
+    }
+
+    #[test]
+    fn gen_edge_list_is_wellformed() {
+        run_cases(50, 3, |rng| {
+            let g = gen::edge_list(rng, 40, 120);
+            let mut seen = std::collections::HashSet::new();
+            for &(a, b) in &g.edges {
+                assert!(a < b, "canonical order");
+                assert!((b as usize) < g.num_vertices);
+                assert!(seen.insert((a, b)), "no duplicates");
+            }
+        });
+    }
+
+    #[test]
+    fn gen_connected_graph_is_connected() {
+        run_cases(30, 4, |rng| {
+            let g = gen::connected_graph(rng, 30, 30);
+            // union-find connectivity check
+            let mut parent: Vec<usize> = (0..g.num_vertices).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                }
+                p[x]
+            }
+            for &(a, b) in &g.edges {
+                let (ra, rb) = (find(&mut parent, a as usize), find(&mut parent, b as usize));
+                parent[ra] = rb;
+            }
+            let root = find(&mut parent, 0);
+            for v in 1..g.num_vertices {
+                assert_eq!(find(&mut parent, v), root, "vertex {v} disconnected");
+            }
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Aligned text tables for bench/example output (the paper's rows/series).
+
+/// A simple left-aligned table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = width[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a TEPS value the way the paper does (B TEPS with 2 decimals,
+/// M TEPS below a billion).
+pub fn fmt_teps(teps: f64) -> String {
+    if teps >= 1e9 {
+        format!("{:.2} GTEPS", teps / 1e9)
+    } else if teps >= 1e6 {
+        format!("{:.1} MTEPS", teps / 1e6)
+    } else {
+        format!("{:.0} kTEPS", teps / 1e3)
+    }
+}
+
+/// Format seconds with a sensible unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.1} us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["config", "teps"]);
+        t.row(vec!["2S", "1.39"]).row(vec!["2S2G", "5.78"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("config"));
+        assert!(lines[2].contains("2S"));
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() <= w + 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn teps_formatting() {
+        assert_eq!(fmt_teps(5.78e9), "5.78 GTEPS");
+        assert_eq!(fmt_teps(22.4e6), "22.4 MTEPS");
+        assert_eq!(fmt_teps(900.0e3), "900 kTEPS");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.50 s");
+        assert_eq!(fmt_time(0.0021), "2.10 ms");
+        assert_eq!(fmt_time(35e-6), "35.0 us");
+    }
+}

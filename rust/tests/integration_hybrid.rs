@@ -1,0 +1,191 @@
+//! Cross-module integration: the hybrid partitioned BFS against baselines
+//! and references, across hardware configs, policies, partitioners, and
+//! graph families — all on the Sim accelerator (no artifacts needed).
+
+use totem_do::bfs::{
+    baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind,
+};
+use totem_do::engine::{CommMode, Direction, SimAccelerator};
+use totem_do::graph::generator::{erdos_renyi, kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
+use totem_do::graph::{build_csr, Csr, EdgeList};
+use totem_do::partition::{
+    random_partition, specialized_partition, HardwareConfig, LayoutOptions,
+};
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 26, gpu_max_degree: 32 }
+}
+
+fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+    let mut depth = vec![-1i32; g.num_vertices];
+    depth[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbours(u) {
+            if depth[w as usize] < 0 {
+                depth[w as usize] = depth[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    depth
+}
+
+fn check_hybrid(g: &Csr, cfg_hw: &HardwareConfig, policy: PolicyKind, root: u32) {
+    let (pg, _) = specialized_partition(g, cfg_hw, &LayoutOptions::paper());
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
+    let cfg = HybridConfig { policy, ..Default::default() };
+    let mut runner = HybridRunner::new(&pg, cfg, accel).unwrap();
+    let run = runner.run(root).unwrap();
+    assert_eq!(run.depth, reference_depths(g, root), "config {}", cfg_hw.label());
+    validate_graph500(g, root, &run.parent, &run.depth).unwrap();
+}
+
+#[test]
+fn all_hardware_configs_agree_on_kron() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 1)));
+    let root = (0..g.num_vertices as u32).find(|&v| g.degree(v) > 3).unwrap();
+    for (s, gp) in [(1, 0), (2, 0), (1, 1), (2, 1), (1, 2), (2, 2), (3, 3)] {
+        check_hybrid(&g, &hw(s, gp), PolicyKind::direction_optimized(), root);
+        check_hybrid(&g, &hw(s, gp), PolicyKind::AlwaysTopDown, root);
+    }
+}
+
+#[test]
+fn works_on_non_scale_free_graphs() {
+    let g = build_csr(&erdos_renyi(2048, 8192, 3));
+    let root = (0..2048u32).find(|&v| g.degree(v) > 0).unwrap();
+    check_hybrid(&g, &hw(2, 2), PolicyKind::direction_optimized(), root);
+}
+
+#[test]
+fn works_on_real_world_analogs() {
+    // Scaled-down versions (the full classes are bench-sized).
+    for class in [
+        RealWorldClass::TwitterSim,
+        RealWorldClass::WikipediaSim,
+        RealWorldClass::LiveJournalSim,
+    ] {
+        let mut cfg = class.config(9);
+        cfg.scale = 11; // shrink for test time
+        let g = build_csr(&kronecker(&cfg));
+        let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        check_hybrid(&g, &hw(2, 2), PolicyKind::direction_optimized(), root);
+    }
+}
+
+#[test]
+fn random_partitioning_is_also_correct() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 4)));
+    let pg = random_partition(&g, &hw(2, 2), &LayoutOptions::paper(), 99);
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut runner =
+        HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+    let root = (0..g.num_vertices as u32).find(|&v| g.degree(v) > 2).unwrap();
+    let run = runner.run(root).unwrap();
+    assert_eq!(run.depth, reference_depths(&g, root));
+    validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+}
+
+#[test]
+fn per_activation_comm_mode_is_functionally_identical() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 5)));
+    let (pg, _) = specialized_partition(&g, &hw(2, 1), &LayoutOptions::paper());
+    let root = (0..g.num_vertices as u32).find(|&v| g.degree(v) > 2).unwrap();
+
+    let run_batched = {
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let cfg = HybridConfig { comm_mode: CommMode::Batched, ..Default::default() };
+        HybridRunner::new(&pg, cfg, Some(&mut sim)).unwrap().run(root).unwrap()
+    };
+    let run_eager = {
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let cfg = HybridConfig { comm_mode: CommMode::PerActivation, ..Default::default() };
+        HybridRunner::new(&pg, cfg, Some(&mut sim)).unwrap().run(root).unwrap()
+    };
+    assert_eq!(run_batched.depth, run_eager.depth);
+    // But the wire cost differs wildly — that is the ablation's point.
+    let b: u64 = run_batched.levels.iter().map(|l| l.comm.push_bytes()).sum();
+    let e: u64 = run_eager.levels.iter().map(|l| l.comm.push_bytes()).sum();
+    assert!(e > b, "eager {e} should exceed batched {b}");
+}
+
+#[test]
+fn hybrid_and_baseline_reach_identical_depths() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 6)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let base = baseline_bfs(&g, root, BaselineKind::direction_optimized());
+    let (pg, _) = specialized_partition(&g, &hw(2, 2), &LayoutOptions::paper());
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut runner =
+        HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+    let run = runner.run(root).unwrap();
+    assert_eq!(run.depth, base.depth);
+}
+
+#[test]
+fn direction_policy_switches_and_reduces_edge_work() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(12, 7)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let (pg, _) = specialized_partition(&g, &hw(2, 0), &LayoutOptions::paper());
+
+    let run = |policy| {
+        let mut runner = HybridRunner::<SimAccelerator>::new(
+            &pg,
+            HybridConfig { policy, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        runner.run(root).unwrap()
+    };
+    let run_do = run(PolicyKind::direction_optimized());
+    let run_td = run(PolicyKind::AlwaysTopDown);
+
+    assert!(run_do.levels.iter().any(|l| l.direction == Some(Direction::BottomUp)));
+    let edges = |r: &totem_do::bfs::BfsRun| -> u64 {
+        r.levels.iter().flat_map(|l| l.pe_work.iter()).map(|w| w.edges_examined).sum()
+    };
+    assert!(
+        edges(&run_do) < edges(&run_td) / 2,
+        "D/O {} vs TD {} edges",
+        edges(&run_do),
+        edges(&run_td)
+    );
+}
+
+#[test]
+fn star_and_path_corner_cases() {
+    // Star: one hub, bottom-up trivially finds it.
+    let star = build_csr(&EdgeList {
+        num_vertices: 64,
+        edges: (1..64u32).map(|v| (0, v)).collect(),
+    });
+    check_hybrid(&star, &hw(2, 1), PolicyKind::direction_optimized(), 0);
+    check_hybrid(&star, &hw(2, 1), PolicyKind::direction_optimized(), 63);
+
+    // Path: maximum diameter, frontier of size 1 throughout.
+    let path = build_csr(&EdgeList {
+        num_vertices: 50,
+        edges: (0..49u32).map(|v| (v, v + 1)).collect(),
+    });
+    check_hybrid(&path, &hw(2, 1), PolicyKind::direction_optimized(), 0);
+    check_hybrid(&path, &hw(1, 1), PolicyKind::AlwaysTopDown, 25);
+}
+
+#[test]
+fn deterministic_across_repeats() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 8)));
+    let (pg, _) = specialized_partition(&g, &hw(2, 2), &LayoutOptions::paper());
+    let root = (0..g.num_vertices as u32).find(|&v| g.degree(v) > 2).unwrap();
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut runner =
+        HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+    let a = runner.run(root).unwrap();
+    let b = runner.run(root).unwrap();
+    assert_eq!(a.depth, b.depth);
+    assert_eq!(a.parent, b.parent);
+    let wa: Vec<u64> = a.levels.iter().flat_map(|l| l.pe_work.iter()).map(|w| w.edges_examined).collect();
+    let wb: Vec<u64> = b.levels.iter().flat_map(|l| l.pe_work.iter()).map(|w| w.edges_examined).collect();
+    assert_eq!(wa, wb, "work counters must be reproducible");
+}

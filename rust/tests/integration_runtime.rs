@@ -1,0 +1,161 @@
+//! PJRT integration: the AOT-compiled Pallas kernels, executed through the
+//! `xla` crate, must produce *bit-identical* results to the pure-Rust
+//! `SimAccelerator` mirror — and the full hybrid BFS must agree with the
+//! reference regardless of backend.
+//!
+//! Requires `make artifacts`; tests are skipped (with a note) if the
+//! manifest is missing so `cargo test` stays runnable pre-build.
+
+use totem_do::bfs::{validate_graph500, HybridConfig, HybridRunner};
+use totem_do::engine::{Accelerator, SimAccelerator};
+use totem_do::graph::generator::{kronecker, GeneratorConfig};
+use totem_do::graph::{build_csr, Csr};
+use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+use totem_do::runtime::{default_artifact_dir, PjrtAccelerator};
+use totem_do::util::Bitmap;
+
+fn artifacts_available() -> bool {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.txt").exists() {
+        true
+    } else {
+        eprintln!(
+            "SKIP: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        false
+    }
+}
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 26, gpu_max_degree: 32 }
+}
+
+fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+    let mut depth = vec![-1i32; g.num_vertices];
+    depth[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbours(u) {
+            if depth[w as usize] < 0 {
+                depth[w as usize] = depth[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    depth
+}
+
+#[test]
+fn pjrt_and_sim_bottom_up_are_bit_identical() {
+    if !artifacts_available() {
+        return;
+    }
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 5)));
+    let (pg, _) = specialized_partition(&g, &hw(1, 1), &LayoutOptions::paper());
+    let gpu_pid = pg.parts.iter().find(|p| p.kind.is_gpu()).unwrap().id;
+
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+    sim.setup(gpu_pid, &pg.parts[gpu_pid]).unwrap();
+    pjrt.setup(gpu_pid, &pg.parts[gpu_pid]).unwrap();
+
+    // A few frontier patterns, feeding visited state forward.
+    let mut frontier = Bitmap::new(g.num_vertices);
+    for seed in [3usize, 17, 101] {
+        frontier.clear();
+        for i in 0..g.num_vertices {
+            if (i * 2654435761) % 7 == seed % 7 {
+                frontier.set(i);
+            }
+        }
+        let a = sim.bottom_up(gpu_pid, frontier.words()).unwrap();
+        let b = pjrt.bottom_up(gpu_pid, frontier.words()).unwrap();
+        assert_eq!(a.count, b.count, "seed {seed}");
+        assert_eq!(a.next_frontier, b.next_frontier, "seed {seed}");
+        assert_eq!(a.parent, b.parent, "seed {seed}");
+    }
+}
+
+#[test]
+fn pjrt_and_sim_top_down_are_bit_identical() {
+    if !artifacts_available() {
+        return;
+    }
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 6)));
+    let (pg, _) = specialized_partition(&g, &hw(1, 1), &LayoutOptions::paper());
+    let gpu_pid = pg.parts.iter().find(|p| p.kind.is_gpu()).unwrap().id;
+    let part = &pg.parts[gpu_pid];
+
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+    sim.setup(gpu_pid, part).unwrap();
+    pjrt.setup(gpu_pid, part).unwrap();
+
+    let mut frontier = vec![0i32; part.num_vertices()];
+    for (i, f) in frontier.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            *f = 1;
+        }
+    }
+    let a = sim.top_down(gpu_pid, &frontier).unwrap();
+    let b = pjrt.top_down(gpu_pid, &frontier).unwrap();
+    assert_eq!(a.edges_out, b.edges_out);
+    let v = g.num_vertices;
+    assert_eq!(&a.active[..v], &b.active[..v]);
+    assert_eq!(&a.parent[..v], &b.parent[..v]);
+}
+
+#[test]
+fn full_hybrid_bfs_on_pjrt_matches_reference_and_validates() {
+    if !artifacts_available() {
+        return;
+    }
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(12, 7)));
+    let (pg, _) = specialized_partition(&g, &hw(2, 2), &LayoutOptions::paper());
+    let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+    let mut runner = HybridRunner::new(&pg, HybridConfig::default(), Some(&mut pjrt)).unwrap();
+    let roots: Vec<u32> =
+        (0..g.num_vertices as u32).filter(|&v| g.degree(v) > 2).take(3).collect();
+    for root in roots {
+        let run = runner.run(root).unwrap();
+        assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+        validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+    }
+}
+
+#[test]
+fn pjrt_and_sim_full_runs_agree_exactly() {
+    if !artifacts_available() {
+        return;
+    }
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 8)));
+    let (pg, _) = specialized_partition(&g, &hw(1, 2), &LayoutOptions::paper());
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let mut r1 = HybridRunner::new(&pg, HybridConfig::default(), Some(&mut sim)).unwrap();
+    let a = r1.run(root).unwrap();
+
+    let mut pjrt = PjrtAccelerator::new(&default_artifact_dir(), g.num_vertices).unwrap();
+    let mut r2 = HybridRunner::new(&pg, HybridConfig::default(), Some(&mut pjrt)).unwrap();
+    let b = r2.run(root).unwrap();
+
+    assert_eq!(a.depth, b.depth);
+    assert_eq!(a.parent, b.parent);
+    assert_eq!(a.levels.len(), b.levels.len());
+    for (la, lb) in a.levels.iter().zip(&b.levels) {
+        assert_eq!(la.frontier_size, lb.frontier_size);
+        assert_eq!(la.direction, lb.direction);
+    }
+}
+
+#[test]
+fn pjrt_reports_missing_artifacts_cleanly() {
+    let bogus = std::path::Path::new("/nonexistent/totem-do-artifacts");
+    let msg = match PjrtAccelerator::new(bogus, 1024) {
+        Ok(_) => panic!("expected missing-artifacts error"),
+        Err(e) => format!("{e:?}"),
+    };
+    assert!(msg.contains("manifest"), "unexpected error: {msg}");
+}

@@ -1,0 +1,150 @@
+//! Property-based invariants over random graphs, partitionings and roots
+//! (in-repo property substrate; proptest is not vendored offline).
+
+use totem_do::bfs::{validate_graph500, HybridConfig, HybridRunner, PolicyKind};
+use totem_do::engine::state::{PARENT_REMOTE, PARENT_UNSET};
+use totem_do::engine::SimAccelerator;
+use totem_do::graph::{build_csr, Csr};
+use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+use totem_do::util::proptest_lite::{gen, run_cases};
+use totem_do::util::Xoshiro256;
+
+fn hw(rng: &mut Xoshiro256) -> HardwareConfig {
+    HardwareConfig {
+        cpu_sockets: gen::int_in(rng, 1, 3),
+        gpus: gen::int_in(rng, 0, 3),
+        gpu_mem_bytes: 1 << gen::int_in(rng, 10, 24),
+        gpu_max_degree: [4usize, 16, 32][gen::int_in(rng, 0, 2)],
+    }
+}
+
+fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+    let mut depth = vec![-1i32; g.num_vertices];
+    depth[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbours(u) {
+            if depth[w as usize] < 0 {
+                depth[w as usize] = depth[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    depth
+}
+
+/// Run one hybrid BFS under a random configuration; return (run, graph).
+fn random_run(rng: &mut Xoshiro256) -> (totem_do::bfs::BfsRun, Csr, u32) {
+    let el = gen::edge_list(rng, 120, 500);
+    let g = build_csr(&el);
+    let cfg_hw = hw(rng);
+    let (pg, _) = specialized_partition(&g, &cfg_hw, &LayoutOptions::paper());
+    let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+    let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
+    let policy = if rng.next_below(2) == 0 {
+        PolicyKind::direction_optimized()
+    } else {
+        PolicyKind::AlwaysTopDown
+    };
+    let cfg = HybridConfig { policy, ..Default::default() };
+    let mut runner = HybridRunner::new(&pg, cfg, accel).unwrap();
+    let root = rng.next_below(g.num_vertices as u64) as u32;
+    let run = runner.run(root).unwrap();
+    (run, g, root)
+}
+
+#[test]
+fn prop_depths_equal_reference_bfs() {
+    run_cases(120, 0xBF5, |rng| {
+        let (run, g, root) = random_run(rng);
+        assert_eq!(run.depth, reference_depths(&g, root));
+    });
+}
+
+#[test]
+fn prop_parent_tree_passes_graph500_validation() {
+    run_cases(120, 0xAA7, |rng| {
+        let (run, g, root) = random_run(rng);
+        validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+    });
+}
+
+#[test]
+fn prop_no_remote_sentinels_survive_aggregation() {
+    run_cases(80, 0x0DD, |rng| {
+        let (run, _, _) = random_run(rng);
+        assert!(run.parent.iter().all(|&p| p != PARENT_REMOTE));
+        for (v, (&p, &d)) in run.parent.iter().zip(&run.depth).enumerate() {
+            assert_eq!(p == PARENT_UNSET, d < 0, "vertex {v}: parent/depth disagree");
+        }
+    });
+}
+
+#[test]
+fn prop_frontier_census_conservation() {
+    // Sum of per-level frontiers = reached vertices; level-0 frontier = 1.
+    run_cases(80, 0x5EED, |rng| {
+        let (run, _, _) = random_run(rng);
+        let fsum: u64 = run.levels.iter().map(|l| l.frontier_size).sum();
+        assert_eq!(fsum, run.reached_vertices);
+        if let Some(l0) = run.levels.first() {
+            assert_eq!(l0.frontier_size, 1);
+        }
+    });
+}
+
+#[test]
+fn prop_activations_cover_reached_set() {
+    // Total activations (incl. root) = reached vertices.
+    run_cases(80, 0xACE, |rng| {
+        let (run, _, _) = random_run(rng);
+        let activated: u64 = run
+            .levels
+            .iter()
+            .flat_map(|l| l.pe_work.iter())
+            .map(|w| w.activated)
+            .sum();
+        // Crossing activations may double-count merged duplicates; the
+        // reached set is a lower bound and activations an upper bound.
+        assert!(activated + 1 >= run.reached_vertices, "{activated} + root < {}", run.reached_vertices);
+    });
+}
+
+#[test]
+fn prop_comm_bytes_bounded_by_graph_size() {
+    run_cases(60, 0xC033, |rng| {
+        let (run, g, _) = random_run(rng);
+        let bitmap_bound = (g.num_vertices as u64 / 8 + 64) * 16; // generous per-level cap
+        for l in &run.levels {
+            assert!(l.comm.push_bytes() <= bitmap_bound * 4);
+            assert!(l.comm.pull_bytes() <= bitmap_bound * 4);
+        }
+    });
+}
+
+#[test]
+fn prop_connected_graphs_reach_everything() {
+    run_cases(60, 0xF00D, |rng| {
+        let el = gen::connected_graph(rng, 80, 150);
+        let g = build_csr(&el);
+        let cfg_hw = hw(rng);
+        let (pg, _) = specialized_partition(&g, &cfg_hw, &LayoutOptions::paper());
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
+        let mut runner = HybridRunner::new(&pg, HybridConfig::default(), accel).unwrap();
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        let run = runner.run(root).unwrap();
+        assert_eq!(run.reached_vertices as usize, g.num_vertices);
+        assert_eq!(run.traversed_edges() as usize, g.num_undirected_edges());
+    });
+}
+
+#[test]
+fn prop_partitioning_owner_maps_are_bijective() {
+    run_cases(80, 0xB1B, |rng| {
+        let el = gen::edge_list(rng, 100, 400);
+        let g = build_csr(&el);
+        let (pg, _) = specialized_partition(&g, &hw(rng), &LayoutOptions::paper());
+        pg.validate(&g).unwrap();
+    });
+}
