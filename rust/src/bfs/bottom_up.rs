@@ -4,48 +4,66 @@
 //! a neighbour in the (pulled) global frontier. The adjacency scan stops at
 //! the first hit — with the Section 3.4 degree-descending adjacency
 //! ordering, likely-frontier hubs sit first, so scans terminate early.
+//!
+//! The kernel only writes the partition's own bitmaps plus the shared
+//! atomic next-frontier; `depth`/`parent` assignments travel back as a
+//! thread-local [`StepDelta`] merged at the level barrier, so kernels of
+//! different partitions run concurrently under
+//! [`ExecutionMode::Parallel`](crate::engine::ExecutionMode) with output
+//! bit-identical to a sequential run.
 
-use crate::engine::{BfsState, PeWork};
+use crate::engine::{KernelSlot, StepDelta};
 use crate::partition::PartitionedGraph;
-use crate::util::Bitmap;
+use crate::util::{AtomicBitmap, Bitmap};
 
-/// Run one bottom-up superstep for CPU partition `pid` at `level` (the
-/// frontier's depth). `global_frontier` is the aggregate pulled by
-/// Algorithm 3 (taken out of `state` by the driver to satisfy borrows).
+/// Run one bottom-up superstep for CPU partition `pid`.
+///
+/// * `slot` — the partition's own visited/frontier bitmaps (exclusive).
+/// * `global_frontier` — the aggregate pulled by Algorithm 3 (read-only,
+///   shared by every kernel; the driver takes it out of the state to
+///   satisfy borrows).
+/// * `global_next` — the shared next-level global frontier (atomic
+///   fetch-or marking, racing safely with other partitions' kernels).
+/// * `delta` — reusable per-partition scratch, cleared here and filled
+///   with this superstep's output (hot path: no allocation once warm).
 pub fn cpu_bottom_up(
     pg: &PartitionedGraph,
     pid: usize,
-    state: &mut BfsState,
+    slot: &mut KernelSlot<'_>,
     global_frontier: &Bitmap,
-    level: u32,
-) -> PeWork {
+    global_next: &AtomicBitmap<'_>,
+    delta: &mut StepDelta,
+) {
     let part = &pg.parts[pid];
-    let mut work = PeWork::default();
+    delta.clear();
     // Singletons sit past `scan_limit` under the Section 3.4 ordering and
     // can never activate — don't walk them every level.
     let n = part.scan_limit;
 
     for li in 0..n {
         let gid = part.gids[li];
-        work.vertices_scanned += 1;
-        if state.visited[pid].get(gid as usize) {
+        delta.work.vertices_scanned += 1;
+        if slot.visited.get(gid as usize) {
             continue;
         }
         for &w in part.neighbours(li) {
-            work.edges_examined += 1;
+            delta.work.edges_examined += 1;
             if global_frontier.get(w as usize) {
-                state.activate_local(pid, gid, w, level + 1);
-                work.activated += 1;
+                slot.visited.set(gid as usize);
+                slot.frontier.next.set(gid as usize);
+                global_next.set(gid as usize);
+                delta.activations.push((gid, w));
+                delta.work.activated += 1;
                 break; // early exit — the CPU's advantage over dense lanes
             }
         }
     }
-    work
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::BfsState;
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
@@ -53,6 +71,17 @@ mod tests {
         let g = build_csr(&EdgeList { num_vertices: nv, edges });
         let cfg = HardwareConfig { cpu_sockets: 1, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
         materialize(&g, vec![0u8; nv], &cfg, &opts)
+    }
+
+    /// Run the kernel for `pid` and merge its delta, like the driver does.
+    fn step(pg: &PartitionedGraph, pid: usize, st: &mut BfsState, gf: &Bitmap, level: u32) -> StepDelta {
+        let mut delta = StepDelta::default();
+        {
+            let (mut slots, gnext) = st.split_for_superstep();
+            cpu_bottom_up(pg, pid, &mut slots[pid], gf, &gnext, &mut delta);
+        }
+        st.apply_step_delta(pid, &delta, level);
+        delta
     }
 
     #[test]
@@ -63,13 +92,14 @@ mod tests {
         st.visited[0].set(1); // 1 itself already visited
         let mut gf = Bitmap::new(4);
         gf.set(1);
-        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 1);
-        assert_eq!(work.activated, 2); // 0 and 2
+        let delta = step(&pg, 0, &mut st, &gf, 1);
+        assert_eq!(delta.work.activated, 2); // 0 and 2
         assert_eq!(st.depth[0], 2);
         assert_eq!(st.parent[0], 1);
         assert_eq!(st.depth[2], 2);
         assert_eq!(st.depth[3], -1);
         assert!(st.frontiers[0].next.get(0) && st.frontiers[0].next.get(2));
+        assert!(st.global_next.get(0) && st.global_next.get(2));
     }
 
     #[test]
@@ -84,14 +114,14 @@ mod tests {
 
         let mut st = BfsState::new(&pg_sorted);
         st.visited[0].set(1);
-        let w_sorted = cpu_bottom_up(&pg_sorted, 0, &mut st, &gf, 0);
+        let w_sorted = step(&pg_sorted, 0, &mut st, &gf, 0);
 
         let mut st = BfsState::new(&pg_naive);
         st.visited[0].set(1);
-        let w_naive = cpu_bottom_up(&pg_naive, 0, &mut st, &gf, 0);
+        let w_naive = step(&pg_naive, 0, &mut st, &gf, 0);
 
-        assert_eq!(w_sorted.activated, w_naive.activated);
-        assert!(w_sorted.edges_examined <= w_naive.edges_examined);
+        assert_eq!(w_sorted.work.activated, w_naive.work.activated);
+        assert!(w_sorted.work.edges_examined <= w_naive.work.edges_examined);
     }
 
     #[test]
@@ -102,10 +132,10 @@ mod tests {
         st.visited[0].set(1);
         let mut gf = Bitmap::new(2);
         gf.set(1);
-        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 0);
-        assert_eq!(work.activated, 0);
-        assert_eq!(work.edges_examined, 0);
-        assert_eq!(work.vertices_scanned, 2);
+        let delta = step(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(delta.work.activated, 0);
+        assert_eq!(delta.work.edges_examined, 0);
+        assert_eq!(delta.work.vertices_scanned, 2);
     }
 
     #[test]
@@ -113,9 +143,9 @@ mod tests {
         let pg = one_cpu(vec![(0, 1), (1, 2)], 3, LayoutOptions::naive());
         let mut st = BfsState::new(&pg);
         let gf = Bitmap::new(3);
-        let work = cpu_bottom_up(&pg, 0, &mut st, &gf, 0);
-        assert_eq!(work.activated, 0);
+        let delta = step(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(delta.work.activated, 0);
         // All edges of unvisited vertices were checked in vain.
-        assert_eq!(work.edges_examined, 4);
+        assert_eq!(delta.work.edges_examined, 4);
     }
 }

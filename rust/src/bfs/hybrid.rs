@@ -10,9 +10,18 @@
 //! 3. `Synchronize()`: frontiers advance, the coordinator (CPU partition 0,
 //!    owner of the hubs — §3.3) picks the next direction from local state.
 //!
-//! Partitions execute sequentially and deterministically; per-PE time on
-//! the paper's testbed is attributed afterwards by `runtime::device` from
-//! the work counters collected here (DESIGN.md §1).
+//! Under [`ExecutionMode::Parallel`] the CPU partition kernels of step 1
+//! run **concurrently** on worker threads: each kernel owns its
+//! partition's bitmaps ([`KernelSlot`]), marks the shared next-level
+//! global frontier with atomic fetch-or, and returns a thread-local
+//! [`StepDelta`] that is merged at the level barrier in ascending
+//! partition id order — the deterministic tie-break rule, so `Sequential`
+//! and `Parallel(n)` produce bit-identical output (DESIGN.md Section 4).
+//! Accelerator partitions drive the single shared [`Accelerator`] context
+//! from the coordinating thread, as one host thread drives a device
+//! stream. Per-PE time on the paper's testbed is attributed afterwards by
+//! `runtime::device` from the work counters collected here (max over
+//! concurrently-busy PEs per level — DESIGN.md §1).
 
 use anyhow::{anyhow, Result};
 
@@ -21,7 +30,10 @@ use super::direction::{CoordinatorView, DirectionPolicy, PolicyKind};
 use super::top_down::cpu_top_down;
 use super::BfsRun;
 use crate::engine::comm::{CommBuffers, CommMode};
-use crate::engine::{Accelerator, BfsState, Direction, LevelStats, PeWork};
+use crate::engine::{
+    parallel, Accelerator, BfsState, Direction, ExecutionMode, KernelSlot, LevelStats, PeWork,
+    StepDelta,
+};
 use crate::partition::PartitionedGraph;
 use crate::util::Bitmap;
 
@@ -30,6 +42,9 @@ use crate::util::Bitmap;
 pub struct HybridConfig {
     pub policy: PolicyKind,
     pub comm_mode: CommMode,
+    /// How the partition kernels of one superstep are scheduled
+    /// (`--threads N` on the CLI). Output is identical either way.
+    pub exec: ExecutionMode,
     /// GPU top-down frontiers smaller than this are walked on the host
     /// (the device call's PCIe round trip costs more than the walk; the
     /// host visited mirror stays authoritative either way). Totem's tail
@@ -42,6 +57,7 @@ impl Default for HybridConfig {
         Self {
             policy: PolicyKind::direction_optimized(),
             comm_mode: CommMode::Batched,
+            exec: ExecutionMode::Sequential,
             gpu_td_host_threshold: 4096,
         }
     }
@@ -56,7 +72,13 @@ pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
     comm: CommBuffers,
     accel: Option<&'g mut A>,
     // reusable scratch
-    queue: Vec<u32>,
+    /// Per-partition frontier queue scratch (each worker thread gets its
+    /// partition's queue during the concurrent kernel phase).
+    queues: Vec<Vec<u32>>,
+    /// Per-partition kernel-output scratch, reused every superstep (the
+    /// activation/contribution vectors keep their capacity across levels
+    /// and runs — no per-level allocation once warm).
+    deltas: Vec<StepDelta>,
     incoming: Bitmap,
     gpu_frontier: Vec<i32>,
     gpu_merge: Vec<u32>,
@@ -88,13 +110,14 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         Ok(Self {
             state: BfsState::new(pg),
             comm: CommBuffers::new(pg),
-            pg,
             cfg,
             accel,
-            queue: Vec::new(),
+            queues: (0..pg.parts.len()).map(|_| Vec::new()).collect(),
+            deltas: (0..pg.parts.len()).map(|_| StepDelta::default()).collect(),
             incoming: Bitmap::new(pg.num_vertices),
             gpu_frontier: Vec::new(),
             gpu_merge: Vec::new(),
+            pg,
         })
     }
 
@@ -109,7 +132,8 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         self.pg.parts[pid].degree(self.pg.local_of(v))
     }
 
-    /// Run one BFS from `root`. Deterministic given the partitioning.
+    /// Run one BFS from `root`. Deterministic given the partitioning —
+    /// including across [`ExecutionMode`]s.
     pub fn run(&mut self, root: u32) -> Result<BfsRun> {
         let t0 = std::time::Instant::now();
         let np = self.pg.parts.len();
@@ -133,17 +157,44 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
 
         let mut levels: Vec<LevelStats> = Vec::new();
         let mut level: u32 = 0;
+        // Last level's frontier size gates the parallel census: spawning
+        // workers to count a tail frontier of a few vertices costs more
+        // than the count (level 0's frontier is exactly the root).
+        const PARALLEL_CENSUS_MIN: u64 = 4096;
+        let mut prev_frontier = 1u64;
 
         loop {
             // ---- frontier census (drives Fig 1 and termination) ----
+            // Read-only per-partition sums; identical in either mode.
             let mut frontier_size = 0u64;
             let mut degree_sum = 0u64;
-            for pid in 0..np {
-                for v in self.state.frontiers[pid].current.iter_ones() {
-                    frontier_size += 1;
-                    degree_sum += self.degree(v as u32) as u64;
+            {
+                let census_mode = if prev_frontier >= PARALLEL_CENSUS_MIN {
+                    self.cfg.exec
+                } else {
+                    ExecutionMode::Sequential
+                };
+                let state = &self.state;
+                let pg = self.pg;
+                let tasks: Vec<_> = (0..np)
+                    .map(|pid| {
+                        move || {
+                            let mut size = 0u64;
+                            let mut deg = 0u64;
+                            for v in state.frontiers[pid].current.iter_ones() {
+                                size += 1;
+                                deg += pg.parts[pid].degree(pg.local_of(v as u32)) as u64;
+                            }
+                            (size, deg)
+                        }
+                    })
+                    .collect();
+                for (s, d) in parallel::run_steps(census_mode, tasks) {
+                    frontier_size += s;
+                    degree_sum += d;
                 }
             }
+            prev_frontier = frontier_size;
             if frontier_size == 0 {
                 break;
             }
@@ -165,10 +216,9 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 Direction::BottomUp => self.superstep_bottom_up(level, &mut stats)?,
             }
 
-            // ---- Synchronize(): advance frontiers ----
-            for pid in 0..np {
-                self.state.frontiers[pid].advance();
-            }
+            // ---- Synchronize(): advance frontiers; the incrementally
+            // built global next-frontier becomes the pull aggregate ----
+            self.state.advance_frontiers();
 
             // ---- coordinator's local direction decision (§3.3) ----
             let view = self.coordinator_view();
@@ -212,28 +262,76 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         })
     }
 
+    /// Worker threads only pay off when the level has real work; top-down
+    /// tail levels (frontiers of a handful of vertices, work O(frontier
+    /// out-edges)) run their kernels inline. Bottom-up work is
+    /// O(scan_limit) per partition *regardless* of frontier size — a
+    /// single-hub frontier can still mean a full unvisited scan — so
+    /// bottom-up levels always use the configured mode. Same outputs
+    /// either way; this is purely a scheduling choice (mirrors the census
+    /// gate in `run`).
+    fn kernel_exec(&self, stats: &LevelStats) -> ExecutionMode {
+        const PARALLEL_KERNEL_MIN: u64 = 128;
+        match stats.direction {
+            Some(Direction::BottomUp) => self.cfg.exec,
+            _ if stats.frontier_size >= PARALLEL_KERNEL_MIN => self.cfg.exec,
+            _ => ExecutionMode::Sequential,
+        }
+    }
+
     /// One top-down superstep over all partitions + the push phase.
     fn superstep_top_down(&mut self, level: u32, stats: &mut LevelStats) -> Result<()> {
         let np = self.pg.parts.len();
+        let pg = self.pg;
+        let exec = self.kernel_exec(stats);
         self.comm.clear();
         let mut crossing = 0u64;
 
+        // ---- concurrent kernel phase (CPU partitions) ----
+        // Each worker owns its partition's bitmaps, push-buffer row, and
+        // queue/delta scratch; the shared global next-frontier is marked
+        // via atomic fetch-or. Pids come back in ascending order.
+        let cpu_pids: Vec<usize> = {
+            let (slots, gnext) = self.state.split_for_superstep();
+            let mut tasks = Vec::new();
+            for (pid, (((slot, row), queue), delta)) in slots
+                .into_iter()
+                .zip(self.comm.rows_mut())
+                .zip(self.queues.iter_mut())
+                .zip(self.deltas.iter_mut())
+                .enumerate()
+            {
+                if pg.parts[pid].kind.is_gpu() {
+                    continue;
+                }
+                let gn = gnext;
+                let mut slot: KernelSlot<'_> = slot;
+                tasks.push(move || {
+                    cpu_top_down(pg, pid, &mut slot, row, &gn, queue, delta);
+                    pid
+                });
+            }
+            parallel::run_steps(exec, tasks)
+        };
+        // ---- level barrier: deterministic merge, ascending pid ----
+        for &pid in &cpu_pids {
+            stats.pe_work[pid] = self.deltas[pid].work;
+            crossing += self.deltas[pid].crossing;
+            self.state.apply_step_delta(pid, &self.deltas[pid], level);
+        }
+        // ---- accelerator partitions (single shared device context,
+        // driven from the coordinating thread) ----
         for pid in 0..np {
-            if self.pg.parts[pid].kind.is_gpu() {
+            if pg.parts[pid].kind.is_gpu() {
                 let work = self.gpu_top_down(pid, level)?;
                 stats.pe_work[pid] = work;
                 crossing += work.activated; // crossing splits counted below
-            } else {
-                let (work, cr) =
-                    cpu_top_down(self.pg, pid, &mut self.state, &mut self.comm, level, &mut self.queue);
-                stats.pe_work[pid] = work;
-                crossing += cr;
             }
         }
 
         // Push phase (Algorithm 2): merge per-destination buffers into each
         // owner, once per round.
-        stats.comm = self.comm.push_stats(self.pg, self.cfg.comm_mode, crossing);
+        stats.comm = self.comm.push_stats(pg, self.cfg.comm_mode, crossing);
         for q in 0..np {
             self.incoming.clear();
             let mut any = false;
@@ -246,7 +344,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             if !any {
                 continue;
             }
-            if self.pg.parts[q].kind.is_gpu() {
+            if pg.parts[q].kind.is_gpu() {
                 // Owner-side merge with accelerator visited mirroring.
                 self.gpu_merge.clear();
                 let state = &mut self.state;
@@ -256,7 +354,8 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                         state.depth[v] = (level + 1) as i32;
                         state.parent[v] = crate::engine::state::PARENT_REMOTE;
                         state.frontiers[q].next.set(v);
-                        self.gpu_merge.push(self.pg.local_index[v]);
+                        state.global_next.set(v);
+                        self.gpu_merge.push(pg.local_index[v]);
                     }
                 }
                 stats.pe_work[q].activated += self.gpu_merge.len() as u64;
@@ -274,20 +373,49 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// One bottom-up superstep: pull (Algorithm 3) then per-partition scans.
     fn superstep_bottom_up(&mut self, level: u32, stats: &mut LevelStats) -> Result<()> {
         let np = self.pg.parts.len();
+        let pg = self.pg;
+        let exec = self.kernel_exec(stats);
 
-        // Pull phase: aggregate the global frontier; account the transfers.
+        // Pull phase: the aggregate was already built incrementally (every
+        // activation marks `global_next`, which became `global_frontier`
+        // at the last barrier); only the transfers are accounted here.
         let nonempty: Vec<bool> =
             (0..np).map(|p| self.state.frontiers[p].current.any()).collect();
-        self.state.global_frontier.aggregate(self.state.frontiers.iter().map(|f| f));
-        stats.comm = self.comm.pull_stats(self.pg, &nonempty);
+        stats.comm = self.comm.pull_stats(pg, &nonempty);
 
-        // Take the aggregate out of `state` for the borrow checker.
+        // Take the aggregate out of `state` (shared read-only input of
+        // every kernel) for the borrow checker.
         let gf = std::mem::replace(&mut self.state.global_frontier.bits, Bitmap::new(0));
+
+        // ---- concurrent kernel phase (CPU partitions) ----
+        let cpu_pids: Vec<usize> = {
+            let (slots, gnext) = self.state.split_for_superstep();
+            let gf_ref = &gf;
+            let mut tasks = Vec::new();
+            for (pid, (slot, delta)) in
+                slots.into_iter().zip(self.deltas.iter_mut()).enumerate()
+            {
+                if pg.parts[pid].kind.is_gpu() {
+                    continue;
+                }
+                let gn = gnext;
+                let mut slot: KernelSlot<'_> = slot;
+                tasks.push(move || {
+                    cpu_bottom_up(pg, pid, &mut slot, gf_ref, &gn, delta);
+                    pid
+                });
+            }
+            parallel::run_steps(exec, tasks)
+        };
+        // ---- level barrier: deterministic merge, ascending pid ----
+        for &pid in &cpu_pids {
+            stats.pe_work[pid] = self.deltas[pid].work;
+            self.state.apply_step_delta(pid, &self.deltas[pid], level);
+        }
+        // ---- accelerator partitions ----
         for pid in 0..np {
-            if self.pg.parts[pid].kind.is_gpu() {
+            if pg.parts[pid].kind.is_gpu() {
                 stats.pe_work[pid] = self.gpu_bottom_up(pid, &gf, level)?;
-            } else {
-                stats.pe_work[pid] = cpu_bottom_up(self.pg, pid, &mut self.state, &gf, level);
             }
         }
         self.state.global_frontier.bits = gf;
@@ -355,14 +483,19 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// it in this partition's slot but the device model prices TopDown CPU
     /// work identically, and the byte counts are tiny by construction.
     fn gpu_top_down_host(&mut self, pid: usize, level: u32) -> Result<PeWork> {
-        let (work, crossing) = cpu_top_down(
-            self.pg,
-            pid,
-            &mut self.state,
-            &mut self.comm,
-            level,
-            &mut self.queue,
-        );
+        {
+            let (mut slots, gnext) = self.state.split_for_superstep();
+            cpu_top_down(
+                self.pg,
+                pid,
+                &mut slots[pid],
+                self.comm.row_mut(pid),
+                &gnext,
+                &mut self.queues[pid],
+                &mut self.deltas[pid],
+            );
+        }
+        self.state.apply_step_delta(pid, &self.deltas[pid], level);
         // Newly activated local vertices must be mirrored to the device.
         self.gpu_merge.clear();
         for v in self.state.frontiers[pid].next.iter_ones() {
@@ -371,8 +504,8 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         if !self.gpu_merge.is_empty() {
             self.accel.as_deref_mut().unwrap().mark_visited(pid, &self.gpu_merge);
         }
-        let mut work = work;
-        work.activated += crossing;
+        let mut work = self.deltas[pid].work;
+        work.activated += self.deltas[pid].crossing;
         Ok(work)
     }
 
@@ -439,9 +572,19 @@ mod tests {
     }
 
     fn run_hybrid(g: &Csr, cfg_hw: &HardwareConfig, policy: PolicyKind, root: u32) -> BfsRun {
+        run_hybrid_exec(g, cfg_hw, policy, root, ExecutionMode::Sequential)
+    }
+
+    fn run_hybrid_exec(
+        g: &Csr,
+        cfg_hw: &HardwareConfig,
+        policy: PolicyKind,
+        root: u32,
+        exec: ExecutionMode,
+    ) -> BfsRun {
         let (pg, _) = specialized_partition(g, cfg_hw, &LayoutOptions::paper());
         let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
-        let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, ..Default::default() };
+        let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, exec, ..Default::default() };
         let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
         let mut runner = HybridRunner::new(&pg, cfg, accel).unwrap();
         runner.run(root).unwrap()
@@ -564,5 +707,25 @@ mod tests {
         assert_eq!(fsum, run.reached_vertices);
         // Init bytes cover at least depth+parent.
         assert!(run.init_bytes >= (g.num_vertices * 8) as u64);
+    }
+
+    #[test]
+    fn parallel_mode_is_bit_identical_to_sequential() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 9)));
+        let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        for cfg_hw in [hw(2, 0), hw(3, 0), hw(2, 2)] {
+            let seq = run_hybrid_exec(
+                &g, &cfg_hw, PolicyKind::direction_optimized(), root,
+                ExecutionMode::Sequential,
+            );
+            let par = run_hybrid_exec(
+                &g, &cfg_hw, PolicyKind::direction_optimized(), root,
+                ExecutionMode::Parallel(4),
+            );
+            assert_eq!(seq.depth, par.depth, "config {}", cfg_hw.label());
+            assert_eq!(seq.parent, par.parent, "config {}", cfg_hw.label());
+            assert_eq!(seq.levels, par.levels, "config {}", cfg_hw.label());
+            assert_eq!(seq.aggregation_bytes, par.aggregation_bytes);
+        }
     }
 }

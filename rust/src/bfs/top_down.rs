@@ -1,61 +1,75 @@
 //! CPU top-down kernel (paper Algorithm 1, lines 2–12).
 //!
 //! Explores the out-edges of the partition's current frontier. Local
-//! targets are activated in place; remote targets are routed into the
-//! per-destination push buffers (Algorithm 2 sends them once per round)
-//! with a parent contribution recorded locally (Section 3.1 optimization:
-//! parents are aggregated at the end, never communicated per-level).
+//! targets are marked in the partition's own bitmaps immediately; remote
+//! targets are routed into the per-destination push buffers (Algorithm 2
+//! sends them once per round). Everything that touches shared state —
+//! global `depth`/`parent` writes and the parent contributions of the
+//! Section 3.1 optimization — is returned as a thread-local
+//! [`StepDelta`] and merged at the level barrier, which is what lets the
+//! engine run partition kernels concurrently ([`ExecutionMode::Parallel`])
+//! with output bit-identical to a sequential run.
+//!
+//! [`ExecutionMode::Parallel`]: crate::engine::ExecutionMode
 
-use crate::engine::comm::CommBuffers;
-use crate::engine::{BfsState, PeWork};
+use crate::engine::{KernelSlot, StepDelta};
 use crate::partition::PartitionedGraph;
+use crate::util::{AtomicBitmap, Bitmap};
 
-/// Run one top-down superstep for CPU partition `pid` at `level` (the
-/// frontier's depth). Returns the work counters plus the number of
-/// boundary-crossing activations routed into push buffers.
+/// Run one top-down superstep for CPU partition `pid`.
 ///
-/// `queue` is a reusable scratch vector (hot path: no allocation).
+/// * `slot` — the partition's own visited/frontier bitmaps (exclusive).
+/// * `outgoing` — the partition's row of push buffers (exclusive).
+/// * `global_next` — the shared next-level global frontier; marked with
+///   atomic fetch-or, racing safely with other partitions' kernels.
+/// * `queue`, `delta` — reusable per-partition scratch (hot path: no
+///   allocation once warm); `delta` is cleared here and filled with this
+///   superstep's output.
 pub fn cpu_top_down(
     pg: &PartitionedGraph,
     pid: usize,
-    state: &mut BfsState,
-    comm: &mut CommBuffers,
-    level: u32,
+    slot: &mut KernelSlot<'_>,
+    outgoing: &mut [Bitmap],
+    global_next: &AtomicBitmap<'_>,
     queue: &mut Vec<u32>,
-) -> (PeWork, u64) {
+    delta: &mut StepDelta,
+) {
     let part = &pg.parts[pid];
-    let mut work = PeWork::default();
-    let mut crossing = 0u64;
+    delta.clear();
 
-    // Materialize the frontier queue (iter borrows the bitmap immutably;
-    // activations below need &mut state).
+    // Materialize the frontier queue (iter borrows the current bitmap
+    // immutably; next-frontier marking below needs the pair mutably).
     queue.clear();
-    queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
-    work.vertices_scanned = queue.len() as u64;
+    queue.extend(slot.frontier.current.iter_ones().map(|v| v as u32));
+    delta.work.vertices_scanned = queue.len() as u64;
 
     for &v in queue.iter() {
         let li = pg.local_of(v);
         for &w in part.neighbours(li) {
-            work.edges_examined += 1;
+            delta.work.edges_examined += 1;
             let q = pg.owner_of(w);
             if q == pid {
-                if !state.visited[pid].get(w as usize) {
-                    state.activate_local(pid, w, v, level + 1);
-                    work.activated += 1;
+                if !slot.visited.get(w as usize) {
+                    slot.visited.set(w as usize);
+                    slot.frontier.next.set(w as usize);
+                    global_next.set(w as usize);
+                    delta.activations.push((w, v));
+                    delta.work.activated += 1;
                 }
-            } else if !comm.outgoing_ref(pid, q).get(w as usize) {
-                comm.outgoing(pid, q).set(w as usize);
-                state.record_contrib(pid, w, v, level);
-                crossing += 1;
+            } else if !outgoing[q].get(w as usize) {
+                outgoing[q].set(w as usize);
+                delta.contribs.push((w, v));
+                delta.crossing += 1;
             }
         }
     }
-    (work, crossing)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::comm::CommBuffers;
+    use crate::engine::BfsState;
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
@@ -65,6 +79,24 @@ mod tests {
         materialize(&g, owner, &cfg, &LayoutOptions::naive())
     }
 
+    /// Run the kernel for `pid` and merge its delta, like the driver does.
+    fn step(
+        pg: &PartitionedGraph,
+        pid: usize,
+        st: &mut BfsState,
+        comm: &mut CommBuffers,
+        level: u32,
+    ) -> StepDelta {
+        let mut delta = StepDelta::default();
+        {
+            let (mut slots, gnext) = st.split_for_superstep();
+            let mut q = Vec::new();
+            cpu_top_down(pg, pid, &mut slots[pid], comm.row_mut(pid), &gnext, &mut q, &mut delta);
+        }
+        st.apply_step_delta(pid, &delta, level);
+        delta
+    }
+
     #[test]
     fn activates_local_and_routes_remote() {
         // 0-1 local to partition 0; 0-2 crosses to partition 1.
@@ -72,13 +104,13 @@ mod tests {
         let mut st = BfsState::new(&pg);
         let mut comm = CommBuffers::new(&pg);
         st.set_root(0, 0);
-        let mut q = Vec::new();
-        let (work, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
-        assert_eq!(work.edges_examined, 2);
-        assert_eq!(work.activated, 1);
-        assert_eq!(crossing, 1);
+        let delta = step(&pg, 0, &mut st, &mut comm, 0);
+        assert_eq!(delta.work.edges_examined, 2);
+        assert_eq!(delta.work.activated, 1);
+        assert_eq!(delta.crossing, 1);
         assert_eq!(st.depth[1], 1);
         assert_eq!(st.parent[1], 0);
+        assert!(st.global_next.get(1), "local activation marks the shared next frontier");
         assert!(comm.outgoing_ref(0, 1).get(2));
         // Contribution recorded at the frontier's level (0).
         assert_eq!(st.contrib_parent[0][2], 0);
@@ -91,12 +123,11 @@ mod tests {
         let mut st = BfsState::new(&pg);
         let mut comm = CommBuffers::new(&pg);
         st.set_root(0, 0);
-        let mut q = Vec::new();
-        cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
+        step(&pg, 0, &mut st, &mut comm, 0);
         // Level 1: frontier {1}; its neighbour 0 is visited.
-        st.frontiers[0].advance();
-        let (work, _) = cpu_top_down(&pg, 0, &mut st, &mut comm, 1, &mut q);
-        assert_eq!(work.activated, 0);
+        st.advance_frontiers();
+        let delta = step(&pg, 0, &mut st, &mut comm, 1);
+        assert_eq!(delta.work.activated, 0);
         assert_eq!(st.depth[0], 0, "root depth untouched");
     }
 
@@ -109,9 +140,8 @@ mod tests {
         st.set_root(0, 0);
         st.activate_local(0, 1, 0, 0); // force both into current frontier
         st.frontiers[0].current.set(1);
-        let mut q = Vec::new();
-        let (_, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
-        assert_eq!(crossing, 1, "second push to same vertex deduplicated");
+        let delta = step(&pg, 0, &mut st, &mut comm, 0);
+        assert_eq!(delta.crossing, 1, "second push to same vertex deduplicated");
     }
 
     #[test]
@@ -119,8 +149,8 @@ mod tests {
         let pg = two_cpu(vec![(0, 1)], 2, vec![0, 0]);
         let mut st = BfsState::new(&pg);
         let mut comm = CommBuffers::new(&pg);
-        let mut q = Vec::new();
-        let (work, crossing) = cpu_top_down(&pg, 0, &mut st, &mut comm, 0, &mut q);
-        assert_eq!(work.edges_examined + work.activated + crossing, 0);
+        let delta = step(&pg, 0, &mut st, &mut comm, 0);
+        assert_eq!(delta.work.edges_examined + delta.work.activated + delta.crossing, 0);
+        assert!(delta.activations.is_empty() && delta.contribs.is_empty());
     }
 }

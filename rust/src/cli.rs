@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
-use crate::engine::{Accelerator, CommMode, SimAccelerator};
+use crate::engine::{Accelerator, CommMode, ExecutionMode, SimAccelerator};
 use crate::graph::generator::{kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
 use crate::graph::stats::degree_stats;
 use crate::graph::{build_csr, io, Csr, EdgeList};
@@ -175,15 +175,17 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     let roots_n = args.get_parse("roots", 16usize)?;
     let validate = args.has("validate");
     let naive = args.has("naive");
+    let threads = args.get_parse("threads", 1usize)?;
 
     let cfg = HybridConfig {
         policy: pol,
         comm_mode: CommMode::Batched,
+        exec: ExecutionMode::from_threads(threads),
         ..Default::default()
     };
 
     println!(
-        "graph={name} V={} E={} config={} partition={} policy={:?} gpu_share={:.1}%",
+        "graph={name} V={} E={} config={} partition={} policy={:?} threads={threads} gpu_share={:.1}%",
         g.num_vertices,
         g.num_undirected_edges(),
         hw.label(),
@@ -196,18 +198,40 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
         metrics::sample_roots(g.num_vertices, |v| g.degree(v), roots_n, args.get_parse("seed", 42)?);
     anyhow::ensure!(!roots.is_empty(), "no non-singleton roots found");
 
-    // Accelerator backend selection.
+    // Accelerator backend selection. By default (no --accel flag) a
+    // missing artifact set falls back to the bit-exact SimAccelerator
+    // mirror — results are identical; only host wall-clock differs. An
+    // *explicit* `--accel pjrt` stays a hard error so benchmark numbers
+    // can never silently come from the simulator.
     let mut sim;
     let mut pjrt;
     let accel: Option<&mut dyn Accelerator> = if hw.gpus > 0 {
-        if args.get("accel").unwrap_or("pjrt") == "sim" {
+        let want = args.get("accel");
+        let dir = args
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(default_artifact_dir);
+        let use_sim = match want {
+            Some("sim") => true,
+            Some(_) => false, // explicit pjrt (or typo): no silent fallback
+            None => !dir.join("manifest.txt").exists(),
+        };
+        if use_sim {
+            if want.is_none() {
+                eprintln!(
+                    "note: no AOT artifacts at {} — using the bit-exact SimAccelerator \
+                     (pass --accel sim to silence, or build artifacts with \
+                     `python python/compile/aot.py`)",
+                    dir.display()
+                );
+            }
             sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
             Some(&mut sim)
         } else {
-            let dir = args
-                .get("artifacts")
-                .map(PathBuf::from)
-                .unwrap_or_else(default_artifact_dir);
+            match want {
+                Some("pjrt") | None => {}
+                Some(other) => bail!("unknown --accel {other:?} (expected pjrt|sim)"),
+            }
             pjrt = PjrtAccelerator::new(&dir, g.num_vertices)
                 .with_context(|| format!("loading artifacts from {}", dir.display()))?;
             Some(&mut pjrt)
@@ -311,6 +335,7 @@ pub fn usage() -> &'static str {
        bfs       run a hybrid BFS campaign\n\
                  --scale N | --graph FILE | --class twitter-sim|wiki-sim|lj-sim\n\
                  --config 2S2G --partition spec|random --policy do|td\n\
+                 --threads N (run partition kernels on N worker threads)\n\
                  --roots K --accel pjrt|sim --artifacts DIR --validate --verbose\n\
                  --gpu-mem-mb M --gpu-max-degree D --naive\n\
        baseline  single-address-space reference BFS\n\

@@ -42,7 +42,7 @@ impl LinkTraffic {
 }
 
 /// Bytes/messages moved during one superstep, split by phase and link.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     /// Push traffic between CPU sockets (shared host memory / QPI).
     pub push_host: LinkTraffic,
@@ -116,6 +116,19 @@ impl CommBuffers {
     #[inline]
     pub fn outgoing_ref(&self, src: usize, dst: usize) -> &Bitmap {
         &self.bufs[src][dst]
+    }
+
+    /// One source partition's outgoing buffers (indexed by destination).
+    #[inline]
+    pub fn row_mut(&mut self, src: usize) -> &mut [Bitmap] {
+        &mut self.bufs[src]
+    }
+
+    /// Per-source rows in partition order — each row goes to the worker
+    /// thread running that partition's top-down kernel (rows never alias,
+    /// so the parallel kernel phase needs no locking here).
+    pub fn rows_mut(&mut self) -> std::slice::IterMut<'_, Vec<Bitmap>> {
+        self.bufs.iter_mut()
     }
 
     pub fn clear(&mut self) {

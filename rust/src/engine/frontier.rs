@@ -33,6 +33,12 @@ impl FrontierPair {
 
 /// The global frontier aggregated from all partitions (the bottom-up pull
 /// target, paper Algorithm 3).
+///
+/// The engine maintains this *incrementally*: every activation marks the
+/// state's shared next-frontier bitmap (atomic fetch-or under the parallel
+/// execution mode), which is swapped in here at each level barrier
+/// (`BfsState::advance_frontiers`). [`GlobalFrontier::aggregate`] is the
+/// equivalent from-scratch rebuild, kept for tools and tests.
 #[derive(Clone, Debug)]
 pub struct GlobalFrontier {
     pub bits: Bitmap,

@@ -5,20 +5,44 @@
 //! kernel for the current direction, exchanges frontier state once
 //! (push after top-down, pull before bottom-up), and synchronizes.
 //!
-//! The engine executes partitions deterministically in a sequential
-//! superstep loop — all *timing* is attributed by the device model
-//! (`runtime::device`), which converts the per-PE work counters collected
-//! here into per-level busy times on the paper's testbed. This is the
+//! Under [`ExecutionMode::Parallel`] the partition kernels of one
+//! superstep run **concurrently** on worker threads with a single barrier
+//! per level; each kernel produces a thread-local [`StepDelta`] that the
+//! driver merges deterministically (ascending partition id) at the
+//! barrier, so `Sequential` and `Parallel(n)` produce bit-identical
+//! results (DESIGN.md Section 4). All *timing* is attributed by the device
+//! model (`runtime::device`), which converts the per-PE work counters
+//! collected here into per-level busy times on the paper's testbed —
+//! max over concurrently-busy PEs, not a sum. This is the
 //! hardware-substitution boundary documented in DESIGN.md Section 1.
+//!
+//! Engine entry points at a glance:
+//!
+//! ```
+//! use totem_do::bfs::{HybridConfig, HybridRunner};
+//! use totem_do::engine::{ExecutionMode, SimAccelerator};
+//! use totem_do::graph::{build_csr, EdgeList};
+//! use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+//!
+//! let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (1, 2), (2, 3)] });
+//! let hw = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+//! let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+//! let cfg = HybridConfig { exec: ExecutionMode::Parallel(2), ..Default::default() };
+//! let mut runner = HybridRunner::<SimAccelerator>::new(&pg, cfg, None).unwrap();
+//! let run = runner.run(0).unwrap();
+//! assert_eq!(run.depth, vec![0, 1, 2, 3]);
+//! ```
 
 pub mod accel;
 pub mod comm;
 pub mod frontier;
+pub mod parallel;
 pub mod state;
 
 pub use accel::{Accelerator, BottomUpResult, SimAccelerator, TopDownResult};
 pub use comm::{CommMode, CommStats};
-pub use state::BfsState;
+pub use parallel::{run_steps, ExecutionMode};
+pub use state::{BfsState, KernelSlot};
 
 /// Traversal direction of a BFS level (paper Section 2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,7 +62,7 @@ impl Direction {
 
 /// Work performed by one processing element during one superstep — the
 /// device model's input (counted from the actual traversal, not estimated).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PeWork {
     /// Edges examined (top-down: out-edges of frontier; bottom-up: edges
     /// scanned before early exit; accelerator: dense lanes).
@@ -65,8 +89,41 @@ impl PeWork {
     }
 }
 
-/// Everything measured about one BFS level (one superstep).
+/// One partition kernel's thread-local superstep output, merged into the
+/// shared BFS state at the level barrier (ascending partition id, which is
+/// the deterministic tie-break rule — DESIGN.md Section 4).
+///
+/// During the kernel itself only the partition's own bitmaps (plus the
+/// shared atomic next-frontier) are written; everything that touches the
+/// global `depth`/`parent` arrays or another address space travels here.
 #[derive(Clone, Debug, Default)]
+pub struct StepDelta {
+    /// Work counters for the device model.
+    pub work: PeWork,
+    /// Activations routed into push buffers (boundary crossings).
+    pub crossing: u64,
+    /// Owner-local activations as `(vertex gid, parent gid)`; applied as
+    /// `depth = level + 1`, `parent = parent gid` at the barrier.
+    pub activations: Vec<(u32, u32)>,
+    /// Remote-parent contributions as `(target gid, parent gid)`; recorded
+    /// against this partition's contribution fragment at the barrier.
+    pub contribs: Vec<(u32, u32)>,
+}
+
+impl StepDelta {
+    /// Reset for a new superstep, keeping the vectors' capacity (deltas
+    /// are per-partition scratch reused every level — hot path: no
+    /// allocation once warm).
+    pub fn clear(&mut self) {
+        self.work = PeWork::default();
+        self.crossing = 0;
+        self.activations.clear();
+        self.contribs.clear();
+    }
+}
+
+/// Everything measured about one BFS level (one superstep).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LevelStats {
     pub level: u32,
     pub direction: Option<Direction>,

@@ -9,13 +9,26 @@
 //! communication-reduction optimization for Graph500-style parent output).
 
 use super::frontier::{FrontierPair, GlobalFrontier};
+use super::StepDelta;
 use crate::partition::PartitionedGraph;
-use crate::util::Bitmap;
+use crate::util::{AtomicBitmap, Bitmap};
 
 /// `parent` sentinel: vertex not reached.
 pub const PARENT_UNSET: i64 = -1;
 /// `parent` sentinel: reached via a remote push; resolved at aggregation.
 pub const PARENT_REMOTE: i64 = -2;
+
+/// Exclusive access to one partition's kernel-owned bitmaps for the
+/// duration of a superstep's kernel phase (see
+/// [`BfsState::split_for_superstep`]). Moving a slot into a worker thread
+/// is what lets partition kernels run concurrently without locks: a vertex
+/// is owned by exactly one partition, so slots never alias.
+pub struct KernelSlot<'a> {
+    /// The partition's visited bitmap (global space, owned bits only).
+    pub visited: &'a mut Bitmap,
+    /// The partition's current (read) / next (write) frontier pair.
+    pub frontier: &'a mut FrontierPair,
+}
 
 /// All mutable BFS state, reusable across runs (buffers never shrink).
 pub struct BfsState {
@@ -30,6 +43,12 @@ pub struct BfsState {
     pub frontiers: Vec<FrontierPair>,
     /// The pulled global frontier (paper Algorithm 3's aggregate).
     pub global_frontier: GlobalFrontier,
+    /// Next level's global frontier, built *incrementally* while kernels
+    /// run: every activation (local, pushed, or device-merged) marks its
+    /// bit here, racing safely across worker threads via atomic fetch-or
+    /// ([`Bitmap::as_atomic`]). At the barrier this replaces Algorithm 3's
+    /// O(V x P) re-aggregation — the pull is already built.
+    pub global_next: Bitmap,
     /// Per-partition remote-parent contributions: parent gid per global
     /// vertex (-1 = none) and the BFS level the push happened at.
     pub contrib_parent: Vec<Vec<i32>>,
@@ -54,6 +73,7 @@ impl BfsState {
             visited: (0..np).map(|_| Bitmap::new(v)).collect(),
             frontiers: (0..np).map(|_| FrontierPair::new(v)).collect(),
             global_frontier: GlobalFrontier::new(v),
+            global_next: Bitmap::new(v),
             contrib_parent: (0..np).map(|_| vec![-1; v]).collect(),
             contrib_level: (0..np).map(|_| vec![-1; v]).collect(),
             contrib_epoch: (0..np).map(|_| vec![0; v]).collect(),
@@ -82,6 +102,7 @@ impl BfsState {
             f.reset();
         }
         self.global_frontier.bits.clear();
+        self.global_next.clear();
         // Contribution arrays are epoch-tagged: bumping the epoch
         // invalidates every stale entry in O(1). On wrap-around, do the
         // full clear once per 2^32 runs.
@@ -109,6 +130,12 @@ impl BfsState {
         self.parent[root as usize] = root as i64;
         self.visited[pid].set(root as usize);
         self.frontiers[pid].current.set(root as usize);
+        // Keep the "global_frontier == OR of current frontiers" invariant
+        // from level 0 on, not just after the first barrier — a bottom-up
+        // level 0 (no shipped policy does one, but nothing forbids it)
+        // must see the root in the pull aggregate. The first
+        // `advance_frontiers` swap-and-clear disposes of this bit.
+        self.global_frontier.bits.set(root as usize);
     }
 
     /// Owner-side local activation (top-down local edge, or bottom-up).
@@ -118,6 +145,7 @@ impl BfsState {
         self.depth[v as usize] = level as i32;
         self.parent[v as usize] = parent_gid as i64;
         self.frontiers[pid].next.set(v as usize);
+        self.global_next.set(v as usize);
     }
 
     /// Activating-side record for a remote push (paper: BFSParentTree
@@ -149,10 +177,59 @@ impl BfsState {
                 self.depth[v] = level as i32;
                 self.parent[v] = PARENT_REMOTE;
                 fr.next.set(v);
+                self.global_next.set(v);
                 newly += 1;
             }
         }
         newly
+    }
+
+    /// End-of-superstep `Synchronize()`: every partition's next frontier
+    /// becomes current, and the incrementally built [`Self::global_next`]
+    /// becomes the pulled global frontier for a following bottom-up level
+    /// (it equals the OR of all partitions' new current frontiers by
+    /// construction — every activation path marks it).
+    pub fn advance_frontiers(&mut self) {
+        for f in self.frontiers.iter_mut() {
+            f.advance();
+        }
+        std::mem::swap(&mut self.global_frontier.bits, &mut self.global_next);
+        self.global_next.clear();
+    }
+
+    /// Split into per-partition kernel slots plus the shared atomic
+    /// next-frontier view — the borrow boundary of one superstep's
+    /// concurrent kernel phase. Slot `i` hands worker `i` exclusive access
+    /// to partition `i`'s visited/frontier bitmaps, while the returned
+    /// [`AtomicBitmap`] is copied into every worker (fetch-or marking).
+    pub fn split_for_superstep(&mut self) -> (Vec<KernelSlot<'_>>, AtomicBitmap<'_>) {
+        let slots: Vec<KernelSlot<'_>> = self
+            .visited
+            .iter_mut()
+            .zip(self.frontiers.iter_mut())
+            .map(|(visited, frontier)| KernelSlot { visited, frontier })
+            .collect();
+        (slots, self.global_next.as_atomic())
+    }
+
+    /// Merge one partition's thread-local kernel output at the level
+    /// barrier. Callers apply deltas in **ascending partition id** order —
+    /// the engine's deterministic tie-break rule (a vertex is owned by
+    /// exactly one partition, so activations never conflict; contribution
+    /// fragments are per-pusher and resolved lowest-pid-first at
+    /// aggregation).
+    ///
+    /// `level` is the superstep's frontier depth: activations land at
+    /// `level + 1`, contributions are recorded at `level` (the push
+    /// level), exactly as the sequential kernels always did.
+    pub fn apply_step_delta(&mut self, pid: usize, delta: &StepDelta, level: u32) {
+        for &(v, parent_gid) in &delta.activations {
+            self.depth[v as usize] = (level + 1) as i32;
+            self.parent[v as usize] = parent_gid as i64;
+        }
+        for &(target, parent_gid) in &delta.contribs {
+            self.record_contrib(pid, target, parent_gid, level);
+        }
     }
 
     /// Final aggregation (paper Section 3.1): resolve `PARENT_REMOTE`
@@ -207,6 +284,7 @@ mod tests {
         assert_eq!(st.parent[2], 2);
         assert!(st.visited[0].get(2));
         assert!(st.frontiers[0].current.get(2));
+        assert!(st.global_frontier.bits.get(2), "level-0 pull aggregate holds the root");
     }
 
     #[test]
@@ -293,6 +371,60 @@ mod tests {
         incoming.set(3);
         st.merge_pushed(1, &incoming, 1);
         assert!(st.aggregate_parents().is_err(), "stale contribution must be dead");
+    }
+
+    #[test]
+    fn every_activation_path_marks_global_next() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        st.activate_local(0, 1, 0, 1);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(4);
+        st.merge_pushed(1, &incoming, 1);
+        assert!(st.global_next.get(1) && st.global_next.get(4));
+        st.advance_frontiers();
+        assert!(st.global_frontier.bits.get(1) && st.global_frontier.bits.get(4));
+        assert!(!st.global_next.any(), "next cleared after advance");
+        assert!(st.frontiers[0].current.get(1), "pair advanced too");
+    }
+
+    #[test]
+    fn split_and_delta_apply_match_direct_activation() {
+        let pg = pg();
+        let mut a = BfsState::new(&pg);
+        let mut b = BfsState::new(&pg);
+        // Direct (owner-side) path: vertex 4, parent 1, depth 3.
+        a.activate_local(1, 4, 1, 3);
+        // Kernel-phase path: slot writes + delta applied at the barrier of
+        // superstep level 2 (activations land at level + 1 = 3).
+        {
+            let (mut slots, gnext) = b.split_for_superstep();
+            let slot = &mut slots[1];
+            slot.visited.set(4);
+            slot.frontier.next.set(4);
+            gnext.set(4);
+        }
+        let delta = StepDelta { activations: vec![(4, 1)], ..Default::default() };
+        b.apply_step_delta(1, &delta, 2);
+        assert_eq!(a.depth, b.depth);
+        assert_eq!(a.parent, b.parent);
+        assert_eq!(a.visited[1], b.visited[1]);
+        assert!(b.global_next.get(4));
+        assert!(b.frontiers[1].next.get(4));
+    }
+
+    #[test]
+    fn delta_contribs_record_at_push_level() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // A crossing push at superstep level 1 activates vertex 5 at 2.
+        let delta = StepDelta { contribs: vec![(5, 2)], ..Default::default() };
+        st.apply_step_delta(0, &delta, 1);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(5);
+        st.merge_pushed(1, &incoming, 2);
+        st.aggregate_parents().unwrap();
+        assert_eq!(st.parent[5], 2);
     }
 
     #[test]

@@ -5,6 +5,16 @@ use super::{Csr, EdgeList, VertexId};
 /// Build an undirected CSR (each edge stored in both directions), removing
 /// self-loops and duplicate edges — the Graph500 reference "graph
 /// construction" kernel's cleanup semantics.
+///
+/// ```
+/// use totem_do::graph::{build_csr, EdgeList};
+///
+/// // A duplicate (given in both orientations) and a self-loop clean up:
+/// let g = build_csr(&EdgeList { num_vertices: 3, edges: vec![(0, 1), (1, 0), (2, 2)] });
+/// assert_eq!(g.num_undirected_edges(), 1);
+/// assert_eq!(g.neighbours(1), &[0]);
+/// assert_eq!(g.degree(2), 0);
+/// ```
 pub fn build_csr(el: &EdgeList) -> Csr {
     let nv = el.num_vertices;
     // Count degrees over both directions.

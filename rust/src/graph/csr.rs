@@ -5,6 +5,21 @@
 use super::VertexId;
 
 /// CSR over directed edges (an undirected graph stores each edge twice).
+///
+/// Built from an [`EdgeList`](super::EdgeList) via
+/// [`build_csr`](super::build_csr), which symmetrizes, deduplicates, and
+/// sorts each adjacency row:
+///
+/// ```
+/// use totem_do::graph::{build_csr, EdgeList};
+///
+/// let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (0, 2), (2, 1)] });
+/// assert_eq!(g.degree(0), 2);
+/// assert_eq!(g.neighbours(0), &[1, 2]);
+/// assert_eq!(g.num_undirected_edges(), 3);
+/// assert_eq!(g.num_non_singleton(), 3); // vertex 3 is isolated
+/// g.validate().unwrap();
+/// ```
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Csr {
     pub num_vertices: usize,

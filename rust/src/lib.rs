@@ -6,13 +6,17 @@
 //!
 //! * **Rust (this crate)** — the Totem-style coordinator: graph substrate,
 //!   specialized partitioning, BSP engine with push/pull frontier
-//!   communication, direction-optimized BFS, device/energy models, CLI.
+//!   communication and a concurrent superstep mode
+//!   ([`engine::ExecutionMode`]), direction-optimized BFS, device/energy
+//!   models, CLI.
 //! * **JAX/Pallas (`python/compile/`)** — the accelerator partition's
 //!   per-level kernels, AOT-lowered to HLO text at build time.
 //! * **PJRT (`runtime/`)** — loads and executes those artifacts from the
 //!   BFS hot path; Python is never on the request path.
 //!
-//! See DESIGN.md for the system inventory and the experiment index.
+//! See README.md for the quickstart, and DESIGN.md for the system
+//! inventory (the hardware-substitution boundary, the parallel execution
+//! mode's deterministic-merge rule) and the experiment index.
 
 pub mod cli;
 pub mod graph;

@@ -7,6 +7,21 @@
 //! two-level vertex identity, Section 3.4), applying the paper's locality
 //! optimizations: local-id reordering and degree-descending adjacency
 //! ordering.
+//!
+//! ```
+//! use totem_do::graph::{build_csr, EdgeList};
+//! use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+//!
+//! let g = build_csr(&EdgeList {
+//!     num_vertices: 6,
+//!     edges: vec![(0, 1), (0, 2), (0, 3), (3, 4)],
+//! });
+//! let hw = HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 4 };
+//! let (pg, plan) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+//! pg.validate(&g).unwrap();                       // structural invariants
+//! assert_eq!(pg.parts.len(), hw.num_partitions());
+//! assert!(plan.gpu_vertices <= plan.non_singleton); // hubs stay on the CPU
+//! ```
 
 pub mod degree;
 pub mod ell;

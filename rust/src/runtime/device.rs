@@ -98,6 +98,11 @@ fn gpu_bytes(work: &PeWork, dir: Direction) -> f64 {
 }
 
 /// Per-level attributed time.
+///
+/// Processing elements run **concurrently** within a superstep (the
+/// engine's `ExecutionMode::Parallel` makes this literal on the host too),
+/// so a level's busy time is the *max* over per-PE busy times — never the
+/// sum. The barrier then serializes communication and sync on top.
 #[derive(Clone, Debug)]
 pub struct LevelTiming {
     pub level: u32,
@@ -180,9 +185,13 @@ impl DeviceModel {
                     }
                 }
             }
-            // Frontier exchange (push or pull), serialized after compute,
-            // split by link class (hub-spoke: GPUs never talk directly).
-            // PCIe traffic spreads across the per-GPU x16 links.
+            // BSP semantics: PEs of one superstep are busy concurrently,
+            // so the level's compute cost is the max over PEs (the
+            // slowest PE gates the barrier) — summing would model a
+            // serial machine. Frontier exchange (push or pull) is then
+            // serialized after compute, split by link class (hub-spoke:
+            // GPUs never talk directly). PCIe traffic spreads across the
+            // per-GPU x16 links.
             let gpus = pg.parts.iter().filter(|p| p.kind.is_gpu()).count().max(1) as f64;
             let c = &ls.comm;
             let comm_time = (c.push_host.bytes + c.pull_host.bytes) as f64 / self.qpi_bw
@@ -295,6 +304,31 @@ mod tests {
         for l in &t.levels {
             assert!(l.total >= l.pe_time.iter().cloned().fold(0.0, f64::max));
         }
+    }
+
+    #[test]
+    fn level_busy_time_is_max_over_pes_not_sum() {
+        // Concurrency contract: each level's total is max(pe) + comm +
+        // sync; with >= 2 busy PEs a sum would exceed that bound.
+        let (run, pg) = hybrid_run(2, 2, 12);
+        let m = DeviceModel::default();
+        let t = m.attribute(&run, &pg, false);
+        let mut saw_multi_pe_level = false;
+        for l in &t.levels {
+            let max = l.pe_time.iter().cloned().fold(0.0, f64::max);
+            let sum: f64 = l.pe_time.iter().sum();
+            assert!(
+                (l.total - (max + l.comm_time + m.sync_lat)).abs() < 1e-12,
+                "level {}: total must be max-over-PEs + comm + sync",
+                l.level
+            );
+            if l.pe_time.iter().filter(|&&x| x > 0.0).count() >= 2 {
+                saw_multi_pe_level = true;
+                assert!(sum > max, "sum strictly exceeds max when 2+ PEs are busy");
+                assert!(l.total < sum + l.comm_time + m.sync_lat);
+            }
+        }
+        assert!(saw_multi_pe_level, "test graph must exercise multiple busy PEs");
     }
 
     #[test]

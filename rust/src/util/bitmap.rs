@@ -4,6 +4,14 @@
 //! representation" Totem optimization, Section 4). Words are `u32` so a
 //! bitmap's backing store is bit-identical to the `i32[VW]` operand the
 //! accelerator kernel consumes — handoff to PJRT is a cast, not a repack.
+//!
+//! [`Bitmap::as_atomic`] reinterprets a bitmap as a shared [`AtomicBitmap`]
+//! view whose `set` is an atomic fetch-or, so kernels running on different
+//! worker threads can mark the same bitmap concurrently (the parallel
+//! superstep's shared next-frontier — DESIGN.md Section 4). OR-marking is
+//! commutative, so the result is deterministic regardless of interleaving.
+
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// A fixed-size packed bitmap.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -91,6 +99,54 @@ impl Bitmap {
     /// Copy of the words widened to i32 (PJRT literal construction).
     pub fn to_i32_words(&self) -> Vec<i32> {
         self.words.iter().map(|&w| w as i32).collect()
+    }
+
+    /// Reinterpret this bitmap as a shared atomic view. Taking `&mut self`
+    /// proves exclusive access, so handing out aliasing `Copy` views whose
+    /// writes are atomic fetch-or is sound; the borrow pins the bitmap
+    /// until every view is gone.
+    pub fn as_atomic(&mut self) -> AtomicBitmap<'_> {
+        let len = self.words.len();
+        let ptr = self.words.as_mut_ptr();
+        // SAFETY: AtomicU32 is repr(transparent) over u32 with the same
+        // size and alignment; the &mut receiver guarantees no other
+        // non-atomic access coexists with the returned view's lifetime.
+        let words = unsafe { std::slice::from_raw_parts(ptr as *const AtomicU32, len) };
+        AtomicBitmap { bits: self.bits, words }
+    }
+}
+
+/// A shared, thread-safe view over a [`Bitmap`] (see [`Bitmap::as_atomic`]).
+/// `Copy`, so each worker thread captures its own view.
+#[derive(Clone, Copy)]
+pub struct AtomicBitmap<'a> {
+    bits: usize,
+    words: &'a [AtomicU32],
+}
+
+impl AtomicBitmap<'_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Atomically set bit `i` (fetch-or, relaxed: markings are OR-only and
+    /// the superstep barrier provides the ordering).
+    #[inline]
+    pub fn set(&self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 5].fetch_or(1 << (i & 31), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i >> 5].load(Ordering::Relaxed) >> (i & 31)) & 1 == 1
     }
 }
 
@@ -192,5 +248,41 @@ mod tests {
         assert_eq!(Bitmap::new(1).wire_bytes(), 4);
         assert_eq!(Bitmap::new(32).wire_bytes(), 4);
         assert_eq!(Bitmap::new(33).wire_bytes(), 8);
+    }
+
+    #[test]
+    fn atomic_view_sets_and_reads() {
+        let mut b = Bitmap::new(100);
+        {
+            let view = b.as_atomic();
+            view.set(0);
+            view.set(31);
+            view.set(32);
+            view.set(99);
+            assert!(view.get(32) && !view.get(33));
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![0, 31, 32, 99]);
+    }
+
+    #[test]
+    fn atomic_view_racing_threads_agree_with_sequential_or() {
+        let mut b = Bitmap::new(4096);
+        {
+            let view = b.as_atomic();
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    s.spawn(move || {
+                        // Overlapping stripes: every word is contended.
+                        for i in (t..4096).step_by(3) {
+                            view.set(i);
+                        }
+                    });
+                }
+            });
+        }
+        let expect: std::collections::BTreeSet<usize> =
+            (0..4usize).flat_map(|t| (t..4096).step_by(3)).collect();
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), expect.into_iter().collect::<Vec<_>>());
+        assert_eq!(b.count(), b.iter_ones().count());
     }
 }

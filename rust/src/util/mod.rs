@@ -6,5 +6,5 @@ pub mod proptest_lite;
 pub mod rng;
 pub mod tables;
 
-pub use bitmap::Bitmap;
+pub use bitmap::{AtomicBitmap, Bitmap};
 pub use rng::{SplitMix64, Xoshiro256};

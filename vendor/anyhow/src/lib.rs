@@ -1,0 +1,233 @@
+//! Offline, API-compatible subset of the `anyhow` crate (the real crate is
+//! not vendored in this environment — see `vendor/README.md`).
+//!
+//! Implements exactly the surface this workspace uses:
+//!
+//! * [`Error`]: an erased error with a context chain. `{}` prints the
+//!   outermost message; `{:?}` prints the chain as `Caused by:` lines.
+//! * [`Result`]: `std::result::Result` defaulted to [`Error`].
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! ```
+//! use anyhow::{ensure, Context, Result};
+//!
+//! fn parse(s: &str) -> Result<u32> {
+//!     let n: u32 = s.parse().with_context(|| format!("bad number {s:?}"))?;
+//!     ensure!(n > 0, "expected a positive number, got {n}");
+//!     Ok(n)
+//! }
+//!
+//! assert_eq!(parse("7").unwrap(), 7);
+//! let err = parse("x").unwrap_err();
+//! assert!(format!("{err:?}").contains("bad number"));
+//! ```
+
+use std::fmt;
+
+/// An erased error with an outermost message and a cause chain.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error { msg: context.to_string(), chain }
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(|s| s.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`; that
+// is what makes this blanket conversion coherent (same as the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { msg: e.to_string(), chain }
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond))
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_message_only() {
+        let e: Error = io_err().into();
+        let e = e.context("opening config");
+        assert_eq!(format!("{e}"), "opening config");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("opening config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("opening config"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("no such file"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(f().unwrap(), 12);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad value {}", 4);
+        assert_eq!(e.to_string(), "bad value 4");
+        let e = anyhow!(String::from("owned message"));
+        assert_eq!(e.to_string(), "owned message");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable for flag=true? no: always bails")
+        }
+        assert!(f(false).unwrap_err().to_string().contains("flag was false"));
+        assert!(f(true).is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "inner"]);
+    }
+}
