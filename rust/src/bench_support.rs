@@ -8,8 +8,8 @@ use anyhow::Result;
 
 use crate::bfs::{baseline_bfs, BaselineKind, BfsRun, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{Accelerator, CommMode, SimAccelerator};
-use crate::graph::generator::{kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
-use crate::graph::{build_csr, Csr};
+use crate::graph::generator::{kronecker_par, real_world_analog_par, GeneratorConfig, RealWorldClass};
+use crate::graph::{build_csr_par, Csr};
 use crate::metrics;
 use crate::partition::{
     random_partition, specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph,
@@ -48,17 +48,32 @@ pub fn use_pjrt() -> bool {
         && default_artifact_dir().join("manifest.txt").exists()
 }
 
+/// Worker threads for graph construction (generation + CSR build). The
+/// ingestion pipeline is bit-identical across thread counts, so this
+/// defaults to the host parallelism (capped at 8) purely for bench
+/// wall-clock; override with `TOTEM_DO_BENCH_THREADS`.
+pub fn bench_threads() -> usize {
+    std::env::var("TOTEM_DO_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        })
+}
+
 /// Standard hardware shape for a config label at bench scale.
 pub fn hardware(label: &str) -> HardwareConfig {
     HardwareConfig::parse(label, 256 << 20, 32).expect("bad config label")
 }
 
 pub fn kron_graph(scale: u32, seed: u64) -> Csr {
-    build_csr(&kronecker(&GeneratorConfig::graph500(scale, seed)))
+    let threads = bench_threads();
+    build_csr_par(&kronecker_par(&GeneratorConfig::graph500(scale, seed), threads), threads)
 }
 
 pub fn realworld_graph(class: RealWorldClass, seed: u64) -> Csr {
-    build_csr(&real_world_analog(class, seed))
+    let threads = bench_threads();
+    build_csr_par(&real_world_analog_par(class, seed, threads), threads)
 }
 
 /// Aggregate of a hybrid campaign.
@@ -177,11 +192,79 @@ pub fn roots_for(g: &Csr, count: usize, seed: u64) -> Vec<u32> {
     metrics::sample_roots(g.num_vertices, |v| g.degree(v), count, seed)
 }
 
-/// Print a machine-readable result line.
+/// Print a machine-readable result line. When `TOTEM_DO_BENCH_JSON` names
+/// a file, the record is also appended there as one JSON object per line
+/// (JSON-lines), so CI can collect bench artifacts without reparsing
+/// stdout.
 pub fn kv(bench: &str, keys: &[(&str, String)]) {
     let mut line = format!("RESULT bench={bench}");
     for (k, v) in keys {
         line.push_str(&format!(" {k}={v}"));
     }
     println!("{line}");
+    if let Ok(path) = std::env::var("TOTEM_DO_BENCH_JSON") {
+        if !path.is_empty() {
+            if let Err(e) = append_json_line(&path, bench, keys) {
+                eprintln!("warning: bench JSON sink {path}: {e}");
+            }
+        }
+    }
+}
+
+/// Append one `{"bench": ..., key: value, ...}` JSON object to `path`.
+fn append_json_line(path: &str, bench: &str, keys: &[(&str, String)]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut obj = format!("{{\"bench\":\"{}\"", json_escape(bench));
+    for (k, v) in keys {
+        obj.push_str(&format!(",\"{}\":\"{}\"", json_escape(k), json_escape(v)));
+    }
+    obj.push('}');
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{obj}")
+}
+
+/// Minimal JSON string escaping (keys/values are plain metric text, but a
+/// malformed artifact must never be possible).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain-1.5e9"), "plain-1.5e9");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny\t\u{1}"), "x\\ny\\t\\u0001");
+    }
+
+    #[test]
+    fn json_sink_appends_one_object_per_record() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("totem_do_bench_json_{}.jsonl", std::process::id()));
+        let path = p.to_str().unwrap().to_string();
+        std::fs::remove_file(&p).ok();
+        append_json_line(&path, "fig2", &[("scale", "15".to_string())]).unwrap();
+        append_json_line(&path, "fig2", &[("teps", "1.5e9".to_string())]).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "{\"bench\":\"fig2\",\"scale\":\"15\"}");
+        assert_eq!(lines[1], "{\"bench\":\"fig2\",\"teps\":\"1.5e9\"}");
+        std::fs::remove_file(&p).ok();
+    }
 }

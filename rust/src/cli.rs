@@ -8,12 +8,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{Accelerator, CommMode, ExecutionMode, SimAccelerator};
-use crate::graph::generator::{kronecker, real_world_analog, GeneratorConfig, RealWorldClass};
+use crate::graph::generator::{kronecker_par, real_world_analog_par, GeneratorConfig, RealWorldClass};
 use crate::graph::stats::degree_stats;
-use crate::graph::{build_csr, io, Csr, EdgeList};
+use crate::graph::{build_csr_par, io, Csr, EdgeList};
 use crate::metrics;
 use crate::partition::{
-    random_partition, specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph,
+    random_partition, specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
 };
 use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
 use crate::util::tables::{fmt_teps, fmt_time, Table};
@@ -61,15 +61,23 @@ impl Args {
     }
 }
 
+/// Worker threads for ingestion AND superstep execution (`--threads N`;
+/// graph generation, CSR build, and partitioning are bit-identical across
+/// thread counts, so the flag only changes wall-clock).
+pub fn threads(args: &Args) -> Result<usize> {
+    args.get_parse("threads", 1usize)
+}
+
 /// Load or generate the workload graph per common CLI flags.
 pub fn load_graph(args: &Args) -> Result<(Csr, String)> {
+    let threads = threads(args)?;
     if let Some(path) = args.get("graph") {
         let el = if path.ends_with(".bin") {
             io::load_binary(path)?
         } else {
             io::load_text(path, None)?
         };
-        return Ok((build_csr(&el), path.to_string()));
+        return Ok((build_csr_par(&el, threads), path.to_string()));
     }
     if let Some(class) = args.get("class") {
         let seed = args.get_parse("seed", 42u64)?;
@@ -79,13 +87,15 @@ pub fn load_graph(args: &Args) -> Result<(Csr, String)> {
             "lj-sim" => RealWorldClass::LiveJournalSim,
             other => bail!("unknown --class {other:?}"),
         };
-        return Ok((build_csr(&real_world_analog(class, seed)), class.name().to_string()));
+        let el = real_world_analog_par(class, seed, threads);
+        return Ok((build_csr_par(&el, threads), class.name().to_string()));
     }
     let scale = args.get_parse("scale", 16u32)?;
     let ef = args.get_parse("edge-factor", 16usize)?;
     let seed = args.get_parse("seed", 42u64)?;
     let cfg = GeneratorConfig { edge_factor: ef, ..GeneratorConfig::graph500(scale, seed) };
-    Ok((build_csr(&kronecker(&cfg)), format!("kron-scale{scale}-ef{ef}")))
+    let el = kronecker_par(&cfg, threads);
+    Ok((build_csr_par(&el, threads), format!("kron-scale{scale}-ef{ef}")))
 }
 
 /// Common hardware/partitioning flags.
@@ -104,7 +114,7 @@ pub fn partition_graph(
 ) -> Result<PartitionedGraph> {
     let opts = if args.has("naive") { LayoutOptions::naive() } else { LayoutOptions::paper() };
     match args.get("partition").unwrap_or("spec") {
-        "spec" | "specialized" => Ok(specialized_partition(g, hw, &opts).0),
+        "spec" | "specialized" => Ok(specialized_partition_par(g, hw, &opts, threads(args)?).0),
         "random" => Ok(random_partition(g, hw, &opts, args.get_parse("seed", 42u64)?)),
         other => bail!("unknown --partition {other:?}"),
     }
@@ -121,6 +131,7 @@ fn policy(args: &Args) -> Result<PolicyKind> {
 /// `totem-do generate` — write a workload graph to disk.
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let out = args.get("out").context("--out required")?;
+    let gen_threads = threads(args)?;
     let el: EdgeList = if let Some(class) = args.get("class") {
         let seed = args.get_parse("seed", 42u64)?;
         let class = match class {
@@ -129,12 +140,13 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
             "lj-sim" => RealWorldClass::LiveJournalSim,
             other => bail!("unknown --class {other:?}"),
         };
-        real_world_analog(class, seed)
+        real_world_analog_par(class, seed, gen_threads)
     } else {
         let scale = args.get_parse("scale", 16u32)?;
         let ef = args.get_parse("edge-factor", 16usize)?;
         let seed = args.get_parse("seed", 42u64)?;
-        kronecker(&GeneratorConfig { edge_factor: ef, ..GeneratorConfig::graph500(scale, seed) })
+        let cfg = GeneratorConfig { edge_factor: ef, ..GeneratorConfig::graph500(scale, seed) };
+        kronecker_par(&cfg, gen_threads)
     };
     if out.ends_with(".bin") {
         io::save_binary(&el, out)?;
@@ -175,7 +187,7 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     let roots_n = args.get_parse("roots", 16usize)?;
     let validate = args.has("validate");
     let naive = args.has("naive");
-    let threads = args.get_parse("threads", 1usize)?;
+    let threads = threads(args)?;
 
     let cfg = HybridConfig {
         policy: pol,
@@ -335,13 +347,15 @@ pub fn usage() -> &'static str {
        bfs       run a hybrid BFS campaign\n\
                  --scale N | --graph FILE | --class twitter-sim|wiki-sim|lj-sim\n\
                  --config 2S2G --partition spec|random --policy do|td\n\
-                 --threads N (run partition kernels on N worker threads)\n\
+                 --threads N (worker threads for graph generation, CSR build,\n\
+                 partitioning, AND partition kernels; bit-identical to N=1)\n\
                  --roots K --accel pjrt|sim --artifacts DIR --validate --verbose\n\
                  --gpu-mem-mb M --gpu-max-degree D --naive\n\
        baseline  single-address-space reference BFS\n\
                  --policy do|td --sockets N --naive --roots K --validate\n\
        generate  write a workload graph\n\
                  --scale N --edge-factor F --seed S | --class ... ; --out FILE[.bin]\n\
+                 --threads N (parallel edge generation; same bytes as N=1)\n\
        stats     degree statistics of a workload\n\
        help      this text\n"
 }

@@ -2,7 +2,9 @@
 //!
 //! One BSP superstep runs every partition's kernel; under
 //! [`ExecutionMode::Parallel`] those kernels execute on worker threads and
-//! meet at the level barrier. The executor here is deliberately simple and
+//! meet at the level barrier. Scheduling goes through the shared scoped
+//! worker pool ([`crate::util::pool::run_tasks`] — the same executor the
+//! ingestion pipeline uses), which is deliberately simple and
 //! deterministic:
 //!
 //! * Tasks are indexed; results come back **in task order** regardless of
@@ -21,21 +23,18 @@
 //! produces is thread-local ([`super::StepDelta`]) and merged at the
 //! barrier in ascending partition id order.
 
+use crate::util::pool;
+
 /// How the engine schedules the partition kernels of one superstep.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum ExecutionMode {
     /// Run kernels one after another on the calling thread (the seed
     /// engine's behaviour; still the default).
+    #[default]
     Sequential,
     /// Run kernels concurrently on up to this many worker threads, with a
     /// barrier per level. Output is bit-identical to `Sequential`.
     Parallel(usize),
-}
-
-impl Default for ExecutionMode {
-    fn default() -> Self {
-        ExecutionMode::Sequential
-    }
 }
 
 impl ExecutionMode {
@@ -60,10 +59,10 @@ impl ExecutionMode {
 /// Run one phase's per-partition tasks under `mode`, returning results in
 /// task order (deterministic merge order for the caller).
 ///
-/// Tasks are distributed round-robin over `min(threads, tasks)` workers;
-/// each worker runs its share in ascending task index. With
-/// [`ExecutionMode::Sequential`] (or a single task) everything runs inline
-/// on the calling thread.
+/// Scheduling semantics are those of [`pool::run_tasks`]: round-robin over
+/// `min(threads, tasks)` workers, each running its share in ascending task
+/// index. With [`ExecutionMode::Sequential`] (or a single task) everything
+/// runs inline on the calling thread.
 ///
 /// ```
 /// use totem_do::engine::{run_steps, ExecutionMode};
@@ -80,47 +79,12 @@ where
     R: Send,
     F: FnOnce() -> R + Send,
 {
-    let workers = mode.threads().min(tasks.len());
-    if workers <= 1 {
-        return tasks.into_iter().map(|f| f()).collect();
-    }
-
-    let len = tasks.len();
-    let mut buckets: Vec<Vec<(usize, F)>> = (0..workers).map(|_| Vec::new()).collect();
-    for (i, f) in tasks.into_iter().enumerate() {
-        buckets[i % workers].push((i, f));
-    }
-
-    let mut results: Vec<Option<R>> = (0..len).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = buckets
-            .into_iter()
-            .map(|bucket| {
-                s.spawn(move || {
-                    bucket.into_iter().map(|(i, f)| (i, f())).collect::<Vec<(usize, R)>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            match h.join() {
-                Ok(pairs) => {
-                    for (i, r) in pairs {
-                        results[i] = Some(r);
-                    }
-                }
-                // Re-raise the worker's panic on the coordinating thread
-                // (the scope joins the remaining workers first).
-                Err(payload) => std::panic::resume_unwind(payload),
-            }
-        }
-    });
-    results.into_iter().map(|r| r.expect("worker dropped a task")).collect()
+    pool::run_tasks(mode.threads(), tasks)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn from_threads_maps_to_modes() {
@@ -129,10 +93,11 @@ mod tests {
         assert_eq!(ExecutionMode::from_threads(4), ExecutionMode::Parallel(4));
         assert_eq!(ExecutionMode::Parallel(0).threads(), 1);
         assert_eq!(ExecutionMode::Sequential.threads(), 1);
+        assert_eq!(ExecutionMode::default(), ExecutionMode::Sequential);
     }
 
     #[test]
-    fn results_come_back_in_task_order() {
+    fn run_steps_matches_mode_thread_budget() {
         for mode in [ExecutionMode::Sequential, ExecutionMode::Parallel(3), ExecutionMode::Parallel(16)] {
             let tasks: Vec<_> = (0..17usize).map(|i| move || 100 - i).collect();
             let out = run_steps(mode, tasks);
@@ -141,50 +106,7 @@ mod tests {
     }
 
     #[test]
-    fn every_task_runs_exactly_once() {
-        let counter = AtomicUsize::new(0);
-        let tasks: Vec<_> = (0..31)
-            .map(|_| {
-                let c = &counter;
-                move || c.fetch_add(1, Ordering::Relaxed)
-            })
-            .collect();
-        let out = run_steps(ExecutionMode::Parallel(4), tasks);
-        assert_eq!(counter.load(Ordering::Relaxed), 31);
-        // Each task observed a distinct pre-increment value.
-        let mut seen: Vec<usize> = out;
-        seen.sort_unstable();
-        assert_eq!(seen, (0..31).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn tasks_can_borrow_caller_state_mutably() {
-        let mut cells = [0u64; 8];
-        let tasks: Vec<_> = cells
-            .iter_mut()
-            .enumerate()
-            .map(|(i, c)| {
-                move || {
-                    *c = (i as u64 + 1) * 10;
-                    i
-                }
-            })
-            .collect();
-        run_steps(ExecutionMode::Parallel(2), tasks);
-        assert_eq!(cells[0], 10);
-        assert_eq!(cells[7], 80);
-    }
-
-    #[test]
-    fn empty_and_single_task_vectors() {
-        let out: Vec<u32> = run_steps(ExecutionMode::Parallel(8), Vec::<fn() -> u32>::new());
-        assert!(out.is_empty());
-        let out = run_steps(ExecutionMode::Parallel(8), vec![|| 42u32]);
-        assert_eq!(out, vec![42]);
-    }
-
-    #[test]
-    fn worker_panic_propagates() {
+    fn worker_panic_propagates_through_run_steps() {
         let result = std::panic::catch_unwind(|| {
             let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
                 Box::new(|| 1),

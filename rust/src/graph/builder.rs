@@ -1,10 +1,21 @@
-//! Edge list -> CSR: symmetrize, dedup, drop self-loops.
+//! Edge list -> CSR: symmetrize, dedup, drop self-loops — the Graph500
+//! reference "graph construction" kernel's cleanup semantics, with every
+//! phase parallelized over worker threads (DESIGN.md Section 9).
+//!
+//! The parallel build is **bit-identical** to the sequential one for any
+//! thread count: degree counts are sums of per-chunk histograms (order
+//! free), the scatter lands each chunk's edges in reserved per-chunk
+//! cursor ranges (positions differ from a sequential scatter, but the
+//! per-row sort + dedup that follows erases insertion order), and the
+//! final compaction copies rows at offsets fixed by the deduped counts.
+
+use std::sync::atomic::{AtomicU32, Ordering};
 
 use super::{Csr, EdgeList, VertexId};
+use crate::util::pool::{run_tasks, split_mut_at, split_ranges};
 
 /// Build an undirected CSR (each edge stored in both directions), removing
-/// self-loops and duplicate edges — the Graph500 reference "graph
-/// construction" kernel's cleanup semantics.
+/// self-loops and duplicate edges.
 ///
 /// ```
 /// use totem_do::graph::{build_csr, EdgeList};
@@ -16,54 +27,216 @@ use super::{Csr, EdgeList, VertexId};
 /// assert_eq!(g.degree(2), 0);
 /// ```
 pub fn build_csr(el: &EdgeList) -> Csr {
+    build_csr_par(el, 1)
+}
+
+/// [`build_csr`] with histogram, scatter, per-row sort/dedup, and
+/// compaction phases run on up to `threads` workers. Output is
+/// bit-identical for every `threads` value (see module docs).
+pub fn build_csr_par(el: &EdgeList, threads: usize) -> Csr {
     let nv = el.num_vertices;
-    // Count degrees over both directions.
+    let nt = threads.max(1);
+    let edges = &el.edges;
+
+    // Phase 1: per-chunk degree histograms over contiguous edge chunks.
+    let echunks: Vec<&[(VertexId, VertexId)]> = split_ranges(edges.len(), nt)
+        .into_iter()
+        .map(|r| &edges[r])
+        .collect();
+    let hist_tasks: Vec<_> = echunks
+        .iter()
+        .map(|&chunk| {
+            move || {
+                let mut deg = vec![0u64; nv];
+                for &(a, b) in chunk {
+                    if a == b {
+                        continue;
+                    }
+                    deg[a as usize] += 1;
+                    deg[b as usize] += 1;
+                }
+                deg
+            }
+        })
+        .collect();
+    let hists = run_tasks(nt, hist_tasks);
+
+    // Phase 2: merge histograms into the global count (parallel over
+    // vertex ranges), then prefix-sum into row pointers. The scan itself
+    // is O(V) pointer chasing — negligible next to the O(E) phases.
     let mut deg = vec![0u64; nv];
-    for &(a, b) in &el.edges {
-        if a == b {
-            continue;
-        }
-        deg[a as usize] += 1;
-        deg[b as usize] += 1;
+    {
+        let vranges = split_ranges(nv, nt);
+        let cuts: Vec<usize> = vranges.iter().skip(1).map(|r| r.start).collect();
+        let slices = split_mut_at(&mut deg, &cuts);
+        let hists = &hists;
+        let tasks: Vec<_> = vranges
+            .into_iter()
+            .zip(slices)
+            .map(|(r, out)| {
+                move || {
+                    for h in hists {
+                        for (o, &x) in out.iter_mut().zip(&h[r.clone()]) {
+                            *o += x;
+                        }
+                    }
+                }
+            })
+            .collect();
+        run_tasks(nt, tasks);
     }
     let mut row_ptr = vec![0u64; nv + 1];
     for v in 0..nv {
         row_ptr[v + 1] = row_ptr[v] + deg[v];
     }
+
+    // Phase 3: parallel scatter. Chunk t owns cursor range
+    // `row_ptr[v] + Σ_{u<t} hists[u][v] ..` for every vertex v, so no two
+    // chunks ever write the same slot; the atomic view only satisfies the
+    // aliasing rules (relaxed stores, no read-back until the join).
     let mut col = vec![0 as VertexId; row_ptr[nv] as usize];
-    let mut cursor = row_ptr[..nv].to_vec();
-    for &(a, b) in &el.edges {
-        if a == b {
-            continue;
+    {
+        let col_shared = as_atomic_u32(&mut col);
+        let mut acc = row_ptr[..nv].to_vec();
+        let mut tasks = Vec::with_capacity(echunks.len());
+        for (t, &chunk) in echunks.iter().enumerate() {
+            let cursors = acc.clone();
+            if t + 1 < echunks.len() {
+                for (a, &h) in acc.iter_mut().zip(&hists[t]) {
+                    *a += h;
+                }
+            }
+            tasks.push(move || {
+                let mut cur = cursors;
+                for &(a, b) in chunk {
+                    if a == b {
+                        continue;
+                    }
+                    col_shared[cur[a as usize] as usize].store(b, Ordering::Relaxed);
+                    cur[a as usize] += 1;
+                    col_shared[cur[b as usize] as usize].store(a, Ordering::Relaxed);
+                    cur[b as usize] += 1;
+                }
+            });
         }
-        col[cursor[a as usize] as usize] = b;
-        cursor[a as usize] += 1;
-        col[cursor[b as usize] as usize] = a;
-        cursor[b as usize] += 1;
+        run_tasks(nt, tasks);
+    }
+    drop(hists);
+
+    // Phase 4: per-row sort + in-place dedup, parallel over vertex ranges
+    // balanced by directed-edge count (multi-edges from the Kronecker
+    // generator collapse here, as in the reference code).
+    let vranges = ranges_by_edge_weight(&row_ptr, nt);
+    let mut dedup_len = vec![0u64; nv];
+    {
+        let col_cuts: Vec<usize> =
+            vranges.iter().skip(1).map(|r| row_ptr[r.start] as usize).collect();
+        let len_cuts: Vec<usize> = vranges.iter().skip(1).map(|r| r.start).collect();
+        let col_parts = split_mut_at(&mut col, &col_cuts);
+        let len_parts = split_mut_at(&mut dedup_len, &len_cuts);
+        let row_ptr = &row_ptr;
+        let tasks: Vec<_> = vranges
+            .iter()
+            .cloned()
+            .zip(col_parts)
+            .zip(len_parts)
+            .map(|((r, cols), lens)| {
+                move || {
+                    let base = row_ptr[r.start] as usize;
+                    for v in r.clone() {
+                        let lo = row_ptr[v] as usize - base;
+                        let hi = row_ptr[v + 1] as usize - base;
+                        let row = &mut cols[lo..hi];
+                        row.sort_unstable();
+                        let mut w = 0usize;
+                        let mut prev = None;
+                        for i in 0..row.len() {
+                            let x = row[i];
+                            if Some(x) != prev {
+                                row[w] = x;
+                                w += 1;
+                                prev = Some(x);
+                            }
+                        }
+                        lens[v - r.start] = w as u64;
+                    }
+                }
+            })
+            .collect();
+        run_tasks(nt, tasks);
     }
 
-    // Sort each adjacency row and deduplicate in place (multi-edges from
-    // the Kronecker generator collapse here, as in the reference code).
-    let mut new_col = Vec::with_capacity(col.len());
+    // Phase 5: deduped row pointers + parallel compaction into the final
+    // column array (each range copies its rows' unique prefixes).
     let mut new_row_ptr = vec![0u64; nv + 1];
     for v in 0..nv {
-        let lo = row_ptr[v] as usize;
-        let hi = row_ptr[v + 1] as usize;
-        let row = &mut col[lo..hi];
-        row.sort_unstable();
-        let start = new_col.len();
-        let mut prev = None;
-        for &c in row.iter() {
-            if Some(c) != prev {
-                new_col.push(c);
-                prev = Some(c);
-            }
-        }
-        new_row_ptr[v + 1] = new_row_ptr[v] + (new_col.len() - start) as u64;
+        new_row_ptr[v + 1] = new_row_ptr[v] + dedup_len[v];
+    }
+    let mut new_col = vec![0 as VertexId; new_row_ptr[nv] as usize];
+    {
+        let new_cuts: Vec<usize> =
+            vranges.iter().skip(1).map(|r| new_row_ptr[r.start] as usize).collect();
+        let parts = split_mut_at(&mut new_col, &new_cuts);
+        let (col, row_ptr, new_row_ptr, dedup_len) = (&col, &row_ptr, &new_row_ptr, &dedup_len);
+        let tasks: Vec<_> = vranges
+            .iter()
+            .cloned()
+            .zip(parts)
+            .map(|(r, out)| {
+                move || {
+                    let base = new_row_ptr[r.start] as usize;
+                    for v in r.clone() {
+                        let n = dedup_len[v] as usize;
+                        let src = row_ptr[v] as usize;
+                        let dst = new_row_ptr[v] as usize - base;
+                        out[dst..dst + n].copy_from_slice(&col[src..src + n]);
+                    }
+                }
+            })
+            .collect();
+        run_tasks(nt, tasks);
     }
 
     let out = Csr { num_vertices: nv, row_ptr: new_row_ptr, col: new_col };
     debug_assert!(out.validate().is_ok());
+    out
+}
+
+/// Reinterpret a `u32` buffer as atomics for the scatter phase.
+fn as_atomic_u32(xs: &mut [u32]) -> &[AtomicU32] {
+    let ptr = xs.as_mut_ptr();
+    let len = xs.len();
+    // SAFETY: AtomicU32 has the same size, alignment, and bit validity as
+    // u32 (std guarantee), and the `&mut` borrow makes this view exclusive
+    // for its lifetime, so no plain access can race the atomic stores.
+    // Same idiom as `util::Bitmap::as_atomic`.
+    unsafe { std::slice::from_raw_parts(ptr as *const AtomicU32, len) }
+}
+
+/// Split `0..nv` into at most `parts` vertex ranges of near-equal
+/// directed-edge weight (per `row_ptr`), so the per-row phases stay
+/// balanced on skewed graphs where a few rows hold most of the edges.
+fn ranges_by_edge_weight(row_ptr: &[u64], parts: usize) -> Vec<std::ops::Range<usize>> {
+    let nv = row_ptr.len() - 1;
+    let total = row_ptr[nv];
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 1..=parts {
+        if start >= nv {
+            break;
+        }
+        let mut end = start + 1;
+        if p == parts {
+            end = nv;
+        } else {
+            let target = total * p as u64 / parts as u64;
+            while end < nv && row_ptr[end] < target {
+                end += 1;
+            }
+        }
+        out.push(start..end);
+        start = end;
+    }
     out
 }
 
@@ -110,11 +283,31 @@ mod tests {
     }
 
     #[test]
+    fn zero_vertices() {
+        let g = build_csr(&EdgeList { num_vertices: 0, edges: vec![] });
+        assert_eq!(g.num_vertices, 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical() {
+        let el = crate::graph::generator::kronecker(
+            &crate::graph::GeneratorConfig::graph500(11, 19),
+        );
+        let base = build_csr_par(&el, 1);
+        for threads in [2, 3, 4, 8] {
+            assert_eq!(base, build_csr_par(&el, threads), "threads={threads}");
+        }
+    }
+
+    #[test]
     fn prop_symmetry_and_validity() {
         run_cases(60, 0xC5E, |rng| {
             let el = gen::edge_list(rng, 50, 200);
-            let g = build_csr(&el);
+            let threads = gen::int_in(rng, 1, 6);
+            let g = build_csr_par(&el, threads);
             g.validate().unwrap();
+            assert_eq!(g, build_csr(&el), "threads={threads}");
             // Symmetry: b in N(a) <=> a in N(b).
             for v in 0..g.num_vertices as u32 {
                 for &w in g.neighbours(v) {
@@ -126,5 +319,28 @@ mod tests {
                 assert!(g.neighbours(a).contains(&b));
             }
         });
+    }
+
+    #[test]
+    fn edge_weight_ranges_cover_and_balance() {
+        // A hub row (vertex 0) plus many light rows.
+        let mut row_ptr = vec![0u64; 101];
+        row_ptr[1] = 1000;
+        for v in 1..100 {
+            row_ptr[v + 1] = row_ptr[v] + 2;
+        }
+        for parts in [1, 2, 4, 7] {
+            let ranges = ranges_by_edge_weight(&row_ptr, parts);
+            assert!(ranges.len() <= parts);
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert_eq!(next, 100);
+        }
+        // Degenerate: no vertices at all.
+        assert!(ranges_by_edge_weight(&[0u64], 4).is_empty());
     }
 }

@@ -8,9 +8,23 @@
 //!   Twitter / Wikipedia / LiveJournal crawls (DESIGN.md Section 1,
 //!   substitution table): skew and edge factor tuned per graph class.
 //! * `erdos_renyi` — a non-scale-free control used by tests.
+//!
+//! Every generator draws edges in fixed-size chunks ([`GEN_CHUNK_EDGES`]),
+//! one jump-separated [`Xoshiro256`] sub-stream per chunk, so the `_par`
+//! variants can run chunks on worker threads while staying **bit-identical**
+//! to a single-threaded run: the chunk grid and each chunk's stream depend
+//! only on `(config, seed)`, never on the thread count (DESIGN.md
+//! Section 9).
 
 use super::{EdgeList, VertexId};
+use crate::util::pool;
 use crate::util::Xoshiro256;
+
+/// Edges per deterministic generation chunk. Chunk `i` covers edge indices
+/// `[i * GEN_CHUNK_EDGES, (i + 1) * GEN_CHUNK_EDGES)` and draws only from
+/// its own RNG sub-stream, so the chunk grid is part of the output
+/// contract: fixed regardless of how many worker threads execute it.
+pub const GEN_CHUNK_EDGES: usize = 1 << 13;
 
 /// Graph500 Kronecker initiator parameters.
 #[derive(Clone, Copy, Debug)]
@@ -41,60 +55,115 @@ impl GeneratorConfig {
 
 /// Generate a Kronecker (RMAT) edge list per the Graph500 reference:
 /// each edge picks a quadrant per scale bit; vertex labels are then
-/// shuffled by a random permutation.
+/// shuffled by a random permutation. Single-threaded convenience for
+/// [`kronecker_par`] — same output by construction.
 pub fn kronecker(cfg: &GeneratorConfig) -> EdgeList {
+    kronecker_par(cfg, 1)
+}
+
+/// [`kronecker`] with edge chunks generated on up to `threads` workers.
+/// Sub-stream 0 of `cfg.seed` drives the label permutation; chunk `i`
+/// draws from sub-stream `i + 1`. Output is bit-identical for every
+/// `threads` value.
+pub fn kronecker_par(cfg: &GeneratorConfig, threads: usize) -> EdgeList {
     let nv = cfg.num_vertices();
     let ne = cfg.num_edges();
-    let mut rng = Xoshiro256::new(cfg.seed);
     let ab = cfg.a + cfg.b;
     let c_norm = cfg.c / (1.0 - ab);
+    let (a, scale) = (cfg.a, cfg.scale);
 
-    let mut edges = Vec::with_capacity(ne);
-    for _ in 0..ne {
-        let mut src: u64 = 0;
-        let mut dst: u64 = 0;
-        for _ in 0..cfg.scale {
-            src <<= 1;
-            dst <<= 1;
-            // Choose quadrant: (0,0) w.p. A, (0,1) w.p. B, (1,0) w.p. C.
-            let r = rng.next_f64();
-            if r < ab {
-                // top half: src bit 0
-                if r >= cfg.a {
-                    dst |= 1;
-                }
-            } else {
-                src |= 1;
-                if rng.next_f64() >= c_norm {
-                    dst |= 1;
+    let nchunks = ne.div_ceil(GEN_CHUNK_EDGES).max(1);
+    let mut streams = Xoshiro256::streams(cfg.seed, nchunks + 1);
+    let mut perm_rng = streams.remove(0);
+
+    // Each task fills its chunk of the preallocated edge list in place
+    // (tasks borrow through the scoped pool — no per-chunk buffers).
+    let mut edges: Vec<(VertexId, VertexId)> = vec![(0, 0); ne];
+    let tasks: Vec<_> = edges
+        .chunks_mut(GEN_CHUNK_EDGES)
+        .zip(streams)
+        .map(|(chunk, mut rng)| {
+            move || {
+                for e in chunk.iter_mut() {
+                    let mut src: u64 = 0;
+                    let mut dst: u64 = 0;
+                    for _ in 0..scale {
+                        src <<= 1;
+                        dst <<= 1;
+                        // Quadrant: (0,0) w.p. A, (0,1) w.p. B, (1,0) w.p. C.
+                        let r = rng.next_f64();
+                        if r < ab {
+                            // top half: src bit 0
+                            if r >= a {
+                                dst |= 1;
+                            }
+                        } else {
+                            src |= 1;
+                            if rng.next_f64() >= c_norm {
+                                dst |= 1;
+                            }
+                        }
+                    }
+                    *e = (src as VertexId, dst as VertexId);
                 }
             }
-        }
-        edges.push((src as VertexId, dst as VertexId));
-    }
+        })
+        .collect();
+    pool::run_tasks(threads, tasks);
 
     // Permute vertex labels (reference generator's final shuffle): the
-    // partitioner must not be able to exploit id-degree correlation.
-    let perm = rng.permutation(nv);
-    for e in edges.iter_mut() {
-        *e = (perm[e.0 as usize], perm[e.1 as usize]);
-    }
+    // partitioner must not be able to exploit id-degree correlation. The
+    // permutation is drawn sequentially from its own sub-stream; applying
+    // it is embarrassingly parallel over the same chunk grid.
+    let perm = perm_rng.permutation(nv);
+    let perm = &perm;
+    let relabel: Vec<_> = edges
+        .chunks_mut(GEN_CHUNK_EDGES)
+        .map(|chunk| {
+            move || {
+                for e in chunk.iter_mut() {
+                    *e = (perm[e.0 as usize], perm[e.1 as usize]);
+                }
+            }
+        })
+        .collect();
+    pool::run_tasks(threads, relabel);
 
     EdgeList { num_vertices: nv, edges }
 }
 
 /// Erdős–Rényi G(n, m): uniform random edges (control workload: no skew,
-/// direction-optimization gains should be modest).
+/// direction-optimization gains should be modest). Single-threaded
+/// convenience for [`erdos_renyi_par`] — same output by construction.
 pub fn erdos_renyi(nv: usize, ne: usize, seed: u64) -> EdgeList {
-    let mut rng = Xoshiro256::new(seed);
-    let mut edges = Vec::with_capacity(ne);
-    while edges.len() < ne {
-        let a = rng.next_below(nv as u64) as VertexId;
-        let b = rng.next_below(nv as u64) as VertexId;
-        if a != b {
-            edges.push((a, b));
-        }
-    }
+    erdos_renyi_par(nv, ne, seed, 1)
+}
+
+/// [`erdos_renyi`] with edge chunks generated on up to `threads` workers;
+/// chunk `i` fills its quota from sub-stream `i` of `seed` (rejecting
+/// self-loops locally), so output is bit-identical for every `threads`
+/// value. Requires `nv >= 2` when `ne > 0`.
+pub fn erdos_renyi_par(nv: usize, ne: usize, seed: u64, threads: usize) -> EdgeList {
+    let nchunks = ne.div_ceil(GEN_CHUNK_EDGES).max(1);
+    let mut edges: Vec<(VertexId, VertexId)> = vec![(0, 0); ne];
+    let tasks: Vec<_> = edges
+        .chunks_mut(GEN_CHUNK_EDGES)
+        .zip(Xoshiro256::streams(seed, nchunks))
+        .map(|(chunk, mut rng)| {
+            move || {
+                let mut filled = 0usize;
+                while filled < chunk.len() {
+                    let a = rng.next_below(nv as u64) as VertexId;
+                    let b = rng.next_below(nv as u64) as VertexId;
+                    if a != b {
+                        chunk[filled] = (a, b);
+                        filled += 1;
+                    }
+                }
+            }
+        })
+        .collect();
+    pool::run_tasks(threads, tasks);
     EdgeList { num_vertices: nv, edges }
 }
 
@@ -157,7 +226,13 @@ impl RealWorldClass {
 }
 
 pub fn real_world_analog(class: RealWorldClass, seed: u64) -> EdgeList {
-    kronecker(&class.config(seed))
+    real_world_analog_par(class, seed, 1)
+}
+
+/// [`real_world_analog`] with generation chunks on up to `threads` workers
+/// (bit-identical output for every `threads` value).
+pub fn real_world_analog_par(class: RealWorldClass, seed: u64, threads: usize) -> EdgeList {
+    kronecker_par(&class.config(seed), threads)
 }
 
 #[cfg(test)]
@@ -180,6 +255,38 @@ mod tests {
         assert_eq!(kronecker(&cfg).edges, kronecker(&cfg).edges);
         let cfg2 = GeneratorConfig::graph500(8, 8);
         assert_ne!(kronecker(&cfg).edges, kronecker(&cfg2).edges);
+    }
+
+    #[test]
+    fn kronecker_parallel_is_bit_identical() {
+        // Scale 11 x ef 16 = 32768 edges = 4 chunks: a multi-chunk grid.
+        let cfg = GeneratorConfig::graph500(11, 13);
+        let base = kronecker_par(&cfg, 1);
+        for threads in [2, 3, 4, 8] {
+            let par = kronecker_par(&cfg, threads);
+            assert_eq!(base.num_vertices, par.num_vertices);
+            assert_eq!(base.edges, par.edges, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_parallel_is_bit_identical() {
+        let base = erdos_renyi_par(4096, 3 * GEN_CHUNK_EDGES + 77, 21, 1);
+        for threads in [2, 4] {
+            let par = erdos_renyi_par(4096, 3 * GEN_CHUNK_EDGES + 77, 21, threads);
+            assert_eq!(base.edges, par.edges, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_deterministic_across_runs() {
+        let a = erdos_renyi(2048, 8192, 9);
+        let b = erdos_renyi(2048, 8192, 9);
+        assert_eq!(a.num_vertices, b.num_vertices);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.edges.len(), 8192);
+        let c = erdos_renyi(2048, 8192, 10);
+        assert_ne!(a.edges, c.edges, "different seeds must differ");
     }
 
     #[test]

@@ -155,6 +155,25 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_preserves_csr_both_formats() {
+        // write -> read -> identical CSR (not just identical edge bytes).
+        let el = kronecker(&GeneratorConfig::graph500(9, 11));
+        let g = crate::graph::build_csr(&el);
+        for ext in ["txt", "bin"] {
+            let p = tmpfile(&format!("csr_rt.{ext}"));
+            let el2 = if ext == "bin" {
+                save_binary(&el, &p).unwrap();
+                load_binary(&p).unwrap()
+            } else {
+                save_text(&el, &p).unwrap();
+                load_text(&p, Some(el.num_vertices)).unwrap()
+            };
+            assert_eq!(crate::graph::build_csr(&el2), g, "{ext} roundtrip changed the CSR");
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
     fn binary_rejects_bad_magic() {
         let p = tmpfile("bad.bin");
         std::fs::write(&p, b"NOTMAGIC\x00\x00").unwrap();

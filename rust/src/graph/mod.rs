@@ -13,16 +13,16 @@ pub mod generator;
 pub mod io;
 pub mod stats;
 
-pub use builder::build_csr;
+pub use builder::{build_csr, build_csr_par};
 pub use csr::Csr;
-pub use generator::{kronecker, GeneratorConfig};
+pub use generator::{kronecker, kronecker_par, GeneratorConfig};
 
 /// Global vertex id. The hybrid path supports up to 2^31 vertices (i32
 /// kernel operands); CPU-only paths are limited only by memory.
 pub type VertexId = u32;
 
 /// An undirected edge list (canonical input format).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EdgeList {
     pub num_vertices: usize,
     /// Undirected edges; no self-loops; not necessarily deduplicated.

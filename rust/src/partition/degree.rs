@@ -9,6 +9,7 @@
 
 use super::{HardwareConfig, LayoutOptions, PartitionedGraph};
 use crate::graph::Csr;
+use crate::util::pool::{run_tasks, split_ranges};
 
 /// Outcome metadata of a specialized partitioning.
 #[derive(Clone, Debug)]
@@ -33,16 +34,50 @@ pub fn specialized_partition(
     cfg: &HardwareConfig,
     opts: &LayoutOptions,
 ) -> (PartitionedGraph, SpecializedPlan) {
+    specialized_partition_par(g, cfg, opts, 1)
+}
+
+/// [`specialized_partition`] with the degree-bucket scan parallelized over
+/// up to `threads` workers. The placement is bit-identical for any thread
+/// count: per-range bucket lists concatenate in ascending range order, so
+/// every bucket sees its vertices in ascending id order — exactly the
+/// sequential scan — before the (inherently order-dependent) greedy fill.
+pub fn specialized_partition_par(
+    g: &Csr,
+    cfg: &HardwareConfig,
+    opts: &LayoutOptions,
+    threads: usize,
+) -> (PartitionedGraph, SpecializedPlan) {
     let nv = g.num_vertices;
     let np = cfg.num_partitions();
     let mut owner = vec![u8::MAX; nv];
 
-    // Degree buckets (ascending).
-    let max_deg = (0..nv as u32).map(|v| g.degree(v)).max().unwrap_or(0);
+    // Degree buckets (ascending), scanned in parallel over vertex ranges.
+    let bucket_tasks: Vec<_> = split_ranges(nv, threads.max(1))
+        .into_iter()
+        .map(|r| {
+            move || {
+                let mut local: Vec<Vec<u32>> = Vec::new();
+                for v in r {
+                    let d = g.degree(v as u32);
+                    if d >= local.len() {
+                        local.resize_with(d + 1, Vec::new);
+                    }
+                    local[d].push(v as u32);
+                }
+                local
+            }
+        })
+        .collect();
+    let locals = run_tasks(threads.max(1), bucket_tasks);
+    let max_deg = locals.iter().map(|l| l.len().saturating_sub(1)).max().unwrap_or(0);
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_deg + 1];
-    for v in 0..nv as u32 {
-        buckets[g.degree(v)].push(v);
+    for local in &locals {
+        for (d, vs) in local.iter().enumerate() {
+            buckets[d].extend_from_slice(vs);
+        }
     }
+    drop(locals);
     let non_singleton = nv - buckets.first().map_or(0, |b| b.len());
 
     // Fill accelerators from the lowest degrees up.
@@ -116,6 +151,22 @@ mod tests {
         // The top hub is always on a CPU.
         let hub = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
         assert!(!pg.parts[pg.owner_of(hub)].kind.is_gpu());
+    }
+
+    #[test]
+    fn parallel_bucket_scan_is_bit_identical() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 9)));
+        let (base, base_plan) =
+            specialized_partition_par(&g, &hw(2, 2, 1 << 22), &LayoutOptions::paper(), 1);
+        for threads in [2, 4, 7] {
+            let (pg, plan) =
+                specialized_partition_par(&g, &hw(2, 2, 1 << 22), &LayoutOptions::paper(), threads);
+            assert_eq!(base.owner, pg.owner, "threads={threads}: placement diverges");
+            assert_eq!(base.local_index, pg.local_index, "threads={threads}");
+            assert_eq!(base_plan.degree_threshold, plan.degree_threshold, "threads={threads}");
+            assert_eq!(base_plan.gpu_vertices, plan.gpu_vertices, "threads={threads}");
+            assert_eq!(base_plan.non_singleton, plan.non_singleton, "threads={threads}");
+        }
     }
 
     #[test]

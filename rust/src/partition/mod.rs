@@ -30,7 +30,7 @@ pub mod random;
 
 use crate::graph::{Csr, VertexId};
 
-pub use degree::specialized_partition;
+pub use degree::{specialized_partition, specialized_partition_par};
 pub use ell::EllLayout;
 pub use layout::LayoutOptions;
 pub use random::random_partition;

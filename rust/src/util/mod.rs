@@ -1,7 +1,8 @@
-//! Shared utilities: PRNG, packed bitmaps, table rendering, and the
-//! property-testing substrate.
+//! Shared utilities: PRNG, packed bitmaps, the scoped worker pool, table
+//! rendering, and the property-testing substrate.
 
 pub mod bitmap;
+pub mod pool;
 pub mod proptest_lite;
 pub mod rng;
 pub mod tables;

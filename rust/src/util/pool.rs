@@ -1,0 +1,235 @@
+//! Scoped worker-thread helpers shared by the ingestion pipeline and the
+//! BSP engine (DESIGN.md Section 9).
+//!
+//! [`run_tasks`] is the deterministic task executor originally private to
+//! `engine::parallel`: indexed tasks run on up to `threads` scoped workers
+//! and results come back **in task order** regardless of which worker ran
+//! what, so callers see the same merge order as a sequential run. The
+//! Kronecker/Erdős–Rényi generators, the CSR builder, the degree
+//! partitioner, and the superstep engine all schedule through here.
+//!
+//! Workers are scoped threads ([`std::thread::scope`]) spawned per call,
+//! which lets tasks borrow caller state without `'static` laundering; a
+//! panicking task propagates to the caller (the scope joins every worker
+//! first). Spawn cost is a few microseconds per worker per call — noise
+//! next to the chunked work these phases run.
+//!
+//! [`split_ranges`] and [`split_mut_at`] are the slicing companions: they
+//! carve an index space (or a buffer) into the disjoint contiguous pieces
+//! the parallel phases hand one-per-task to the workers.
+
+use std::ops::Range;
+
+/// Run indexed tasks on up to `threads` scoped workers, returning results
+/// in task order (deterministic merge order for the caller).
+///
+/// Tasks are distributed round-robin over `min(threads, tasks)` workers;
+/// each worker runs its share in ascending task index. With `threads <= 1`
+/// (or a single task) everything runs inline on the calling thread.
+///
+/// ```
+/// use totem_do::util::pool::run_tasks;
+///
+/// let tasks: Vec<_> = (0..8).map(|i| move || i * i).collect();
+/// let seq = run_tasks(1, tasks);
+/// let tasks: Vec<_> = (0..8).map(|i| move || i * i).collect();
+/// let par = run_tasks(4, tasks);
+/// assert_eq!(seq, par);
+/// assert_eq!(seq[3], 9);
+/// ```
+pub fn run_tasks<R, F>(threads: usize, tasks: Vec<F>) -> Vec<R>
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    let workers = threads.min(tasks.len());
+    if workers <= 1 {
+        return tasks.into_iter().map(|f| f()).collect();
+    }
+
+    let len = tasks.len();
+    let mut buckets: Vec<Vec<(usize, F)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, f) in tasks.into_iter().enumerate() {
+        buckets[i % workers].push((i, f));
+    }
+
+    let mut results: Vec<Option<R>> = (0..len).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                s.spawn(move || {
+                    bucket.into_iter().map(|(i, f)| (i, f())).collect::<Vec<(usize, R)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(pairs) => {
+                    for (i, r) in pairs {
+                        results[i] = Some(r);
+                    }
+                }
+                // Re-raise the worker's panic on the coordinating thread
+                // (the scope joins the remaining workers first).
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker dropped a task")).collect()
+}
+
+/// Split `0..n` into at most `parts` contiguous near-equal ranges (the
+/// first `n % parts` ranges carry the extra element). Returns fewer than
+/// `parts` ranges when `n < parts` — never an empty range — and no ranges
+/// at all when `n == 0`.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(n);
+    if parts == 0 {
+        return Vec::new();
+    }
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split a slice into `cuts.len() + 1` disjoint mutable subslices at the
+/// given ascending cut offsets (each within `data.len()`), so each piece
+/// can be handed to a different worker.
+pub fn split_mut_at<'a, T>(mut data: &'a mut [T], cuts: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(cuts.len() + 1);
+    let mut consumed = 0usize;
+    for &cut in cuts {
+        let (head, tail) = data.split_at_mut(cut - consumed);
+        out.push(head);
+        consumed = cut;
+        data = tail;
+    }
+    out.push(data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        for threads in [1, 3, 16] {
+            let tasks: Vec<_> = (0..17usize).map(|i| move || 100 - i).collect();
+            let out = run_tasks(threads, tasks);
+            assert_eq!(out, (0..17usize).map(|i| 100 - i).collect::<Vec<_>>(), "x{threads}");
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..31)
+            .map(|_| {
+                let c = &counter;
+                move || c.fetch_add(1, Ordering::Relaxed)
+            })
+            .collect();
+        let out = run_tasks(4, tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 31);
+        // Each task observed a distinct pre-increment value.
+        let mut seen: Vec<usize> = out;
+        seen.sort_unstable();
+        assert_eq!(seen, (0..31).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_can_borrow_caller_state_mutably() {
+        let mut cells = [0u64; 8];
+        let tasks: Vec<_> = cells
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| {
+                move || {
+                    *c = (i as u64 + 1) * 10;
+                    i
+                }
+            })
+            .collect();
+        run_tasks(2, tasks);
+        assert_eq!(cells[0], 10);
+        assert_eq!(cells[7], 80);
+    }
+
+    #[test]
+    fn empty_and_single_task_vectors() {
+        let out: Vec<u32> = run_tasks(8, Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+        let out = run_tasks(8, vec![|| 42u32]);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("task failed")),
+                Box::new(|| 3),
+            ];
+            run_tasks(2, tasks)
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for (n, parts) in [(0, 4), (1, 4), (4, 4), (5, 4), (17, 3), (100, 7), (3, 1)] {
+            let ranges = split_ranges(n, parts);
+            assert!(ranges.len() <= parts, "n={n} parts={parts}");
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at {next} (n={n} parts={parts})");
+                assert!(!r.is_empty(), "empty range (n={n} parts={parts})");
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}");
+            if n > 0 {
+                let (lo, hi) = ranges
+                    .iter()
+                    .fold((usize::MAX, 0), |(lo, hi), r| (lo.min(r.len()), hi.max(r.len())));
+                assert!(hi - lo <= 1, "imbalanced {lo}..{hi} (n={n} parts={parts})");
+            }
+        }
+    }
+
+    #[test]
+    fn split_mut_at_partitions_the_slice() {
+        let mut xs: Vec<u32> = (0..10).collect();
+        let parts = split_mut_at(&mut xs, &[3, 3, 7]);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0], &[0, 1, 2]);
+        assert_eq!(parts[1], &[] as &[u32]);
+        assert_eq!(parts[2], &[3, 4, 5, 6]);
+        assert_eq!(parts[3], &[7, 8, 9]);
+        for p in parts {
+            for x in p.iter_mut() {
+                *x += 100;
+            }
+        }
+        assert_eq!(xs, (100..110).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_mut_at_no_cuts_returns_whole() {
+        let mut xs = [1u8, 2, 3];
+        let parts = split_mut_at(&mut xs, &[]);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], &[1, 2, 3]);
+    }
+}

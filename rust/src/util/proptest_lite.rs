@@ -126,7 +126,7 @@ mod tests {
             let g = gen::connected_graph(rng, 30, 30);
             // union-find connectivity check
             let mut parent: Vec<usize> = (0..g.num_vertices).collect();
-            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            fn find(p: &mut [usize], x: usize) -> usize {
                 if p[x] != x {
                     let r = find(p, p[x]);
                     p[x] = r;

@@ -55,6 +55,44 @@ impl Xoshiro256 {
         result
     }
 
+    /// Advance 2^128 steps using the reference xoshiro256 jump polynomial
+    /// (Blackman & Vigna). Repeated jumps carve one seed's sequence into
+    /// guaranteed non-overlapping sub-streams — the substrate for the
+    /// chunked parallel generators (DESIGN.md Section 9).
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] =
+            [0x180ec6d33cfd0aba, 0xd5a61266f0c9392c, 0xa9582618e03fc9aa, 0x39abdc4529b1661c];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j >> b) & 1 == 1 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// The first `n` jump-separated sub-streams of `seed`'s sequence:
+    /// element `i` equals `Xoshiro256::new(seed)` jumped `i` times, so
+    /// element 0 IS the base stream and consecutive elements are 2^128
+    /// steps apart (no overlap at any realistic draw count).
+    pub fn streams(seed: u64, n: usize) -> Vec<Self> {
+        let mut cur = Self::new(seed);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(cur.clone());
+            if i + 1 < n {
+                cur.jump();
+            }
+        }
+        out
+    }
+
     /// Uniform in `[0, 1)`.
     #[inline]
     pub fn next_f64(&mut self) -> f64 {
@@ -141,6 +179,46 @@ mod tests {
             seen[x as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_distinct() {
+        let a = Xoshiro256::streams(99, 4);
+        let b = Xoshiro256::streams(99, 4);
+        let draws = |mut r: Xoshiro256| (0..16).map(|_| r.next_u64()).collect::<Vec<_>>();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(draws(x.clone()), draws(y.clone()));
+        }
+        // Distinct streams produce distinct output.
+        let all: Vec<Vec<u64>> = a.into_iter().map(draws).collect();
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                assert_ne!(all[i], all[j], "streams {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_zero_is_the_base_stream() {
+        let mut base = Xoshiro256::new(1234);
+        let mut s0 = Xoshiro256::streams(1234, 3).remove(0);
+        for _ in 0..32 {
+            assert_eq!(base.next_u64(), s0.next_u64());
+        }
+    }
+
+    #[test]
+    fn jump_changes_the_stream() {
+        let mut r = Xoshiro256::new(5);
+        let mut j = Xoshiro256::new(5);
+        j.jump();
+        let a: Vec<u64> = (0..16).map(|_| r.next_u64()).collect();
+        let b: Vec<u64> = (0..16).map(|_| j.next_u64()).collect();
+        assert_ne!(a, b);
+        // Jumping is deterministic.
+        let mut j2 = Xoshiro256::new(5);
+        j2.jump();
+        assert_eq!(b[0], j2.next_u64());
     }
 
     #[test]

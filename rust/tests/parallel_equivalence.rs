@@ -148,7 +148,9 @@ fn scale18_rmat_parallel_is_faster_than_sequential() {
         if par_best < seq_best {
             break;
         }
-        eprintln!("round {round}: no speedup yet (seq {seq_best:.4}s, par {par_best:.4}s); retrying");
+        eprintln!(
+            "round {round}: no speedup yet (seq {seq_best:.4}s, par {par_best:.4}s); retrying"
+        );
     }
     let (seq_run, par_run) = (seq_run.unwrap(), par_run.unwrap());
     assert_equivalent(&g, &seq_run, &par_run, root, "scale18 x4");
