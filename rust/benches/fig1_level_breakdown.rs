@@ -35,6 +35,11 @@ fn per_level(g: &Csr, name: &str) {
             ("frontier", l.frontier_size.to_string()),
             ("avg_deg", format!("{avg_deg:.2}")),
             ("time_s", format!("{:.3e}", lt.total)),
+            // Worker budget used to *construct* the graph. The traversal
+            // here is the single-address-space baseline (per-level times
+            // are thread-independent); the key is recorded uniformly so
+            // every BENCH_PR3.json record carries the bench's budget.
+            ("threads", bs::bench_threads().to_string()),
         ]);
     }
     t.print();

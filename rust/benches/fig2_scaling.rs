@@ -30,6 +30,9 @@ fn main() {
             ("teps_2s2g", format!("{:.3e}", hyb.teps)),
             ("speedup", format!("{:.3}", hyb.teps / cpu.teps)),
             ("gpu_share", format!("{:.3}", hyb.gpu_vertex_share)),
+            // Per-kernel worker budget (build + nested kernel fan-out);
+            // results are bit-identical across values.
+            ("threads", bs::bench_threads().to_string()),
         ]);
     }
     t.print();

@@ -48,10 +48,12 @@ pub fn use_pjrt() -> bool {
         && default_artifact_dir().join("manifest.txt").exists()
 }
 
-/// Worker threads for graph construction (generation + CSR build). The
-/// ingestion pipeline is bit-identical across thread counts, so this
-/// defaults to the host parallelism (capped at 8) purely for bench
-/// wall-clock; override with `TOTEM_DO_BENCH_THREADS`.
+/// Worker threads for graph construction (generation + CSR build) AND the
+/// traversal's nested-parallel partition kernels (DESIGN.md Sections 9
+/// and 10). Both pipelines are bit-identical across thread counts, so
+/// this defaults to the host parallelism (capped at 8) purely for bench
+/// wall-clock; override with `TOTEM_DO_BENCH_THREADS`. Benches record the
+/// value in their `RESULT`/JSON lines as `threads`.
 pub fn bench_threads() -> usize {
     std::env::var("TOTEM_DO_BENCH_THREADS")
         .ok()
@@ -103,7 +105,15 @@ pub fn run_campaign(
 ) -> Result<CampaignResult> {
     let device = DeviceModel::default();
     let energy = EnergyModel::default();
-    let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, ..Default::default() };
+    // Campaigns traverse with the bench thread budget: the nested-parallel
+    // kernels are bit-identical to sequential (modeled TEPS unchanged),
+    // only host wall-clock TEPS benefits.
+    let cfg = HybridConfig {
+        policy,
+        comm_mode: CommMode::Batched,
+        exec: crate::engine::ExecutionMode::from_threads(bench_threads()),
+        ..Default::default()
+    };
 
     let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
     let mut sim;

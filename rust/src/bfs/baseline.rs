@@ -121,10 +121,14 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
             }
             Direction::BottomUp => {
                 for v in 0..nv as u32 {
-                    rec.vertices_scanned += 1;
+                    // Count only genuinely scanned vertices: the visited
+                    // skip is a bit probe, not a row walk (same accounting
+                    // as `bfs::bottom_up` — the device model prices
+                    // `vertices_scanned` as row traffic).
                     if visited.get(v as usize) {
                         continue;
                     }
+                    rec.vertices_scanned += 1;
                     for &w in g.neighbours(v) {
                         rec.edges_examined += 1;
                         if frontier_bits.get(w as usize) {
@@ -145,7 +149,17 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
         // Direction heuristics on exact global counters (Beamer).
         if let BaselineKind::DirectionOptimized { alpha, beta } = kind {
             let m_f: u64 = next_queue.iter().map(|&v| g.degree(v) as u64).sum();
-            let m_u = total_endpoints.saturating_sub(explored_endpoints);
+            // `explored_endpoints` adds each vertex's degree exactly once,
+            // at first visit, so it can never exceed the total degree sum
+            // (`col.len()`). A `saturating_sub` here would silently clamp
+            // `m_u` to 0 if the accounting ever double-counted, pinning
+            // the heuristic in bottom-up; assert the invariant instead so
+            // an accounting bug distorts nothing quietly.
+            debug_assert!(
+                explored_endpoints <= total_endpoints,
+                "explored endpoints {explored_endpoints} over-count total {total_endpoints}"
+            );
+            let m_u = total_endpoints - explored_endpoints;
             let n_f = next_queue.len() as u64;
             dir = match dir {
                 Direction::TopDown if (m_f as f64) > m_u as f64 / alpha && n_f > 0 => {
@@ -246,6 +260,20 @@ mod tests {
         assert_eq!(run.reached_vertices, 2);
         assert_eq!(run.depth[2], -1);
         validate_graph500(&g, 0, &run.parent, &run.depth).unwrap();
+    }
+
+    #[test]
+    fn endpoint_accounting_never_exceeds_total() {
+        // The Beamer m_u heuristic relies on explored_endpoints never
+        // over-counting the graph's total endpoints (each vertex's degree
+        // is added exactly once, at first visit). The in-loop
+        // debug_assert fires here if the invariant regresses; the final
+        // census is its observable counterpart.
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 5)));
+        for root in [0u32, 7, 99] {
+            let run = baseline_bfs(&g, root, BaselineKind::direction_optimized());
+            assert!(run.reached_edge_endpoints <= g.num_directed_edges() as u64);
+        }
     }
 
     #[test]

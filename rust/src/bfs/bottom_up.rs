@@ -1,59 +1,71 @@
 //! CPU bottom-up kernel (paper Algorithm 1, lines 13–26).
 //!
-//! Scans the partition's not-yet-visited vertices and activates those with
-//! a neighbour in the (pulled) global frontier. The adjacency scan stops at
-//! the first hit — with the Section 3.4 degree-descending adjacency
-//! ordering, likely-frontier hubs sit first, so scans terminate early.
+//! Scans one *chunk* of the partition's `0..scan_limit` vertex range (the
+//! driver splits the range into edge-weight-balanced chunks via the local
+//! CSR's `row_ptr` prefix and fans them out on the shared worker pool —
+//! DESIGN.md Section 10; a sequential run is the one-chunk special case)
+//! and activates not-yet-visited vertices with a neighbour in the (pulled)
+//! global frontier. The adjacency scan stops at the first hit — with the
+//! Section 3.4 degree-descending adjacency ordering, likely-frontier hubs
+//! sit first, so scans terminate early.
 //!
-//! The kernel only writes the partition's own bitmaps plus the shared
-//! atomic next-frontier; `depth`/`parent` assignments travel back as a
-//! thread-local [`StepDelta`] merged at the level barrier, so kernels of
-//! different partitions run concurrently under
-//! [`ExecutionMode::Parallel`](crate::engine::ExecutionMode) with output
-//! bit-identical to a sequential run.
+//! Each vertex belongs to exactly one chunk and the kernel reads only the
+//! **pre-superstep** visited snapshot plus the read-only global frontier,
+//! so chunk outputs are independent of scheduling by construction: the
+//! chunk marks the partition's atomic next-frontier and the shared global
+//! next-frontier (set unions), and returns its activations in a
+//! thread-local [`StepDelta`](crate::engine::StepDelta) applied at the
+//! level barrier — output under
+//! [`ExecutionMode::Parallel`](crate::engine::ExecutionMode) is
+//! bit-identical to a sequential run at every thread count.
+//!
+//! Work accounting: `vertices_scanned` counts only vertices whose
+//! adjacency is genuinely walked — already-visited vertices are skipped
+//! with a single bit probe and do not inflate the per-PE counters the
+//! device model prices (`runtime::device`).
 
-use crate::engine::{KernelSlot, StepDelta};
+use std::ops::Range;
+
+use crate::engine::{ChunkScratch, KernelSlot};
 use crate::partition::PartitionedGraph;
 use crate::util::{AtomicBitmap, Bitmap};
 
-/// Run one bottom-up superstep for CPU partition `pid`.
+/// Run one bottom-up kernel chunk for CPU partition `pid`.
 ///
-/// * `slot` — the partition's own visited/frontier bitmaps (exclusive).
+/// * `slot` — the partition's kernel-phase view (pre-superstep visited,
+///   atomic next); chunks of one partition share copies of it.
 /// * `global_frontier` — the aggregate pulled by Algorithm 3 (read-only,
 ///   shared by every kernel; the driver takes it out of the state to
 ///   satisfy borrows).
 /// * `global_next` — the shared next-level global frontier (atomic
-///   fetch-or marking, racing safely with other partitions' kernels).
-/// * `delta` — reusable per-partition scratch, cleared here and filled
-///   with this superstep's output (hot path: no allocation once warm).
+///   fetch-or marking, racing safely with every other chunk).
+/// * `range` — this chunk's local-index slice of `0..scan_limit`.
+/// * `scratch` — the chunk's reusable output delta (hot path: no
+///   allocation once warm).
 pub fn cpu_bottom_up(
     pg: &PartitionedGraph,
     pid: usize,
-    slot: &mut KernelSlot<'_>,
+    slot: KernelSlot<'_>,
     global_frontier: &Bitmap,
     global_next: &AtomicBitmap<'_>,
-    delta: &mut StepDelta,
+    range: Range<usize>,
+    scratch: &mut ChunkScratch,
 ) {
     let part = &pg.parts[pid];
-    delta.clear();
-    // Singletons sit past `scan_limit` under the Section 3.4 ordering and
-    // can never activate — don't walk them every level.
-    let n = part.scan_limit;
+    scratch.begin();
 
-    for li in 0..n {
+    for li in range {
         let gid = part.gids[li];
-        delta.work.vertices_scanned += 1;
         if slot.visited.get(gid as usize) {
             continue;
         }
+        scratch.delta.work.vertices_scanned += 1;
         for &w in part.neighbours(li) {
-            delta.work.edges_examined += 1;
+            scratch.delta.work.edges_examined += 1;
             if global_frontier.get(w as usize) {
-                slot.visited.set(gid as usize);
-                slot.frontier.next.set(gid as usize);
+                slot.next.set(gid as usize);
                 global_next.set(gid as usize);
-                delta.activations.push((gid, w));
-                delta.work.activated += 1;
+                scratch.delta.activations.push((gid, w));
                 break; // early exit — the CPU's advantage over dense lanes
             }
         }
@@ -63,7 +75,7 @@ pub fn cpu_bottom_up(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::BfsState;
+    use crate::engine::{BfsState, PeWork};
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
@@ -73,15 +85,38 @@ mod tests {
         materialize(&g, vec![0u8; nv], &cfg, &opts)
     }
 
-    /// Run the kernel for `pid` and merge its delta, like the driver does.
-    fn step(pg: &PartitionedGraph, pid: usize, st: &mut BfsState, gf: &Bitmap, level: u32) -> StepDelta {
-        let mut delta = StepDelta::default();
+    /// Run the kernel for `pid` as `nchunks` range chunks and merge the
+    /// deltas in chunk order, like the driver does.
+    fn step_chunked(
+        pg: &PartitionedGraph,
+        pid: usize,
+        st: &mut BfsState,
+        gf: &Bitmap,
+        level: u32,
+        nchunks: usize,
+    ) -> PeWork {
+        let part = &pg.parts[pid];
+        let ranges = crate::util::pool::split_by_prefix(part.scan_limit, nchunks, |i| {
+            part.row_ptr[i]
+        });
+        let mut chunks: Vec<ChunkScratch> =
+            ranges.iter().map(|_| ChunkScratch::new(pg.num_vertices)).collect();
         {
-            let (mut slots, gnext) = st.split_for_superstep();
-            cpu_bottom_up(pg, pid, &mut slots[pid], gf, &gnext, &mut delta);
+            let (slots, gnext) = st.split_for_superstep();
+            for (r, scratch) in ranges.iter().zip(chunks.iter_mut()) {
+                cpu_bottom_up(pg, pid, slots[pid], gf, &gnext, r.clone(), scratch);
+            }
         }
-        st.apply_step_delta(pid, &delta, level);
-        delta
+        let mut work = PeWork::default();
+        for scratch in &chunks {
+            work.add(&scratch.delta.work);
+            work.activated += st.apply_step_delta(pid, &scratch.delta, level);
+        }
+        work
+    }
+
+    fn step(pg: &PartitionedGraph, pid: usize, st: &mut BfsState, gf: &Bitmap, level: u32) -> PeWork {
+        step_chunked(pg, pid, st, gf, level, 1)
     }
 
     #[test]
@@ -92,14 +127,36 @@ mod tests {
         st.visited[0].set(1); // 1 itself already visited
         let mut gf = Bitmap::new(4);
         gf.set(1);
-        let delta = step(&pg, 0, &mut st, &gf, 1);
-        assert_eq!(delta.work.activated, 2); // 0 and 2
+        let work = step(&pg, 0, &mut st, &gf, 1);
+        assert_eq!(work.activated, 2); // 0 and 2
         assert_eq!(st.depth[0], 2);
         assert_eq!(st.parent[0], 1);
         assert_eq!(st.depth[2], 2);
         assert_eq!(st.depth[3], -1);
         assert!(st.frontiers[0].next.get(0) && st.frontiers[0].next.get(2));
         assert!(st.global_next.get(0) && st.global_next.get(2));
+    }
+
+    #[test]
+    fn chunked_scan_matches_single_chunk() {
+        let edges = vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (1, 5), (0, 4)];
+        for nchunks in [2, 3, 8] {
+            let pg = one_cpu(edges.clone(), 6, LayoutOptions::paper());
+            let mut st = BfsState::new(&pg);
+            st.visited[0].set(1);
+            let mut gf = Bitmap::new(6);
+            gf.set(1);
+            let work = step_chunked(&pg, 0, &mut st, &gf, 1, nchunks);
+
+            let pg1 = one_cpu(edges.clone(), 6, LayoutOptions::paper());
+            let mut st1 = BfsState::new(&pg1);
+            st1.visited[0].set(1);
+            let work1 = step(&pg1, 0, &mut st1, &gf, 1);
+
+            assert_eq!(work, work1, "{nchunks} chunks");
+            assert_eq!(st.depth, st1.depth, "{nchunks} chunks");
+            assert_eq!(st.parent, st1.parent, "{nchunks} chunks");
+        }
     }
 
     #[test]
@@ -120,22 +177,24 @@ mod tests {
         st.visited[0].set(1);
         let w_naive = step(&pg_naive, 0, &mut st, &gf, 0);
 
-        assert_eq!(w_sorted.work.activated, w_naive.work.activated);
-        assert!(w_sorted.work.edges_examined <= w_naive.work.edges_examined);
+        assert_eq!(w_sorted.activated, w_naive.activated);
+        assert!(w_sorted.edges_examined <= w_naive.edges_examined);
     }
 
     #[test]
-    fn skips_visited_vertices_entirely() {
+    fn skips_visited_vertices_without_counting_them() {
         let pg = one_cpu(vec![(0, 1)], 2, LayoutOptions::naive());
         let mut st = BfsState::new(&pg);
         st.visited[0].set(0);
         st.visited[0].set(1);
         let mut gf = Bitmap::new(2);
         gf.set(1);
-        let delta = step(&pg, 0, &mut st, &gf, 0);
-        assert_eq!(delta.work.activated, 0);
-        assert_eq!(delta.work.edges_examined, 0);
-        assert_eq!(delta.work.vertices_scanned, 2);
+        let work = step(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(work.activated, 0);
+        assert_eq!(work.edges_examined, 0);
+        // Already-visited vertices are skipped with a bit probe and must
+        // not inflate the scan counter the device model prices.
+        assert_eq!(work.vertices_scanned, 0);
     }
 
     #[test]
@@ -143,9 +202,10 @@ mod tests {
         let pg = one_cpu(vec![(0, 1), (1, 2)], 3, LayoutOptions::naive());
         let mut st = BfsState::new(&pg);
         let gf = Bitmap::new(3);
-        let delta = step(&pg, 0, &mut st, &gf, 0);
-        assert_eq!(delta.work.activated, 0);
+        let work = step(&pg, 0, &mut st, &gf, 0);
+        assert_eq!(work.activated, 0);
         // All edges of unvisited vertices were checked in vain.
-        assert_eq!(delta.work.edges_examined, 4);
+        assert_eq!(work.edges_examined, 4);
+        assert_eq!(work.vertices_scanned, 3, "all three unvisited vertices scanned");
     }
 }

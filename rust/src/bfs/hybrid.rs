@@ -11,17 +11,32 @@
 //!    owner of the hubs — §3.3) picks the next direction from local state.
 //!
 //! Under [`ExecutionMode::Parallel`] the CPU partition kernels of step 1
-//! run **concurrently** on worker threads: each kernel owns its
-//! partition's bitmaps ([`KernelSlot`]), marks the shared next-level
-//! global frontier with atomic fetch-or, and returns a thread-local
-//! [`StepDelta`] that is merged at the level barrier in ascending
-//! partition id order — the deterministic tie-break rule, so `Sequential`
-//! and `Parallel(n)` produce bit-identical output (DESIGN.md Section 4).
+//! run **concurrently** on worker threads, and each kernel is itself
+//! split into edge-weight-balanced *chunks* (top-down: slices of the
+//! materialized frontier queue; bottom-up: slices of the `0..scan_limit`
+//! vertex range), so the hot hub partition — which the specialized
+//! partitioning deliberately loads with nearly all edges (§3.2) — no
+//! longer serializes the superstep. Every chunk reads the partition's
+//! pre-superstep visited snapshot ([`KernelSlot`](crate::engine::KernelSlot)),
+//! marks the partition
+//! and global next frontiers with atomic fetch-or, and returns a
+//! thread-local [`StepDelta`](crate::engine::StepDelta) of candidates
+//! merged at the level barrier
+//! in ascending `(partition id, chunk index)` order, first candidate
+//! wins — the deterministic tie-break rule, so `Sequential` and
+//! `Parallel(n)` produce bit-identical output at every thread count
+//! (DESIGN.md Sections 4 and 10). The worker budget splits across
+//! concurrently running kernels by over-decomposition: each kernel
+//! contributes up to `threads` weight-balanced chunks and the pool
+//! round-robins them, so each partition gets worker time in proportion
+//! to its edge work.
 //! Accelerator partitions drive the single shared [`Accelerator`] context
 //! from the coordinating thread, as one host thread drives a device
 //! stream. Per-PE time on the paper's testbed is attributed afterwards by
 //! `runtime::device` from the work counters collected here (max over
 //! concurrently-busy PEs per level — DESIGN.md §1).
+
+use std::ops::Range;
 
 use anyhow::{anyhow, Result};
 
@@ -31,11 +46,10 @@ use super::top_down::cpu_top_down;
 use super::BfsRun;
 use crate::engine::comm::{CommBuffers, CommMode};
 use crate::engine::{
-    parallel, Accelerator, BfsState, Direction, ExecutionMode, KernelSlot, LevelStats, PeWork,
-    StepDelta,
+    parallel, Accelerator, BfsState, ChunkScratch, Direction, ExecutionMode, LevelStats, PeWork,
 };
 use crate::partition::PartitionedGraph;
-use crate::util::Bitmap;
+use crate::util::{pool, Bitmap};
 
 /// Driver configuration.
 #[derive(Clone, Copy, Debug)]
@@ -45,10 +59,14 @@ pub struct HybridConfig {
     /// How the partition kernels of one superstep are scheduled
     /// (`--threads N` on the CLI). Output is identical either way.
     pub exec: ExecutionMode,
-    /// GPU top-down frontiers smaller than this are walked on the host
-    /// (the device call's PCIe round trip costs more than the walk; the
-    /// host visited mirror stays authoritative either way). Totem's tail
-    /// handling does the same.
+    /// GPU top-down frontiers with less *walk work* than this are walked
+    /// on the host (the device call's PCIe round trip costs more than the
+    /// walk; the host visited mirror stays authoritative either way).
+    /// Totem's tail handling does the same. The value is calibrated in
+    /// uniform-frontier **vertex units** and converted to out-edges
+    /// through the partition's mean degree at the gate, so a small
+    /// hub-heavy frontier — little vertex count, huge edge work — still
+    /// goes to the device.
     pub gpu_td_host_threshold: u64,
 }
 
@@ -63,6 +81,18 @@ impl Default for HybridConfig {
     }
 }
 
+/// Which CPU kernel a chunk plan runs, with the phase-shared read-only
+/// input every chunk needs (the per-chunk state comes from the plan and
+/// the [`KernelSlot`](crate::engine::KernelSlot)s).
+enum ChunkKernel<'a> {
+    /// Top-down over slices of the materialized per-partition frontier
+    /// queues (indexed by pid; chunks of one partition share its queue).
+    TopDown { queues: &'a [Vec<u32>] },
+    /// Bottom-up over slices of the scan ranges, pulling the global
+    /// frontier aggregate.
+    BottomUp { gf: &'a Bitmap },
+}
+
 /// A reusable BFS runner over one partitioned graph. State buffers persist
 /// across runs (Graph500 campaigns run 64+ searches over one graph).
 pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
@@ -72,13 +102,15 @@ pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
     comm: CommBuffers,
     accel: Option<&'g mut A>,
     // reusable scratch
-    /// Per-partition frontier queue scratch (each worker thread gets its
-    /// partition's queue during the concurrent kernel phase).
+    /// Per-partition frontier queue scratch, materialized once per
+    /// top-down level and sliced into chunks for the concurrent kernel
+    /// phase (every chunk of a partition reads the same queue).
     queues: Vec<Vec<u32>>,
-    /// Per-partition kernel-output scratch, reused every superstep (the
-    /// activation/contribution vectors keep their capacity across levels
-    /// and runs — no per-level allocation once warm).
-    deltas: Vec<StepDelta>,
+    /// Per-chunk kernel scratch (dedup marks + output delta), reused
+    /// every superstep — the pool grows to the largest chunk plan seen
+    /// and the candidate vectors keep their capacity across levels and
+    /// runs (no per-level allocation once warm).
+    chunks: Vec<ChunkScratch>,
     incoming: Bitmap,
     gpu_frontier: Vec<i32>,
     gpu_merge: Vec<u32>,
@@ -113,7 +145,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             cfg,
             accel,
             queues: (0..pg.parts.len()).map(|_| Vec::new()).collect(),
-            deltas: (0..pg.parts.len()).map(|_| StepDelta::default()).collect(),
+            chunks: Vec::new(),
             incoming: Bitmap::new(pg.num_vertices),
             gpu_frontier: Vec::new(),
             gpu_merge: Vec::new(),
@@ -279,46 +311,114 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         }
     }
 
+    /// Grow the chunk-scratch pool to cover `plan` and run the planned
+    /// kernel chunks concurrently, then merge every chunk delta at the
+    /// level barrier in plan order — ascending `(pid, chunk)`, the
+    /// deterministic tie-break rule. Returns the crossing census (top-down
+    /// push dedup; always 0 for bottom-up, which produces no contribs).
+    fn run_chunk_plan(
+        &mut self,
+        plan: &[(usize, Range<usize>)],
+        exec: ExecutionMode,
+        level: u32,
+        stats: &mut LevelStats,
+        kernel: ChunkKernel<'_>,
+    ) -> u64 {
+        let pg = self.pg;
+        while self.chunks.len() < plan.len() {
+            self.chunks.push(ChunkScratch::new(pg.num_vertices));
+        }
+        {
+            let (slots, gnext) = self.state.split_for_superstep();
+            let kernel = &kernel;
+            let mut tasks = Vec::new();
+            for ((pid, range), scratch) in plan.iter().cloned().zip(self.chunks.iter_mut()) {
+                let slot = slots[pid];
+                let gn = gnext;
+                tasks.push(move || match kernel {
+                    ChunkKernel::TopDown { queues } => {
+                        cpu_top_down(pg, pid, slot, &gn, &queues[pid][range], scratch)
+                    }
+                    ChunkKernel::BottomUp { gf } => {
+                        cpu_bottom_up(pg, pid, slot, gf, &gn, range, scratch)
+                    }
+                });
+            }
+            parallel::run_steps(exec, tasks);
+        }
+        let mut crossing = 0u64;
+        for (i, &(pid, _)) in plan.iter().enumerate() {
+            let (work, cr) = self.merge_chunk(pid, i, level);
+            stats.pe_work[pid].add(&work);
+            crossing += cr;
+        }
+        crossing
+    }
+
+    /// Apply one chunk's delta at the level barrier: activations (first
+    /// candidate per vertex wins — `BfsState::apply_step_delta`), then
+    /// contributions and the crossing census, deduplicated against the
+    /// per-destination push buffers exactly as the sequential kernel's
+    /// inline marking did. Returns the chunk's work counters with the
+    /// authoritative `activated` count plus its distinct crossings.
+    fn merge_chunk(&mut self, pid: usize, chunk: usize, level: u32) -> (PeWork, u64) {
+        let delta = &self.chunks[chunk].delta;
+        let mut work = delta.work;
+        work.activated = self.state.apply_step_delta(pid, delta, level);
+        let mut crossing = 0u64;
+        for &(w, _) in &delta.contribs {
+            let q = self.pg.owner_of(w);
+            if !self.comm.outgoing_ref(pid, q).get(w as usize) {
+                self.comm.outgoing(pid, q).set(w as usize);
+                crossing += 1;
+            }
+        }
+        (work, crossing)
+    }
+
     /// One top-down superstep over all partitions + the push phase.
     fn superstep_top_down(&mut self, level: u32, stats: &mut LevelStats) -> Result<()> {
         let np = self.pg.parts.len();
         let pg = self.pg;
         let exec = self.kernel_exec(stats);
+        let nchunks = exec.threads();
         self.comm.clear();
-        let mut crossing = 0u64;
 
-        // ---- concurrent kernel phase (CPU partitions) ----
-        // Each worker owns its partition's bitmaps, push-buffer row, and
-        // queue/delta scratch; the shared global next-frontier is marked
-        // via atomic fetch-or. Pids come back in ascending order.
-        let cpu_pids: Vec<usize> = {
-            let (slots, gnext) = self.state.split_for_superstep();
+        // ---- pre-phase: materialize per-partition frontier queues and
+        // carve each into up to `threads` edge-weight-balanced chunks
+        // (parallel across partitions; chunk boundaries are a scheduling
+        // choice only — outputs are identical for any chunking) ----
+        let plan: Vec<(usize, Range<usize>)> = {
+            let state = &self.state;
             let mut tasks = Vec::new();
-            for (pid, (((slot, row), queue), delta)) in slots
-                .into_iter()
-                .zip(self.comm.rows_mut())
-                .zip(self.queues.iter_mut())
-                .zip(self.deltas.iter_mut())
-                .enumerate()
-            {
+            for (pid, queue) in self.queues.iter_mut().enumerate() {
                 if pg.parts[pid].kind.is_gpu() {
                     continue;
                 }
-                let gn = gnext;
-                let mut slot: KernelSlot<'_> = slot;
                 tasks.push(move || {
-                    cpu_top_down(pg, pid, &mut slot, row, &gn, queue, delta);
-                    pid
+                    queue.clear();
+                    queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
+                    let ranges = pool::split_by_weight(queue.len(), nchunks, |i| {
+                        pg.parts[pid].degree(pg.local_of(queue[i])) as u64
+                    });
+                    (pid, ranges)
                 });
             }
-            parallel::run_steps(exec, tasks)
+            let mut plan = Vec::new();
+            for (pid, ranges) in parallel::run_steps(exec, tasks) {
+                plan.extend(ranges.into_iter().map(|r| (pid, r)));
+            }
+            plan
         };
-        // ---- level barrier: deterministic merge, ascending pid ----
-        for &pid in &cpu_pids {
-            stats.pe_work[pid] = self.deltas[pid].work;
-            crossing += self.deltas[pid].crossing;
-            self.state.apply_step_delta(pid, &self.deltas[pid], level);
-        }
+
+        // ---- concurrent kernel phase + deterministic barrier merge ----
+        // (`queues` moves out of the runner for the phase so the chunk
+        // tasks can borrow it while the runner is borrowed mutably.)
+        let queues = std::mem::take(&mut self.queues);
+        let mut crossing =
+            self.run_chunk_plan(&plan, exec, level, stats, ChunkKernel::TopDown { queues: &queues[..] });
+        self.queues = queues;
+
         // ---- accelerator partitions (single shared device context,
         // driven from the coordinating thread) ----
         for pid in 0..np {
@@ -383,35 +483,25 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             (0..np).map(|p| self.state.frontiers[p].current.any()).collect();
         stats.comm = self.comm.pull_stats(pg, &nonempty);
 
+        // ---- chunk plan: carve each CPU partition's 0..scan_limit range
+        // into up to `threads` edge-weight-balanced slices (the local
+        // CSR's row_ptr is the weight prefix — no per-level walk) ----
+        let nchunks = exec.threads();
+        let mut plan: Vec<(usize, Range<usize>)> = Vec::new();
+        for (pid, part) in pg.parts.iter().enumerate() {
+            if part.kind.is_gpu() {
+                continue;
+            }
+            let ranges = pool::split_by_prefix(part.scan_limit, nchunks, |i| part.row_ptr[i]);
+            plan.extend(ranges.into_iter().map(|r| (pid, r)));
+        }
+
         // Take the aggregate out of `state` (shared read-only input of
         // every kernel) for the borrow checker.
         let gf = std::mem::replace(&mut self.state.global_frontier.bits, Bitmap::new(0));
 
-        // ---- concurrent kernel phase (CPU partitions) ----
-        let cpu_pids: Vec<usize> = {
-            let (slots, gnext) = self.state.split_for_superstep();
-            let gf_ref = &gf;
-            let mut tasks = Vec::new();
-            for (pid, (slot, delta)) in
-                slots.into_iter().zip(self.deltas.iter_mut()).enumerate()
-            {
-                if pg.parts[pid].kind.is_gpu() {
-                    continue;
-                }
-                let gn = gnext;
-                let mut slot: KernelSlot<'_> = slot;
-                tasks.push(move || {
-                    cpu_bottom_up(pg, pid, &mut slot, gf_ref, &gn, delta);
-                    pid
-                });
-            }
-            parallel::run_steps(exec, tasks)
-        };
-        // ---- level barrier: deterministic merge, ascending pid ----
-        for &pid in &cpu_pids {
-            stats.pe_work[pid] = self.deltas[pid].work;
-            self.state.apply_step_delta(pid, &self.deltas[pid], level);
-        }
+        // ---- concurrent kernel phase + deterministic barrier merge ----
+        self.run_chunk_plan(&plan, exec, level, stats, ChunkKernel::BottomUp { gf: &gf });
         // ---- accelerator partitions ----
         for pid in 0..np {
             if pg.parts[pid].kind.is_gpu() {
@@ -424,17 +514,42 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
 
     /// Accelerator top-down step: build local frontier flags, run the AOT
     /// kernel, route its global activations (own vs remote). Frontiers
-    /// below `gpu_td_host_threshold` are walked on the host instead — the
+    /// with little *walk work* are walked on the host instead — the
     /// device round trip costs more than the walk (Totem's tail handling).
     fn gpu_top_down(&mut self, pid: usize, level: u32) -> Result<PeWork> {
         let mut work = PeWork::default();
 
+        let part = &self.pg.parts[pid];
         let frontier = &self.state.frontiers[pid].current;
         if !frontier.any() {
             return Ok(work);
         }
         let fcount = frontier.count() as u64;
-        if fcount < self.cfg.gpu_td_host_threshold {
+        // Host-walk gate on the frontier's *out-edges*: the documented
+        // rationale is device-round-trip vs walk cost, and walk cost
+        // follows edge work, not vertex count — a small hub frontier can
+        // carry a huge walk. The configured threshold keeps its historical
+        // vertex units and converts to edges through the partition's mean
+        // degree (`fedges < threshold · E/V`), so for a degree-uniform
+        // frontier the gate trips at exactly the same sizes as the old
+        // vertex-count gate. The degree scan exits as soon as the walk is
+        // provably device-worthy, so a large frontier pays O(threshold ·
+        // mean degree) here, never O(frontier).
+        let nv = part.num_vertices() as u128;
+        let ne = part.num_directed_edges() as u128;
+        let mut host_walk = true;
+        if ne > 0 {
+            let budget = self.cfg.gpu_td_host_threshold as u128 * ne;
+            let mut fedges: u128 = 0;
+            for v in frontier.iter_ones() {
+                fedges += part.degree(self.pg.local_of(v as u32)) as u128;
+                if fedges * nv >= budget {
+                    host_walk = false;
+                    break;
+                }
+            }
+        }
+        if host_walk {
             return self.gpu_top_down_host(pid, level);
         }
 
@@ -483,19 +598,25 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// it in this partition's slot but the device model prices TopDown CPU
     /// work identically, and the byte counts are tiny by construction.
     fn gpu_top_down_host(&mut self, pid: usize, level: u32) -> Result<PeWork> {
+        // Materialize the partition's frontier queue and walk it as a
+        // single chunk — the host walk only fires for tiny frontiers, so
+        // fanning out would cost more than the walk. Chunk slot 0 is free
+        // here: the CPU partitions' chunks were merged before the
+        // accelerator loop runs.
         {
-            let (mut slots, gnext) = self.state.split_for_superstep();
-            cpu_top_down(
-                self.pg,
-                pid,
-                &mut slots[pid],
-                self.comm.row_mut(pid),
-                &gnext,
-                &mut self.queues[pid],
-                &mut self.deltas[pid],
-            );
+            let state = &self.state;
+            let queue = &mut self.queues[pid];
+            queue.clear();
+            queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
         }
-        self.state.apply_step_delta(pid, &self.deltas[pid], level);
+        if self.chunks.is_empty() {
+            self.chunks.push(ChunkScratch::new(self.pg.num_vertices));
+        }
+        {
+            let (slots, gnext) = self.state.split_for_superstep();
+            cpu_top_down(self.pg, pid, slots[pid], &gnext, &self.queues[pid], &mut self.chunks[0]);
+        }
+        let (mut work, crossing) = self.merge_chunk(pid, 0, level);
         // Newly activated local vertices must be mirrored to the device.
         self.gpu_merge.clear();
         for v in self.state.frontiers[pid].next.iter_ones() {
@@ -504,8 +625,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         if !self.gpu_merge.is_empty() {
             self.accel.as_deref_mut().unwrap().mark_visited(pid, &self.gpu_merge);
         }
-        let mut work = self.deltas[pid].work;
-        work.activated += self.deltas[pid].crossing;
+        work.activated += crossing;
         Ok(work)
     }
 

@@ -1,65 +1,69 @@
 //! CPU top-down kernel (paper Algorithm 1, lines 2–12).
 //!
-//! Explores the out-edges of the partition's current frontier. Local
-//! targets are marked in the partition's own bitmaps immediately; remote
-//! targets are routed into the per-destination push buffers (Algorithm 2
-//! sends them once per round). Everything that touches shared state —
-//! global `depth`/`parent` writes and the parent contributions of the
-//! Section 3.1 optimization — is returned as a thread-local
-//! [`StepDelta`] and merged at the level barrier, which is what lets the
-//! engine run partition kernels concurrently ([`ExecutionMode::Parallel`])
-//! with output bit-identical to a sequential run.
+//! Explores the out-edges of one *chunk* of the partition's materialized
+//! frontier queue (the driver splits the queue into edge-weight-balanced
+//! chunks and fans them out on the shared worker pool — DESIGN.md Section
+//! 10; a sequential run is the one-chunk special case). The chunk marks
+//! newly reachable local targets in the partition's atomic next-frontier
+//! and the shared global next-frontier (set unions — interleaving-
+//! independent), and returns everything order-sensitive as *candidates*
+//! in a thread-local [`StepDelta`](crate::engine::StepDelta):
+//!
+//! * local activations, checked against the **pre-superstep** visited
+//!   snapshot (`slot.visited` is read-only during the phase);
+//! * remote targets for the per-destination push buffers (Algorithm 2
+//!   sends them once per round) with their Section 3.1 parent
+//!   contributions.
+//!
+//! The barrier merge applies candidates in ascending `(partition id,
+//! chunk index)` order, first-wins — within a chunk the queue slice is
+//! walked in order, so the merged winner for any target is the first
+//! reaching edge in whole-queue order: exactly the sequential kernel's
+//! choice, at every thread count ([`ExecutionMode::Parallel`] is
+//! bit-identical to `Sequential`).
 //!
 //! [`ExecutionMode::Parallel`]: crate::engine::ExecutionMode
 
-use crate::engine::{KernelSlot, StepDelta};
+use crate::engine::{ChunkScratch, KernelSlot};
 use crate::partition::PartitionedGraph;
-use crate::util::{AtomicBitmap, Bitmap};
+use crate::util::AtomicBitmap;
 
-/// Run one top-down superstep for CPU partition `pid`.
+/// Run one top-down kernel chunk for CPU partition `pid`.
 ///
-/// * `slot` — the partition's own visited/frontier bitmaps (exclusive).
-/// * `outgoing` — the partition's row of push buffers (exclusive).
+/// * `slot` — the partition's kernel-phase view (pre-superstep visited,
+///   atomic next); chunks of one partition share copies of it.
 /// * `global_next` — the shared next-level global frontier; marked with
-///   atomic fetch-or, racing safely with other partitions' kernels.
-/// * `queue`, `delta` — reusable per-partition scratch (hot path: no
-///   allocation once warm); `delta` is cleared here and filled with this
-///   superstep's output.
+///   atomic fetch-or, racing safely with every other chunk.
+/// * `queue` — this chunk's slice of the partition's materialized
+///   frontier queue (ascending gid within and across chunks).
+/// * `scratch` — the chunk's reusable dedup marks + output delta (hot
+///   path: no allocation once warm).
 pub fn cpu_top_down(
     pg: &PartitionedGraph,
     pid: usize,
-    slot: &mut KernelSlot<'_>,
-    outgoing: &mut [Bitmap],
+    slot: KernelSlot<'_>,
     global_next: &AtomicBitmap<'_>,
-    queue: &mut Vec<u32>,
-    delta: &mut StepDelta,
+    queue: &[u32],
+    scratch: &mut ChunkScratch,
 ) {
     let part = &pg.parts[pid];
-    delta.clear();
+    scratch.begin();
+    scratch.delta.work.vertices_scanned = queue.len() as u64;
 
-    // Materialize the frontier queue (iter borrows the current bitmap
-    // immutably; next-frontier marking below needs the pair mutably).
-    queue.clear();
-    queue.extend(slot.frontier.current.iter_ones().map(|v| v as u32));
-    delta.work.vertices_scanned = queue.len() as u64;
-
-    for &v in queue.iter() {
+    for &v in queue {
         let li = pg.local_of(v);
         for &w in part.neighbours(li) {
-            delta.work.edges_examined += 1;
+            scratch.delta.work.edges_examined += 1;
+            let wi = w as usize;
             let q = pg.owner_of(w);
             if q == pid {
-                if !slot.visited.get(w as usize) {
-                    slot.visited.set(w as usize);
-                    slot.frontier.next.set(w as usize);
-                    global_next.set(w as usize);
-                    delta.activations.push((w, v));
-                    delta.work.activated += 1;
+                if !slot.visited.get(wi) && !scratch.seen_or_mark(wi) {
+                    slot.next.set(wi);
+                    global_next.set(wi);
+                    scratch.delta.activations.push((w, v));
                 }
-            } else if !outgoing[q].get(w as usize) {
-                outgoing[q].set(w as usize);
-                delta.contribs.push((w, v));
-                delta.crossing += 1;
+            } else if !scratch.seen_or_mark(wi) {
+                scratch.delta.contribs.push((w, v));
             }
         }
     }
@@ -69,7 +73,7 @@ pub fn cpu_top_down(
 mod tests {
     use super::*;
     use crate::engine::comm::CommBuffers;
-    use crate::engine::BfsState;
+    use crate::engine::{BfsState, PeWork, StepDelta};
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
@@ -79,22 +83,53 @@ mod tests {
         materialize(&g, owner, &cfg, &LayoutOptions::naive())
     }
 
-    /// Run the kernel for `pid` and merge its delta, like the driver does.
+    /// Run the kernel for `pid` as `nchunks` queue chunks and merge the
+    /// deltas in chunk order, like the driver does. Returns the merged
+    /// work counters, the crossing census, and the chunk deltas.
+    fn step_chunked(
+        pg: &PartitionedGraph,
+        pid: usize,
+        st: &mut BfsState,
+        comm: &mut CommBuffers,
+        level: u32,
+        nchunks: usize,
+    ) -> (PeWork, u64, Vec<StepDelta>) {
+        let mut queue: Vec<u32> = Vec::new();
+        queue.extend(st.frontiers[pid].current.iter_ones().map(|v| v as u32));
+        let ranges = crate::util::pool::split_ranges(queue.len(), nchunks);
+        let mut chunks: Vec<ChunkScratch> =
+            ranges.iter().map(|_| ChunkScratch::new(pg.num_vertices)).collect();
+        {
+            let (slots, gnext) = st.split_for_superstep();
+            for (r, scratch) in ranges.iter().zip(chunks.iter_mut()) {
+                cpu_top_down(pg, pid, slots[pid], &gnext, &queue[r.clone()], scratch);
+            }
+        }
+        let mut work = PeWork::default();
+        let mut crossing = 0u64;
+        for scratch in &chunks {
+            work.add(&scratch.delta.work);
+            work.activated += st.apply_step_delta(pid, &scratch.delta, level);
+            for &(w, _) in &scratch.delta.contribs {
+                let q = pg.owner_of(w);
+                if !comm.outgoing_ref(pid, q).get(w as usize) {
+                    comm.outgoing(pid, q).set(w as usize);
+                    crossing += 1;
+                }
+            }
+        }
+        (work, crossing, chunks.into_iter().map(|c| c.delta).collect())
+    }
+
     fn step(
         pg: &PartitionedGraph,
         pid: usize,
         st: &mut BfsState,
         comm: &mut CommBuffers,
         level: u32,
-    ) -> StepDelta {
-        let mut delta = StepDelta::default();
-        {
-            let (mut slots, gnext) = st.split_for_superstep();
-            let mut q = Vec::new();
-            cpu_top_down(pg, pid, &mut slots[pid], comm.row_mut(pid), &gnext, &mut q, &mut delta);
-        }
-        st.apply_step_delta(pid, &delta, level);
-        delta
+    ) -> (PeWork, u64) {
+        let (work, crossing, _) = step_chunked(pg, pid, st, comm, level, 1);
+        (work, crossing)
     }
 
     #[test]
@@ -104,10 +139,10 @@ mod tests {
         let mut st = BfsState::new(&pg);
         let mut comm = CommBuffers::new(&pg);
         st.set_root(0, 0);
-        let delta = step(&pg, 0, &mut st, &mut comm, 0);
-        assert_eq!(delta.work.edges_examined, 2);
-        assert_eq!(delta.work.activated, 1);
-        assert_eq!(delta.crossing, 1);
+        let (work, crossing) = step(&pg, 0, &mut st, &mut comm, 0);
+        assert_eq!(work.edges_examined, 2);
+        assert_eq!(work.activated, 1);
+        assert_eq!(crossing, 1);
         assert_eq!(st.depth[1], 1);
         assert_eq!(st.parent[1], 0);
         assert!(st.global_next.get(1), "local activation marks the shared next frontier");
@@ -126,8 +161,8 @@ mod tests {
         step(&pg, 0, &mut st, &mut comm, 0);
         // Level 1: frontier {1}; its neighbour 0 is visited.
         st.advance_frontiers();
-        let delta = step(&pg, 0, &mut st, &mut comm, 1);
-        assert_eq!(delta.work.activated, 0);
+        let (work, _) = step(&pg, 0, &mut st, &mut comm, 1);
+        assert_eq!(work.activated, 0);
         assert_eq!(st.depth[0], 0, "root depth untouched");
     }
 
@@ -140,8 +175,57 @@ mod tests {
         st.set_root(0, 0);
         st.activate_local(0, 1, 0, 0); // force both into current frontier
         st.frontiers[0].current.set(1);
-        let delta = step(&pg, 0, &mut st, &mut comm, 0);
-        assert_eq!(delta.crossing, 1, "second push to same vertex deduplicated");
+        let (_, crossing) = step(&pg, 0, &mut st, &mut comm, 0);
+        assert_eq!(crossing, 1, "second push to same vertex deduplicated");
+    }
+
+    #[test]
+    fn chunked_run_dedups_across_chunks_with_lowest_chunk_parent() {
+        // Frontier {0, 1} both adjacent to local 2 and remote 3. Two
+        // chunks of one vertex each: both record candidates; the merge
+        // must count one activation/crossing and keep chunk 0's parent.
+        let pg = two_cpu(vec![(0, 2), (1, 2), (0, 3), (1, 3), (0, 1)], 4, vec![0, 0, 0, 1]);
+        let mut st = BfsState::new(&pg);
+        let mut comm = CommBuffers::new(&pg);
+        st.set_root(0, 0);
+        st.frontiers[0].current.set(1);
+        st.visited[0].set(1);
+        let (work, crossing, deltas) = step_chunked(&pg, 0, &mut st, &mut comm, 0, 2);
+        assert_eq!(deltas.len(), 2);
+        // Each chunk independently proposed the same targets…
+        assert!(deltas.iter().all(|d| d.activations.iter().any(|&(w, _)| w == 2)));
+        assert!(deltas.iter().all(|d| d.contribs.iter().any(|&(w, _)| w == 3)));
+        // …but the merge collapses them, first (lowest chunk) wins.
+        assert_eq!(work.activated, 1);
+        assert_eq!(crossing, 1);
+        assert_eq!(st.parent[2], 0, "chunk 0's parent candidate wins the tie");
+        assert_eq!(st.contrib_parent[0][3], 0, "chunk 0's contribution wins the tie");
+    }
+
+    #[test]
+    fn chunk_counts_are_invariant_across_chunkings() {
+        let edges =
+            vec![(0, 1), (0, 2), (0, 3), (1, 3), (1, 4), (2, 4), (3, 5), (2, 5), (4, 5)];
+        let mk = || {
+            let pg = two_cpu(edges.clone(), 6, vec![0, 0, 0, 0, 1, 1]);
+            let mut st = BfsState::new(&pg);
+            let comm = CommBuffers::new(&pg);
+            st.set_root(0, 0);
+            st.frontiers[0].current.set(1);
+            st.visited[0].set(1);
+            st.frontiers[0].current.set(2);
+            st.visited[0].set(2);
+            (pg, st, comm)
+        };
+        let (pg, mut st, mut comm) = mk();
+        let (w1, c1, _) = step_chunked(&pg, 0, &mut st, &mut comm, 0, 1);
+        let d1 = (st.depth.clone(), st.parent.clone());
+        for n in [2, 3, 8] {
+            let (pg, mut st, mut comm) = mk();
+            let (w, c, _) = step_chunked(&pg, 0, &mut st, &mut comm, 0, n);
+            assert_eq!((w, c), (w1, c1), "{n} chunks");
+            assert_eq!((st.depth.clone(), st.parent.clone()), d1, "{n} chunks");
+        }
     }
 
     #[test]
@@ -149,8 +233,33 @@ mod tests {
         let pg = two_cpu(vec![(0, 1)], 2, vec![0, 0]);
         let mut st = BfsState::new(&pg);
         let mut comm = CommBuffers::new(&pg);
-        let delta = step(&pg, 0, &mut st, &mut comm, 0);
-        assert_eq!(delta.work.edges_examined + delta.work.activated + delta.crossing, 0);
-        assert!(delta.activations.is_empty() && delta.contribs.is_empty());
+        let (work, crossing, deltas) = step_chunked(&pg, 0, &mut st, &mut comm, 0, 1);
+        assert_eq!(work.edges_examined + work.activated + crossing, 0);
+        assert!(deltas.iter().all(|d| d.activations.is_empty() && d.contribs.is_empty()));
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_dedup_marks_clean() {
+        // Run a level that marks dedup bits, then reuse the same scratch
+        // for a later level touching the same targets — stale marks would
+        // silently drop the new candidates.
+        let pg = two_cpu(vec![(0, 1), (1, 2)], 3, vec![0, 0, 0]);
+        let mut st = BfsState::new(&pg);
+        let mut scratch = ChunkScratch::new(3);
+        st.set_root(0, 0);
+        {
+            let (slots, gnext) = st.split_for_superstep();
+            cpu_top_down(&pg, 0, slots[0], &gnext, &[0], &mut scratch);
+        }
+        assert_eq!(scratch.delta.activations, vec![(1, 0)]);
+        st.apply_step_delta(0, &scratch.delta, 0);
+        st.advance_frontiers();
+        // Next level from frontier {1}: target 2 is fresh; target 0 is
+        // visited. Reuse the same scratch.
+        {
+            let (slots, gnext) = st.split_for_superstep();
+            cpu_top_down(&pg, 0, slots[0], &gnext, &[1], &mut scratch);
+        }
+        assert_eq!(scratch.delta.activations, vec![(2, 1)]);
     }
 }

@@ -348,7 +348,8 @@ pub fn usage() -> &'static str {
                  --scale N | --graph FILE | --class twitter-sim|wiki-sim|lj-sim\n\
                  --config 2S2G --partition spec|random --policy do|td\n\
                  --threads N (worker threads for graph generation, CSR build,\n\
-                 partitioning, AND partition kernels; bit-identical to N=1)\n\
+                 partitioning, AND the partition kernels — each kernel fans out\n\
+                 into up to N weight-balanced chunks; bit-identical to N=1)\n\
                  --roots K --accel pjrt|sim --artifacts DIR --validate --verbose\n\
                  --gpu-mem-mb M --gpu-max-degree D --naive\n\
        baseline  single-address-space reference BFS\n\

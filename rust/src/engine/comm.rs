@@ -118,19 +118,6 @@ impl CommBuffers {
         &self.bufs[src][dst]
     }
 
-    /// One source partition's outgoing buffers (indexed by destination).
-    #[inline]
-    pub fn row_mut(&mut self, src: usize) -> &mut [Bitmap] {
-        &mut self.bufs[src]
-    }
-
-    /// Per-source rows in partition order — each row goes to the worker
-    /// thread running that partition's top-down kernel (rows never alias,
-    /// so the parallel kernel phase needs no locking here).
-    pub fn rows_mut(&mut self) -> std::slice::IterMut<'_, Vec<Bitmap>> {
-        self.bufs.iter_mut()
-    }
-
     pub fn clear(&mut self) {
         for row in self.bufs.iter_mut() {
             for b in row.iter_mut() {

@@ -5,12 +5,13 @@
 //! kernel for the current direction, exchanges frontier state once
 //! (push after top-down, pull before bottom-up), and synchronizes.
 //!
-//! Under [`ExecutionMode::Parallel`] the partition kernels of one
-//! superstep run **concurrently** on worker threads with a single barrier
-//! per level; each kernel produces a thread-local [`StepDelta`] that the
-//! driver merges deterministically (ascending partition id) at the
-//! barrier, so `Sequential` and `Parallel(n)` produce bit-identical
-//! results (DESIGN.md Section 4). All *timing* is attributed by the device
+//! Under [`ExecutionMode::Parallel`] each CPU partition kernel is further
+//! split into edge-weight-balanced *chunks* that run concurrently on the
+//! shared worker pool; every chunk produces a thread-local [`StepDelta`]
+//! that the driver merges deterministically — ascending `(partition id,
+//! chunk index)`, first candidate wins — at the level barrier, so
+//! `Sequential` and `Parallel(n)` produce bit-identical results at every
+//! thread count (DESIGN.md Sections 4 and 10). All *timing* is attributed by the device
 //! model (`runtime::device`), which converts the per-PE work counters
 //! collected here into per-level busy times on the paper's testbed —
 //! max over concurrently-busy PEs, not a sum. This is the
@@ -67,7 +68,10 @@ pub struct PeWork {
     /// Edges examined (top-down: out-edges of frontier; bottom-up: edges
     /// scanned before early exit; accelerator: dense lanes).
     pub edges_examined: u64,
-    /// Vertices touched (frontier members or unvisited-scan length).
+    /// Vertices whose adjacency was genuinely walked (top-down: frontier
+    /// members; bottom-up: *unvisited* vertices scanned — already-visited
+    /// vertices skipped with a bit probe are not counted; accelerator:
+    /// dense rows streamed).
     pub vertices_scanned: u64,
     /// Vertices newly activated by this PE this level.
     pub activated: u64,
@@ -89,36 +93,83 @@ impl PeWork {
     }
 }
 
-/// One partition kernel's thread-local superstep output, merged into the
-/// shared BFS state at the level barrier (ascending partition id, which is
-/// the deterministic tie-break rule — DESIGN.md Section 4).
+/// One kernel *chunk*'s thread-local superstep output, merged into the
+/// shared BFS state at the level barrier in ascending `(partition id,
+/// chunk index)` order — the deterministic tie-break rule (DESIGN.md
+/// Sections 4 and 10). A sequential run is the one-chunk-per-partition
+/// special case.
 ///
-/// During the kernel itself only the partition's own bitmaps (plus the
-/// shared atomic next-frontier) are written; everything that touches the
-/// global `depth`/`parent` arrays or another address space travels here.
+/// During the kernel itself only the partition's next-frontier bitmap and
+/// the shared global next-frontier are marked (atomic fetch-or — set
+/// union, so content is interleaving-independent); everything
+/// order-sensitive — `depth`/`parent` writes, parent contributions, the
+/// crossing census — travels here as *candidates* and is deduplicated
+/// first-wins at the barrier, which is what keeps parent tie-breaks
+/// bit-identical to a sequential run at every thread count.
 #[derive(Clone, Debug, Default)]
 pub struct StepDelta {
-    /// Work counters for the device model.
+    /// Work counters for the device model. `activated` is left zero by the
+    /// kernels: the authoritative count is produced by the merge (a target
+    /// reached from two chunks is one activation, not two).
     pub work: PeWork,
-    /// Activations routed into push buffers (boundary crossings).
-    pub crossing: u64,
-    /// Owner-local activations as `(vertex gid, parent gid)`; applied as
-    /// `depth = level + 1`, `parent = parent gid` at the barrier.
+    /// Owner-local activation candidates as `(vertex gid, parent gid)`;
+    /// the merge applies the first candidate per vertex as
+    /// `depth = level + 1`, `parent = parent gid`.
     pub activations: Vec<(u32, u32)>,
-    /// Remote-parent contributions as `(target gid, parent gid)`; recorded
-    /// against this partition's contribution fragment at the barrier.
+    /// Remote-parent contribution candidates as `(target gid, parent
+    /// gid)`; the merge records the first per target against this
+    /// partition's contribution fragment and counts the crossing.
     pub contribs: Vec<(u32, u32)>,
 }
 
 impl StepDelta {
     /// Reset for a new superstep, keeping the vectors' capacity (deltas
-    /// are per-partition scratch reused every level — hot path: no
-    /// allocation once warm).
+    /// are per-chunk scratch reused every level — hot path: no allocation
+    /// once warm).
     pub fn clear(&mut self) {
         self.work = PeWork::default();
-        self.crossing = 0;
         self.activations.clear();
         self.contribs.clear();
+    }
+}
+
+/// Reusable scratch for one kernel chunk of the nested-parallel kernel
+/// phase (DESIGN.md Section 10): the chunk's [`StepDelta`] plus a
+/// chunk-local dedup bitmap so a chunk pushes at most one candidate per
+/// target, bounding delta memory by distinct targets rather than edges.
+///
+/// The dedup marks are cleared *lazily*: [`ChunkScratch::begin`] walks the
+/// previous run's candidate lists and clears exactly those bits — O(prior
+/// candidates), not O(V) — so the bitmap never needs a full per-level wipe.
+pub struct ChunkScratch {
+    /// The chunk's kernel output, merged at the level barrier.
+    pub delta: StepDelta,
+    /// Chunk-local target marks over the global vertex space. All-zero
+    /// between kernel runs (see `begin`).
+    dedup: crate::util::Bitmap,
+}
+
+impl ChunkScratch {
+    pub fn new(num_vertices: usize) -> Self {
+        Self { delta: StepDelta::default(), dedup: crate::util::Bitmap::new(num_vertices) }
+    }
+
+    /// Prepare for a new kernel run: clear the previous run's dedup marks
+    /// via its candidate lists, then reset the delta. Every kernel calls
+    /// this first, whether or not it uses the dedup marks, so the
+    /// all-zero invariant survives interleaving kernel kinds on one slot.
+    pub fn begin(&mut self) {
+        for &(v, _) in self.delta.activations.iter().chain(self.delta.contribs.iter()) {
+            self.dedup.clear_bit(v as usize);
+        }
+        self.delta.clear();
+    }
+
+    /// Mark target `v` as seen by this chunk, returning whether it already
+    /// was — the chunk-local candidate dedup probe.
+    #[inline]
+    pub fn seen_or_mark(&mut self, v: usize) -> bool {
+        self.dedup.test_and_set(v)
     }
 }
 

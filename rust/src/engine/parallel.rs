@@ -1,11 +1,12 @@
-//! Concurrent superstep execution (DESIGN.md Section 4).
+//! Concurrent superstep execution (DESIGN.md Sections 4 and 10).
 //!
 //! One BSP superstep runs every partition's kernel; under
-//! [`ExecutionMode::Parallel`] those kernels execute on worker threads and
-//! meet at the level barrier. Scheduling goes through the shared scoped
-//! worker pool ([`crate::util::pool::run_tasks`] — the same executor the
-//! ingestion pipeline uses), which is deliberately simple and
-//! deterministic:
+//! [`ExecutionMode::Parallel`] each CPU kernel is split into
+//! edge-weight-balanced chunks and the chunks of *all* partitions execute
+//! together on worker threads, meeting at the level barrier. Scheduling
+//! goes through the shared scoped worker pool
+//! ([`crate::util::pool::run_tasks`] — the same executor the ingestion
+//! pipeline uses), which is deliberately simple and deterministic:
 //!
 //! * Tasks are indexed; results come back **in task order** regardless of
 //!   which worker ran what, so downstream merges see the same order as a
@@ -32,8 +33,10 @@ pub enum ExecutionMode {
     /// engine's behaviour; still the default).
     #[default]
     Sequential,
-    /// Run kernels concurrently on up to this many worker threads, with a
-    /// barrier per level. Output is bit-identical to `Sequential`.
+    /// Run kernels concurrently on up to this many worker threads, each
+    /// kernel further split into up to this many chunks, with a barrier
+    /// per level. Output is bit-identical to `Sequential` at every thread
+    /// count (DESIGN.md Section 10).
     Parallel(usize),
 }
 

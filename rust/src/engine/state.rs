@@ -18,16 +18,27 @@ pub const PARENT_UNSET: i64 = -1;
 /// `parent` sentinel: reached via a remote push; resolved at aggregation.
 pub const PARENT_REMOTE: i64 = -2;
 
-/// Exclusive access to one partition's kernel-owned bitmaps for the
-/// duration of a superstep's kernel phase (see
-/// [`BfsState::split_for_superstep`]). Moving a slot into a worker thread
-/// is what lets partition kernels run concurrently without locks: a vertex
-/// is owned by exactly one partition, so slots never alias.
+/// One partition's kernel-phase view of its own bitmaps (see
+/// [`BfsState::split_for_superstep`]). The slot is `Copy`: every *chunk*
+/// of the partition's kernel captures its own copy, which is what lets
+/// chunks of one kernel — and kernels of different partitions — run
+/// concurrently without locks (DESIGN.md Section 10):
+///
+/// * `visited` is the **pre-superstep** state and is read-only for the
+///   whole kernel phase. Activation marking is deferred to the barrier
+///   merge, so every chunk evaluates its candidates against the same
+///   stable snapshot regardless of scheduling — the root of the
+///   bit-identical determinism contract.
+/// * `next` is an atomic fetch-or view: chunks race on it safely, and
+///   OR-marking is commutative, so its content is a deterministic set
+///   union.
+#[derive(Clone, Copy)]
 pub struct KernelSlot<'a> {
-    /// The partition's visited bitmap (global space, owned bits only).
-    pub visited: &'a mut Bitmap,
-    /// The partition's current (read) / next (write) frontier pair.
-    pub frontier: &'a mut FrontierPair,
+    /// The partition's visited bitmap (global space, owned bits only),
+    /// frozen at superstep start.
+    pub visited: &'a Bitmap,
+    /// Atomic view of the partition's next frontier.
+    pub next: AtomicBitmap<'a>,
 }
 
 /// All mutable BFS state, reusable across runs (buffers never shrink).
@@ -199,37 +210,48 @@ impl BfsState {
 
     /// Split into per-partition kernel slots plus the shared atomic
     /// next-frontier view — the borrow boundary of one superstep's
-    /// concurrent kernel phase. Slot `i` hands worker `i` exclusive access
-    /// to partition `i`'s visited/frontier bitmaps, while the returned
-    /// [`AtomicBitmap`] is copied into every worker (fetch-or marking).
+    /// concurrent kernel phase. Slots are `Copy`: each chunk of partition
+    /// `i`'s kernel takes a copy of slot `i` (read-only pre-superstep
+    /// visited + atomic next), while the returned [`AtomicBitmap`] over
+    /// the global next frontier is copied into every chunk.
     pub fn split_for_superstep(&mut self) -> (Vec<KernelSlot<'_>>, AtomicBitmap<'_>) {
         let slots: Vec<KernelSlot<'_>> = self
             .visited
-            .iter_mut()
+            .iter()
             .zip(self.frontiers.iter_mut())
-            .map(|(visited, frontier)| KernelSlot { visited, frontier })
+            .map(|(visited, frontier)| KernelSlot { visited, next: frontier.next.as_atomic() })
             .collect();
         (slots, self.global_next.as_atomic())
     }
 
-    /// Merge one partition's thread-local kernel output at the level
-    /// barrier. Callers apply deltas in **ascending partition id** order —
-    /// the engine's deterministic tie-break rule (a vertex is owned by
-    /// exactly one partition, so activations never conflict; contribution
-    /// fragments are per-pusher and resolved lowest-pid-first at
-    /// aggregation).
+    /// Merge one kernel chunk's thread-local output at the level barrier.
+    /// Callers apply deltas in **ascending `(partition id, chunk index)`**
+    /// order — the engine's deterministic tie-break rule: within a
+    /// partition the first candidate per vertex wins (lowest chunk ⇒ the
+    /// same winner a sequential walk of the whole frontier queue picks),
+    /// and across partitions a vertex is owned by exactly one partition,
+    /// so activations never conflict (contribution fragments are
+    /// per-pusher and resolved lowest-pid-first at aggregation).
     ///
-    /// `level` is the superstep's frontier depth: activations land at
-    /// `level + 1`, contributions are recorded at `level` (the push
-    /// level), exactly as the sequential kernels always did.
-    pub fn apply_step_delta(&mut self, pid: usize, delta: &StepDelta, level: u32) {
+    /// Returns how many candidates were *newly* activated here — the
+    /// authoritative `activated` work count (duplicates across chunks
+    /// collapse). `level` is the superstep's frontier depth: activations
+    /// land at `level + 1`, contributions are recorded at `level` (the
+    /// push level), exactly as the sequential kernels always did.
+    pub fn apply_step_delta(&mut self, pid: usize, delta: &StepDelta, level: u32) -> u64 {
+        let mut newly = 0;
+        let vis = &mut self.visited[pid];
         for &(v, parent_gid) in &delta.activations {
-            self.depth[v as usize] = (level + 1) as i32;
-            self.parent[v as usize] = parent_gid as i64;
+            if !vis.test_and_set(v as usize) {
+                self.depth[v as usize] = (level + 1) as i32;
+                self.parent[v as usize] = parent_gid as i64;
+                newly += 1;
+            }
         }
         for &(target, parent_gid) in &delta.contribs {
             self.record_contrib(pid, target, parent_gid, level);
         }
+        newly
     }
 
     /// Final aggregation (paper Section 3.1): resolve `PARENT_REMOTE`
@@ -395,22 +417,38 @@ mod tests {
         let mut b = BfsState::new(&pg);
         // Direct (owner-side) path: vertex 4, parent 1, depth 3.
         a.activate_local(1, 4, 1, 3);
-        // Kernel-phase path: slot writes + delta applied at the barrier of
-        // superstep level 2 (activations land at level + 1 = 3).
+        // Kernel-phase path: the chunk marks the next-frontier bitmaps
+        // atomically and returns the activation as a candidate; visited,
+        // depth and parent land at the barrier of superstep level 2
+        // (activations land at level + 1 = 3).
         {
-            let (mut slots, gnext) = b.split_for_superstep();
-            let slot = &mut slots[1];
-            slot.visited.set(4);
-            slot.frontier.next.set(4);
+            let (slots, gnext) = b.split_for_superstep();
+            let slot = slots[1];
+            assert!(!slot.visited.get(4), "candidate checked against pre-state");
+            slot.next.set(4);
             gnext.set(4);
         }
         let delta = StepDelta { activations: vec![(4, 1)], ..Default::default() };
-        b.apply_step_delta(1, &delta, 2);
+        assert_eq!(b.apply_step_delta(1, &delta, 2), 1);
         assert_eq!(a.depth, b.depth);
         assert_eq!(a.parent, b.parent);
         assert_eq!(a.visited[1], b.visited[1]);
         assert!(b.global_next.get(4));
         assert!(b.frontiers[1].next.get(4));
+    }
+
+    #[test]
+    fn apply_dedups_candidates_first_wins_and_counts_once() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // Two chunks both reached vertex 4 (parents 1 and 5); the lower
+        // chunk is applied first and must win the parent tie-break.
+        let lo = StepDelta { activations: vec![(4, 1)], ..Default::default() };
+        let hi = StepDelta { activations: vec![(4, 5)], ..Default::default() };
+        let newly = st.apply_step_delta(1, &lo, 2) + st.apply_step_delta(1, &hi, 2);
+        assert_eq!(newly, 1, "one vertex, one activation");
+        assert_eq!(st.parent[4], 1, "lowest chunk wins the tie-break");
+        assert_eq!(st.depth[4], 3);
     }
 
     #[test]

@@ -79,8 +79,14 @@ fn cpu_bytes(work: &PeWork, dir: Direction) -> f64 {
         // queue reads + per-edge: col read (4B) + visited probe/activate
         // (~8B of random traffic incl. parent/depth writes amortized).
         Direction::TopDown => work.vertices_scanned as f64 * 4.0 + work.edges_examined as f64 * 12.0,
-        // per-vertex: row_ptr + visited-bit probe; per-edge: col read +
-        // frontier-bitmap gather (cache-line amortized random read).
+        // per genuinely-scanned (unvisited) vertex: row_ptr + visited-bit
+        // probe; per-edge: col read + frontier-bitmap gather (cache-line
+        // amortized random read). Already-visited vertices are skipped
+        // with a single bit probe that rides the same sequential bitmap
+        // cache lines — they are deliberately not in the counter
+        // (`bfs::bottom_up` counts scanned work only), so the model no
+        // longer bills a full row's traffic for vertices the kernel never
+        // touches.
         Direction::BottomUp => {
             work.vertices_scanned as f64 * 5.0 + work.edges_examined as f64 * 8.0
         }

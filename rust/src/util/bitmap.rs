@@ -47,6 +47,19 @@ impl Bitmap {
         self.words[i >> 5] |= 1 << (i & 31);
     }
 
+    /// Set bit `i`, returning whether it was already set (non-atomic; the
+    /// chunk-local dedup marks of the nested-parallel kernels probe and
+    /// mark in one access — DESIGN.md Section 10).
+    #[inline]
+    pub fn test_and_set(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        let word = &mut self.words[i >> 5];
+        let mask = 1u32 << (i & 31);
+        let was = *word & mask != 0;
+        *word |= mask;
+        was
+    }
+
     #[inline]
     pub fn clear_bit(&mut self, i: usize) {
         debug_assert!(i < self.bits);
@@ -201,6 +214,16 @@ mod tests {
         b.clear();
         assert_eq!(b.count(), 0);
         assert!(!b.any());
+    }
+
+    #[test]
+    fn test_and_set_reports_prior_state() {
+        let mut b = Bitmap::new(70);
+        assert!(!b.test_and_set(33), "first set: bit was clear");
+        assert!(b.test_and_set(33), "second set: bit was set");
+        assert!(b.get(33));
+        assert!(!b.test_and_set(32), "neighbouring bit untouched");
+        assert_eq!(b.count(), 2);
     }
 
     #[test]

@@ -101,6 +101,83 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal
+/// *weight* (one two-pass walk: total, then greedy boundary placement at
+/// the ideal `total * k / parts` marks). Items heavier than a whole share
+/// collapse boundaries — fewer, never empty, ranges come back. This is how
+/// the nested-parallel kernels carve a frontier queue into
+/// edge-weight-balanced chunks (DESIGN.md Section 10); chunk boundaries
+/// are a pure scheduling choice, so any weighting yields identical output.
+pub fn split_by_weight(n: usize, parts: usize, weight: impl Fn(usize) -> u64) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    if parts == 1 {
+        return vec![0..n];
+    }
+    let total: u64 = (0..n).map(&weight).sum();
+    if total == 0 {
+        return split_ranges(n, parts);
+    }
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc: u128 = 0;
+    let mut k: u128 = 1; // next ideal boundary (at cumulative total·k/parts)
+    for i in 0..n {
+        acc += weight(i) as u128;
+        if i + 1 < n && out.len() + 1 < parts && acc * parts as u128 >= total as u128 * k {
+            out.push(start..i + 1);
+            start = i + 1;
+            // A heavy item may overshoot several ideal boundaries at once;
+            // resume at the first boundary past the cumulative weight.
+            k = acc * parts as u128 / total as u128 + 1;
+        }
+    }
+    out.push(start..n);
+    debug_assert!(out.iter().all(|r| !r.is_empty()));
+    out
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal
+/// weight, given the *cumulative* weight `prefix(i)` of items `0..i`
+/// (monotone, `prefix(0) == 0`). Boundaries are found by binary search —
+/// `O(parts · log n)`, no walk — which is what the bottom-up kernel uses
+/// per level with the partition CSR's `row_ptr` as the prefix (a walk
+/// would reintroduce a serial `O(scan_limit)` pass every level).
+pub fn split_by_prefix(n: usize, parts: usize, prefix: impl Fn(usize) -> u64) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = prefix(n);
+    if parts == 1 || total == 0 {
+        return split_ranges(n, parts.min(n));
+    }
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for k in 1..parts as u64 {
+        let target = (total as u128 * k as u128 / parts as u128) as u64;
+        // Smallest b in (start, n) with prefix(b) >= target.
+        let (mut lo, mut hi) = (start, n);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if prefix(mid) < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo > start && lo < n {
+            out.push(start..lo);
+            start = lo;
+        }
+    }
+    out.push(start..n);
+    debug_assert!(out.iter().all(|r| !r.is_empty()));
+    out
+}
+
 /// Split a slice into `cuts.len() + 1` disjoint mutable subslices at the
 /// given ascending cut offsets (each within `data.len()`), so each piece
 /// can be handed to a different worker.
@@ -206,6 +283,60 @@ mod tests {
                 assert!(hi - lo <= 1, "imbalanced {lo}..{hi} (n={n} parts={parts})");
             }
         }
+    }
+
+    /// Cover `0..n` exactly, in order, with no empty range.
+    fn assert_covers(ranges: &[Range<usize>], n: usize, what: &str) {
+        let mut next = 0usize;
+        for r in ranges {
+            assert_eq!(r.start, next, "gap at {next} ({what})");
+            assert!(!r.is_empty(), "empty range ({what})");
+            next = r.end;
+        }
+        assert_eq!(next, n, "{what}");
+    }
+
+    #[test]
+    fn split_by_weight_balances_skewed_items() {
+        // One huge item then many light ones (a hub-led frontier queue).
+        let w = |i: usize| if i == 0 { 1000u64 } else { 1 };
+        let ranges = split_by_weight(101, 4, w);
+        assert_covers(&ranges, 101, "skewed");
+        // The hub swallows the first three ideal boundaries: it sits alone
+        // in chunk 0, and no degenerate single-item chunks follow it.
+        assert_eq!(ranges[0], 0..1);
+        assert_eq!(ranges[1], 1..101);
+        // Uniform weights reduce to the count splitter's balance.
+        let ranges = split_by_weight(100, 4, |_| 7);
+        assert_covers(&ranges, 100, "uniform");
+        for r in &ranges {
+            assert_eq!(r.len(), 25);
+        }
+        // Degenerate shapes.
+        assert!(split_by_weight(0, 4, |_| 1).is_empty());
+        assert_eq!(split_by_weight(5, 1, |_| 1), vec![0..5]);
+        assert_covers(&split_by_weight(3, 8, |_| 0), 3, "zero weights");
+    }
+
+    #[test]
+    fn split_by_prefix_matches_weight_splitter_semantics() {
+        // prefix of weights [5, 1, 1, 1, 5, 1, 1, 1].
+        let weights = [5u64, 1, 1, 1, 5, 1, 1, 1];
+        let prefix: Vec<u64> = std::iter::once(0)
+            .chain(weights.iter().scan(0, |acc, &w| {
+                *acc += w;
+                Some(*acc)
+            }))
+            .collect();
+        let ranges = split_by_prefix(8, 2, |i| prefix[i]);
+        assert_covers(&ranges, 8, "two halves");
+        // Total 16; the midpoint (8) is reached at item 4.
+        assert_eq!(ranges[0], 0..4);
+        assert_eq!(ranges[1], 4..8);
+        assert!(split_by_prefix(0, 3, |_| 0).is_empty());
+        assert_covers(&split_by_prefix(6, 3, |_| 0), 6, "zero total");
+        // More parts than items still covers without empties.
+        assert_covers(&split_by_prefix(2, 9, |i| i as u64), 2, "tiny");
     }
 
     #[test]
