@@ -125,6 +125,30 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         cfg: HybridConfig,
         accel: Option<&'g mut A>,
     ) -> Result<Self> {
+        Self::with_state(pg, cfg, accel, BfsState::new(pg))
+    }
+
+    /// Build a runner around an existing [`BfsState`] — the service layer's
+    /// traversal-state-pool entry point (`BfsState::reset` recycles the
+    /// buffers in O(touched) between runs instead of reallocating them).
+    /// `state` must have been created for a graph of the same shape.
+    ///
+    /// GPU partitions are uploaded via `Accelerator::setup` unless the
+    /// accelerator reports them already resident
+    /// (`Accelerator::is_ready` — a session view over a shared device
+    /// context arrives pre-loaded).
+    pub fn with_state(
+        pg: &'g PartitionedGraph,
+        cfg: HybridConfig,
+        accel: Option<&'g mut A>,
+        state: BfsState,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            state.shape_matches(pg),
+            "BfsState shape mismatch: state is for {} vertices / {} partitions",
+            state.num_vertices,
+            state.visited.len()
+        );
         let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
         let mut accel = accel;
         if has_gpu {
@@ -132,7 +156,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 .as_deref_mut()
                 .ok_or_else(|| anyhow!("partitioning has GPU partitions but no accelerator"))?;
             for p in &pg.parts {
-                if p.kind.is_gpu() {
+                if p.kind.is_gpu() && !a.is_ready(p.id) {
                     // The Accelerator impl chooses its SELL slicing and
                     // pads up to its variant grid.
                     a.setup(p.id, p)?;
@@ -140,7 +164,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             }
         }
         Ok(Self {
-            state: BfsState::new(pg),
+            state,
             comm: CommBuffers::new(pg),
             cfg,
             accel,
@@ -151,6 +175,14 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             gpu_merge: Vec::new(),
             pg,
         })
+    }
+
+    /// Hand the traversal state back (pool recycling). A state whose last
+    /// run errored mid-flight is poisoned: its next `reset` takes the full
+    /// O(V) wipe instead of the sparse recycle, so recycling is always
+    /// safe.
+    pub fn into_state(self) -> BfsState {
+        self.state
     }
 
     pub fn graph(&self) -> &'g PartitionedGraph {
@@ -280,6 +312,12 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 endpoints += self.degree(v) as u64;
             }
         }
+
+        // Clean completion: the next reset may recycle in O(touched).
+        // Every early-error return above skips this, leaving the state
+        // poisoned (full wipe on next use) — which is what makes pooling
+        // failed-query states safe.
+        self.state.finish();
 
         Ok(BfsRun {
             root,
@@ -449,12 +487,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 self.gpu_merge.clear();
                 let state = &mut self.state;
                 for v in self.incoming.iter_ones() {
-                    if !state.visited[q].get(v) {
-                        state.visited[q].set(v);
-                        state.depth[v] = (level + 1) as i32;
-                        state.parent[v] = crate::engine::state::PARENT_REMOTE;
-                        state.frontiers[q].next.set(v);
-                        state.global_next.set(v);
+                    if state.activate_pushed(q, v, level + 1) {
                         self.gpu_merge.push(pg.local_index[v]);
                     }
                 }

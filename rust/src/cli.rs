@@ -16,6 +16,7 @@ use crate::partition::{
     random_partition, specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
 };
 use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
+use crate::service::{run_batch, BatchOptions, QueryOutcome, ResidentGraph, SchedulePolicy};
 use crate::util::tables::{fmt_teps, fmt_time, Table};
 
 /// Minimal `--key value` / `--flag` argument map.
@@ -206,9 +207,30 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
         pg.gpu_vertex_share(&g) * 100.0
     );
 
-    let roots =
-        metrics::sample_roots(g.num_vertices, |v| g.degree(v), roots_n, args.get_parse("seed", 42)?);
-    anyhow::ensure!(!roots.is_empty(), "no non-singleton roots found");
+    // Explicit `--root R` runs exactly that root. Validation is the
+    // service admission rule: out-of-range is a clean error, an isolated
+    // root a trivial (but valid) traversal — never a panic.
+    let roots = if args.get("root").is_some() {
+        let r = args.get_parse("root", 0u32)?;
+        anyhow::ensure!(
+            (r as usize) < g.num_vertices,
+            "--root {r} out of range (graph has {} vertices)",
+            g.num_vertices
+        );
+        if g.degree(r) == 0 {
+            println!("note: root {r} is isolated — trivial traversal (reaches only itself)");
+        }
+        vec![r]
+    } else {
+        let roots = metrics::sample_roots(
+            g.num_vertices,
+            |v| g.degree(v),
+            roots_n,
+            args.get_parse("seed", 42)?,
+        );
+        anyhow::ensure!(!roots.is_empty(), "no non-singleton roots found");
+        roots
+    };
 
     // Accelerator backend selection. By default (no --accel flag) a
     // missing artifact set falls back to the bit-exact SimAccelerator
@@ -307,6 +329,249 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the resident graph a service command operates on: ingest +
+/// partition once per the common CLI flags, shared as an `Arc` exactly
+/// like a `GraphRegistry` entry. The single-graph CLI commands skip the
+/// registry itself — nothing here ever looks a graph up by name; the
+/// registry surface is exercised by the graph500 example, the throughput
+/// bench, and the service tests.
+fn resident_from_args(args: &Args) -> Result<std::sync::Arc<ResidentGraph>> {
+    let (g, name) = load_graph(args)?;
+    let hw = hardware(args)?;
+    let pg = partition_graph(args, &g, &hw)?;
+    Ok(std::sync::Arc::new(ResidentGraph::from_partitioned(&name, g, &hw, pg)))
+}
+
+/// Parse whitespace-separated root ids from one input line, after
+/// stripping a trailing `#` comment — the one parser behind both roots
+/// files and the `serve` stdin loop.
+fn parse_root_tokens(line: &str, out: &mut Vec<u32>) -> Result<()> {
+    for tok in line.split('#').next().unwrap_or("").split_whitespace() {
+        out.push(tok.parse::<u32>().map_err(|_| anyhow!("bad root {tok:?}"))?);
+    }
+    Ok(())
+}
+
+/// Scheduler knobs from the common service flags.
+fn batch_options(args: &Args) -> Result<BatchOptions> {
+    let policy = match args.get("sched").unwrap_or("throughput") {
+        "throughput" | "tp" => SchedulePolicy::Throughput,
+        "latency" | "lat" => SchedulePolicy::Latency,
+        other => bail!("unknown --sched {other:?} (expected throughput|latency)"),
+    };
+    Ok(BatchOptions {
+        threads: threads(args)?,
+        policy,
+        max_concurrency: args.get_parse("batch", 8usize)?,
+        bfs_policy: self::policy(args)?,
+        comm_mode: CommMode::Batched,
+    })
+}
+
+/// Service query roots: `--roots FILE` (whitespace-separated ids, `#`
+/// comments) or `--nroots N --seed S` sampled per the Graph500 spec.
+fn service_roots(args: &Args, rg: &ResidentGraph) -> Result<Vec<u32>> {
+    if let Some(path) = args.get("roots") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading roots file {path}"))?;
+        let mut roots = Vec::new();
+        for line in text.lines() {
+            parse_root_tokens(line, &mut roots)
+                .with_context(|| format!("in roots file {path}"))?;
+        }
+        anyhow::ensure!(!roots.is_empty(), "roots file {path} holds no roots");
+        return Ok(roots);
+    }
+    let n = args.get_parse("nroots", 64usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), n, seed);
+    anyhow::ensure!(!roots.is_empty(), "no non-singleton roots found");
+    Ok(roots)
+}
+
+/// Report one batch's outcomes: validation, modeled latency distribution,
+/// harmonic TEPS, and measured queries/sec. Returns (completed, failed).
+/// A validation failure counts as that query failing — reported per
+/// query, like every other failure mode; it never discards the rest of
+/// the batch's report (`--strict` turns any failure into a hard error
+/// afterwards).
+fn report_batch(
+    rg: &ResidentGraph,
+    outcomes: &[QueryOutcome],
+    wall_seconds: f64,
+    validate: bool,
+    verbose: bool,
+) -> (usize, usize) {
+    let device = DeviceModel::default();
+    let mut latencies = Vec::new();
+    let mut teps = Vec::new();
+    let mut failed = 0usize;
+    for (i, outcome) in outcomes.iter().enumerate() {
+        match outcome {
+            QueryOutcome::Complete(run) => {
+                if validate {
+                    if let Err(e) = validate_graph500(&rg.csr, run.root, &run.parent, &run.depth)
+                    {
+                        failed += 1;
+                        println!(
+                            "  query {i:>4} root {:<10} FAILED validation: {e}",
+                            run.root
+                        );
+                        continue;
+                    }
+                }
+                let lat = device.query_latency(run, &rg.pg);
+                latencies.push(lat);
+                if run.traversed_edges() > 0 {
+                    teps.push(metrics::teps(run.traversed_edges(), lat));
+                }
+                if verbose {
+                    println!(
+                        "  query {i:>4} root {:<10} reached {:>9} modeled {}",
+                        run.root,
+                        run.reached_vertices,
+                        fmt_time(lat)
+                    );
+                }
+            }
+            QueryOutcome::Failed { root, error } => {
+                failed += 1;
+                println!("  query {i:>4} root {root:<10} FAILED: {error}");
+            }
+        }
+    }
+    let lat = metrics::latency_summary(&latencies);
+    let pool = rg.states.stats();
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["queries".to_string(), format!("{} ok / {failed} failed", lat.n)]);
+    t.row(vec![
+        "throughput (measured)".to_string(),
+        format!("{:.1} queries/s", lat.n as f64 / wall_seconds.max(1e-12)),
+    ]);
+    t.row(vec!["harmonic TEPS (modeled)".to_string(), fmt_teps(metrics::harmonic_mean(&teps))]);
+    t.row(vec!["latency p50 (modeled)".to_string(), fmt_time(lat.p50)]);
+    t.row(vec!["latency p99 (modeled)".to_string(), fmt_time(lat.p99)]);
+    t.row(vec!["latency max (modeled)".to_string(), fmt_time(lat.max)]);
+    t.row(vec![
+        "state pool".to_string(),
+        format!("{} created, {} recycled, {} idle", pool.created, pool.recycled, pool.idle),
+    ]);
+    t.print();
+    if validate {
+        println!("validation: {} queries passed Graph500 checks", lat.n);
+    }
+    (lat.n, failed)
+}
+
+/// `totem-do batch` — run a root campaign through the resident service:
+/// partition once, recycle traversal state, schedule K queries at a time.
+/// Per-query outputs are bit-identical to standalone `bfs` runs.
+pub fn cmd_batch(args: &Args) -> Result<()> {
+    let rg = resident_from_args(args)?;
+    let opts = batch_options(args)?;
+    let roots = service_roots(args, &rg)?;
+    println!(
+        "service graph={} V={} E={} config={} sched={:?} batch={} threads={} queries={}",
+        rg.name,
+        rg.num_vertices(),
+        rg.csr.num_undirected_edges(),
+        rg.hw.label(),
+        opts.policy,
+        opts.max_concurrency,
+        opts.threads,
+        roots.len()
+    );
+    if rg.hw.gpus > 0 {
+        println!(
+            "note: service sessions run GPU partitions on the shared bit-exact \
+             SimAccelerator device image"
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let outcomes = run_batch(&rg, &roots, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let (_ok, failed) =
+        report_batch(&rg, &outcomes, wall, args.has("validate"), args.has("verbose"));
+    anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
+    Ok(())
+}
+
+/// `totem-do serve` — the resident engine as an interactive service: load
+/// once, then answer batches of root queries from stdin (one batch per
+/// line, whitespace-separated roots; `quit` or EOF ends the session).
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let rg = resident_from_args(args)?;
+    let opts = batch_options(args)?;
+    let validate = args.has("validate");
+    let device = DeviceModel::default();
+    println!(
+        "serving graph={} V={} E={} config={} sched={:?} batch={} threads={}",
+        rg.name,
+        rg.num_vertices(),
+        rg.csr.num_undirected_edges(),
+        rg.hw.label(),
+        opts.policy,
+        opts.max_concurrency,
+        opts.threads
+    );
+    println!("enter whitespace-separated roots (one batch per line); 'quit' or EOF ends");
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let bare = line.split('#').next().unwrap_or("").trim();
+        if bare.is_empty() {
+            continue;
+        }
+        if bare == "quit" || bare == "exit" {
+            break;
+        }
+        let mut roots = Vec::new();
+        if let Err(e) = parse_root_tokens(bare, &mut roots) {
+            println!("error: {e} (expected vertex ids)");
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let outcomes = run_batch(&rg, &roots, &opts)?;
+        let wall = t0.elapsed().as_secs_f64();
+        for outcome in &outcomes {
+            match outcome {
+                QueryOutcome::Complete(run) => {
+                    // Served results never go out unvalidated when the
+                    // flag is set; a check failure is reported per query,
+                    // not fatal to the session.
+                    let checked = if !validate {
+                        ""
+                    } else if let Err(e) =
+                        validate_graph500(&rg.csr, run.root, &run.parent, &run.depth)
+                    {
+                        println!("root={} error=validation failed: {e}", run.root);
+                        continue;
+                    } else {
+                        " validated=ok"
+                    };
+                    println!(
+                        "root={} reached={} levels={} modeled={} traversed_edges={}{checked}",
+                        run.root,
+                        run.reached_vertices,
+                        run.levels.len(),
+                        fmt_time(device.query_latency(run, &rg.pg)),
+                        run.traversed_edges()
+                    );
+                }
+                QueryOutcome::Failed { root, error } => println!("root={root} error={error}"),
+            }
+        }
+        println!("batch of {} served in {}", outcomes.len(), fmt_time(wall));
+    }
+    let pool = rg.states.stats();
+    println!(
+        "session done: {} states created, {} recycled, {} idle",
+        pool.created, pool.recycled, pool.idle
+    );
+    Ok(())
+}
+
 /// `totem-do baseline` — single-address-space reference runs (Table 1 roles).
 pub fn cmd_baseline(args: &Args) -> Result<()> {
     let (g, name) = load_graph(args)?;
@@ -350,8 +615,22 @@ pub fn usage() -> &'static str {
                  --threads N (worker threads for graph generation, CSR build,\n\
                  partitioning, AND the partition kernels — each kernel fans out\n\
                  into up to N weight-balanced chunks; bit-identical to N=1)\n\
-                 --roots K --accel pjrt|sim --artifacts DIR --validate --verbose\n\
+                 --roots K | --root R (explicit root: out-of-range is a clean\n\
+                 error, an isolated root a trivial traversal)\n\
+                 --accel pjrt|sim --artifacts DIR --validate --verbose\n\
                  --gpu-mem-mb M --gpu-max-degree D --naive\n\
+       batch     run a root campaign through the resident multi-query service\n\
+                 (partition once, recycle traversal state, schedule K queries\n\
+                 concurrently; per-query output bit-identical to `bfs`)\n\
+                 --roots FILE | --nroots N --seed S\n\
+                 --batch K --sched throughput|latency --threads N\n\
+                 --validate --verbose --strict (fail on any failed query)\n\
+                 plus the graph/hardware flags of `bfs`\n\
+       serve     resident service loop: load once, then answer batches of\n\
+                 roots from stdin (one whitespace-separated batch per line;\n\
+                 'quit' or EOF ends); takes `batch`'s graph/hardware/\n\
+                 scheduling flags plus --validate (per-query result lines\n\
+                 replace --verbose/--strict)\n\
        baseline  single-address-space reference BFS\n\
                  --policy do|td --sockets N --naive --roots K --validate\n\
        generate  write a workload graph\n\
@@ -414,6 +693,40 @@ mod tests {
         assert_eq!((hw.cpu_sockets, hw.gpus), (2, 2));
         let a = Args::parse(&argv(&["--config", "bogus"])).unwrap();
         assert!(hardware(&a).is_err());
+    }
+
+    #[test]
+    fn batch_options_parse_and_reject() {
+        let a =
+            Args::parse(&argv(&["--sched", "latency", "--batch", "4", "--threads", "2"])).unwrap();
+        let o = batch_options(&a).unwrap();
+        assert_eq!(o.policy, SchedulePolicy::Latency);
+        assert_eq!((o.max_concurrency, o.threads), (4, 2));
+        let d = batch_options(&Args::parse(&argv(&[])).unwrap()).unwrap();
+        assert_eq!(o.bfs_policy, d.bfs_policy, "direction policy defaults alike");
+        assert_eq!(d.policy, SchedulePolicy::Throughput);
+        let bad = Args::parse(&argv(&["--sched", "zigzag"])).unwrap();
+        assert!(batch_options(&bad).is_err());
+    }
+
+    #[test]
+    fn service_roots_from_file_with_comments_and_sampling() {
+        let a = Args::parse(&argv(&["--scale", "8", "--config", "2S0G"])).unwrap();
+        let (g, name) = load_graph(&a).unwrap();
+        let hw = hardware(&a).unwrap();
+        let rg = ResidentGraph::build(&name, g, &hw, &LayoutOptions::paper(), 1);
+        let mut p = std::env::temp_dir();
+        p.push(format!("totem_do_roots_{}.txt", std::process::id()));
+        std::fs::write(&p, "1 2 # hub roots\n3\n").unwrap();
+        let fa = Args::parse(&argv(&["--roots", p.to_str().unwrap()])).unwrap();
+        assert_eq!(service_roots(&fa, &rg).unwrap(), vec![1, 2, 3]);
+        std::fs::write(&p, "1 banana\n").unwrap();
+        assert!(service_roots(&fa, &rg).is_err(), "non-numeric root rejected");
+        std::fs::remove_file(&p).ok();
+        let sa = Args::parse(&argv(&["--nroots", "4", "--seed", "7"])).unwrap();
+        let sampled = service_roots(&sa, &rg).unwrap();
+        assert_eq!(sampled.len(), 4);
+        assert!(sampled.iter().all(|&r| rg.degree(r) > 0));
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod frontier;
 pub mod parallel;
 pub mod state;
 
-pub use accel::{Accelerator, BottomUpResult, SimAccelerator, TopDownResult};
+pub use accel::{Accelerator, BottomUpResult, SimAccelerator, SimContext, TopDownResult};
 pub use comm::{CommMode, CommStats};
 pub use parallel::{run_steps, ExecutionMode};
 pub use state::{BfsState, KernelSlot};

@@ -27,6 +27,12 @@
 use crate::util::pool;
 
 /// How the engine schedules the partition kernels of one superstep.
+///
+/// The service layer's batched scheduler (DESIGN.md Section 11) layers
+/// *inter-query* parallelism above this: each concurrent query runs its
+/// own engine under its own `ExecutionMode` budget on an outer worker
+/// lane. Because output is bit-identical across modes, that split is a
+/// pure scheduling choice too.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum ExecutionMode {
     /// Run kernels one after another on the calling thread (the seed

@@ -7,8 +7,9 @@
 //! * **Rust (this crate)** — the Totem-style coordinator: graph substrate,
 //!   specialized partitioning, BSP engine with push/pull frontier
 //!   communication and a concurrent superstep mode
-//!   ([`engine::ExecutionMode`]), direction-optimized BFS, device/energy
-//!   models, CLI.
+//!   ([`engine::ExecutionMode`]), direction-optimized BFS, the resident
+//!   multi-query [`service`] layer (graph registry, traversal-state pool,
+//!   batched query scheduler), device/energy models, CLI.
 //! * **JAX/Pallas (`python/compile/`)** — the accelerator partition's
 //!   per-level kernels, AOT-lowered to HLO text at build time.
 //! * **PJRT (`runtime/`)** — loads and executes those artifacts from the
@@ -26,4 +27,5 @@ pub mod bfs;
 pub mod engine;
 pub mod partition;
 pub mod runtime;
+pub mod service;
 pub mod util;

@@ -14,6 +14,8 @@ fn main() -> Result<()> {
     let args = cli::Args::parse(rest)?;
     match cmd.as_str() {
         "bfs" => cli::cmd_bfs(&args),
+        "batch" => cli::cmd_batch(&args),
+        "serve" => cli::cmd_serve(&args),
         "baseline" => cli::cmd_baseline(&args),
         "generate" => cli::cmd_generate(&args),
         "stats" => cli::cmd_stats(&args),

@@ -28,6 +28,50 @@ pub fn teps(traversed_edges: u64, seconds: f64) -> f64 {
     traversed_edges as f64 / seconds.max(1e-12)
 }
 
+/// Nearest-rank percentile of unsorted samples (`p` in `[0, 100]`; the
+/// Graph500 reporting convention — no interpolation, every reported value
+/// is an actually observed sample). Empty input yields 0.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    percentile_of_sorted(&sorted, p)
+}
+
+/// Nearest-rank percentile of an already ascending-sorted sample slice.
+fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+/// Latency distribution of a query campaign (seconds; typically the
+/// device model's attributed per-query totals). The service throughput
+/// bench and the `batch` CLI report p50/p99 from here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn latency_summary(latencies: &[f64]) -> LatencySummary {
+    // One sort shared by every rank (latency samples are non-negative,
+    // so the sorted maximum is the last element).
+    let mut sorted = latencies.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    LatencySummary {
+        n: sorted.len(),
+        mean: mean(&sorted),
+        p50: percentile_of_sorted(&sorted, 50.0),
+        p99: percentile_of_sorted(&sorted, 99.0),
+        max: sorted.last().copied().unwrap_or(0.0),
+    }
+}
+
 /// Sample `count` BFS roots with degree > 0, uniformly, per the Graph500
 /// spec (deterministic under `seed`).
 pub fn sample_roots(
@@ -88,6 +132,31 @@ mod tests {
     #[test]
     fn teps_formula() {
         assert!((teps(1_000_000, 0.5) - 2e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0, "rank clamps to the first sample");
+        // Unsorted input, small n: every output is an observed sample.
+        let xs = [4.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn latency_summary_fields() {
+        let s = latency_summary(&[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 0.25).abs() < 1e-12);
+        assert_eq!(s.p50, 0.2);
+        assert_eq!(s.p99, 0.4);
+        assert_eq!(s.max, 0.4);
+        assert_eq!(latency_summary(&[]).n, 0);
     }
 
     #[test]

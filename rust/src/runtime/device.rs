@@ -228,6 +228,15 @@ impl DeviceModel {
         RunTiming { init, levels, aggregation, total }
     }
 
+    /// Attributed end-to-end latency of one query on the modeled testbed —
+    /// the service layer's per-query latency sample (init + every level +
+    /// aggregation). Batch latency distributions (p50/p99) aggregate these
+    /// via `metrics::latency_summary`; being model-attributed, they are
+    /// deterministic for a given graph/root, unlike host wall-clock.
+    pub fn query_latency(&self, run: &BfsRun, pg: &PartitionedGraph) -> f64 {
+        self.attribute(run, pg, false).total
+    }
+
     /// Attribute a single-address-space baseline run on `sockets` sockets.
     pub fn attribute_baseline(
         &self,

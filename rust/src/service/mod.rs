@@ -1,0 +1,40 @@
+//! The multi-query BFS service layer (DESIGN.md Section 11) — the
+//! Graph500-campaign pattern ("load once, answer many") lifted into a
+//! resident engine that serves whole query streams:
+//!
+//! * [`GraphRegistry`] / [`ResidentGraph`] — ingest and partition a graph
+//!   **once**, then share it immutably (`Arc`) across every query,
+//!   including the accelerator's device image
+//!   ([`SimContext`](crate::engine::SimContext)): sessions stamp out
+//!   per-query accelerator views that share the SELL adjacency uploads
+//!   and allocate only their own visited mirrors.
+//! * [`StatePool`] — recycle [`BfsState`](crate::engine::BfsState)
+//!   allocations across queries. A recycled state resets in O(touched)
+//!   instead of O(V) (`BfsState::reset`'s sparse path), so small-diameter
+//!   queries stop paying allocation + wipe cost. States released after a
+//!   failed query are poisoned and take the full wipe — recycling is
+//!   always safe.
+//! * [`run_batch`] — the batched query scheduler: admit K concurrent root
+//!   queries and schedule them across the shared `util::pool` workers.
+//!   [`SchedulePolicy`] trades latency (one query at a time, all threads
+//!   chunking its kernels) against throughput (many queries in flight,
+//!   the thread budget partitioned across them).
+//!
+//! **Query-level determinism contract:** every completed query's output
+//! (`parent`, `depth`, per-level [`LevelStats`](crate::engine::LevelStats),
+//! aggregation bytes) is bit-identical to a standalone `cmd_bfs` run of
+//! the same root over the same partitioning — regardless of batch
+//! composition, batch size, schedule policy, or thread count. This holds
+//! because (a) queries share only immutable graph state, (b) each query
+//! owns its traversal state and accelerator visited mirror, and (c) the
+//! engine itself is bit-identical across `ExecutionMode`s (DESIGN.md
+//! Sections 4/9/10), so splitting the thread budget between queries
+//! changes wall-clock only.
+
+pub mod registry;
+pub mod scheduler;
+pub mod state_pool;
+
+pub use registry::{GraphRegistry, ResidentGraph};
+pub use scheduler::{run_batch, BatchOptions, QueryOutcome, SchedulePolicy};
+pub use state_pool::{PoolStats, StatePool};

@@ -1,0 +1,179 @@
+//! Graph registry: ingest/partition once, share immutably across queries.
+//!
+//! A [`ResidentGraph`] bundles everything a query needs that is *not*
+//! per-query state: the CSR (root validation, TEPS numerators), the
+//! partitioning, the hardware shape, the shared accelerator device image
+//! ([`SimContext`]) and the per-graph [`StatePool`]. The registry hands it
+//! out as `Arc<ResidentGraph>`, so concurrent batches — and concurrent
+//! *callers* — share one copy of the multi-gigabyte graph state while the
+//! type system guarantees nobody mutates it.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::engine::{SimAccelerator, SimContext};
+use crate::graph::Csr;
+use crate::partition::{
+    specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
+};
+
+use super::state_pool::StatePool;
+
+/// One resident graph: immutable after construction (interior mutability
+/// exists only inside the state pool's free list).
+pub struct ResidentGraph {
+    pub name: String,
+    pub csr: Csr,
+    pub pg: PartitionedGraph,
+    pub hw: HardwareConfig,
+    /// Shared accelerator device image (SELL uploads), present iff the
+    /// hardware shape has GPUs. Sessions clone `Arc`s out of it.
+    sim_ctx: Option<SimContext>,
+    /// Recyclable traversal states for this graph's shape.
+    pub states: StatePool,
+}
+
+impl ResidentGraph {
+    /// Ingest with the paper's specialized partitioning (the common path:
+    /// partition once at registration, amortize across every query).
+    pub fn build(
+        name: &str,
+        csr: Csr,
+        hw: &HardwareConfig,
+        opts: &LayoutOptions,
+        threads: usize,
+    ) -> Self {
+        let (pg, _) = specialized_partition_par(&csr, hw, opts, threads);
+        Self::from_partitioned(name, csr, hw, pg)
+    }
+
+    /// Wrap an already-partitioned graph (CLI flags may choose random
+    /// partitioning or custom layout options).
+    pub fn from_partitioned(
+        name: &str,
+        csr: Csr,
+        hw: &HardwareConfig,
+        pg: PartitionedGraph,
+    ) -> Self {
+        let sim_ctx = (hw.gpus > 0).then(|| SimContext::build(&pg));
+        Self {
+            name: name.to_string(),
+            csr,
+            pg,
+            hw: hw.clone(),
+            sim_ctx,
+            states: StatePool::new(),
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.csr.num_vertices
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.csr.degree(v)
+    }
+
+    /// A fresh per-session accelerator over the shared device image: the
+    /// SELL adjacency `Arc`s are cloned (no re-slicing, no copy); only the
+    /// session's own visited mirrors are allocated. `None` for CPU-only
+    /// shapes. The returned accelerator reports its partitions ready, so
+    /// the BFS driver skips `setup`.
+    pub fn new_session_accel(&self) -> Option<SimAccelerator> {
+        self.sim_ctx.as_ref().map(SimAccelerator::from_context)
+    }
+}
+
+/// Name-keyed registry of resident graphs. `insert` rejects duplicate
+/// names (re-registering would silently double memory); `remove` evicts.
+#[derive(Default)]
+pub struct GraphRegistry {
+    entries: Mutex<BTreeMap<String, Arc<ResidentGraph>>>,
+}
+
+impl GraphRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, graph: ResidentGraph) -> Result<Arc<ResidentGraph>> {
+        let mut entries = self.entries.lock().expect("registry poisoned");
+        if entries.contains_key(&graph.name) {
+            bail!("graph {:?} already registered", graph.name);
+        }
+        let arc = Arc::new(graph);
+        entries.insert(arc.name.clone(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ResidentGraph>> {
+        self.entries.lock().expect("registry poisoned").get(name).cloned()
+    }
+
+    /// Evict a graph. Queries already holding the `Arc` keep working; the
+    /// memory is reclaimed when the last holder drops it.
+    pub fn remove(&self, name: &str) -> bool {
+        self.entries.lock().expect("registry poisoned").remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().expect("registry poisoned").keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+
+    fn csr() -> Csr {
+        build_csr(&EdgeList { num_vertices: 8, edges: vec![(0, 1), (1, 2), (2, 3), (4, 5)] })
+    }
+
+    fn hw(gpus: usize) -> HardwareConfig {
+        HardwareConfig {
+            cpu_sockets: 2,
+            gpus,
+            gpu_mem_bytes: if gpus > 0 { 1 << 20 } else { 0 },
+            gpu_max_degree: 32,
+        }
+    }
+
+    #[test]
+    fn registry_insert_get_remove_and_duplicate_rejection() {
+        let reg = GraphRegistry::new();
+        let rg =
+            reg.insert(ResidentGraph::build("g1", csr(), &hw(0), &LayoutOptions::paper(), 1));
+        let rg = rg.unwrap();
+        assert_eq!(rg.num_vertices(), 8);
+        assert!(reg.get("g1").is_some());
+        assert_eq!(reg.names(), vec!["g1".to_string()]);
+        // Duplicate name rejected.
+        let dup = reg.insert(ResidentGraph::build("g1", csr(), &hw(0), &LayoutOptions::paper(), 1));
+        assert!(dup.is_err());
+        // Eviction: registry forgets it, live Arc keeps working.
+        assert!(reg.remove("g1"));
+        assert!(reg.get("g1").is_none());
+        assert!(!reg.remove("g1"));
+        assert_eq!(rg.degree(1), 2);
+    }
+
+    #[test]
+    fn cpu_only_graph_has_no_accel_sessions() {
+        let rg = ResidentGraph::build("cpu", csr(), &hw(0), &LayoutOptions::paper(), 1);
+        assert!(rg.new_session_accel().is_none());
+    }
+
+    #[test]
+    fn gpu_graph_sessions_arrive_preloaded() {
+        let rg = ResidentGraph::build("gpu", csr(), &hw(1), &LayoutOptions::paper(), 1);
+        let accel = rg.new_session_accel().expect("gpu shape must have a context");
+        use crate::engine::Accelerator;
+        let gpu_pid = rg.pg.parts.iter().position(|p| p.kind.is_gpu());
+        if let Some(pid) = gpu_pid {
+            assert!(accel.is_ready(pid), "session shares the resident device image");
+        }
+    }
+}

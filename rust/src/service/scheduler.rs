@@ -1,0 +1,310 @@
+//! The batched query scheduler: admit K concurrent root queries over one
+//! resident graph and schedule them across the shared worker budget.
+//!
+//! Two levels of parallelism compose here:
+//!
+//! * **Inter-query** (this module): `W` worker lanes each own a recycled
+//!   [`BfsState`](crate::engine::BfsState) and a session accelerator view,
+//!   and drain their round-robin share of the batch through one
+//!   [`HybridRunner`].
+//! * **Intra-query** (PR 3's engine): each query's supersteps fan out into
+//!   edge-weight-balanced kernel chunks on its per-query thread budget.
+//!
+//! [`SchedulePolicy`] splits the total thread budget between the two:
+//! `Latency` gives one query at a time the whole budget (lowest
+//! per-query latency); `Throughput` admits up to K queries and partitions
+//! the budget across them (one spawn per lane per batch instead of per
+//! kernel phase per level, better cache residency, higher queries/sec).
+//!
+//! Scheduling never changes results: per-query outputs are bit-identical
+//! across policies, batch sizes, and thread counts (the query-level
+//! determinism contract, DESIGN.md Section 11), because the engine is
+//! bit-identical across `ExecutionMode`s and queries share nothing
+//! mutable.
+
+use anyhow::Result;
+
+use crate::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
+use crate::engine::{CommMode, ExecutionMode, SimAccelerator};
+use crate::util::pool;
+
+use super::registry::ResidentGraph;
+
+/// How the scheduler splits the thread budget between concurrent queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedulePolicy {
+    /// One query at a time; the whole thread budget chunks its kernels.
+    Latency,
+    /// Up to `max_concurrency` queries in flight; the thread budget is
+    /// partitioned across them (each lane runs its queries with
+    /// `threads / lanes` kernel threads).
+    #[default]
+    Throughput,
+}
+
+/// Batch admission knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// Total worker-thread budget shared by all in-flight queries.
+    pub threads: usize,
+    pub policy: SchedulePolicy,
+    /// K: maximum concurrently admitted queries under
+    /// [`SchedulePolicy::Throughput`] (clamped to the batch size and the
+    /// thread budget).
+    pub max_concurrency: usize,
+    /// BFS direction policy for every query in the batch.
+    pub bfs_policy: PolicyKind,
+    pub comm_mode: CommMode,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            policy: SchedulePolicy::Throughput,
+            max_concurrency: 8,
+            bfs_policy: PolicyKind::direction_optimized(),
+            comm_mode: CommMode::Batched,
+        }
+    }
+}
+
+/// Per-query result, in submission order. Admission and engine failures
+/// are per-query — one bad root never takes down the batch.
+#[derive(Clone, Debug)]
+pub enum QueryOutcome {
+    /// The completed run (boxed: a `BfsRun` carries O(V) arrays).
+    Complete(Box<BfsRun>),
+    /// Clean rejection or engine error for this root only.
+    Failed { root: u32, error: String },
+}
+
+impl QueryOutcome {
+    pub fn run(&self) -> Option<&BfsRun> {
+        match self {
+            QueryOutcome::Complete(run) => Some(run),
+            QueryOutcome::Failed { .. } => None,
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        matches!(self, QueryOutcome::Complete(_))
+    }
+}
+
+/// Per-lane kernel-thread budgets for a batch (`result.len()` = lane
+/// count). `Latency` is one lane with the whole budget; `Throughput`
+/// splits the budget as evenly as possible — the first `threads % lanes`
+/// lanes carry the extra worker, so no budgeted thread sits idle for the
+/// batch. Budget splits are a pure scheduling choice (per-query output is
+/// `ExecutionMode`-invariant).
+fn plan_lanes(opts: &BatchOptions, admitted: usize) -> Vec<usize> {
+    let threads = opts.threads.max(1);
+    match opts.policy {
+        SchedulePolicy::Latency => vec![threads],
+        SchedulePolicy::Throughput => {
+            let lanes = threads.min(admitted.max(1)).min(opts.max_concurrency.max(1));
+            let (base, extra) = (threads / lanes, threads % lanes);
+            (0..lanes).map(|i| base + usize::from(i < extra)).collect()
+        }
+    }
+}
+
+/// Run a batch of root queries over a resident graph. Returns one
+/// [`QueryOutcome`] per input root, in input order.
+///
+/// Out-of-range roots (`root >= |V|`) are rejected cleanly at admission;
+/// isolated roots (degree 0) are *valid* and produce the trivial
+/// single-vertex traversal, exactly as a standalone run does.
+pub fn run_batch(
+    rg: &ResidentGraph,
+    roots: &[u32],
+    opts: &BatchOptions,
+) -> Result<Vec<QueryOutcome>> {
+    let v = rg.num_vertices();
+    // Admission: out-of-range roots fail their own slot only.
+    let mut outcomes: Vec<Option<QueryOutcome>> = roots
+        .iter()
+        .map(|&r| {
+            ((r as usize) >= v).then(|| QueryOutcome::Failed {
+                root: r,
+                error: format!("root {r} out of range (graph has {v} vertices)"),
+            })
+        })
+        .collect();
+    let admitted: Vec<(usize, u32)> = roots
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| outcomes[i].is_none())
+        .map(|(i, &r)| (i, r))
+        .collect();
+
+    if !admitted.is_empty() {
+        let lane_budgets = plan_lanes(opts, admitted.len());
+        let lanes = lane_budgets.len();
+
+        // Deterministic round-robin assignment (results are per-query
+        // deterministic anyway; this just keeps lane contents stable).
+        let mut assignment: Vec<Vec<(usize, u32)>> = vec![Vec::new(); lanes];
+        for (j, &q) in admitted.iter().enumerate() {
+            assignment[j % lanes].push(q);
+        }
+
+        let tasks: Vec<_> = assignment
+            .into_iter()
+            .zip(lane_budgets)
+            .map(|(lane, budget)| {
+                let cfg = HybridConfig {
+                    policy: opts.bfs_policy,
+                    comm_mode: opts.comm_mode,
+                    exec: ExecutionMode::from_threads(budget),
+                    ..Default::default()
+                };
+                move || -> Vec<(usize, Result<Box<BfsRun>, String>)> {
+                    // `with_state` fails only on a state-shape mismatch
+                    // (excluded by the per-graph pool's acquire check) or
+                    // GPU partitions without an accelerator — checked here
+                    // so the error path never consumes a pooled state.
+                    let mut accel: Option<SimAccelerator> = rg.new_session_accel();
+                    let has_gpu = rg.pg.parts.iter().any(|p| p.kind.is_gpu());
+                    if has_gpu && accel.is_none() {
+                        let msg = "graph has GPU partitions but no resident device context";
+                        return lane
+                            .into_iter()
+                            .map(|(i, root)| (i, Err(format!("root {root}: {msg}"))))
+                            .collect();
+                    }
+                    let state = rg.states.acquire(&rg.pg);
+                    let mut runner = match HybridRunner::with_state(
+                        &rg.pg,
+                        cfg,
+                        accel.as_mut(),
+                        state,
+                    ) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            // Unreachable given the checks above; fail the
+                            // lane's queries rather than panic a worker.
+                            let msg = e.to_string();
+                            return lane
+                                .into_iter()
+                                .map(|(i, root)| (i, Err(format!("root {root}: {msg}"))))
+                                .collect();
+                        }
+                    };
+                    let mut out = Vec::with_capacity(lane.len());
+                    for (i, root) in lane {
+                        out.push((i, runner.run(root).map(Box::new).map_err(|e| e.to_string())));
+                    }
+                    // Recycle the lane's traversal state (poisoned states
+                    // self-heal on their next reset).
+                    rg.states.release(runner.into_state());
+                    out
+                }
+            })
+            .collect();
+
+        for lane_out in pool::run_tasks(lanes, tasks) {
+            for (i, res) in lane_out {
+                outcomes[i] = Some(match res {
+                    Ok(run) => QueryOutcome::Complete(run),
+                    Err(error) => QueryOutcome::Failed { root: roots[i], error },
+                });
+            }
+        }
+    }
+
+    Ok(outcomes
+        .into_iter()
+        .map(|o| o.expect("every query produced an outcome"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{HardwareConfig, LayoutOptions};
+    use crate::service::registry::ResidentGraph;
+
+    fn resident(gpus: usize) -> ResidentGraph {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 5)));
+        let hw = HardwareConfig {
+            cpu_sockets: 2,
+            gpus,
+            gpu_mem_bytes: 1 << 22,
+            gpu_max_degree: 32,
+        };
+        ResidentGraph::build("t", g, &hw, &LayoutOptions::paper(), 1)
+    }
+
+    #[test]
+    fn lane_planning_respects_policy_and_budget() {
+        let mut opts = BatchOptions { threads: 8, max_concurrency: 4, ..Default::default() };
+        opts.policy = SchedulePolicy::Latency;
+        assert_eq!(plan_lanes(&opts, 16), vec![8]);
+        opts.policy = SchedulePolicy::Throughput;
+        assert_eq!(plan_lanes(&opts, 16), vec![2, 2, 2, 2], "concurrency-capped");
+        assert_eq!(plan_lanes(&opts, 2), vec![4, 4], "batch-capped");
+        opts.max_concurrency = 3;
+        assert_eq!(plan_lanes(&opts, 16), vec![3, 3, 2], "remainder distributed, none idle");
+        opts.max_concurrency = 4;
+        opts.threads = 2;
+        assert_eq!(plan_lanes(&opts, 16), vec![1, 1], "thread-capped");
+        opts.threads = 0;
+        assert_eq!(plan_lanes(&opts, 16), vec![1], "degenerate budget");
+    }
+
+    #[test]
+    fn out_of_range_root_fails_cleanly_without_killing_batch() {
+        let rg = resident(0);
+        let v = rg.num_vertices() as u32;
+        let roots = [0u32, v + 7, 1];
+        let out = run_batch(&rg, &roots, &BatchOptions::default()).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_complete());
+        assert!(out[2].is_complete());
+        match &out[1] {
+            QueryOutcome::Failed { root, error } => {
+                assert_eq!(*root, v + 7);
+                assert!(error.contains("out of range"), "{error}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn isolated_root_yields_trivial_run() {
+        let g = build_csr(&EdgeList { num_vertices: 8, edges: vec![(0, 1), (1, 2)] });
+        let hw = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let rg = ResidentGraph::build("iso", g, &hw, &LayoutOptions::paper(), 1);
+        let out = run_batch(&rg, &[7], &BatchOptions::default()).unwrap();
+        let run = out[0].run().expect("trivial, not an error");
+        assert_eq!(run.reached_vertices, 1);
+        assert_eq!(run.traversed_edges(), 0);
+        assert_eq!(run.depth[7], 0);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let rg = resident(0);
+        assert!(run_batch(&rg, &[], &BatchOptions::default()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batch_with_gpu_partitions_completes() {
+        let rg = resident(2);
+        let out = run_batch(
+            &rg,
+            &[0, 1, 2, 3, 4, 5],
+            &BatchOptions { threads: 4, max_concurrency: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert!(out.iter().all(QueryOutcome::is_complete));
+        // State pool saw reuse across lanes/batches.
+        let st = rg.states.stats();
+        assert!(st.created <= 3, "at most one state per lane, got {st:?}");
+        assert_eq!(st.idle, st.created, "all states returned to the pool");
+    }
+}

@@ -1,0 +1,140 @@
+//! Traversal-state pool: recycle [`BfsState`] allocations across queries.
+//!
+//! A `BfsState` for a scale-N graph is the service's dominant per-query
+//! allocation (depth/parent arrays, per-partition bitmaps, contribution
+//! fragments — tens of bytes per vertex). The pool keeps finished states
+//! and hands them back to the next query; `BfsState::reset` then restores
+//! pristine state in O(touched) when the previous run finished cleanly
+//! (sparse recycle) or O(V) when it did not (poisoned / first use). Either
+//! way the recycled state is bit-identical to a fresh allocation, so
+//! pooling never affects query output — only host wall-clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::BfsState;
+use crate::partition::PartitionedGraph;
+
+/// Observability counters for the pool (service metrics surface).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// States allocated fresh because the pool was empty.
+    pub created: u64,
+    /// States handed out from the free list (allocation avoided).
+    pub recycled: u64,
+    /// States currently idle in the pool.
+    pub idle: u64,
+}
+
+/// A mutex-guarded free list of traversal states for **one** resident
+/// graph (states are shape-bound to their partitioning; the registry owns
+/// one pool per graph).
+#[derive(Default)]
+pub struct StatePool {
+    free: Mutex<Vec<BfsState>>,
+    created: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl StatePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a state for a query: recycled when one is idle, freshly
+    /// allocated otherwise. Defensive shape check — a state that does not
+    /// match `pg` (should be impossible for a per-graph pool) is dropped
+    /// rather than handed out.
+    pub fn acquire(&self, pg: &PartitionedGraph) -> BfsState {
+        let candidate = self.free.lock().expect("state pool poisoned").pop();
+        match candidate {
+            Some(s) if s.shape_matches(pg) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            _ => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                BfsState::new(pg)
+            }
+        }
+    }
+
+    /// Return a state after a query. Works for failed queries too: a state
+    /// released mid-run is poisoned and its next `reset` performs the full
+    /// wipe (see `BfsState::finish`), so callers never need to
+    /// special-case the error path.
+    pub fn release(&self, state: BfsState) {
+        self.free.lock().expect("state pool poisoned").push(state);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            created: self.created.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            idle: self.free.lock().expect("state pool poisoned").len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn pg(n: usize) -> PartitionedGraph {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+        let g = build_csr(&EdgeList { num_vertices: n, edges });
+        let cfg =
+            HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let half = n / 2;
+        let assign: Vec<u8> = (0..n).map(|v| u8::from(v >= half)).collect();
+        materialize(&g, assign, &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn acquire_recycles_released_states() {
+        let pg = pg(64);
+        let pool = StatePool::new();
+        let s1 = pool.acquire(&pg);
+        assert_eq!(pool.stats(), PoolStats { created: 1, recycled: 0, idle: 0 });
+        pool.release(s1);
+        assert_eq!(pool.stats().idle, 1);
+        let _s2 = pool.acquire(&pg);
+        let st = pool.stats();
+        assert_eq!((st.created, st.recycled, st.idle), (1, 1, 0));
+    }
+
+    #[test]
+    fn mismatched_state_is_dropped_not_reused() {
+        let small = pg(32);
+        let big = pg(64);
+        let pool = StatePool::new();
+        pool.release(BfsState::new(&small));
+        let s = pool.acquire(&big);
+        assert!(s.shape_matches(&big), "must allocate fresh for the bigger graph");
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn poisoned_state_recycles_to_pristine() {
+        let pg = pg(64);
+        let pool = StatePool::new();
+        // Simulate a failed query: reset + partial traversal, never
+        // finished, released anyway.
+        let mut s = pool.acquire(&pg);
+        s.reset();
+        s.set_root(0, 3);
+        s.activate_local(0, 4, 3, 1);
+        s.record_contrib(0, 40, 3, 0);
+        pool.release(s);
+        // The recycled state must come back pristine after reset.
+        let mut s = pool.acquire(&pg);
+        s.reset();
+        assert!(s.depth.iter().all(|&d| d == -1));
+        assert!(s.parent.iter().all(|&p| p == crate::engine::state::PARENT_UNSET));
+        assert!(s.visited.iter().all(|b| !b.any()));
+        assert!(s.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
+        assert!(!s.global_frontier.bits.any() && !s.global_next.any());
+    }
+}

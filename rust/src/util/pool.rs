@@ -12,7 +12,11 @@
 //! which lets tasks borrow caller state without `'static` laundering; a
 //! panicking task propagates to the caller (the scope joins every worker
 //! first). Spawn cost is a few microseconds per worker per call — noise
-//! next to the chunked work these phases run.
+//! next to the chunked work these phases run. Calls **nest** safely: a
+//! task may itself call [`run_tasks`] (each level opens its own scope),
+//! which is how the service layer's batched query scheduler runs whole
+//! queries as outer tasks whose supersteps fan out on inner workers
+//! (DESIGN.md Section 11).
 //!
 //! [`split_ranges`] and [`split_mut_at`] are the slicing companions: they
 //! carve an index space (or a buffer) into the disjoint contiguous pieces

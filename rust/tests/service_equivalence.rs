@@ -1,0 +1,232 @@
+//! Service-layer equivalence (DESIGN.md Section 11): the query-level
+//! determinism contract, state-pool recycling correctness, and registry
+//! sharing across concurrent batches.
+//!
+//! The contract under test: every query completed through the batched
+//! scheduler must be **bit-identical** to a standalone run of the same
+//! root over the same partitioning — same depths, same parent tree, same
+//! per-level stats and byte counters — regardless of batch size (1/4/16),
+//! schedule policy, thread count, batch composition, or whether its
+//! traversal state came fresh from the allocator, recycled from a clean
+//! query (the O(touched) sparse reset), or recycled from a *failed*
+//! query (poisoned, full wipe).
+//!
+//! The CI matrix exports `TOTEM_DO_TEST_THREADS`; values above 1 join the
+//! tested thread ladder, so both legs exercise genuinely different
+//! schedules of the same bit-identical query stream.
+
+use std::sync::Arc;
+
+use totem_do::bfs::{BfsRun, HybridConfig, HybridRunner};
+use totem_do::engine::SimAccelerator;
+use totem_do::graph::generator::{kronecker, GeneratorConfig};
+use totem_do::graph::{build_csr, EdgeList};
+use totem_do::metrics;
+use totem_do::partition::{HardwareConfig, LayoutOptions};
+use totem_do::service::{
+    run_batch, BatchOptions, GraphRegistry, QueryOutcome, ResidentGraph, SchedulePolicy,
+};
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 24, gpu_max_degree: 32 }
+}
+
+fn thread_ladder() -> Vec<usize> {
+    let mut ts = vec![1, 2, 4];
+    if let Some(t) =
+        std::env::var("TOTEM_DO_TEST_THREADS").ok().and_then(|s| s.parse::<usize>().ok())
+    {
+        if !ts.contains(&t) {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+/// Standalone reference: a fresh runner + fresh state per root, exactly
+/// what one `cmd_bfs` invocation does.
+fn standalone(rg: &ResidentGraph, root: u32) -> BfsRun {
+    let mut sim = (rg.hw.gpus > 0)
+        .then(|| SimAccelerator::new(rg.pg.parts.len(), rg.num_vertices()));
+    let cfg = HybridConfig::default();
+    let mut runner = HybridRunner::new(&rg.pg, cfg, sim.as_mut()).unwrap();
+    runner.run(root).unwrap()
+}
+
+fn assert_same_run(reference: &BfsRun, got: &BfsRun, what: &str) {
+    assert_eq!(reference.root, got.root, "{what}");
+    assert_eq!(reference.depth, got.depth, "{what}: level assignments diverge");
+    assert_eq!(reference.parent, got.parent, "{what}: parent trees diverge");
+    assert_eq!(reference.levels, got.levels, "{what}: per-level stats diverge");
+    assert_eq!(reference.init_bytes, got.init_bytes, "{what}: modeled init bytes diverge");
+    assert_eq!(reference.aggregation_bytes, got.aggregation_bytes, "{what}");
+    assert_eq!(reference.reached_vertices, got.reached_vertices, "{what}");
+    assert_eq!(reference.reached_edge_endpoints, got.reached_edge_endpoints, "{what}");
+}
+
+fn resident(scale: u32, seed: u64, cfg: &HardwareConfig) -> ResidentGraph {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(scale, seed)));
+    ResidentGraph::build("t", g, cfg, &LayoutOptions::paper(), 1)
+}
+
+#[test]
+fn batched_queries_bit_identical_to_standalone_across_batch_and_threads() {
+    for cfg_hw in [hw(2, 0), hw(2, 2)] {
+        let rg = resident(10, 11, &cfg_hw);
+        let roots =
+            metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 16, 3);
+        assert_eq!(roots.len(), 16);
+        let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+
+        for batch in [1usize, 4, 16] {
+            for threads in thread_ladder() {
+                for policy in [SchedulePolicy::Throughput, SchedulePolicy::Latency] {
+                    let opts = BatchOptions {
+                        threads,
+                        policy,
+                        max_concurrency: batch,
+                        ..Default::default()
+                    };
+                    let outcomes = run_batch(&rg, &roots, &opts).unwrap();
+                    for (i, outcome) in outcomes.iter().enumerate() {
+                        let run = outcome.run().unwrap_or_else(|| {
+                            panic!("query {i} failed under batch={batch} threads={threads}")
+                        });
+                        assert_same_run(
+                            &reference[i],
+                            run,
+                            &format!(
+                                "{} root {} batch={batch} threads={threads} policy={policy:?}",
+                                cfg_hw.label(),
+                                roots[i]
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The O(touched) sparse recycle must be invisible: a runner whose state
+/// alternates between a tiny component (sparse reset) and the giant
+/// component (full reset) must keep producing bit-identical output.
+#[test]
+fn recycled_state_sparse_reset_is_bit_identical() {
+    // Vertices 0..3: an isolated 3-chain (touched << V/8). The rest: a
+    // long chain, so its traversal touches most of the graph.
+    let n = 2048usize;
+    let mut edges = vec![(0u32, 1u32), (1, 2)];
+    edges.extend((3..n as u32 - 1).map(|v| (v, v + 1)));
+    let g = build_csr(&EdgeList { num_vertices: n, edges });
+    let rg = ResidentGraph::build("chain", g, &hw(2, 0), &LayoutOptions::paper(), 1);
+
+    let reference_small = standalone(&rg, 0);
+    let reference_big = standalone(&rg, 500);
+    assert!(reference_small.reached_vertices == 3, "tiny component sanity");
+    assert!(reference_big.reached_vertices > (n / 2) as u64, "giant component sanity");
+
+    // One resident runner, alternating components: small roots take the
+    // sparse recycle, big roots force the full wipe, and every run must
+    // match its fresh-runner reference exactly (including modeled bytes).
+    let mut runner =
+        HybridRunner::<SimAccelerator>::new(&rg.pg, HybridConfig::default(), None).unwrap();
+    for (round, root) in [0u32, 500, 0, 0, 500, 0].into_iter().enumerate() {
+        let run = runner.run(root).unwrap();
+        let reference = if root == 0 { &reference_small } else { &reference_big };
+        assert_same_run(reference, &run, &format!("round {round} root {root}"));
+    }
+}
+
+/// A state released after a failed (mid-run) query is poisoned; the pool
+/// must hand it back healed — the next query through the service sees
+/// pristine state and bit-identical results.
+#[test]
+fn poisoned_pool_state_self_heals_through_the_service() {
+    let rg = resident(9, 5, &hw(2, 0));
+    let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 4, 8);
+    let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+
+    // Poison a pooled state by hand: a partial traversal that never
+    // finished (what an errored query leaves behind).
+    let mut state = rg.states.acquire(&rg.pg);
+    state.reset();
+    state.set_root(0, roots[0]);
+    state.activate_local(0, roots[1], roots[0], 1);
+    state.record_contrib(0, roots[2], roots[0], 0);
+    rg.states.release(state);
+
+    // Single lane so the poisoned state is definitely the one recycled.
+    let opts = BatchOptions { threads: 1, max_concurrency: 1, ..Default::default() };
+    let outcomes = run_batch(&rg, &roots, &opts).unwrap();
+    assert!(rg.states.stats().recycled >= 1, "the poisoned state was reused");
+    for (i, outcome) in outcomes.iter().enumerate() {
+        assert_same_run(&reference[i], outcome.run().unwrap(), &format!("query {i}"));
+    }
+}
+
+/// Root admission: an out-of-range root fails its own slot only; an
+/// isolated root completes trivially. Neither disturbs its batch mates.
+#[test]
+fn root_validation_is_per_query() {
+    let g = build_csr(&EdgeList { num_vertices: 64, edges: vec![(0, 1), (1, 2), (2, 3)] });
+    let rg = ResidentGraph::build("v", g, &hw(2, 0), &LayoutOptions::paper(), 1);
+    let reference = standalone(&rg, 1);
+    let roots = [1u32, 9999, 63, 2];
+    let outcomes =
+        run_batch(&rg, &roots, &BatchOptions { threads: 2, ..Default::default() }).unwrap();
+    assert_same_run(&reference, outcomes[0].run().unwrap(), "valid root");
+    match &outcomes[1] {
+        QueryOutcome::Failed { root, error } => {
+            assert_eq!(*root, 9999);
+            assert!(error.contains("out of range"), "{error}");
+        }
+        other => panic!("expected clean rejection, got {other:?}"),
+    }
+    let trivial = outcomes[2].run().expect("isolated root is valid");
+    assert_eq!(trivial.reached_vertices, 1);
+    assert_eq!(trivial.traversed_edges(), 0);
+    assert!(outcomes[3].is_complete());
+}
+
+/// One registry entry, shared immutably across concurrently running
+/// batches on separate OS threads — every query everywhere bit-identical
+/// to its standalone reference, and the pool never leaks states.
+#[test]
+fn registry_shared_across_concurrent_batches() {
+    let registry = GraphRegistry::new();
+    let rg = registry
+        .insert(resident(10, 21, &hw(2, 2)))
+        .expect("fresh registry");
+    let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 8, 4);
+    let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+
+    std::thread::scope(|s| {
+        for batch in [1usize, 4, 8] {
+            let rg: Arc<ResidentGraph> = Arc::clone(&rg);
+            let roots = &roots;
+            let reference = &reference;
+            s.spawn(move || {
+                let opts = BatchOptions {
+                    threads: 2,
+                    max_concurrency: batch,
+                    ..Default::default()
+                };
+                let outcomes = run_batch(&rg, roots, &opts).unwrap();
+                for (i, outcome) in outcomes.iter().enumerate() {
+                    assert_same_run(
+                        &reference[i],
+                        outcome.run().unwrap(),
+                        &format!("concurrent batch={batch} query {i}"),
+                    );
+                }
+            });
+        }
+    });
+    let pool = rg.states.stats();
+    assert_eq!(pool.idle, pool.created, "every state returned to the pool");
+    assert!(
+        registry.get("t").is_some(),
+        "registry still serves the resident graph after the batches"
+    );
+}
