@@ -1,10 +1,13 @@
-//! Ablation 3 (paper Section 3.1): batched once-per-round bitmap
-//! communication vs eager per-activation messages. Quantifies what the
-//! batching + message-reduction optimization saves.
+//! Ablation 3 (paper Section 3.1): batched once-per-round boundary-
+//! compacted bitmap communication vs eager per-activation messages.
+//! Quantifies what the batching + message-reduction optimization saves,
+//! and — per-record — what the border compaction saves over the old
+//! full-V bitmap scheme (`fullv_wire_bytes` is the dense-equivalent cost
+//! of the same exchanges; `wire_bytes` must sit strictly below it).
 
 use totem_do::bench_support as bs;
 use totem_do::bfs::{HybridConfig, HybridRunner, PolicyKind};
-use totem_do::engine::{CommMode, SimAccelerator};
+use totem_do::engine::{CommMode, CommStats, SimAccelerator};
 use totem_do::partition::{specialized_partition, LayoutOptions};
 use totem_do::runtime::DeviceModel;
 use totem_do::util::tables::{fmt_teps, fmt_time, Table};
@@ -20,7 +23,8 @@ fn main() {
     let device = DeviceModel::default();
 
     let mut t = Table::new(vec![
-        "comm mode", "TEPS", "push bytes/run", "push msgs/run", "comm time/run",
+        "comm mode", "TEPS", "push bytes/run", "push msgs/run", "wire bytes/run",
+        "full-V bytes/run", "comm time/run",
     ]);
     for (name, mode) in [
         ("batched (paper)", CommMode::Batched),
@@ -32,8 +36,7 @@ fn main() {
             ..Default::default()
         };
         let mut teps = Vec::new();
-        let mut bytes = 0u64;
-        let mut msgs = 0u64;
+        let mut comm = CommStats::default();
         let mut comm_t = 0.0;
         for &root in &roots {
             let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
@@ -41,31 +44,42 @@ fn main() {
             let run = runner.run(root).unwrap();
             let timing = device.attribute(&run, &pg, false);
             teps.push(totem_do::metrics::teps(run.traversed_edges(), timing.total));
-            bytes = run.levels.iter().map(|l| l.comm.push_bytes()).sum();
-            msgs = run
-                .levels
-                .iter()
-                .map(|l| l.comm.push_host.msgs + l.comm.push_pcie.msgs)
-                .sum();
-            comm_t = timing.comm_time();
+            for l in &run.levels {
+                comm.add(&l.comm);
+            }
+            comm_t += timing.comm_time();
         }
+        let nr = roots.len().max(1) as u64;
         let hteps = totem_do::metrics::harmonic_mean(&teps);
+        let push_bytes = comm.push_bytes() / nr;
+        let push_msgs = (comm.push_host.msgs + comm.push_pcie.msgs) / nr;
+        let wire = comm.total_bytes() / nr;
+        let fullv = comm.dense_equiv_bytes / nr;
+        comm_t /= nr as f64;
         t.row(vec![
             name.to_string(),
             fmt_teps(hteps),
-            bytes.to_string(),
-            msgs.to_string(),
+            push_bytes.to_string(),
+            push_msgs.to_string(),
+            wire.to_string(),
+            fullv.to_string(),
             fmt_time(comm_t),
         ]);
         bs::kv("ablation_comm", &[
             ("mode", name.split(' ').next().unwrap().to_string()),
+            ("threads", bs::bench_threads().to_string()),
             ("teps", format!("{hteps:.3e}")),
-            ("push_bytes", bytes.to_string()),
-            ("push_msgs", msgs.to_string()),
+            ("push_bytes", push_bytes.to_string()),
+            ("push_msgs", push_msgs.to_string()),
+            ("push_pcie_bytes", (comm.push_pcie.bytes / nr).to_string()),
+            ("pull_pcie_bytes", (comm.pull_pcie.bytes / nr).to_string()),
+            ("wire_bytes", wire.to_string()),
+            ("fullv_wire_bytes", fullv.to_string()),
             ("comm_time_s", format!("{comm_t:.3e}")),
         ]);
     }
     t.print();
-    println!("shape check: batching collapses per-activation messages into one bitmap per");
-    println!("link per round — the difference is the Section 3.1 optimization's value.");
+    println!("shape check: batching collapses per-activation messages into one");
+    println!("boundary-compacted bitmap per link per round; wire_bytes tracks the border");
+    println!("cut while fullv_wire_bytes is the pre-compaction full-V bitmap cost.");
 }

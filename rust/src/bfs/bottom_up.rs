@@ -7,7 +7,9 @@
 //! and activates not-yet-visited vertices with a neighbour in the (pulled)
 //! global frontier. The adjacency scan stops at the first hit — with the
 //! Section 3.4 degree-descending adjacency ordering, likely-frontier hubs
-//! sit first, so scans terminate early.
+//! sit first, so scans terminate early. The pull target is always the
+//! dense global-frontier bitmap (O(1) membership probes regardless of the
+//! per-partition frontiers' adaptive sparse/dense representation).
 //!
 //! Each vertex belongs to exactly one chunk and the kernel reads only the
 //! **pre-superstep** visited snapshot plus the read-only global frontier,

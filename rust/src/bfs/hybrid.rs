@@ -5,10 +5,14 @@
 //! 1. every partition runs its kernel for the current direction (CPU
 //!    partitions: `cpu_top_down`/`cpu_bottom_up`; accelerator partitions:
 //!    the AOT kernel via the [`Accelerator`] trait);
-//! 2. top-down ends with the batched push (Algorithm 2), bottom-up begins
-//!    with the pull of the global frontier (Algorithm 3);
-//! 3. `Synchronize()`: frontiers advance, the coordinator (CPU partition 0,
-//!    owner of the hubs — §3.3) picks the next direction from local state.
+//! 2. top-down ends with the batched push (Algorithm 2) over
+//!    border-compacted per-link outboxes (`engine::comm`), bottom-up
+//!    begins with the pull of the global frontier (Algorithm 3), priced
+//!    per link by actual border adjacency;
+//! 3. `Synchronize()`: frontiers advance — each partition's current
+//!    frontier re-chooses its sparse/dense representation by fill
+//!    (`engine::frontier`) — and the coordinator (CPU partition 0, owner
+//!    of the hubs — §3.3) picks the next direction from local state.
 //!
 //! Under [`ExecutionMode::Parallel`] the CPU partition kernels of step 1
 //! run **concurrently** on worker threads, and each kernel is itself
@@ -245,7 +249,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                         move || {
                             let mut size = 0u64;
                             let mut deg = 0u64;
-                            for v in state.frontiers[pid].current.iter_ones() {
+                            for v in state.frontiers[pid].current.iter() {
                                 size += 1;
                                 deg += pg.parts[pid].degree(pg.local_of(v as u32)) as u64;
                             }
@@ -396,9 +400,11 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// Apply one chunk's delta at the level barrier: activations (first
     /// candidate per vertex wins — `BfsState::apply_step_delta`), then
     /// contributions and the crossing census, deduplicated against the
-    /// per-destination push buffers exactly as the sequential kernel's
-    /// inline marking did. Returns the chunk's work counters with the
-    /// authoritative `activated` count plus its distinct crossings.
+    /// border-compacted per-destination outboxes (`CommBuffers::mark`
+    /// translates the global id to the link's border-local index) exactly
+    /// as the sequential kernel's inline marking did. Returns the chunk's
+    /// work counters with the authoritative `activated` count plus its
+    /// distinct crossings.
     fn merge_chunk(&mut self, pid: usize, chunk: usize, level: u32) -> (PeWork, u64) {
         let delta = &self.chunks[chunk].delta;
         let mut work = delta.work;
@@ -406,8 +412,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         let mut crossing = 0u64;
         for &(w, _) in &delta.contribs {
             let q = self.pg.owner_of(w);
-            if !self.comm.outgoing_ref(pid, q).get(w as usize) {
-                self.comm.outgoing(pid, q).set(w as usize);
+            if self.comm.mark(pid, q, w) {
                 crossing += 1;
             }
         }
@@ -435,7 +440,15 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 }
                 tasks.push(move || {
                     queue.clear();
-                    queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
+                    // A sparse frontier IS the queue already — copy it;
+                    // dense frontiers are scanned. Same content either way
+                    // (both iterate ascending), so chunking is identical.
+                    let f = &state.frontiers[pid].current;
+                    if let Some(q) = f.as_queue() {
+                        queue.extend_from_slice(q);
+                    } else {
+                        queue.extend(f.iter().map(|v| v as u32));
+                    }
                     let ranges = pool::split_by_weight(queue.len(), nchunks, |i| {
                         pg.parts[pid].degree(pg.local_of(queue[i])) as u64
                     });
@@ -467,19 +480,15 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             }
         }
 
-        // Push phase (Algorithm 2): merge per-destination buffers into each
-        // owner, once per round.
+        // Push phase (Algorithm 2): merge per-destination outboxes into
+        // each owner, once per round. `gather` expands every link's
+        // border-local bits back to global ids, so the owner-side merge
+        // below walks the exact same ascending global-id set the old
+        // full-V buffers produced.
         stats.comm = self.comm.push_stats(pg, self.cfg.comm_mode, crossing);
         for q in 0..np {
             self.incoming.clear();
-            let mut any = false;
-            for p in 0..np {
-                if p != q && self.comm.outgoing_ref(p, q).any() {
-                    self.incoming.or_with(self.comm.outgoing_ref(p, q));
-                    any = true;
-                }
-            }
-            if !any {
+            if !self.comm.gather(q, &mut self.incoming) {
                 continue;
             }
             if pg.parts[q].kind.is_gpu() {
@@ -512,9 +521,11 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         // Pull phase: the aggregate was already built incrementally (every
         // activation marks `global_next`, which became `global_frontier`
         // at the last barrier); only the transfers are accounted here.
-        let nonempty: Vec<bool> =
-            (0..np).map(|p| self.state.frontiers[p].current.any()).collect();
-        stats.comm = self.comm.pull_stats(pg, &nonempty);
+        // Per-partition frontier sizes bound the sparse-list wire format
+        // (O(1) for sparse frontiers, one word scan for dense ones).
+        let counts: Vec<u64> =
+            (0..np).map(|p| self.state.frontiers[p].current.count() as u64).collect();
+        stats.comm = self.comm.pull_stats(pg, &counts);
 
         // ---- chunk plan: carve each CPU partition's 0..scan_limit range
         // into up to `threads` edge-weight-balanced slices (the local
@@ -574,7 +585,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         if ne > 0 {
             let budget = self.cfg.gpu_td_host_threshold as u128 * ne;
             let mut fedges: u128 = 0;
-            for v in frontier.iter_ones() {
+            for v in frontier.iter() {
                 fedges += part.degree(self.pg.local_of(v as u32)) as u128;
                 if fedges * nv >= budget {
                     host_walk = false;
@@ -590,7 +601,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         let n = self.pg.parts[pid].num_vertices();
         self.gpu_frontier.clear();
         self.gpu_frontier.resize(n, 0);
-        for v in self.state.frontiers[pid].current.iter_ones() {
+        for v in self.state.frontiers[pid].current.iter() {
             self.gpu_frontier[self.pg.local_index[v] as usize] = 1;
         }
         work.vertices_scanned = fcount;
@@ -615,8 +626,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                     accel.mark_visited(pid, &[self.pg.local_index[v]]);
                     work.activated += 1;
                 }
-            } else if !self.comm.outgoing_ref(pid, q).get(v) {
-                self.comm.outgoing(pid, q).set(v);
+            } else if self.comm.mark(pid, q, v as u32) {
                 self.state.record_contrib(pid, v as u32, p as u32, level);
                 work.activated += 1; // crossing activation
             }
@@ -640,7 +650,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             let state = &self.state;
             let queue = &mut self.queues[pid];
             queue.clear();
-            queue.extend(state.frontiers[pid].current.iter_ones().map(|v| v as u32));
+            queue.extend(state.frontiers[pid].current.iter().map(|v| v as u32));
         }
         if self.chunks.is_empty() {
             self.chunks.push(ChunkScratch::new(self.pg.num_vertices));
@@ -697,7 +707,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         let pid = 0; // CPU partition 0 owns the hubs (specialized placement)
         let part = &self.pg.parts[pid];
         let mut frontier_out = 0u64;
-        for v in self.state.frontiers[pid].current.iter_ones() {
+        for v in self.state.frontiers[pid].current.iter() {
             frontier_out += part.degree(self.pg.local_of(v as u32)) as u64;
         }
         let mut unexplored = 0u64;

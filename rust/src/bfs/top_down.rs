@@ -3,7 +3,11 @@
 //! Explores the out-edges of one *chunk* of the partition's materialized
 //! frontier queue (the driver splits the queue into edge-weight-balanced
 //! chunks and fans them out on the shared worker pool — DESIGN.md Section
-//! 10; a sequential run is the one-chunk special case). The chunk marks
+//! 10; a sequential run is the one-chunk special case). The queue is
+//! materialized from either adaptive frontier representation — borrowed
+//! directly when the frontier is already a sparse sorted queue, scanned
+//! from the bitmap when dense — with identical (ascending) content either
+//! way, so the chunk plan and every output are representation-invariant. The chunk marks
 //! newly reachable local targets in the partition's atomic next-frontier
 //! and the shared global next-frontier (set unions — interleaving-
 //! independent), and returns everything order-sensitive as *candidates*
@@ -95,7 +99,7 @@ mod tests {
         nchunks: usize,
     ) -> (PeWork, u64, Vec<StepDelta>) {
         let mut queue: Vec<u32> = Vec::new();
-        queue.extend(st.frontiers[pid].current.iter_ones().map(|v| v as u32));
+        queue.extend(st.frontiers[pid].current.iter().map(|v| v as u32));
         let ranges = crate::util::pool::split_ranges(queue.len(), nchunks);
         let mut chunks: Vec<ChunkScratch> =
             ranges.iter().map(|_| ChunkScratch::new(pg.num_vertices)).collect();
@@ -112,8 +116,7 @@ mod tests {
             work.activated += st.apply_step_delta(pid, &scratch.delta, level);
             for &(w, _) in &scratch.delta.contribs {
                 let q = pg.owner_of(w);
-                if !comm.outgoing_ref(pid, q).get(w as usize) {
-                    comm.outgoing(pid, q).set(w as usize);
+                if comm.mark(pid, q, w) {
                     crossing += 1;
                 }
             }
@@ -146,7 +149,7 @@ mod tests {
         assert_eq!(st.depth[1], 1);
         assert_eq!(st.parent[1], 0);
         assert!(st.global_next.get(1), "local activation marks the shared next frontier");
-        assert!(comm.outgoing_ref(0, 1).get(2));
+        assert!(comm.marked(0, 1, 2));
         // Contribution recorded at the frontier's level (0).
         assert_eq!(st.contrib_parent[0][2], 0);
         assert_eq!(st.contrib_level[0][2], 0);

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
-use crate::engine::{Accelerator, CommMode, ExecutionMode, SimAccelerator};
+use crate::engine::{Accelerator, CommMode, CommStats, ExecutionMode, SimAccelerator};
 use crate::graph::generator::{kronecker_par, real_world_analog_par, GeneratorConfig, RealWorldClass};
 use crate::graph::stats::degree_stats;
 use crate::graph::{build_csr_par, io, Csr, EdgeList};
@@ -119,6 +119,37 @@ pub fn partition_graph(
         "random" => Ok(random_partition(g, hw, &opts, args.get_parse("seed", 42u64)?)),
         other => bail!("unknown --partition {other:?}"),
     }
+}
+
+/// `--comm-stats`: per-traversal communication, split by phase and link
+/// class. Bytes are the boundary-compacted adaptive wire sizes
+/// (`engine::comm`: border bitmap or sparse id list per message); the
+/// full-V line is what the pre-compaction bitmap scheme would have moved
+/// for the same exchanges, so the compaction ratio is directly
+/// inspectable without the bench harness.
+fn print_comm_stats(total: &CommStats, traversals: usize) {
+    let n = traversals.max(1) as u64;
+    let mut t = Table::new(vec!["phase / link", "bytes/traversal", "msgs/traversal"]);
+    for (name, lt) in [
+        ("push host (QPI)", total.push_host),
+        ("push PCIe", total.push_pcie),
+        ("pull host (QPI)", total.pull_host),
+        ("pull PCIe", total.pull_pcie),
+    ] {
+        t.row(vec![name.to_string(), (lt.bytes / n).to_string(), (lt.msgs / n).to_string()]);
+    }
+    t.row(vec![
+        "crossing activations".to_string(),
+        (total.crossing_activations / n).to_string(),
+        "-".to_string(),
+    ]);
+    t.print();
+    let compact = total.total_bytes() / n;
+    let dense = total.dense_equiv_bytes / n;
+    println!(
+        "bytes on wire/traversal: {compact} (full-V bitmap scheme: {dense}, {:.1}x reduction)",
+        dense as f64 / compact.max(1) as f64
+    );
 }
 
 fn policy(args: &Args) -> Result<PolicyKind> {
@@ -280,12 +311,16 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     let mut teps_model = Vec::new();
     let mut teps_wall = Vec::new();
     let mut joules = Vec::new();
+    let mut comm_total = CommStats::default();
     let t0 = std::time::Instant::now();
     for (i, &root) in roots.iter().enumerate() {
         let run = runner.run(root)?;
         if validate {
             validate_graph500(&g, root, &run.parent, &run.depth)
                 .map_err(|e| anyhow!("validation failed for root {root}: {e}"))?;
+        }
+        for l in &run.levels {
+            comm_total.add(&l.comm);
         }
         let timing = device.attribute(&run, &pg, naive);
         let e = energy.energy(&timing, &pg);
@@ -323,6 +358,9 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
         "-".to_string(),
     ]);
     t.print();
+    if args.has("comm-stats") {
+        print_comm_stats(&comm_total, roots.len());
+    }
     if validate {
         println!("validation: all {} searches passed Graph500 checks", roots.len());
     }
@@ -401,11 +439,14 @@ fn report_batch(
     wall_seconds: f64,
     validate: bool,
     verbose: bool,
+    comm_stats: bool,
 ) -> (usize, usize) {
     let device = DeviceModel::default();
     let mut latencies = Vec::new();
     let mut teps = Vec::new();
     let mut failed = 0usize;
+    let mut comm_total = CommStats::default();
+    let mut comm_runs = 0usize;
     for (i, outcome) in outcomes.iter().enumerate() {
         match outcome {
             QueryOutcome::Complete(run) => {
@@ -419,6 +460,12 @@ fn report_batch(
                         );
                         continue;
                     }
+                }
+                if comm_stats {
+                    for l in &run.levels {
+                        comm_total.add(&l.comm);
+                    }
+                    comm_runs += 1;
                 }
                 let lat = device.query_latency(run, &rg.pg);
                 latencies.push(lat);
@@ -457,6 +504,9 @@ fn report_batch(
         format!("{} created, {} recycled, {} idle", pool.created, pool.recycled, pool.idle),
     ]);
     t.print();
+    if comm_stats {
+        print_comm_stats(&comm_total, comm_runs);
+    }
     if validate {
         println!("validation: {} queries passed Graph500 checks", lat.n);
     }
@@ -490,8 +540,14 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let outcomes = run_batch(&rg, &roots, &opts)?;
     let wall = t0.elapsed().as_secs_f64();
-    let (_ok, failed) =
-        report_batch(&rg, &outcomes, wall, args.has("validate"), args.has("verbose"));
+    let (_ok, failed) = report_batch(
+        &rg,
+        &outcomes,
+        wall,
+        args.has("validate"),
+        args.has("verbose"),
+        args.has("comm-stats"),
+    );
     anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
     Ok(())
 }
@@ -619,12 +675,16 @@ pub fn usage() -> &'static str {
                  error, an isolated root a trivial traversal)\n\
                  --accel pjrt|sim --artifacts DIR --validate --verbose\n\
                  --gpu-mem-mb M --gpu-max-degree D --naive\n\
+                 --comm-stats (per-traversal push/pull bytes+messages split\n\
+                 by host/PCIe link — boundary-compacted adaptive wire sizes,\n\
+                 with the full-V bitmap scheme's cost for comparison)\n\
        batch     run a root campaign through the resident multi-query service\n\
                  (partition once, recycle traversal state, schedule K queries\n\
                  concurrently; per-query output bit-identical to `bfs`)\n\
                  --roots FILE | --nroots N --seed S\n\
                  --batch K --sched throughput|latency --threads N\n\
                  --validate --verbose --strict (fail on any failed query)\n\
+                 --comm-stats (as in `bfs`, aggregated over the batch)\n\
                  plus the graph/hardware flags of `bfs`\n\
        serve     resident service loop: load once, then answer batches of\n\
                  roots from stdin (one whitespace-separated batch per line;\n\

@@ -7,6 +7,12 @@
 //! edge count instead of `N x max_degree`. This is what makes a dense
 //! no-early-exit vector kernel competitive with the CPU's early-exit scan.
 //!
+//! `setup` also bakes the partition's **border renumbering tables**
+//! ([`crate::partition::BorderSets`]) into the device image: the modeled
+//! per-level PCIe traffic ships boundary-compacted frontier/outbox
+//! bitmaps (border-local index spaces), not full-V images — Section 3.1's
+//! boundary-proportional wire protocol.
+//!
 //! Two implementations exist:
 //! * [`SimAccelerator`] (here) — a bit-exact Rust mirror of the Pallas
 //!   kernels' semantics (dense, vectorized, first-hit parent selection,
@@ -119,6 +125,16 @@ struct SimPartFixed {
     gids: Vec<i32>,
     lanes: u64,
     num_vertices: usize,
+    /// Baked outbox renumbering tables (`border-local -> global`, one per
+    /// remote partition; `B(q, self)` — disjoint across `q`): the device
+    /// packs its remote top-down activations into border-compacted
+    /// per-link bitmaps, and reads the pulled remote frontiers through
+    /// the same index spaces, without host help.
+    outbox_tables: Vec<Arc<Vec<u32>>>,
+    /// Wire bytes of that compacted border exchange image
+    /// (`sum_q |B(q, self)|/8`) — the top-down outbox down-transfer and
+    /// the bottom-up remote-frontier up-transfer alike.
+    border_link_bytes: u64,
 }
 
 struct SimPart {
@@ -155,7 +171,14 @@ fn build_fixed(part: &Partition) -> SimPartFixed {
         slices.push(SimSlice { meta: m, adj });
     }
     let gids: Vec<i32> = part.gids.iter().map(|&g| g as i32).collect();
-    SimPartFixed { slices, gids, lanes, num_vertices: part.num_vertices() }
+    SimPartFixed {
+        slices,
+        gids,
+        lanes,
+        num_vertices: part.num_vertices(),
+        outbox_tables: part.border_in.clone(),
+        border_link_bytes: part.border_in_wire_bytes(),
+    }
 }
 
 impl SimContext {
@@ -202,6 +225,14 @@ impl SimAccelerator {
     fn part(&self, pid: usize) -> &SimPart {
         self.parts[pid].as_ref().expect("accelerator partition not set up")
     }
+
+    /// The device image's baked outbox renumbering tables (border-local ->
+    /// global id; `outbox_tables(pid)[q]` = `B(q, pid)`) — exposed for
+    /// tests and tools that verify the image matches the partitioning's
+    /// border sets.
+    pub fn outbox_tables(&self, pid: usize) -> &[Arc<Vec<u32>>] {
+        &self.part(pid).fixed.outbox_tables
+    }
 }
 
 #[inline]
@@ -239,7 +270,6 @@ impl Accelerator for SimAccelerator {
     }
 
     fn bottom_up(&mut self, pid: usize, frontier_words: &[u32]) -> Result<BottomUpResult> {
-        let v_total = self.v_total;
         let p = self.parts[pid].as_mut().expect("not set up");
         let n = p.visited.len();
         let mut nf = vec![0i32; n];
@@ -265,14 +295,15 @@ impl Accelerator for SimAccelerator {
                 }
             }
         }
-        let vw = v_total.div_ceil(32);
         let transfers = p.fixed.slices.len() as u64;
         Ok(BottomUpResult {
             next_frontier: nf,
             parent,
             count,
-            // frontier words up once + per-slice new-frontier bitmap down.
-            pcie_bytes: (vw * 4 + n / 8 + 4) as u64,
+            // Boundary-compacted wire protocol: own frontier slice plus
+            // the renumbered remote *border* frontiers up once (not the
+            // full-V word array), new-frontier bitmap + count down.
+            pcie_bytes: (n / 8 + n / 8 + 4) as u64 + p.fixed.border_link_bytes,
             pcie_transfers: transfers.max(1),
         })
     }
@@ -307,7 +338,11 @@ impl Accelerator for SimAccelerator {
             active,
             parent,
             edges_out,
-            pcie_bytes: (n / 8 + v / 8 + 4) as u64,
+            // Boundary-compacted wire protocol: local frontier flags up;
+            // local next-frontier bitmap plus the per-destination
+            // border-local outbox bitmaps (packed via the baked
+            // renumbering tables) + count down — not a full-V image.
+            pcie_bytes: (n / 8 + n / 8 + 4) as u64 + p.fixed.border_link_bytes,
             pcie_transfers: p.fixed.slices.len().max(1) as u64,
         })
     }
@@ -390,6 +425,33 @@ mod tests {
         assert_eq!(r.parent[2], 1);
         assert_eq!(r.edges_out, 2);
         assert_eq!(r.active.iter().sum::<i32>(), 1);
+    }
+
+    #[test]
+    fn device_image_bakes_border_tables_and_compacts_wire_bytes() {
+        // 0,1 on the CPU partition; 2,3 on the GPU; boundary edge 1-2.
+        let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (1, 2), (2, 3)] });
+        let cfg =
+            HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 64 };
+        let pg = materialize(&g, vec![0, 0, 1, 1], &cfg, &LayoutOptions::paper());
+        let mut acc = SimAccelerator::new(2, 4);
+        acc.setup(1, &pg.parts[1]).unwrap();
+        // The image carries the partitioning's renumbering tables (shared,
+        // not copied): the outbox toward the CPU is indexed by
+        // B(cpu, gpu) = {1}.
+        let tables = acc.outbox_tables(1);
+        assert_eq!(tables[0].as_slice(), pg.borders.table(0, 1));
+        assert!(Arc::ptr_eq(&tables[0], &pg.parts[1].border_in[0]));
+        // Wire model is boundary-compacted, not full-V.
+        let mut f = Bitmap::new(4);
+        f.set(1);
+        let n = pg.parts[1].num_vertices();
+        let border = pg.parts[1].border_in_wire_bytes();
+        let r = acc.bottom_up(1, f.words()).unwrap();
+        assert_eq!(r.pcie_bytes, (n / 8 + n / 8 + 4) as u64 + border);
+        let frontier = vec![1i32; n];
+        let r = acc.top_down(1, &frontier).unwrap();
+        assert_eq!(r.pcie_bytes, (n / 8 + n / 8 + 4) as u64 + border);
     }
 
     #[test]

@@ -7,12 +7,29 @@
 //! costs, per GPU, ONE upload and/or ONE download per round — never
 //! GPU-to-GPU traffic.
 //!
-//! Key optimization reproduced from Section 3.1: push and pull each happen
-//! once per BSP round, carry only remote-relevant *bitmaps* (parents are
-//! never communicated during traversal — they move once, in the final
-//! aggregation step). `CommMode::PerActivation` is the ablation strawman
-//! that sends an eager 8-byte message per crossing activation instead
-//! (bench `ablation_comm`).
+//! Key optimizations reproduced from Section 3.1: push and pull each
+//! happen once per BSP round, carry only remote-relevant *bitmaps*
+//! (parents are never communicated during traversal — they move once, in
+//! the final aggregation step), and every per-link buffer is **boundary
+//! compacted**: the `(p, q)` outbox is a bitmap over the pair's
+//! *border-local* index space (the renumbered border set
+//! `B(q, p)` = vertices owned by `q` with an edge into `p` — see
+//! [`crate::partition::BorderSets`]), not over the global vertex space.
+//! Buffer memory and modeled wire bytes therefore scale with the boundary
+//! cut: `push_stats`/`pull_stats` price every message adaptively —
+//! border-local bitmap or sparse id list, whichever is smaller (the
+//! sparse<->dense adaptation applied to the wire). Push costs use exact
+//! outbox occupancy; pull costs bound the list option by the sender's
+//! frontier size (its border occupancy is at most that), so pull bytes
+//! are a tight upper bound rather than exact. Each [`CommStats`] also
+//! carries `dense_equiv_bytes`:
+//! what the pre-compaction full-V bitmap scheme would have moved for the
+//! same exchange, so the compaction ratio is directly observable
+//! (bench `ablation_comm`, CLI `--comm-stats`).
+//! `CommMode::PerActivation` is the ablation strawman that sends an eager
+//! 8-byte message per crossing activation instead.
+
+use std::sync::Arc;
 
 use crate::partition::PartitionedGraph;
 use crate::util::Bitmap;
@@ -20,7 +37,7 @@ use crate::util::Bitmap;
 /// Wire protocol flavour.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommMode {
-    /// The paper's scheme: one bitmap per link per round.
+    /// The paper's scheme: one border-compacted bitmap per link per round.
     Batched,
     /// Eager per-activation messages — what the batching optimization
     /// saves us from.
@@ -53,6 +70,11 @@ pub struct CommStats {
     /// Activations that crossed a partition boundary (basis of the
     /// per-activation mode's cost).
     pub crossing_activations: u64,
+    /// What the pre-compaction scheme — full-V bitmaps per link, plus the
+    /// old unconditional full-V pull aggregate per GPU — would have moved
+    /// for the same exchange. The boundary-compaction comparator
+    /// (`total_bytes() <= dense_equiv_bytes` always holds for `Batched`).
+    pub dense_equiv_bytes: u64,
 }
 
 impl CommStats {
@@ -66,6 +88,7 @@ impl CommStats {
         self.pull_pcie.bytes += o.pull_pcie.bytes;
         self.pull_pcie.msgs += o.pull_pcie.msgs;
         self.crossing_activations += o.crossing_activations;
+        self.dense_equiv_bytes += o.dense_equiv_bytes;
     }
 
     pub fn push_bytes(&self) -> u64 {
@@ -81,45 +104,114 @@ impl CommStats {
     }
 }
 
-/// Outgoing activation buffers for every (source, destination) pair.
+/// Outgoing activation buffers for every (source, destination) pair —
+/// border-compacted outboxes.
 ///
-/// `buf[p][q]` holds the global-space bitmap of vertices owned by `q` that
-/// partition `p` activated during its top-down step this round.
+/// The `(p, q)` outbox is a bitmap over border-local indices of
+/// `B(q, p)` (vertices owned by `q` that border `p`): bit `i` set means
+/// partition `p` activated `table[i]` this round. Every vertex `p` can
+/// reach by a single edge is in that set by construction, so the
+/// translation never misses. The owner-side *inbox* view is
+/// [`Self::gather`], which expands the border-local bits of every source
+/// back to global ids.
 pub struct CommBuffers {
     np: usize,
-    bufs: Vec<Vec<Bitmap>>,
-    /// Per-destination local bitmap wire size (bytes) — what actually
-    /// crosses a link for one (p, q) push.
-    dest_wire_bytes: Vec<u64>,
+    /// `outboxes[p][q]`: border-local bitmap over `tables[p][q]`.
+    outboxes: Vec<Vec<Bitmap>>,
+    /// `tables[p][q]` = the `B(q, p)` renumbering table (sorted global
+    /// ids), `Arc`-shared with the partitioning.
+    tables: Vec<Vec<Arc<Vec<u32>>>>,
+    /// Pre-compaction comparator: full-V bitmap bytes per destination
+    /// (what one `(p, q)` message used to cost).
+    dense_dest_bytes: Vec<u64>,
+    /// Pre-compaction comparator: the old full-V pull aggregate.
+    dense_agg_bytes: u64,
 }
 
 impl CommBuffers {
     pub fn new(pg: &PartitionedGraph) -> Self {
         let np = pg.parts.len();
-        let v = pg.num_vertices;
-        let bufs = (0..np)
-            .map(|_| (0..np).map(|_| Bitmap::new(v)).collect())
+        let tables: Vec<Vec<Arc<Vec<u32>>>> = (0..np)
+            .map(|p| (0..np).map(|q| pg.borders.share(q, p)).collect())
             .collect();
-        let dest_wire_bytes = pg
+        let outboxes = tables
+            .iter()
+            .map(|row| row.iter().map(|t| Bitmap::new(t.len())).collect())
+            .collect();
+        let dense_dest_bytes = pg
             .parts
             .iter()
-            .map(|p| (p.num_vertices().div_ceil(8)) as u64)
+            .map(|p| p.num_vertices().div_ceil(8) as u64)
             .collect();
-        Self { np, bufs, dest_wire_bytes }
+        Self {
+            np,
+            outboxes,
+            tables,
+            dense_dest_bytes,
+            dense_agg_bytes: pg.num_vertices.div_ceil(8) as u64,
+        }
     }
 
+    /// Adaptive wire cost of shipping `occupancy` set members out of a
+    /// border set of `border_len` vertices: a border-local bitmap
+    /// (`len/8`) or a sparse id list (4 bytes per member), whichever is
+    /// smaller — the sparse<->dense adaptation applied to the wire
+    /// (Buluc & Madduri). Zero when either side is empty.
     #[inline]
-    pub fn outgoing(&mut self, src: usize, dst: usize) -> &mut Bitmap {
-        &mut self.bufs[src][dst]
+    fn wire_cost(border_len: usize, occupancy: u64) -> u64 {
+        if border_len == 0 || occupancy == 0 {
+            0
+        } else {
+            (border_len.div_ceil(8) as u64).min(4 * occupancy)
+        }
     }
 
+    /// Mark global vertex `gid` (owned by `dst`) in the `(src, dst)`
+    /// outbox. Returns whether the bit was newly set — the crossing-census
+    /// dedup the driver previously did with a get-then-set on the full-V
+    /// buffer. Panics if `gid` is not in the pair's border set: everything
+    /// a kernel pushes is single-edge reachable, hence a border vertex.
     #[inline]
-    pub fn outgoing_ref(&self, src: usize, dst: usize) -> &Bitmap {
-        &self.bufs[src][dst]
+    pub fn mark(&mut self, src: usize, dst: usize, gid: u32) -> bool {
+        let bl = self.tables[src][dst]
+            .binary_search(&gid)
+            .expect("pushed vertex not in the (src, dst) border set");
+        !self.outboxes[src][dst].test_and_set(bl)
+    }
+
+    /// Is `gid` marked in the `(src, dst)` outbox?
+    pub fn marked(&self, src: usize, dst: usize, gid: u32) -> bool {
+        self.tables[src][dst]
+            .binary_search(&gid)
+            .is_ok_and(|bl| self.outboxes[src][dst].get(bl))
+    }
+
+    /// Owner-side inbox merge: expand every source's `(src, dst)` outbox
+    /// back to global ids, OR-ed into `into` (a global-space bitmap the
+    /// caller cleared). Returns whether anything arrived. The expanded set
+    /// is identical to the old full-V buffers' union, so the ascending
+    /// merge order downstream is unchanged.
+    pub fn gather(&self, dst: usize, into: &mut Bitmap) -> bool {
+        let mut any = false;
+        for src in 0..self.np {
+            if src == dst {
+                continue;
+            }
+            let ob = &self.outboxes[src][dst];
+            if !ob.any() {
+                continue;
+            }
+            any = true;
+            let table = &self.tables[src][dst];
+            for bl in ob.iter_ones() {
+                into.set(table[bl] as usize);
+            }
+        }
+        any
     }
 
     pub fn clear(&mut self) {
-        for row in self.bufs.iter_mut() {
+        for row in self.outboxes.iter_mut() {
             for b in row.iter_mut() {
                 b.clear();
             }
@@ -128,8 +220,10 @@ impl CommBuffers {
 
     /// Account for the push phase (Algorithm 2) under the hub-spoke
     /// topology: a GPU with any outgoing data performs ONE upload of its
-    /// buffers; a GPU with any incoming data receives ONE download; traffic
-    /// between CPU sockets rides the host links.
+    /// (border-compacted) buffers; a GPU with any incoming data receives
+    /// ONE download; traffic between CPU sockets rides the host links.
+    /// Bytes per link are exact: min(border-local bitmap, sparse id list
+    /// of the actually-marked activations).
     pub fn push_stats(
         &self,
         pg: &PartitionedGraph,
@@ -142,51 +236,94 @@ impl CommBuffers {
             // message.
             s.push_pcie.bytes = crossing_activations * 8;
             s.push_pcie.msgs = crossing_activations;
+            s.dense_equiv_bytes = s.push_pcie.bytes;
             return s;
         }
         for p in 0..self.np {
             // Bytes this source has for each destination.
             let mut up_bytes = 0u64;
+            let mut up_dense = 0u64;
             for q in 0..self.np {
-                if p == q || !self.bufs[p][q].any() {
+                if p == q || !self.outboxes[p][q].any() {
                     continue;
                 }
-                let bytes = self.dest_wire_bytes[q];
+                let bytes = Self::wire_cost(
+                    self.tables[p][q].len(),
+                    self.outboxes[p][q].count() as u64,
+                );
+                let dense = self.dense_dest_bytes[q];
                 if pg.parts[p].kind.is_gpu() {
                     up_bytes += bytes; // GPU -> host, batched below
+                    up_dense += dense;
                 } else if pg.parts[q].kind.is_gpu() {
                     // host -> GPU download, one message per (host, gpu) set
                     s.push_pcie.add(bytes);
+                    s.dense_equiv_bytes += dense;
                 } else {
                     s.push_host.add(bytes);
+                    s.dense_equiv_bytes += dense;
                 }
             }
             if up_bytes > 0 {
                 s.push_pcie.add(up_bytes); // the GPU's single upload
+                s.dense_equiv_bytes += up_dense;
             }
         }
         s
     }
 
     /// Account for the pull phase (Algorithm 3) under the hub-spoke
-    /// topology: each GPU uploads its current-frontier bitmap once and
-    /// downloads the host-built aggregate once; CPU sockets read each
-    /// other's frontiers over host links.
-    pub fn pull_stats(&self, pg: &PartitionedGraph, nonempty: &[bool]) -> CommStats {
+    /// topology: each GPU uploads its boundary frontier once (one bitmap
+    /// over its *union* border set, or a sparse frontier list if smaller)
+    /// and downloads the host-built *boundary* aggregate once (each
+    /// remote's `B(r, q)` slice, bitmap or list); CPU sockets read each
+    /// other's border frontiers over host links the same way.
+    /// `frontier_counts[p]` is partition `p`'s current frontier size —
+    /// the sparse-list bound. Every transfer is gated on actual border
+    /// adjacency and frontier occupancy — a partition pair with no
+    /// boundary edges moves zero bytes (the old scheme charged every GPU
+    /// the full-V aggregate unconditionally; that cost survives only in
+    /// `dense_equiv_bytes`).
+    pub fn pull_stats(&self, pg: &PartitionedGraph, frontier_counts: &[u64]) -> CommStats {
         let mut s = CommStats::default();
-        let agg_bytes = (pg.num_vertices.div_ceil(8)) as u64;
         for (q, part) in pg.parts.iter().enumerate() {
             if part.kind.is_gpu() {
-                if nonempty[q] {
-                    s.pull_pcie.add(self.dest_wire_bytes[q]); // upload own
+                if frontier_counts[q] > 0 {
+                    // Upload own boundary frontier once; the host routes
+                    // per-destination views from it.
+                    let up = Self::wire_cost(part.border_union_len, frontier_counts[q]);
+                    if up > 0 {
+                        s.pull_pcie.add(up);
+                    }
+                    s.dense_equiv_bytes += self.dense_dest_bytes[q];
                 }
-                s.pull_pcie.add(agg_bytes); // download aggregate
+                // Download the boundary-restricted aggregate: every
+                // nonempty remote's border-frontier slice (disjoint sets,
+                // one concatenated message). Per-slice byte rounding can
+                // sum past the plain full-V aggregate on tiny graphs; the
+                // adaptive encoding includes that dense fallback, so the
+                // download never costs more than the old scheme's.
+                let mut down = 0u64;
+                for r in 0..self.np {
+                    if r != q {
+                        down += Self::wire_cost(self.tables[q][r].len(), frontier_counts[r]);
+                    }
+                }
+                if down > 0 {
+                    s.pull_pcie.add(down.min(self.dense_agg_bytes));
+                }
+                // Old scheme: the full-V aggregate, unconditionally.
+                s.dense_equiv_bytes += self.dense_agg_bytes;
             } else {
-                // Socket reads every other socket's frontier from host
-                // memory (remote-NUMA traffic).
+                // Socket reads every other socket's border frontier from
+                // host memory (remote-NUMA traffic).
                 for (r, other) in pg.parts.iter().enumerate() {
-                    if r != q && !other.kind.is_gpu() && nonempty[r] {
-                        s.pull_host.add(self.dest_wire_bytes[r]);
+                    if r != q && !other.kind.is_gpu() && frontier_counts[r] > 0 {
+                        let bytes = Self::wire_cost(self.tables[q][r].len(), frontier_counts[r]);
+                        if bytes > 0 {
+                            s.pull_host.add(bytes);
+                        }
+                        s.dense_equiv_bytes += self.dense_dest_bytes[r];
                     }
                 }
             }
@@ -201,14 +338,28 @@ mod tests {
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
-    /// 8 vertices: partition 0,1 = CPU sockets, partition 2 = GPU.
+    /// 9 vertices: partitions 0,1 = CPU sockets, partition 2 = GPU.
+    /// Cross edges: 0-3, 1-4, 2-5 (between sockets 0 and 1) and 5-6
+    /// (socket 1 <-> GPU); 7-8 is GPU-internal.
     fn pg3() -> PartitionedGraph {
         let g = build_csr(&EdgeList {
             num_vertices: 9,
-            edges: vec![(0, 3), (1, 4), (2, 5), (6, 7), (7, 8)],
+            edges: vec![(0, 3), (1, 4), (2, 5), (5, 6), (7, 8)],
         });
         let cfg = HardwareConfig { cpu_sockets: 2, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 32 };
         materialize(&g, vec![0, 0, 0, 1, 1, 1, 2, 2, 2], &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn outboxes_are_border_sized_not_global() {
+        let pg = pg3();
+        let cb = CommBuffers::new(&pg);
+        // Link (0, 1): B(1, 0) = {3, 4, 5} -> 3 bits, not 9.
+        assert_eq!(cb.outboxes[0][1].len(), 3);
+        // Link (0, 2): no boundary edges between socket 0 and the GPU.
+        assert_eq!(cb.outboxes[0][2].len(), 0);
+        // Link (1, 2): B(2, 1) = {6}.
+        assert_eq!(cb.outboxes[1][2].len(), 1);
     }
 
     #[test]
@@ -218,90 +369,178 @@ mod tests {
         let s = cb.push_stats(&pg, CommMode::Batched, 0);
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.push_host.msgs + s.push_pcie.msgs, 0);
+        assert_eq!(s.dense_equiv_bytes, 0);
+    }
+
+    #[test]
+    fn mark_translates_and_dedups() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        assert!(cb.mark(0, 1, 3), "first mark is new");
+        assert!(!cb.mark(0, 1, 3), "second mark deduplicated");
+        assert!(cb.marked(0, 1, 3));
+        assert!(!cb.marked(0, 1, 4));
+        assert!(!cb.marked(1, 0, 3), "other direction untouched");
+    }
+
+    #[test]
+    fn gather_expands_back_to_global_ids() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.mark(0, 1, 3);
+        cb.mark(0, 1, 5);
+        cb.mark(2, 1, 5); // GPU also pushed vertex 5
+        let mut incoming = Bitmap::new(9);
+        assert!(cb.gather(1, &mut incoming));
+        assert_eq!(incoming.iter_ones().collect::<Vec<_>>(), vec![3, 5]);
+        let mut none = Bitmap::new(9);
+        assert!(!cb.gather(0, &mut none), "nothing addressed to partition 0");
     }
 
     #[test]
     fn push_cpu_to_cpu_rides_host_link() {
         let pg = pg3();
         let mut cb = CommBuffers::new(&pg);
-        cb.outgoing(0, 1).set(3);
+        cb.mark(0, 1, 3);
         let s = cb.push_stats(&pg, CommMode::Batched, 1);
         assert_eq!(s.push_host.msgs, 1);
-        assert_eq!(s.push_host.bytes, 1); // 3 local vertices -> 1 byte
+        assert_eq!(s.push_host.bytes, 1); // 3 border vertices -> 1 byte
         assert_eq!(s.push_pcie.msgs, 0);
+        // The old scheme shipped the destination's full bitmap (3 local
+        // vertices -> also 1 byte at this toy size).
+        assert_eq!(s.dense_equiv_bytes, 1);
     }
 
     #[test]
     fn push_cpu_to_gpu_is_one_pcie_download() {
         let pg = pg3();
         let mut cb = CommBuffers::new(&pg);
-        cb.outgoing(0, 2).set(6);
+        cb.mark(1, 2, 6);
         let s = cb.push_stats(&pg, CommMode::Batched, 1);
         assert_eq!(s.push_pcie.msgs, 1);
         assert_eq!(s.push_host.msgs, 0);
+        assert_eq!(s.push_pcie.bytes, 1, "|B(2,1)| = 1 -> 1 byte");
     }
 
     #[test]
     fn push_gpu_batches_one_upload_for_all_destinations() {
         let pg = pg3();
         let mut cb = CommBuffers::new(&pg);
-        cb.outgoing(2, 0).set(0);
-        cb.outgoing(2, 1).set(3);
-        let s = cb.push_stats(&pg, CommMode::Batched, 2);
+        cb.mark(2, 1, 5);
+        let s = cb.push_stats(&pg, CommMode::Batched, 1);
         assert_eq!(s.push_pcie.msgs, 1, "one upload, not one per destination");
-        assert_eq!(s.push_pcie.bytes, 2);
+        assert_eq!(s.push_pcie.bytes, 1);
     }
 
     #[test]
     fn per_activation_mode_scales_with_crossings() {
         let pg = pg3();
         let mut cb = CommBuffers::new(&pg);
-        cb.outgoing(0, 1).set(3);
+        cb.mark(0, 1, 3);
         let s = cb.push_stats(&pg, CommMode::PerActivation, 37);
         assert_eq!(s.push_pcie.bytes, 37 * 8);
         assert_eq!(s.push_pcie.msgs, 37);
     }
 
     #[test]
-    fn pull_gpu_is_upload_plus_aggregate_download() {
+    fn pull_is_boundary_gated_and_below_dense() {
         let pg = pg3();
         let cb = CommBuffers::new(&pg);
-        let s = cb.pull_stats(&pg, &[true, true, true]);
-        // GPU: 1 upload + 1 download; sockets: each reads the other's.
+        let s = cb.pull_stats(&pg, &[1, 1, 1]);
+        // GPU (partition 2): borders only socket 1 -> upload |B(2,1)|=1
+        // byte, download |B(1,2)|=1 byte; sockets read each other's
+        // 3-vertex border sets (1 byte each).
         assert_eq!(s.pull_pcie.msgs, 2);
+        assert_eq!(s.pull_pcie.bytes, 2);
         assert_eq!(s.pull_host.msgs, 2);
-        // Aggregate download is the global bitmap (9 bits -> 2 bytes).
-        assert!(s.pull_pcie.bytes >= 2);
+        assert_eq!(s.pull_host.bytes, 2);
+        // The old scheme: own full bitmap (1) + full-V aggregate (2) on
+        // PCIe, full destination bitmaps on host links.
+        assert!(s.dense_equiv_bytes > s.total_bytes());
+    }
+
+    #[test]
+    fn pull_without_boundary_adjacency_moves_nothing() {
+        // Socket 0 and a GPU that share no boundary edges at all.
+        let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (2, 3)] });
+        let cfg =
+            HardwareConfig { cpu_sockets: 1, gpus: 1, gpu_mem_bytes: 1 << 20, gpu_max_degree: 32 };
+        let pg = materialize(&g, vec![0, 0, 1, 1], &cfg, &LayoutOptions::naive());
+        let cb = CommBuffers::new(&pg);
+        let s = cb.pull_stats(&pg, &[1, 1]);
+        assert_eq!(s.total_bytes(), 0, "no boundary -> no traffic");
+        assert_eq!(s.pull_pcie.msgs + s.pull_host.msgs, 0);
+        // The pre-compaction scheme still charged the GPU the full
+        // aggregate — that bug survives only in the comparator.
+        assert!(s.dense_equiv_bytes > 0);
     }
 
     #[test]
     fn pull_empty_gpu_frontier_skips_upload() {
         let pg = pg3();
         let cb = CommBuffers::new(&pg);
-        let s = cb.pull_stats(&pg, &[true, false, false]);
-        assert_eq!(s.pull_pcie.msgs, 1, "download only");
+        let s = cb.pull_stats(&pg, &[1, 0, 0]);
+        // GPU frontier empty (no upload) and no nonempty remote borders
+        // except socket 0 — which the GPU does not border, so no download
+        // either. Socket 1 reads socket 0's border set.
+        assert_eq!(s.pull_pcie.msgs, 0);
         assert_eq!(s.pull_host.msgs, 1, "socket 1 reads socket 0");
+    }
+
+    #[test]
+    fn sparse_id_list_wins_over_wide_border_bitmaps() {
+        // Two sockets, 80 vertices, 40 boundary edges: B(1, 0) has 40
+        // members (5-byte bitmap). A single marked activation ships as a
+        // 4-byte id instead; a nearly-full outbox ships as the bitmap.
+        let nv = 80;
+        let edges: Vec<(u32, u32)> = (0..40).map(|i| (i, i + 40)).collect();
+        let g = build_csr(&EdgeList { num_vertices: nv, edges });
+        let cfg = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let owner: Vec<u8> = (0..nv).map(|v| u8::from(v >= 40)).collect();
+        let pg = materialize(&g, owner, &cfg, &LayoutOptions::naive());
+        assert_eq!(pg.borders.len(1, 0), 40);
+
+        let mut cb = CommBuffers::new(&pg);
+        cb.mark(0, 1, 40);
+        let s = cb.push_stats(&pg, CommMode::Batched, 1);
+        assert_eq!(s.push_host.bytes, 4, "one id beats the 5-byte bitmap");
+
+        for w in 40..80 {
+            cb.mark(0, 1, w);
+        }
+        let s = cb.push_stats(&pg, CommMode::Batched, 40);
+        assert_eq!(s.push_host.bytes, 5, "full outbox ships as the bitmap");
+
+        // Pull side: a single-vertex frontier reads as a 4-byte id.
+        let s = cb.pull_stats(&pg, &[1, 0]);
+        assert_eq!(s.pull_host.bytes, 4, "socket 1 reads socket 0's one id");
+        assert_eq!(s.pull_host.msgs, 1);
     }
 
     #[test]
     fn clear_resets_buffers() {
         let pg = pg3();
         let mut cb = CommBuffers::new(&pg);
-        cb.outgoing(0, 1).set(5);
+        cb.mark(0, 1, 5);
         cb.clear();
-        assert!(!cb.outgoing_ref(0, 1).any());
+        assert!(!cb.marked(0, 1, 5));
+        let mut incoming = Bitmap::new(9);
+        assert!(!cb.gather(1, &mut incoming));
     }
 
     #[test]
     fn stats_add_accumulates() {
         let mut a = CommStats::default();
         a.push_host.add(4);
+        a.dense_equiv_bytes = 9;
         let mut b = CommStats::default();
         b.push_host.add(6);
         b.pull_pcie.add(10);
+        b.dense_equiv_bytes = 20;
         a.add(&b);
         assert_eq!(a.push_host, LinkTraffic { bytes: 10, msgs: 2 });
         assert_eq!(a.pull_pcie, LinkTraffic { bytes: 10, msgs: 1 });
         assert_eq!(a.total_bytes(), 20);
+        assert_eq!(a.dense_equiv_bytes, 29);
     }
 }

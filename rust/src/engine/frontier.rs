@@ -1,28 +1,198 @@
-//! Per-partition frontier state: current/next bitmaps over the global
-//! vertex space (only bits of *owned* vertices are ever set).
+//! Per-partition frontier state with an **adaptive representation**
+//! (GAP-style sliding-queue switch, cf. Buluç & Madduri's observation
+//! that the frontier must adapt as it grows and shrinks):
 //!
-//! Totem's bitmap frontier representation (paper Section 4, software
-//! platform): set/test is O(1), merge is word-wise OR, and the packed words
-//! hand straight to the accelerator kernel's `i32[VW]` operand.
+//! * below the fill threshold the current frontier is a **sparse sorted
+//!   queue** — iteration and queue materialization cost O(|F|), not
+//!   O(V/64) words;
+//! * above it, a **dense bitmap** — the packed words hand straight to the
+//!   accelerator kernel's `i32[VW]` operand and membership is O(1).
+//!
+//! Both representations keep the dense bits authoritative and iterate in
+//! **ascending global id order**, so a representation switch can never
+//! change kernel outputs: the deterministic merge rule (ascending
+//! `(pid, chunk)`, first candidate wins — DESIGN.md Sections 4/10/12)
+//! sees the same candidate order either way. The *next* frontier is
+//! always dense: kernels mark it with atomic fetch-or during the
+//! concurrent kernel phase, which a queue cannot support lock-free; the
+//! representation of the consuming side is chosen once, at the level
+//! barrier ([`FrontierPair::advance`]).
 
-use crate::util::Bitmap;
+use crate::util::{Bitmap, OnesIter};
+
+/// A frontier stays sparse while `|F| * SPARSE_FILL_DENOM <= V` — i.e.
+/// below a 1/64 fill. Tail and head levels of a direction-optimized BFS
+/// sit far below this; the few mid-traversal levels above it are exactly
+/// the ones where bitmap scans amortize.
+pub const SPARSE_FILL_DENOM: usize = 64;
+
+/// One frontier, in whichever representation fits its occupancy.
+#[derive(Clone, Debug)]
+pub enum Frontier {
+    /// Sorted vertex queue (ascending); `bits` mirrors the queue so
+    /// membership probes stay O(1) and the accelerator operand handoff
+    /// never needs a rebuild.
+    Sparse { queue: Vec<u32>, bits: Bitmap },
+    /// Plain bitmap.
+    Dense { bits: Bitmap },
+}
+
+impl Frontier {
+    pub fn new(num_vertices: usize) -> Self {
+        Frontier::Sparse { queue: Vec::new(), bits: Bitmap::new(num_vertices) }
+    }
+
+    /// The dense bits — authoritative in both representations.
+    #[inline]
+    pub fn bits(&self) -> &Bitmap {
+        match self {
+            Frontier::Sparse { bits, .. } | Frontier::Dense { bits } => bits,
+        }
+    }
+
+    #[inline]
+    fn bits_mut(&mut self) -> &mut Bitmap {
+        match self {
+            Frontier::Sparse { bits, .. } | Frontier::Dense { bits } => bits,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Frontier::Sparse { .. })
+    }
+
+    /// The sorted member queue when sparse — the top-down pre-phase copies
+    /// it instead of scanning the bitmap.
+    pub fn as_queue(&self) -> Option<&[u32]> {
+        match self {
+            Frontier::Sparse { queue, .. } => Some(queue),
+            Frontier::Dense { .. } => None,
+        }
+    }
+
+    /// Number of members (O(1) when sparse).
+    pub fn count(&self) -> usize {
+        match self {
+            Frontier::Sparse { queue, .. } => queue.len(),
+            Frontier::Dense { bits } => bits.count(),
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        match self {
+            Frontier::Sparse { queue, .. } => !queue.is_empty(),
+            Frontier::Dense { bits } => bits.any(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.bits().get(i)
+    }
+
+    /// Insert vertex `i` (root seeding, owner-side merges in tests).
+    /// Kernels never call this on a current frontier — they mark the
+    /// dense `next` and the representation is re-chosen at the barrier.
+    pub fn set(&mut self, i: usize) {
+        match self {
+            Frontier::Sparse { queue, bits } => {
+                if !bits.get(i) {
+                    bits.set(i);
+                    let pos = queue.partition_point(|&x| (x as usize) < i);
+                    queue.insert(pos, i as u32);
+                }
+            }
+            Frontier::Dense { bits } => bits.set(i),
+        }
+    }
+
+    /// Empty the frontier. Sparse clears only the queue's bits
+    /// (O(|F|)); dense wipes the words and reverts to the (empty) sparse
+    /// representation.
+    pub fn clear(&mut self) {
+        if let Frontier::Sparse { queue, bits } = self {
+            for &v in queue.iter() {
+                bits.clear_bit(v as usize);
+            }
+            queue.clear();
+            return;
+        }
+        let placeholder = Frontier::Dense { bits: Bitmap::new(0) };
+        if let Frontier::Dense { mut bits } = std::mem::replace(self, placeholder) {
+            bits.clear();
+            *self = Frontier::Sparse { queue: Vec::new(), bits };
+        }
+    }
+
+    /// Iterate members in ascending id order — the *same* sequence in
+    /// both representations (the determinism contract's frontier order).
+    pub fn iter(&self) -> FrontierIter<'_> {
+        match self {
+            Frontier::Sparse { queue, .. } => FrontierIter::Sparse(queue.iter()),
+            Frontier::Dense { bits } => FrontierIter::Dense(bits.iter_ones()),
+        }
+    }
+
+    /// Re-choose the representation for the current bit contents (called
+    /// after the dense next-frontier was swapped in at the level barrier).
+    /// Keeps the queue's capacity across sparse -> sparse transitions.
+    fn rechoose(&mut self) {
+        let placeholder = Frontier::Dense { bits: Bitmap::new(0) };
+        let (mut queue, bits) = match std::mem::replace(self, placeholder) {
+            Frontier::Sparse { mut queue, bits } => {
+                queue.clear();
+                (queue, bits)
+            }
+            Frontier::Dense { bits } => (Vec::new(), bits),
+        };
+        if bits.count().saturating_mul(SPARSE_FILL_DENOM) <= bits.len() {
+            queue.extend(bits.iter_ones().map(|v| v as u32));
+            *self = Frontier::Sparse { queue, bits };
+        } else {
+            *self = Frontier::Dense { bits };
+        }
+    }
+}
+
+/// Ascending-order member iterator over either representation.
+pub enum FrontierIter<'a> {
+    Sparse(std::slice::Iter<'a, u32>),
+    Dense(OnesIter<'a>),
+}
+
+impl Iterator for FrontierIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            FrontierIter::Sparse(it) => it.next().map(|&v| v as usize),
+            FrontierIter::Dense(it) => it.next(),
+        }
+    }
+}
 
 /// Current + next frontier for one partition.
 #[derive(Clone, Debug)]
 pub struct FrontierPair {
-    pub current: Bitmap,
+    /// This level's frontier (adaptive representation).
+    pub current: Frontier,
+    /// Next level's frontier — always dense, because kernel chunks mark it
+    /// concurrently via [`Bitmap::as_atomic`] fetch-or.
     pub next: Bitmap,
 }
 
 impl FrontierPair {
     pub fn new(num_vertices: usize) -> Self {
-        Self { current: Bitmap::new(num_vertices), next: Bitmap::new(num_vertices) }
+        Self { current: Frontier::new(num_vertices), next: Bitmap::new(num_vertices) }
     }
 
-    /// End-of-superstep: next becomes current, next is cleared.
+    /// End-of-superstep: next becomes current — re-choosing sparse vs
+    /// dense by its fill — and next is cleared.
     pub fn advance(&mut self) {
-        std::mem::swap(&mut self.current, &mut self.next);
+        std::mem::swap(self.current.bits_mut(), &mut self.next);
         self.next.clear();
+        self.current.rechoose();
     }
 
     pub fn reset(&mut self) {
@@ -32,7 +202,9 @@ impl FrontierPair {
 }
 
 /// The global frontier aggregated from all partitions (the bottom-up pull
-/// target, paper Algorithm 3).
+/// target, paper Algorithm 3). Always dense: it is the accelerator
+/// kernel's packed `i32[VW]` operand and the bottom-up kernels' O(1)
+/// membership probe.
 ///
 /// The engine maintains this *incrementally*: every activation marks the
 /// state's shared next-frontier bitmap (atomic fetch-or under the parallel
@@ -53,7 +225,7 @@ impl GlobalFrontier {
     pub fn aggregate<'a>(&mut self, parts: impl Iterator<Item = &'a FrontierPair>) {
         self.bits.clear();
         for fp in parts {
-            self.bits.or_with(&fp.current);
+            self.bits.or_with(fp.current.bits());
         }
     }
 }
@@ -68,10 +240,69 @@ mod tests {
         fp.next.set(3);
         fp.next.set(40);
         fp.advance();
-        assert_eq!(fp.current.iter_ones().collect::<Vec<_>>(), vec![3, 40]);
+        assert_eq!(fp.current.iter().collect::<Vec<_>>(), vec![3, 40]);
         assert_eq!(fp.next.count(), 0);
         fp.advance();
         assert_eq!(fp.current.count(), 0);
+    }
+
+    #[test]
+    fn representation_tracks_fill_threshold() {
+        // 4096 vertices: sparse while <= 64 members, dense above.
+        let mut fp = FrontierPair::new(4096);
+        for v in 0..64 {
+            fp.next.set(v * 3);
+        }
+        fp.advance();
+        assert!(fp.current.is_sparse(), "64/4096 is exactly the threshold");
+        assert_eq!(fp.current.count(), 64);
+        assert!(fp.current.as_queue().is_some());
+
+        for v in 0..65 {
+            fp.next.set(v * 2);
+        }
+        fp.advance();
+        assert!(!fp.current.is_sparse(), "65/4096 exceeds the threshold");
+        assert_eq!(fp.current.count(), 65);
+        assert!(fp.current.as_queue().is_none());
+
+        // Shrinks back: the sliding switch is bidirectional.
+        fp.next.set(17);
+        fp.advance();
+        assert!(fp.current.is_sparse());
+        assert_eq!(fp.current.iter().collect::<Vec<_>>(), vec![17]);
+    }
+
+    #[test]
+    fn both_representations_iterate_identically() {
+        let members: Vec<usize> = vec![0, 31, 32, 100, 1000, 4095];
+        let mut dense = Frontier::Dense { bits: Bitmap::new(4096) };
+        let mut sparse = Frontier::new(4096);
+        for &v in &members {
+            dense.set(v);
+            sparse.set(v);
+        }
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+        assert_eq!(dense.iter().collect::<Vec<_>>(), members);
+        assert_eq!(sparse.iter().collect::<Vec<_>>(), members);
+        assert_eq!(dense.count(), sparse.count());
+        for &v in &members {
+            assert!(dense.get(v) && sparse.get(v));
+        }
+        assert!(!dense.get(1) && !sparse.get(1));
+    }
+
+    #[test]
+    fn sparse_set_keeps_queue_sorted_and_bits_synced() {
+        let mut f = Frontier::new(512);
+        for v in [40, 3, 40, 200, 7] {
+            f.set(v);
+        }
+        assert_eq!(f.as_queue().unwrap(), &[3, 7, 40, 200]);
+        assert_eq!(f.bits().iter_ones().collect::<Vec<_>>(), vec![3, 7, 40, 200]);
+        f.clear();
+        assert!(!f.any());
+        assert!(!f.bits().any(), "sparse clear scrubs the mirror bits");
     }
 
     #[test]
@@ -85,8 +316,9 @@ mod tests {
         g.aggregate([&a, &b].into_iter());
         assert_eq!(g.bits.iter_ones().collect::<Vec<_>>(), vec![1, 2]);
         // Re-aggregation clears stale bits.
-        a.current.clear_bit(1);
-        b.current.clear_bit(1);
+        a.current.clear();
+        b.current.clear();
+        b.current.set(2);
         g.aggregate([&a, &b].into_iter());
         assert_eq!(g.bits.iter_ones().collect::<Vec<_>>(), vec![2]);
     }
@@ -98,5 +330,18 @@ mod tests {
         fp.next.set(1);
         fp.reset();
         assert_eq!(fp.current.count() + fp.next.count(), 0);
+    }
+
+    #[test]
+    fn dense_clear_reverts_to_sparse() {
+        let mut fp = FrontierPair::new(128);
+        for v in 0..100 {
+            fp.next.set(v);
+        }
+        fp.advance();
+        assert!(!fp.current.is_sparse());
+        fp.reset();
+        assert!(fp.current.is_sparse());
+        assert_eq!(fp.current.bits().len(), 128, "backing store retained");
     }
 }

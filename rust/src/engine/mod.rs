@@ -42,6 +42,7 @@ pub mod state;
 
 pub use accel::{Accelerator, BottomUpResult, SimAccelerator, SimContext, TopDownResult};
 pub use comm::{CommMode, CommStats};
+pub use frontier::{Frontier, FrontierPair, GlobalFrontier};
 pub use parallel::{run_steps, ExecutionMode};
 pub use state::{BfsState, KernelSlot};
 

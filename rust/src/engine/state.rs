@@ -50,7 +50,12 @@ pub struct BfsState {
     pub parent: Vec<i64>,
     /// Per-partition visited bitmap (global-space; only owned bits set).
     pub visited: Vec<Bitmap>,
-    /// Per-partition current/next frontier.
+    /// Per-partition current/next frontier. `current` is adaptive
+    /// (sparse sorted queue below the fill threshold, dense bitmap above
+    /// — `engine::frontier`); `next` stays dense so kernel chunks can
+    /// mark it with atomic fetch-or. The representation is re-chosen at
+    /// every [`Self::advance_frontiers`] barrier and never changes
+    /// outputs: both forms iterate in ascending id order.
     pub frontiers: Vec<FrontierPair>,
     /// The pulled global frontier (paper Algorithm 3's aggregate).
     pub global_frontier: GlobalFrontier,

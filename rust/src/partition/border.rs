@@ -1,0 +1,199 @@
+//! Per-partition-pair **border sets** and their dense renumbering tables —
+//! the paper's Section 3.1 boundary-compacted communication substrate
+//! (Totem ships per-link message buffers over *renumbered* boundary
+//! vertices, so wire traffic and buffer memory scale with the boundary
+//! cut, not with the global vertex count).
+//!
+//! For an ordered partition pair `(p, q)` the border set `B(p, q)` is the
+//! set of vertices **owned by `p` with at least one edge into `q`**. Its
+//! table is sorted ascending by global id, which makes it a dense
+//! bijection between the pair's *border-local* index space `0..|B(p, q)|`
+//! and the member global ids:
+//!
+//! * `global_of(p, q, i)` — table lookup, O(1);
+//! * `local_of(p, q, gid)` — binary search, O(log |B|).
+//!
+//! One table serves both directions of a link: the outbox `p -> q`
+//! (activations of `q`'s vertices proposed by `p`) and the pull of `q`'s
+//! frontier by `p` both range over exactly `B(q, p)` — a vertex of `q`
+//! is reachable from / visible to `p` iff it borders `p`.
+
+use std::sync::Arc;
+
+use crate::graph::Csr;
+
+/// All `P x P` border sets of one partitioning. Tables are `Arc`-shared:
+/// [`crate::engine::comm::CommBuffers`] and the accelerator device image
+/// clone the handles, not the tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BorderSets {
+    /// `sets[p][q]` = sorted global ids of `B(p, q)`; `sets[p][p]` empty.
+    sets: Vec<Vec<Arc<Vec<u32>>>>,
+    /// `unions[p]` = |union over q of B(p, q)|: how many of `p`'s vertices
+    /// have at least one external edge at all. The per-destination sets
+    /// overlap (a vertex can border several partitions), so a partition's
+    /// one-shot boundary-frontier upload is priced over this union, not
+    /// the per-pair sum.
+    unions: Vec<usize>,
+}
+
+impl BorderSets {
+    /// Compute every pair's border set from the global CSR and the
+    /// ownership assignment. O(E) with a per-vertex owner-dedup stamp;
+    /// tables come out ascending because vertices are scanned in global
+    /// id order.
+    pub fn build(g: &Csr, owner: &[u8], np: usize) -> Self {
+        let mut sets: Vec<Vec<Vec<u32>>> = (0..np).map(|_| vec![Vec::new(); np]).collect();
+        let mut unions = vec![0usize; np];
+        let mut stamp = vec![0u32; np];
+        let mut version = 0u32;
+        for v in 0..g.num_vertices as u32 {
+            let p = owner[v as usize] as usize;
+            version += 1;
+            let mut is_border = false;
+            for &w in g.neighbours(v) {
+                let q = owner[w as usize] as usize;
+                if q != p && stamp[q] != version {
+                    stamp[q] = version;
+                    sets[p][q].push(v);
+                    is_border = true;
+                }
+            }
+            if is_border {
+                unions[p] += 1;
+            }
+        }
+        Self {
+            sets: sets
+                .into_iter()
+                .map(|row| row.into_iter().map(Arc::new).collect())
+                .collect(),
+            unions,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// The sorted global-id table of `B(p, q)` (border-local -> global).
+    #[inline]
+    pub fn table(&self, p: usize, q: usize) -> &[u32] {
+        &self.sets[p][q]
+    }
+
+    /// Shared handle to the `B(p, q)` table (for comm buffers / device
+    /// images).
+    #[inline]
+    pub fn share(&self, p: usize, q: usize) -> Arc<Vec<u32>> {
+        Arc::clone(&self.sets[p][q])
+    }
+
+    #[inline]
+    pub fn len(&self, p: usize, q: usize) -> usize {
+        self.sets[p][q].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// `global -> border-local` for pair `(p, q)`; `None` when `gid` is
+    /// not a border vertex of the pair.
+    #[inline]
+    pub fn local_of(&self, p: usize, q: usize, gid: u32) -> Option<u32> {
+        self.sets[p][q].binary_search(&gid).ok().map(|i| i as u32)
+    }
+
+    /// `border-local -> global` for pair `(p, q)`.
+    #[inline]
+    pub fn global_of(&self, p: usize, q: usize, border_local: u32) -> u32 {
+        self.sets[p][q][border_local as usize]
+    }
+
+    /// How many of `p`'s vertices border *any* other partition (the size
+    /// of the union of `B(p, q)` over all `q`). Per-pair sets overlap, so
+    /// this is smaller than the sum of the pair lengths. Wire-byte
+    /// pricing lives with the consumers: `Partition::border_*_wire_bytes`
+    /// for the accelerator image, `engine::comm` for the link accounting.
+    pub fn union_len(&self, p: usize) -> usize {
+        self.unions[p]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+
+    /// 0-1 inside partition 0; 1-2 and 0-4 cross 0<->1; 3 is isolated in
+    /// partition 1; 5 isolated in partition 2 (no borders at all).
+    fn fixture() -> (Csr, Vec<u8>) {
+        let g = build_csr(&EdgeList {
+            num_vertices: 6,
+            edges: vec![(0, 1), (1, 2), (0, 4)],
+        });
+        (g, vec![0, 0, 1, 1, 1, 2])
+    }
+
+    #[test]
+    fn borders_are_cross_edges_only() {
+        let (g, owner) = fixture();
+        let b = BorderSets::build(&g, &owner, 3);
+        assert_eq!(b.table(0, 1), &[0, 1], "0 borders via 4, 1 via 2");
+        assert_eq!(b.table(1, 0), &[2, 4]);
+        assert_eq!(b.table(0, 0), &[] as &[u32], "self pair empty");
+        assert_eq!(b.len(0, 2) + b.len(2, 0) + b.len(1, 2) + b.len(2, 1), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_inverse_bijection() {
+        let (g, owner) = fixture();
+        let b = BorderSets::build(&g, &owner, 3);
+        for p in 0..3 {
+            for q in 0..3 {
+                for (i, &gid) in b.table(p, q).iter().enumerate() {
+                    assert_eq!(b.local_of(p, q, gid), Some(i as u32));
+                    assert_eq!(b.global_of(p, q, i as u32), gid);
+                }
+            }
+        }
+        assert_eq!(b.local_of(0, 1, 4), None, "non-border vertex has no local id");
+    }
+
+    #[test]
+    fn union_tracks_any_external_edge() {
+        let (g, owner) = fixture();
+        let b = BorderSets::build(&g, &owner, 3);
+        assert_eq!(b.union_len(0), 2);
+        assert_eq!(b.union_len(1), 2, "isolated vertex 3 is not a border vertex");
+        assert_eq!(b.union_len(2), 0, "no external edges at all");
+    }
+
+    #[test]
+    fn union_counts_overlapping_borders_once() {
+        // Vertex 0 borders BOTH partitions 1 and 2: the per-pair tables
+        // each list it, the union counts it once.
+        let g = build_csr(&EdgeList {
+            num_vertices: 3,
+            edges: vec![(0, 1), (0, 2)],
+        });
+        let b = BorderSets::build(&g, &[0, 1, 2], 3);
+        assert_eq!(b.table(0, 1), &[0]);
+        assert_eq!(b.table(0, 2), &[0]);
+        assert_eq!(b.len(0, 1) + b.len(0, 2), 2, "per-pair lengths double-count");
+        assert_eq!(b.union_len(0), 1, "the union does not");
+    }
+
+    #[test]
+    fn hub_with_many_cross_edges_appears_once() {
+        // Vertex 0 (partition 0) has three neighbours in partition 1.
+        let g = build_csr(&EdgeList {
+            num_vertices: 4,
+            edges: vec![(0, 1), (0, 2), (0, 3)],
+        });
+        let b = BorderSets::build(&g, &[0, 1, 1, 1], 2);
+        assert_eq!(b.table(0, 1), &[0], "deduplicated per pair");
+        assert_eq!(b.table(1, 0), &[1, 2, 3]);
+    }
+}

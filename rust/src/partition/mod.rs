@@ -6,7 +6,9 @@
 //! local CSRs (neighbours keep their *global* ids, as in Totem's
 //! two-level vertex identity, Section 3.4), applying the paper's locality
 //! optimizations: local-id reordering and degree-descending adjacency
-//! ordering.
+//! ordering. It also computes the per-pair [`BorderSets`] (Section 3.1):
+//! the renumbered boundary vertices the communication layer's compact
+//! outboxes/inboxes and the accelerator device images are keyed by.
 //!
 //! ```
 //! use totem_do::graph::{build_csr, EdgeList};
@@ -23,13 +25,17 @@
 //! assert!(plan.gpu_vertices <= plan.non_singleton); // hubs stay on the CPU
 //! ```
 
+pub mod border;
 pub mod degree;
 pub mod ell;
 pub mod layout;
 pub mod random;
 
+use std::sync::Arc;
+
 use crate::graph::{Csr, VertexId};
 
+pub use border::BorderSets;
 pub use degree::{specialized_partition, specialized_partition_par};
 pub use ell::EllLayout;
 pub use layout::LayoutOptions;
@@ -152,6 +158,24 @@ pub struct Partition {
     /// tail, so bottom-up scans stop here instead of walking them every
     /// level. Equals `num_vertices()` when the order is not guaranteed.
     pub scan_limit: usize,
+    /// Outgoing border renumbering tables, `border_out[q]` = `B(self, q)`:
+    /// sorted global ids of this partition's vertices with at least one
+    /// edge into partition `q` — the slice of this partition's frontier
+    /// that `q` can see (`Arc`-shared with the [`PartitionedGraph`]'s
+    /// [`BorderSets`]).
+    pub border_out: Vec<Arc<Vec<u32>>>,
+    /// Inbound border renumbering tables, `border_in[q]` = `B(q, self)`:
+    /// sorted global ids of `q`'s vertices with an edge into this
+    /// partition. These index spaces are this partition's *outbox* lanes
+    /// (every remote vertex it can activate lives in one) and the
+    /// compacted remote-frontier image it consumes during a pull; they
+    /// are baked into the accelerator device image by
+    /// `Accelerator::setup`. Inbound sets are disjoint across `q`.
+    pub border_in: Vec<Arc<Vec<u32>>>,
+    /// How many of this partition's vertices border *any* other partition
+    /// (per-destination border sets overlap; the one-shot boundary
+    /// frontier upload is a bitmap over this union).
+    pub border_union_len: usize,
 }
 
 impl Partition {
@@ -184,6 +208,26 @@ impl Partition {
     pub fn ell_footprint_bytes(&self) -> u64 {
         (self.num_vertices() as u64) * (self.max_degree.max(1) as u64) * 4
     }
+
+    /// Wire bytes of this partition's outbound boundary image priced
+    /// per destination (`sum_q |B(self, q)| / 8`; the sets overlap — the
+    /// one-shot upload uses [`Self::border_union_wire_bytes`]).
+    pub fn border_out_wire_bytes(&self) -> u64 {
+        self.border_out.iter().map(|t| t.len().div_ceil(8) as u64).sum()
+    }
+
+    /// Wire bytes of the compacted inbound boundary image: the disjoint
+    /// per-source border sets this partition's outboxes are indexed by
+    /// and its pull consumes (`sum_q |B(q, self)| / 8`).
+    pub fn border_in_wire_bytes(&self) -> u64 {
+        self.border_in.iter().map(|t| t.len().div_ceil(8) as u64).sum()
+    }
+
+    /// Bytes of one bitmap over this partition's union border set — its
+    /// one-shot boundary-frontier upload.
+    pub fn border_union_wire_bytes(&self) -> u64 {
+        self.border_union_len.div_ceil(8) as u64
+    }
 }
 
 /// A fully materialized partitioned graph.
@@ -196,6 +240,9 @@ pub struct PartitionedGraph {
     pub owner: Vec<u8>,
     /// Global id -> local index within the owning partition.
     pub local_index: Vec<u32>,
+    /// Per-pair border sets and their `global <-> border-local`
+    /// renumbering tables (Section 3.1 boundary-compacted communication).
+    pub borders: BorderSets,
 }
 
 impl PartitionedGraph {
@@ -281,6 +328,26 @@ impl PartitionedGraph {
         if !seen.iter().all(|&s| s) {
             return Err("some vertex unassigned".into());
         }
+        // Border sets: recompute from scratch and require exact equality
+        // (tables sorted, complete, and deduplicated by construction of
+        // the rebuild), then check the per-partition mirrors.
+        let rebuilt = BorderSets::build(g, &self.owner, self.parts.len());
+        if self.borders != rebuilt {
+            return Err("border sets do not match the ownership cut".into());
+        }
+        for (pid, p) in self.parts.iter().enumerate() {
+            if p.border_union_len != rebuilt.union_len(pid) {
+                return Err(format!("partition {pid}: border_union_len mismatch"));
+            }
+            for q in 0..self.parts.len() {
+                if *p.border_out[q] != *rebuilt.table(pid, q) {
+                    return Err(format!("partition {pid}: border_out[{q}] mismatch"));
+                }
+                if *p.border_in[q] != *rebuilt.table(q, pid) {
+                    return Err(format!("partition {pid}: border_in[{q}] mismatch"));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -294,6 +361,11 @@ pub fn materialize(
 ) -> PartitionedGraph {
     let np = cfg.num_partitions();
     assert!(np <= u8::MAX as usize + 1, "too many partitions");
+
+    // Border sets: one O(E) pass over the global CSR against the
+    // ownership cut (independent of the local-id reorder below — tables
+    // are keyed by global id).
+    let borders = BorderSets::build(g, &owner, np);
 
     // Collect members per partition.
     let mut members: Vec<Vec<VertexId>> = vec![Vec::new(); np];
@@ -352,6 +424,9 @@ pub fn materialize(
             col,
             max_degree,
             scan_limit,
+            border_out: (0..np).map(|q| borders.share(pid, q)).collect(),
+            border_in: (0..np).map(|q| borders.share(q, pid)).collect(),
+            border_union_len: borders.union_len(pid),
         });
     }
 
@@ -361,6 +436,7 @@ pub fn materialize(
         parts,
         owner,
         local_index,
+        borders,
     }
 }
 
@@ -441,6 +517,22 @@ mod tests {
         let l0 = pg.local_of(0);
         let nbrs = pg.parts[0].neighbours(l0);
         assert_eq!(nbrs, &[2, 3, 1]); // degree 3, 2, 1
+    }
+
+    #[test]
+    fn borders_match_cut_and_are_arc_shared() {
+        let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 2), (1, 3), (0, 1)] });
+        let pg = materialize(&g, vec![0, 0, 1, 1], &cfg(2, 0), &LayoutOptions::paper());
+        assert_eq!(pg.borders.table(0, 1), &[0, 1]);
+        assert_eq!(pg.borders.table(1, 0), &[2, 3]);
+        assert!(std::sync::Arc::ptr_eq(&pg.parts[0].border_out[1], &pg.borders.share(0, 1)));
+        assert!(std::sync::Arc::ptr_eq(&pg.parts[0].border_in[1], &pg.borders.share(1, 0)));
+        assert_eq!(pg.parts[0].border_in[1].len(), 2);
+        assert_eq!(pg.parts[1].border_out_wire_bytes(), 1);
+        assert_eq!(pg.parts[1].border_in_wire_bytes(), 1);
+        assert_eq!(pg.parts[1].border_union_len, 2);
+        assert_eq!(pg.parts[1].border_union_wire_bytes(), 1);
+        pg.validate(&g).unwrap();
     }
 
     #[test]

@@ -47,6 +47,11 @@ struct PartState {
     /// Host mirror of device visited flags (real partition length).
     visited: Vec<i32>,
     lanes: u64,
+    /// Baked border-compacted wire size (mirrors `SimAccelerator`'s
+    /// modeling exactly — integration tests assert identical results):
+    /// `sum_q |B(q, self)|/8`, the top-down outbox down-transfer and the
+    /// bottom-up remote-frontier up-transfer alike.
+    border_link_bytes: u64,
 }
 
 /// PJRT-backed [`Accelerator`].
@@ -195,6 +200,7 @@ impl Accelerator for PjrtAccelerator {
                 gids_td: self.upload_1d(&ell_td.gids)?,
                 visited: vec![0; n_real],
                 lanes,
+                border_link_bytes: part.border_in_wire_bytes(),
             },
         );
         Ok(())
@@ -267,27 +273,28 @@ impl Accelerator for PjrtAccelerator {
             transfers += 1;
         }
 
-        let vw = self.v_total.div_ceil(32);
+        let border_link_bytes = self.parts[&pid].border_link_bytes;
         Ok(BottomUpResult {
             next_frontier: nf_all,
             parent: parent_all,
             count,
-            // Modeled wire protocol (= the paper's): frontier words up
-            // once, per-slice new-frontier bitmaps down; parents stay
-            // device-side until aggregation. (PJRT literal plumbing is
-            // host-side regardless; wall-clock is measured separately.)
-            pcie_bytes: (vw * 4 + n_real / 8 + 4) as u64,
+            // Modeled wire protocol (= the paper's, boundary-compacted):
+            // own frontier slice + renumbered remote border frontiers up
+            // once, per-slice new-frontier bitmaps + count down; parents
+            // stay device-side until aggregation. (PJRT literal plumbing
+            // is host-side regardless; wall-clock is measured separately.)
+            pcie_bytes: (n_real / 8 + n_real / 8 + 4) as u64 + border_link_bytes,
             pcie_transfers: transfers.max(1),
         })
     }
 
     fn top_down(&mut self, pid: usize, frontier: &[i32]) -> Result<TopDownResult> {
-        let (td_key, n_real) = {
+        let (td_key, n_real, border_link_bytes) = {
             let p = &self.parts[&pid];
-            (p.td_key, p.visited.len())
+            (p.td_key, p.visited.len(), p.border_link_bytes)
         };
         let c = &self.exes[&(KernelKind::TopDown, td_key.0, td_key.1)];
-        let (n, v_total) = (c.n, c.vwords * 32);
+        let n = c.n;
 
         let mut fr = vec![0i32; n];
         fr[..frontier.len().min(n)].copy_from_slice(&frontier[..frontier.len().min(n)]);
@@ -299,7 +306,10 @@ impl Accelerator for PjrtAccelerator {
             active: outs[0].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
             parent: outs[1].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
             edges_out: outs[2].get_first_element::<i32>().map_err(|e| anyhow!("{e:?}"))? as u32,
-            pcie_bytes: (n_real / 8 + v_total / 8 + 4) as u64,
+            // Boundary-compacted down-transfer: local next bitmap + the
+            // per-destination border-local outbox bitmaps + count
+            // (mirrors SimAccelerator bit-for-bit).
+            pcie_bytes: (n_real / 8 + n_real / 8 + 4) as u64 + border_link_bytes,
             pcie_transfers: 1,
         })
     }

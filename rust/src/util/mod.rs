@@ -7,5 +7,5 @@ pub mod proptest_lite;
 pub mod rng;
 pub mod tables;
 
-pub use bitmap::{AtomicBitmap, Bitmap};
+pub use bitmap::{AtomicBitmap, Bitmap, OnesIter};
 pub use rng::{SplitMix64, Xoshiro256};

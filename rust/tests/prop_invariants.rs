@@ -4,6 +4,7 @@
 use totem_do::bfs::{validate_graph500, HybridConfig, HybridRunner, PolicyKind};
 use totem_do::engine::state::{PARENT_REMOTE, PARENT_UNSET};
 use totem_do::engine::SimAccelerator;
+use totem_do::graph::generator::{erdos_renyi, kronecker, GeneratorConfig};
 use totem_do::graph::{build_csr, Csr};
 use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
 use totem_do::util::proptest_lite::{gen, run_cases};
@@ -146,5 +147,50 @@ fn prop_partitioning_owner_maps_are_bijective() {
         let g = build_csr(&el);
         let (pg, _) = specialized_partition(&g, &hw(rng), &LayoutOptions::paper());
         pg.validate(&g).unwrap();
+    });
+}
+
+#[test]
+fn prop_border_renumbering_roundtrips_as_inverse_bijection() {
+    // Random RMAT / Erdos-Renyi / uniform workloads under random
+    // partitionings: for every partition pair, global -> border-local ->
+    // global must round-trip as an inverse bijection over exactly the
+    // vertices owned by `p` with at least one edge into `q`.
+    run_cases(40, 0xB02D, |rng| {
+        let el = match rng.next_below(3) {
+            0 => kronecker(&GeneratorConfig::graph500(
+                gen::int_in(rng, 5, 7) as u32,
+                rng.next_u64(),
+            )),
+            1 => erdos_renyi(gen::int_in(rng, 16, 160), gen::int_in(rng, 0, 500), rng.next_u64()),
+            _ => gen::edge_list(rng, 120, 400),
+        };
+        let g = build_csr(&el);
+        let (pg, _) = specialized_partition(&g, &hw(rng), &LayoutOptions::paper());
+        let np = pg.parts.len();
+        for p in 0..np {
+            for q in 0..np {
+                let table = pg.borders.table(p, q);
+                assert!(
+                    table.windows(2).all(|w| w[0] < w[1]),
+                    "({p},{q}): table must be strictly ascending"
+                );
+                for (i, &gid) in table.iter().enumerate() {
+                    assert_eq!(pg.borders.local_of(p, q, gid), Some(i as u32), "global->local");
+                    assert_eq!(pg.borders.global_of(p, q, i as u32), gid, "local->global");
+                }
+                // Membership is exactly "owned by p with an edge into q".
+                for v in 0..g.num_vertices as u32 {
+                    let expect = p != q
+                        && pg.owner_of(v) == p
+                        && g.neighbours(v).iter().any(|&w| pg.owner_of(w) == q);
+                    assert_eq!(
+                        pg.borders.local_of(p, q, v).is_some(),
+                        expect,
+                        "vertex {v} pair ({p},{q})"
+                    );
+                }
+            }
+        }
     });
 }
