@@ -1,0 +1,101 @@
+//! Algorithm suite over the vertex-program substrate: BFS, SSSP, CC and
+//! PageRank on the same resident graph, through the mixed-algorithm
+//! service path ([`run_algo_batch`]). One RESULT row per algorithm with
+//! per-algorithm throughput (MTEPS over examined edges for the vertex
+//! programs, traversed edges for BFS) and iteration/round counts — the
+//! cross-algorithm cost picture the single-BFS figures cannot show.
+
+use totem_do::bench_support as bs;
+use totem_do::partition::LayoutOptions;
+use totem_do::service::{run_algo_batch, AlgoOutcome, AlgoQuery, BatchOptions, ResidentGraph};
+use totem_do::util::tables::Table;
+
+fn main() {
+    let scale = bs::bench_scale();
+    let threads = bs::bench_threads();
+    println!("== Algorithm suite: scale {scale}, 2S2G, {threads} threads ==");
+
+    let g = bs::kron_graph(scale, 42);
+    let hw = bs::hardware("2S2G");
+    let rg = ResidentGraph::build(
+        &format!("kron-scale{scale}"),
+        g,
+        &hw,
+        &LayoutOptions::paper(),
+        threads,
+    );
+    let roots = bs::roots_for(&rg.csr, 4, 9);
+    let opts = BatchOptions { threads, ..Default::default() };
+
+    let suites: Vec<(&str, Vec<AlgoQuery>)> = vec![
+        ("bfs", roots.iter().map(|&r| AlgoQuery::Bfs { root: r }).collect()),
+        ("sssp", roots.iter().map(|&r| AlgoQuery::Sssp { root: r }).collect()),
+        ("cc", vec![AlgoQuery::Cc; 2]),
+        ("pagerank", vec![AlgoQuery::Pagerank; 2]),
+    ];
+
+    let mut t = Table::new(vec![
+        "algorithm", "queries", "rounds/query", "edges examined", "MTEPS (wall)",
+    ]);
+    for (name, queries) in suites {
+        // One unmeasured warmup query primes the algorithm's state pool.
+        run_algo_batch(&rg, &queries[..1], &opts).expect("warmup");
+        let t0 = std::time::Instant::now();
+        let outcomes = run_algo_batch(&rg, &queries, &opts).expect("batch");
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(outcomes.iter().all(AlgoOutcome::is_complete), "{name} query failed");
+
+        let mut rounds = 0u64;
+        let mut edges = 0u64;
+        for o in &outcomes {
+            match o {
+                AlgoOutcome::Bfs(run) => {
+                    rounds += run.levels.len() as u64;
+                    edges += run.traversed_edges();
+                }
+                AlgoOutcome::Sssp(run) => {
+                    rounds += u64::from(run.rounds);
+                    edges += examined(&run.levels);
+                }
+                AlgoOutcome::Cc(run) => {
+                    rounds += u64::from(run.rounds);
+                    edges += examined(&run.levels);
+                }
+                AlgoOutcome::Pagerank(run) => {
+                    rounds += u64::from(run.iterations);
+                    edges += examined(&run.levels);
+                }
+                AlgoOutcome::Failed { .. } => unreachable!(),
+            }
+        }
+        let n = outcomes.len() as u64;
+        let mteps = edges as f64 / wall.max(1e-12) / 1e6;
+        t.row(vec![
+            name.to_string(),
+            n.to_string(),
+            format!("{:.1}", rounds as f64 / n as f64),
+            edges.to_string(),
+            format!("{mteps:.2}"),
+        ]);
+        bs::kv("algo_suite", &[
+            ("algo", name.to_string()),
+            ("scale", scale.to_string()),
+            ("threads", threads.to_string()),
+            ("queries", n.to_string()),
+            ("rounds", rounds.to_string()),
+            ("edges_examined", edges.to_string()),
+            ("mteps_wall", format!("{mteps:.3}")),
+        ]);
+    }
+    t.print();
+    println!(
+        "shape check: one row per algorithm; BFS counts traversed edges, the vertex \
+         programs count examined edges (PageRank examines every edge every iteration, \
+         so its edge total dominates at equal rounds)."
+    );
+}
+
+/// Sum of per-partition examined edges across a run's level stats.
+fn examined(levels: &[totem_do::engine::LevelStats]) -> u64 {
+    levels.iter().flat_map(|l| l.pe_work.iter()).map(|w| w.edges_examined).sum()
+}

@@ -1,0 +1,149 @@
+//! Direction-optimized BFS as a [`VertexProgram`] instance.
+//!
+//! The standalone [`HybridRunner`](crate::bfs::HybridRunner) remains the
+//! production BFS path (it owns the accelerator offload); this instance
+//! exists to prove the framework subsumes it: on CPU-only placements the
+//! depths, parents, and per-level schedules are **bit-identical** to the
+//! hybrid driver's, and on GPU placements depths and schedules still
+//! match exactly (parents may differ only where the device SELL
+//! adjacency orders a row differently). `tests/prop_invariants.rs` pins
+//! both claims.
+
+use anyhow::Result;
+
+use crate::bfs::PolicyKind;
+use crate::engine::state::PARENT_UNSET;
+use crate::engine::{ExecutionMode, LevelStats};
+use crate::partition::PartitionedGraph;
+
+use super::runner::ProgramRunner;
+use super::{SeedSet, VertexProgram};
+
+/// BFS per-vertex state: discovery depth (-1 = unreached) and parent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BfsValue {
+    pub depth: i32,
+    pub parent: i64,
+}
+
+/// The BFS program: first-candidate-wins merge, direction-optimized.
+pub struct BfsProgram {
+    pub root: u32,
+    pub policy: PolicyKind,
+}
+
+impl VertexProgram for BfsProgram {
+    type Value = BfsValue;
+    /// The proposed parent's global id. `message_bytes` is 0: the BFS
+    /// push exchange is the pure border-bitmap wire (the parent rides
+    /// implicitly in the link identity, exactly as in the PR 5 format).
+    type Msg = u32;
+
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn init(&self, _v: u32) -> BfsValue {
+        BfsValue { depth: -1, parent: PARENT_UNSET }
+    }
+
+    fn seeds(&self) -> SeedSet {
+        SeedSet::One(self.root)
+    }
+
+    fn seed_value(&self, v: u32) -> BfsValue {
+        BfsValue { depth: 0, parent: v as i64 }
+    }
+
+    fn message_bytes(&self) -> u64 {
+        0
+    }
+
+    fn scatter(
+        &self,
+        u: u32,
+        _val_u: &BfsValue,
+        _deg_u: u32,
+        _w: u32,
+        val_w: &BfsValue,
+    ) -> Option<u32> {
+        (val_w.depth < 0).then_some(u)
+    }
+
+    fn gather(&self, _v: u32, val: &mut BfsValue, parent: u32, round: u32) -> bool {
+        if val.depth >= 0 {
+            return false; // first candidate won already
+        }
+        val.depth = round as i32 + 1;
+        val.parent = parent as i64;
+        true
+    }
+
+    fn direction_policy(&self) -> Option<PolicyKind> {
+        Some(self.policy)
+    }
+
+    fn is_settled(&self, val: &BfsValue) -> bool {
+        val.depth >= 0
+    }
+
+    fn pull_first(&self, _v: u32, w: u32) -> Option<u32> {
+        Some(w)
+    }
+}
+
+/// A completed BFS-as-program run.
+#[derive(Clone, Debug)]
+pub struct BfsProgramRun {
+    pub root: u32,
+    pub depth: Vec<i32>,
+    pub parent: Vec<i64>,
+    pub levels: Vec<LevelStats>,
+    pub rounds: u32,
+    pub wall: std::time::Duration,
+}
+
+/// Run BFS through the vertex-program framework.
+pub fn run_bfs_program(
+    pg: &PartitionedGraph,
+    root: u32,
+    policy: PolicyKind,
+    exec: ExecutionMode,
+) -> Result<BfsProgramRun> {
+    let mut runner = ProgramRunner::new(pg, BfsProgram { root, policy }, exec);
+    let run = runner.run()?;
+    Ok(BfsProgramRun {
+        root,
+        depth: run.values.iter().map(|v| v.depth).collect(),
+        parent: run.values.iter().map(|v| v.parent).collect(),
+        levels: run.levels,
+        rounds: run.rounds,
+        wall: run.wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+
+    #[test]
+    fn bfs_program_on_a_path_graph() {
+        let g = build_csr(&EdgeList {
+            num_vertices: 6,
+            edges: vec![(0, 1), (1, 2), (2, 3), (3, 4)],
+        });
+        let hw =
+            HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+        let run =
+            run_bfs_program(&pg, 0, PolicyKind::AlwaysTopDown, ExecutionMode::Sequential)
+                .unwrap();
+        assert_eq!(run.depth, vec![0, 1, 2, 3, 4, -1]);
+        assert_eq!(run.parent[4], 3);
+        assert_eq!(run.parent[5], PARENT_UNSET);
+        assert_eq!(run.rounds, 5, "one round per non-empty level");
+        assert_eq!(run.levels[0].frontier_size, 1);
+    }
+}

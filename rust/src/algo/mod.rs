@@ -1,0 +1,165 @@
+//! The vertex-program framework: one partitioned CPU+GPU substrate, many
+//! algorithms (DESIGN.md Section 13).
+//!
+//! The superstep driver, adaptive sparse/dense frontiers, chunked
+//! kernels, and border-compacted outbox exchange that PR 1–5 built for
+//! direction-optimized BFS are algorithm-agnostic: every round scatters
+//! messages along frontier out-edges (or pulls along unsettled
+//! in-edges), merges candidates under a per-algorithm operator at the
+//! level barrier, and advances. [`VertexProgram`] abstracts exactly the
+//! algorithm-specific residue — the per-vertex state, the message type,
+//! and the `init`/`scatter`/`gather`/`halt` hooks — so BFS becomes one
+//! instance ([`BfsProgram`]) and SSSP, weakly connected components, and
+//! PageRank land on the same engine.
+//!
+//! **Determinism contract, generalized.** The BFS contract ("ascending
+//! `(pid, chunk)` first-candidate-wins", DESIGN.md Section 4) becomes
+//! *lowest-chunk-wins under the algorithm's merge operator*: the runner
+//! concatenates chunk candidate lists in ascending `(pid, chunk)` plan
+//! order — which is exactly ascending (partition, frontier-queue
+//! position) order, independent of the chunk count — and applies
+//! [`VertexProgram::gather`] sequentially on the coordinating thread.
+//! First-wins (BFS), strict-min (SSSP dist, CC label) and commutative
+//! accumulation (PageRank) are all order-stable under that rule, so
+//! every algorithm's output is bit-identical across thread counts,
+//! batch sizes, and schedule policies.
+//!
+//! ```
+//! use totem_do::algo::{run_cc, run_sssp, WeightFn};
+//! use totem_do::engine::ExecutionMode;
+//! use totem_do::graph::{build_csr, EdgeList};
+//! use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+//!
+//! let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (1, 2), (2, 3)] });
+//! let hw = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+//! let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+//! let cc = run_cc(&pg, ExecutionMode::Sequential).unwrap();
+//! assert_eq!(cc.labels, vec![0, 0, 0, 0]);
+//! let sssp = run_sssp(&pg, 0, 8, WeightFn::Unit, ExecutionMode::Sequential).unwrap();
+//! assert_eq!(sssp.dist, vec![0, 1, 2, 3]);
+//! ```
+
+pub mod bfs;
+pub mod cc;
+pub mod pagerank;
+pub mod runner;
+pub mod sssp;
+pub mod state;
+
+pub use bfs::{run_bfs_program, BfsProgram, BfsProgramRun, BfsValue};
+pub use cc::{cc_run_from, run_cc, CcProgram, CcRun};
+pub use pagerank::{pagerank_run_from, run_pagerank, PagerankProgram, PagerankRun, PrValue};
+pub use runner::{ProgramRun, ProgramRunner};
+pub use sssp::{
+    default_weights, run_sssp, sssp_run_from, SsspMsg, SsspProgram, SsspRun, SsspValue, WeightFn,
+};
+pub use state::ProgramState;
+
+use crate::bfs::PolicyKind;
+
+/// Which vertices are active in round 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedSet {
+    /// Every vertex starts active (CC label propagation, PageRank).
+    All,
+    /// A single rooted query (BFS, SSSP). Out-of-range roots are
+    /// rejected by the runner before any state is mutated.
+    One(u32),
+}
+
+/// One algorithm over the partitioned substrate. Implementations must be
+/// pure value logic: hooks read snapshots and return candidates; **all**
+/// mutation happens in [`gather`](Self::gather)/[`apply`](Self::apply)
+/// on the coordinating thread, under the deterministic merge order.
+pub trait VertexProgram: Sync {
+    /// Per-vertex state. `Default` is only the allocation placeholder;
+    /// [`init`](Self::init) defines the pristine pre-run value.
+    type Value: Copy + PartialEq + Default + Send + Sync + std::fmt::Debug;
+    /// The scatter payload. Wire format: `4 + message_bytes()` per
+    /// combined per-target message (Section 13 message table).
+    type Msg: Copy + Send + Sync;
+
+    fn name(&self) -> &'static str;
+
+    /// Pristine pre-run value of vertex `v` (what a reset restores).
+    fn init(&self, v: u32) -> Self::Value;
+
+    fn seeds(&self) -> SeedSet;
+
+    /// Value installed on seed vertices (defaults to [`init`](Self::init)).
+    fn seed_value(&self, v: u32) -> Self::Value {
+        self.init(v)
+    }
+
+    /// Payload bytes per message on the wire (0 for BFS: its push
+    /// exchange is the pure border-bitmap special case).
+    fn message_bytes(&self) -> u64;
+
+    /// Propose a message along frontier edge `u -> w`, given the
+    /// pre-round value snapshots of both endpoints and `u`'s degree.
+    /// Returning `None` prunes the candidate (the target-side `gather`
+    /// would reject it anyway; this is the work filter).
+    fn scatter(
+        &self,
+        u: u32,
+        val_u: &Self::Value,
+        deg_u: u32,
+        w: u32,
+        val_w: &Self::Value,
+    ) -> Option<Self::Msg>;
+
+    /// Merge one candidate into `val` (the algorithm's merge operator).
+    /// Must return `true` iff it mutated `val` — the runner's activation
+    /// and touched-tracking both key off that contract.
+    fn gather(&self, v: u32, val: &mut Self::Value, msg: Self::Msg, round: u32) -> bool;
+
+    /// Direction-optimization policy, for programs with a pull form
+    /// (BFS). `None` runs every round as a top-down scatter.
+    fn direction_policy(&self) -> Option<PolicyKind> {
+        None
+    }
+
+    /// True once `val` can never change again — the pull kernel's skip
+    /// filter and the coordinator's unexplored-edge census.
+    fn is_settled(&self, _val: &Self::Value) -> bool {
+        false
+    }
+
+    /// Pull-form message for unsettled `v` from its first in-frontier
+    /// neighbour `w` (Beamer early-exit). Only consulted when
+    /// [`direction_policy`](Self::direction_policy) is `Some`.
+    fn pull_first(&self, _v: u32, _w: u32) -> Option<Self::Msg> {
+        None
+    }
+
+    /// Bucketed (delta-stepping style) scheduling: activations park in a
+    /// global pending set and each round drains the lowest bucket.
+    fn uses_buckets(&self) -> bool {
+        false
+    }
+
+    /// Priority bucket of a pending vertex (lower drains first).
+    fn bucket(&self, _val: &Self::Value) -> u64 {
+        0
+    }
+
+    /// Every vertex is active every round (PageRank): the frontier is
+    /// seeded full once and never advanced.
+    fn all_active(&self) -> bool {
+        false
+    }
+
+    /// End-of-round vertex update over **all** values (PageRank's rank
+    /// refresh). Returns `Some(max_delta)` when it ran — the runner then
+    /// marks the whole state dirty for reset accounting.
+    fn apply(&self, _values: &mut [Self::Value]) -> Option<f64> {
+        None
+    }
+
+    /// Stop after `rounds` completed rounds (`max_delta` is the last
+    /// [`apply`](Self::apply) residual, 0.0 if `apply` never ran).
+    /// Frontier exhaustion always terminates regardless.
+    fn halt(&self, _rounds: u32, _max_delta: f64) -> bool {
+        false
+    }
+}

@@ -1,0 +1,181 @@
+//! PageRank as a [`VertexProgram`]: fixed-iteration power method with a
+//! convergence check, over the undirected CSR (each edge contributes in
+//! both directions, so there are no dangling redistributions — isolated
+//! vertices simply hold the teleport mass `(1-d)/N`).
+//!
+//! Every vertex is active every round ([`VertexProgram::all_active`]):
+//! the frontier is seeded full once and never advanced. Scatters send
+//! `rank(u) / deg(u)` along every edge; `gather` accumulates into a
+//! per-vertex `acc` field; the end-of-round [`VertexProgram::apply`]
+//! computes `(1-d)/N + d·acc`, reports the max rank delta, and the run
+//! halts at `max_iters` rounds or when the delta drops to `tol`.
+//!
+//! **Float determinism.** Accumulation order is the deterministic merge
+//! order (ascending `(pid, chunk)`, locals before remotes), which is
+//! invariant across thread counts and batch schedules — so ranks are
+//! bit-identical f64s, not merely epsilon-close, across
+//! [`ExecutionMode`]s.
+
+use anyhow::Result;
+
+use crate::engine::{ExecutionMode, LevelStats};
+use crate::partition::PartitionedGraph;
+
+use super::runner::{ProgramRun, ProgramRunner};
+use super::{SeedSet, VertexProgram};
+
+/// PageRank per-vertex state: current rank + in-flight accumulator.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrValue {
+    pub rank: f64,
+    pub acc: f64,
+}
+
+pub struct PagerankProgram {
+    pub num_vertices: usize,
+    /// Damping factor d (the canonical 0.85).
+    pub damping: f64,
+    /// Hard iteration cap.
+    pub max_iters: u32,
+    /// Early-out when the max per-vertex rank delta drops this low
+    /// (0.0 = run the full `max_iters` unless an exact fixpoint hits).
+    pub tol: f64,
+}
+
+impl VertexProgram for PagerankProgram {
+    type Value = PrValue;
+    /// The rank share `rank(u) / deg(u)` (8-byte wire payload).
+    type Msg = f64;
+
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn init(&self, _v: u32) -> PrValue {
+        PrValue { rank: 1.0 / self.num_vertices.max(1) as f64, acc: 0.0 }
+    }
+
+    fn seeds(&self) -> SeedSet {
+        SeedSet::All
+    }
+
+    fn message_bytes(&self) -> u64 {
+        8
+    }
+
+    fn all_active(&self) -> bool {
+        true
+    }
+
+    fn scatter(
+        &self,
+        _u: u32,
+        val_u: &PrValue,
+        deg_u: u32,
+        _w: u32,
+        _val_w: &PrValue,
+    ) -> Option<f64> {
+        (deg_u > 0).then(|| val_u.rank / deg_u as f64)
+    }
+
+    fn gather(&self, _v: u32, val: &mut PrValue, share: f64, _round: u32) -> bool {
+        val.acc += share;
+        true
+    }
+
+    fn apply(&self, values: &mut [PrValue]) -> Option<f64> {
+        let n = self.num_vertices.max(1) as f64;
+        let teleport = (1.0 - self.damping) / n;
+        let mut max_delta = 0.0f64;
+        for val in values.iter_mut() {
+            let next = teleport + self.damping * val.acc;
+            max_delta = max_delta.max((next - val.rank).abs());
+            val.rank = next;
+            val.acc = 0.0;
+        }
+        Some(max_delta)
+    }
+
+    fn halt(&self, rounds: u32, max_delta: f64) -> bool {
+        rounds >= self.max_iters || max_delta <= self.tol
+    }
+}
+
+/// A completed PageRank run.
+#[derive(Clone, Debug)]
+pub struct PagerankRun {
+    pub ranks: Vec<f64>,
+    pub iterations: u32,
+    /// Max per-vertex rank change in the final iteration.
+    pub last_delta: f64,
+    pub levels: Vec<LevelStats>,
+    pub wall: std::time::Duration,
+}
+
+/// Convert a raw framework run into the PageRank result shape.
+pub fn pagerank_run_from(run: ProgramRun<PrValue>) -> PagerankRun {
+    PagerankRun {
+        ranks: run.values.iter().map(|v| v.rank).collect(),
+        iterations: run.rounds,
+        last_delta: run.last_delta,
+        levels: run.levels,
+        wall: run.wall,
+    }
+}
+
+/// Run PageRank (`damping` is d; halts at `max_iters` rounds or when
+/// the max rank delta reaches `tol`).
+pub fn run_pagerank(
+    pg: &PartitionedGraph,
+    damping: f64,
+    max_iters: u32,
+    tol: f64,
+    exec: ExecutionMode,
+) -> Result<PagerankRun> {
+    let program = PagerankProgram { num_vertices: pg.num_vertices, damping, max_iters, tol };
+    let mut runner = ProgramRunner::new(pg, program, exec);
+    let run = runner.run()?;
+    Ok(pagerank_run_from(run))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+
+    #[test]
+    fn ranks_sum_to_one_and_respect_symmetry() {
+        // 4-cycle: perfectly symmetric, every rank must be exactly 1/4
+        // at every iteration; the isolated vertex holds teleport mass.
+        let g = build_csr(&EdgeList {
+            num_vertices: 5,
+            edges: vec![(0, 1), (1, 2), (2, 3), (0, 3)],
+        });
+        let hw =
+            HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+        let run = run_pagerank(&pg, 0.85, 30, 0.0, ExecutionMode::Sequential).unwrap();
+        let cycle_rank = run.ranks[0];
+        for v in 1..4 {
+            assert_eq!(run.ranks[v], cycle_rank, "cycle symmetry");
+        }
+        assert!((run.ranks[4] - 0.15 / 5.0).abs() < 1e-12, "isolated = teleport mass");
+        // Mass conservation over the 4-regular cycle + teleport:
+        let total: f64 = run.ranks.iter().sum();
+        assert!(total <= 1.0 + 1e-9, "no mass created: {total}");
+        assert!(run.iterations <= 30);
+    }
+
+    #[test]
+    fn tolerance_halts_early() {
+        let g = build_csr(&EdgeList { num_vertices: 4, edges: vec![(0, 1), (2, 3)] });
+        let hw =
+            HardwareConfig { cpu_sockets: 1, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+        let strict = run_pagerank(&pg, 0.85, 100, 0.0, ExecutionMode::Sequential).unwrap();
+        let loose = run_pagerank(&pg, 0.85, 100, 1e-3, ExecutionMode::Sequential).unwrap();
+        assert!(loose.iterations < strict.iterations || strict.iterations < 100);
+        assert!(loose.last_delta <= 1e-3);
+    }
+}

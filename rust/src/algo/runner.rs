@@ -1,0 +1,572 @@
+//! The generic superstep driver: one [`VertexProgram`] over the
+//! partitioned substrate, reusing the engine's frontier machinery,
+//! chunked kernels, border-compacted outboxes, and device cost model.
+//!
+//! Structure of one round (mirrors `HybridRunner::run` exactly — the
+//! BFS-regression property in `tests/prop_invariants.rs` pins it):
+//!
+//! 1. bucketed programs drain the lowest pending bucket into the
+//!    current frontiers;
+//! 2. frontier census (size + out-degree sum; also the termination
+//!    check);
+//! 3. scatter kernels over edge-weight-balanced frontier chunks (or the
+//!    pull kernel under a bottom-up direction decision) — pure reads of
+//!    the pre-round value snapshot, producing candidate lists;
+//! 4. deterministic merge at the barrier: all chunks' local candidates
+//!    in ascending `(pid, chunk)` plan order, then all remote
+//!    candidates in the same order, each applied through
+//!    [`VertexProgram::gather`] on the coordinating thread ("lowest
+//!    chunk wins under the algorithm's merge operator");
+//! 5. `Synchronize()`: frontiers advance; the direction policy sees the
+//!    coordinator partition's census; `apply` runs the per-vertex
+//!    update (PageRank) and reports its residual for `halt`.
+//!
+//! Unlike the BFS driver, the merge applies **every** candidate — no
+//! chunk-level dedup. First-wins programs (BFS) pick the same winner
+//! either way, while min-merge programs (SSSP/CC) *require* the later,
+//! better candidate a dedup would have dropped, and accumulating
+//! programs (PageRank) need every message.
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use crate::bfs::direction::{CoordinatorView, DirectionPolicy};
+use crate::engine::accel::program_step_pcie;
+use crate::engine::comm::CommBuffers;
+use crate::engine::{run_steps, Direction, ExecutionMode, LevelStats, PeWork};
+use crate::partition::PartitionedGraph;
+use crate::util::pool;
+
+use super::state::ProgramState;
+use super::{SeedSet, VertexProgram};
+
+/// A completed program run: final values plus the per-round schedule.
+#[derive(Clone, Debug)]
+pub struct ProgramRun<V> {
+    /// Final per-vertex values, indexed by global id.
+    pub values: Vec<V>,
+    /// Per-round schedule and work counters (the BFS `levels` analogue).
+    pub levels: Vec<LevelStats>,
+    /// Completed rounds (== `levels.len()`).
+    pub rounds: u32,
+    /// Modeled bytes written by the pre-run state reset.
+    pub init_bytes: u64,
+    /// Residual reported by the last `apply` (0.0 if the program has
+    /// no `apply` hook).
+    pub last_delta: f64,
+    pub wall: std::time::Duration,
+}
+
+/// One kernel chunk's thread-local output: work counters plus candidate
+/// `(target, message)` lists, split by target locality.
+struct ChunkDelta<M> {
+    work: PeWork,
+    local: Vec<(u32, M)>,
+    remote: Vec<(u32, M)>,
+}
+
+impl<M> Default for ChunkDelta<M> {
+    fn default() -> Self {
+        Self { work: PeWork::default(), local: Vec::new(), remote: Vec::new() }
+    }
+}
+
+/// Generic superstep runner for one program over one partitioning.
+pub struct ProgramRunner<'g, P: VertexProgram> {
+    pg: &'g PartitionedGraph,
+    program: P,
+    exec: ExecutionMode,
+    state: ProgramState<P::Value>,
+    comm: CommBuffers,
+    /// Per-partition materialized frontier queues (reused across rounds).
+    queues: Vec<Vec<u32>>,
+}
+
+impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
+    pub fn new(pg: &'g PartitionedGraph, program: P, exec: ExecutionMode) -> Self {
+        let state = ProgramState::new(pg);
+        Self::with_state(pg, program, exec, state)
+    }
+
+    /// Reuse a pooled state. Defensive: a shape mismatch (impossible for
+    /// a per-graph pool) silently allocates fresh instead of failing, so
+    /// the service's error path never consumes a pooled state.
+    pub fn with_state(
+        pg: &'g PartitionedGraph,
+        program: P,
+        exec: ExecutionMode,
+        state: ProgramState<P::Value>,
+    ) -> Self {
+        let state =
+            if state.shape_matches(pg) { state } else { ProgramState::new(pg) };
+        let np = pg.parts.len();
+        Self { pg, program, exec, state, comm: CommBuffers::new(pg), queues: vec![Vec::new(); np] }
+    }
+
+    /// Recover the state for pooling (poisoned states self-heal on their
+    /// next reset, so this is safe after errors too).
+    pub fn into_state(self) -> ProgramState<P::Value> {
+        self.state
+    }
+
+    pub fn program(&self) -> &P {
+        &self.program
+    }
+
+    /// Run the program to completion. Deterministic given the
+    /// partitioning — including across [`ExecutionMode`]s.
+    pub fn run(&mut self) -> Result<ProgramRun<P::Value>> {
+        let t0 = std::time::Instant::now();
+        let np = self.pg.parts.len();
+        let v_total = self.pg.num_vertices;
+        let bucketed = self.program.uses_buckets();
+        let all_active = self.program.all_active();
+
+        let init_bytes = {
+            let program = &self.program;
+            self.state.reset(|v| program.init(v))
+        };
+
+        // ---- seeding ----
+        match self.program.seeds() {
+            SeedSet::One(r) => {
+                ensure!(
+                    (r as usize) < v_total,
+                    "{} seed {r} out of range (graph has {v_total} vertices)",
+                    self.program.name()
+                );
+                let pg = self.pg;
+                let program = &self.program;
+                let state = &mut self.state;
+                state.values[r as usize] = program.seed_value(r);
+                state.touch(r as usize);
+                if bucketed {
+                    state.pending.set(r as usize);
+                } else {
+                    state.frontiers[pg.owner_of(r)].next.set(r as usize);
+                    state.global_next.set(r as usize);
+                }
+            }
+            SeedSet::All => {
+                let pg = self.pg;
+                let program = &self.program;
+                let state = &mut self.state;
+                for (v, slot) in state.values.iter_mut().enumerate() {
+                    *slot = program.seed_value(v as u32);
+                }
+                state.mark_all_dirty();
+                for v in 0..v_total {
+                    if bucketed {
+                        state.pending.set(v);
+                    } else {
+                        state.frontiers[pg.owner_of(v as u32)].next.set(v);
+                        state.global_next.set(v);
+                    }
+                }
+            }
+        }
+        if !bucketed {
+            self.state.advance_frontiers();
+        }
+
+        let mut policy = self.program.direction_policy().map(DirectionPolicy::new);
+        let mut levels: Vec<LevelStats> = Vec::new();
+        let mut round: u32 = 0;
+        let mut last_delta = 0.0f64;
+        // Label-correcting programs re-activate vertices, so the BFS
+        // `level > V` bound does not apply; improvements are still
+        // finitely bounded, and this backstop catches driver bugs.
+        let round_limit = (v_total as u64) * 64 + 64;
+
+        loop {
+            if bucketed && !self.select_bucket_frontier() {
+                break;
+            }
+
+            // ---- frontier census (termination + schedule record) ----
+            let (frontier_size, degree_sum, counts) = self.census();
+            if frontier_size == 0 {
+                break;
+            }
+            ensure!(
+                (round as u64) <= round_limit,
+                "{} did not terminate after {round} rounds",
+                self.program.name()
+            );
+
+            let dir = policy.as_ref().map(DirectionPolicy::current);
+            let mut stats = LevelStats {
+                level: round,
+                direction: dir,
+                pe_work: vec![PeWork::default(); np],
+                frontier_size,
+                frontier_degree_sum: degree_sum,
+                ..Default::default()
+            };
+
+            // Tail rounds run inline; bottom-up scans are O(scan_limit)
+            // regardless of frontier size (mirrors the BFS kernel gate).
+            const PARALLEL_KERNEL_MIN: u64 = 128;
+            let kernel_exec = match dir {
+                Some(Direction::BottomUp) => self.exec,
+                _ if frontier_size >= PARALLEL_KERNEL_MIN => self.exec,
+                _ => ExecutionMode::Sequential,
+            };
+
+            match dir {
+                Some(Direction::BottomUp) => {
+                    self.pull_round(kernel_exec, round, &counts, &mut stats)
+                }
+                _ => self.scatter_round(kernel_exec, round, &mut stats),
+            }
+
+            // ---- Synchronize() ----
+            if bucketed {
+                for f in self.state.frontiers.iter_mut() {
+                    f.current.clear();
+                }
+                self.state.global_frontier.clear();
+            } else if !all_active {
+                self.state.advance_frontiers();
+            }
+
+            if let Some(p) = policy.as_mut() {
+                let view = self.coordinator_view();
+                p.advance(view);
+            }
+
+            {
+                let program = &self.program;
+                let state = &mut self.state;
+                if let Some(md) = program.apply(&mut state.values) {
+                    state.mark_all_dirty();
+                    last_delta = md;
+                }
+            }
+
+            levels.push(stats);
+            round += 1;
+            if self.program.halt(round, last_delta) {
+                break;
+            }
+        }
+
+        // Clean completion: the next reset may recycle in O(touched).
+        // Error returns above skip this, leaving the state poisoned
+        // (full wipe on next use), which keeps pooling failed queries
+        // safe.
+        self.state.drain_frontiers();
+        self.state.finish();
+
+        Ok(ProgramRun {
+            values: self.state.values.clone(),
+            levels,
+            rounds: round,
+            init_bytes,
+            last_delta,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Drain the lowest pending bucket into the current frontiers.
+    /// Returns false (terminate) when nothing is pending.
+    fn select_bucket_frontier(&mut self) -> bool {
+        let pg = self.pg;
+        let program = &self.program;
+        let state = &mut self.state;
+        if !state.pending.any() {
+            return false;
+        }
+        let mut b_min = u64::MAX;
+        for v in state.pending.iter_ones() {
+            b_min = b_min.min(program.bucket(&state.values[v]));
+        }
+        let members: Vec<usize> = state
+            .pending
+            .iter_ones()
+            .filter(|&v| program.bucket(&state.values[v]) == b_min)
+            .collect();
+        for &v in &members {
+            state.pending.clear_bit(v);
+            state.frontiers[pg.owner_of(v as u32)].current.set(v);
+            state.global_frontier.set(v);
+        }
+        true
+    }
+
+    /// Sequential per-partition frontier census: total size, total
+    /// out-degree, and the per-partition counts (pull pricing input).
+    fn census(&self) -> (u64, u64, Vec<u64>) {
+        let np = self.pg.parts.len();
+        let mut counts = vec![0u64; np];
+        let (mut size, mut deg) = (0u64, 0u64);
+        for (pid, c) in counts.iter_mut().enumerate() {
+            let part = &self.pg.parts[pid];
+            for v in self.state.frontiers[pid].current.iter() {
+                *c += 1;
+                deg += part.degree(self.pg.local_of(v as u32)) as u64;
+            }
+            size += *c;
+        }
+        (size, deg, counts)
+    }
+
+    /// The §3.3 coordinator census over partition 0, with the BFS
+    /// visited test generalized to [`VertexProgram::is_settled`].
+    fn coordinator_view(&self) -> CoordinatorView {
+        let pid = 0;
+        let part = &self.pg.parts[pid];
+        let mut frontier_out = 0u64;
+        for v in self.state.frontiers[pid].current.iter() {
+            frontier_out += part.degree(self.pg.local_of(v as u32)) as u64;
+        }
+        let mut unexplored = 0u64;
+        for li in 0..part.num_vertices() {
+            let gid = part.gids[li];
+            if !self.program.is_settled(&self.state.values[gid as usize]) {
+                unexplored += part.degree(li) as u64;
+            }
+        }
+        CoordinatorView { frontier_out_edges: frontier_out, unexplored_edges: unexplored }
+    }
+
+    /// Top-down round: materialize frontier queues, scatter in
+    /// edge-weight-balanced chunks, merge deterministically.
+    fn scatter_round(&mut self, exec: ExecutionMode, round: u32, stats: &mut LevelStats) {
+        let np = self.pg.parts.len();
+        let nchunks = exec.threads().max(1);
+        let pg = self.pg;
+
+        // Phase 1: queues + chunk plan (ascending pid, queue order).
+        let mut plan: Vec<(usize, Range<usize>)> = Vec::new();
+        for pid in 0..np {
+            let q = &mut self.queues[pid];
+            q.clear();
+            let f = &self.state.frontiers[pid].current;
+            if let Some(sq) = f.as_queue() {
+                q.extend_from_slice(sq);
+            } else {
+                q.extend(f.iter().map(|v| v as u32));
+            }
+            if q.is_empty() {
+                continue;
+            }
+            let ranges = pool::split_by_weight(q.len(), nchunks, |i| {
+                pg.parts[pid].degree(pg.local_of(q[i])) as u64
+            });
+            plan.extend(ranges.into_iter().filter(|r| !r.is_empty()).map(|r| (pid, r)));
+        }
+
+        // Phase 2: pure scatter kernels over the value snapshot.
+        let deltas = {
+            let program = &self.program;
+            let values = &self.state.values;
+            let queues = &self.queues;
+            let tasks: Vec<_> = plan
+                .iter()
+                .cloned()
+                .map(|(pid, range)| {
+                    move || scatter_chunk(pg, program, values, &queues[pid][range], pid)
+                })
+                .collect();
+            run_steps(exec, tasks)
+        };
+
+        // Phase 3: deterministic merge — locals in plan order first,
+        // then remotes in plan order (matching the BFS driver's
+        // merge-then-push-gather sequence).
+        let mut msgs_in = vec![0u64; np];
+        let mut msgs_out = vec![0u64; np];
+        let mut crossing = 0u64;
+        for ((pid, _), delta) in plan.iter().zip(&deltas) {
+            stats.pe_work[*pid].add(&delta.work);
+            for &(t, msg) in &delta.local {
+                if self.apply_candidate(t, msg, round) {
+                    stats.pe_work[*pid].activated += 1;
+                }
+            }
+        }
+        for ((pid, _), delta) in plan.iter().zip(&deltas) {
+            for &(t, msg) in &delta.remote {
+                let dst = self.pg.owner_of(t);
+                // Combined per-target messages: the merge operator acts
+                // as the wire combiner, so each (link, target) crosses
+                // once regardless of how many chunks proposed it.
+                if self.comm.mark(*pid, dst, t) {
+                    crossing += 1;
+                    msgs_out[*pid] += 1;
+                    msgs_in[dst] += 1;
+                }
+                if self.apply_candidate(t, msg, round) {
+                    stats.pe_work[dst].activated += 1;
+                }
+            }
+        }
+        stats.comm = self.comm.payload_push_stats(pg, self.program.message_bytes(), crossing);
+        self.comm.clear();
+
+        // GPU partitions pay the per-round device exchange, priced for
+        // this program's message size.
+        for pid in 0..np {
+            if !pg.parts[pid].kind.is_gpu() {
+                continue;
+            }
+            if self.queues[pid].is_empty() && msgs_in[pid] == 0 {
+                continue;
+            }
+            let (bytes, transfers) = program_step_pcie(
+                pg.parts[pid].num_vertices(),
+                self.program.message_bytes(),
+                msgs_in[pid],
+                msgs_out[pid],
+            );
+            stats.pe_work[pid].pcie_bytes += bytes;
+            stats.pe_work[pid].pcie_transfers += transfers;
+        }
+    }
+
+    /// Bottom-up round: every partition scans its unsettled vertices
+    /// against the global frontier aggregate (local activations only).
+    fn pull_round(
+        &mut self,
+        exec: ExecutionMode,
+        round: u32,
+        counts: &[u64],
+        stats: &mut LevelStats,
+    ) {
+        let np = self.pg.parts.len();
+        let nchunks = exec.threads().max(1);
+        let pg = self.pg;
+
+        let mut plan: Vec<(usize, Range<usize>)> = Vec::new();
+        for pid in 0..np {
+            let part = &pg.parts[pid];
+            if part.scan_limit == 0 {
+                continue;
+            }
+            let ranges = pool::split_by_prefix(part.scan_limit, nchunks, |i| part.row_ptr[i]);
+            plan.extend(ranges.into_iter().filter(|r| !r.is_empty()).map(|r| (pid, r)));
+        }
+
+        let deltas = {
+            let program = &self.program;
+            let values = &self.state.values;
+            let gf = &self.state.global_frontier;
+            let tasks: Vec<_> = plan
+                .iter()
+                .cloned()
+                .map(|(pid, range)| move || pull_chunk(pg, program, values, gf, pid, range))
+                .collect();
+            run_steps(exec, tasks)
+        };
+
+        stats.comm = self.comm.pull_stats(pg, counts);
+        for ((pid, _), delta) in plan.iter().zip(&deltas) {
+            stats.pe_work[*pid].add(&delta.work);
+            for &(t, msg) in &delta.local {
+                if self.apply_candidate(t, msg, round) {
+                    stats.pe_work[*pid].activated += 1;
+                }
+            }
+        }
+
+        for pid in 0..np {
+            let part = &pg.parts[pid];
+            if !part.kind.is_gpu() || part.scan_limit == 0 {
+                continue;
+            }
+            let (bytes, transfers) = program_step_pcie(
+                part.num_vertices(),
+                self.program.message_bytes(),
+                0,
+                0,
+            );
+            stats.pe_work[pid].pcie_bytes += bytes;
+            stats.pe_work[pid].pcie_transfers += transfers;
+        }
+    }
+
+    /// Merge one candidate: gather on the coordinating thread, then
+    /// activation bookkeeping. Returns whether the candidate won.
+    fn apply_candidate(&mut self, t: u32, msg: P::Msg, round: u32) -> bool {
+        let pg = self.pg;
+        let program = &self.program;
+        let state = &mut self.state;
+        if !program.gather(t, &mut state.values[t as usize], msg, round) {
+            return false;
+        }
+        state.touch(t as usize);
+        if program.uses_buckets() {
+            state.pending.set(t as usize);
+        } else if !program.all_active() {
+            state.frontiers[pg.owner_of(t)].next.set(t as usize);
+            state.global_next.set(t as usize);
+        }
+        true
+    }
+}
+
+/// Pure top-down kernel: scatter along every out-edge of the chunk's
+/// frontier slice, against the pre-round value snapshot.
+fn scatter_chunk<P: VertexProgram>(
+    pg: &PartitionedGraph,
+    program: &P,
+    values: &[P::Value],
+    queue: &[u32],
+    pid: usize,
+) -> ChunkDelta<P::Msg> {
+    let part = &pg.parts[pid];
+    let mut d = ChunkDelta::default();
+    for &u in queue {
+        let li = pg.local_of(u);
+        let deg = part.degree(li) as u32;
+        d.work.vertices_scanned += 1;
+        let val_u = &values[u as usize];
+        let (lo, hi) = (part.row_ptr[li] as usize, part.row_ptr[li + 1] as usize);
+        for &w in &part.col[lo..hi] {
+            d.work.edges_examined += 1;
+            if let Some(msg) = program.scatter(u, val_u, deg, w, &values[w as usize]) {
+                if pg.owner_of(w) == pid {
+                    d.local.push((w, msg));
+                } else {
+                    d.remote.push((w, msg));
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Pure bottom-up kernel: each unsettled vertex in the chunk's scan
+/// range probes the global frontier and pulls from its first in-frontier
+/// neighbour (Beamer early exit). Activations are always local.
+fn pull_chunk<P: VertexProgram>(
+    pg: &PartitionedGraph,
+    program: &P,
+    values: &[P::Value],
+    global_frontier: &crate::util::bitmap::Bitmap,
+    pid: usize,
+    range: Range<usize>,
+) -> ChunkDelta<P::Msg> {
+    let part = &pg.parts[pid];
+    let mut d = ChunkDelta::default();
+    for li in range {
+        let gid = part.gids[li];
+        if program.is_settled(&values[gid as usize]) {
+            continue;
+        }
+        d.work.vertices_scanned += 1;
+        let (lo, hi) = (part.row_ptr[li] as usize, part.row_ptr[li + 1] as usize);
+        for &w in &part.col[lo..hi] {
+            d.work.edges_examined += 1;
+            if global_frontier.get(w as usize) {
+                if let Some(msg) = program.pull_first(gid, w) {
+                    d.local.push((gid, msg));
+                }
+                break;
+            }
+        }
+    }
+    d
+}

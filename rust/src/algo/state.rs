@@ -1,0 +1,224 @@
+//! Recyclable per-run state for a vertex program: the generic analogue
+//! of [`BfsState`](crate::engine::BfsState), shaped by the algorithm's
+//! value type instead of BFS's depth/parent arrays.
+//!
+//! The pooling contract matches `BfsState` (DESIGN.md Section 11): a run
+//! that completes cleanly calls [`ProgramState::finish`] with drained
+//! frontiers, and the next [`ProgramState::reset`] restores pristine
+//! values in O(touched); a poisoned state (error path, or a test
+//! scribbling on a released state) is healed by the full O(V) wipe.
+//! Either way the recycled state is bit-identical to a fresh allocation.
+
+use crate::engine::frontier::FrontierPair;
+use crate::partition::PartitionedGraph;
+use crate::util::bitmap::Bitmap;
+
+use crate::service::state_pool::PoolEntry;
+
+/// Per-run state for one vertex program over one partitioning.
+pub struct ProgramState<V> {
+    pub num_vertices: usize,
+    /// Per-vertex algorithm values, indexed by global id.
+    pub values: Vec<V>,
+    /// Per-partition adaptive sparse/dense frontier pairs.
+    pub frontiers: Vec<FrontierPair>,
+    /// OR of all partitions' current frontiers (the pull probe target).
+    pub global_frontier: Bitmap,
+    /// Incrementally built next-round aggregate (swapped in at advance).
+    pub global_next: Bitmap,
+    /// Bucketed programs only: vertices whose value improved and await
+    /// their bucket's turn (the delta-stepping pending set).
+    pub pending: Bitmap,
+    /// Vertices whose value was mutated this run (sparse-reset records).
+    touched: Vec<u32>,
+    touched_bits: Bitmap,
+    /// Set when a bulk update (`All` seeding, `apply`) rewrote every
+    /// value: sparse reset would miss them, so force the full wipe.
+    all_dirty: bool,
+    /// Set only by [`Self::finish`]; a released state that never
+    /// finished is poisoned and must be fully wiped on its next reset.
+    recyclable: bool,
+}
+
+impl<V: Copy + Default> ProgramState<V> {
+    pub fn new(pg: &PartitionedGraph) -> Self {
+        let v = pg.num_vertices;
+        let np = pg.parts.len();
+        Self {
+            num_vertices: v,
+            values: vec![V::default(); v],
+            frontiers: (0..np).map(|_| FrontierPair::new(v)).collect(),
+            global_frontier: Bitmap::new(v),
+            global_next: Bitmap::new(v),
+            pending: Bitmap::new(v),
+            touched: Vec::new(),
+            touched_bits: Bitmap::new(v),
+            all_dirty: true,
+            recyclable: false,
+        }
+    }
+
+    pub fn shape_matches(&self, pg: &PartitionedGraph) -> bool {
+        self.num_vertices == pg.num_vertices && self.frontiers.len() == pg.parts.len()
+    }
+
+    /// Restore pristine state; returns the modeled bytes written.
+    /// Sparse (O(touched)) when the previous run finished cleanly and
+    /// touched few vertices; full O(V) wipe otherwise.
+    pub fn reset(&mut self, init: impl Fn(u32) -> V) -> u64 {
+        let v = self.num_vertices;
+        let vsize = std::mem::size_of::<V>() as u64;
+        let sparse = self.recyclable && !self.all_dirty && self.touched.len() < v / 8;
+        let modeled = if sparse {
+            for &t in &self.touched {
+                self.values[t as usize] = init(t);
+                self.touched_bits.clear_bit(t as usize);
+            }
+            // Frontiers, globals and pending were drained by `finish`.
+            self.touched.len() as u64 * (vsize + 4)
+        } else {
+            for (i, slot) in self.values.iter_mut().enumerate() {
+                *slot = init(i as u32);
+            }
+            for f in self.frontiers.iter_mut() {
+                f.reset();
+            }
+            self.global_frontier.clear();
+            self.global_next.clear();
+            self.pending.clear();
+            self.touched_bits.clear();
+            v as u64 * vsize + (self.frontiers.len() as u64 + 3) * (v as u64).div_ceil(8)
+        };
+        self.touched.clear();
+        self.all_dirty = false;
+        self.recyclable = false;
+        modeled
+    }
+
+    /// Record a value mutation for sparse-reset accounting.
+    #[inline]
+    pub fn touch(&mut self, v: usize) {
+        if !self.touched_bits.test_and_set(v) {
+            self.touched.push(v as u32);
+        }
+    }
+
+    pub fn touched_len(&self) -> usize {
+        self.touched.len()
+    }
+
+    /// A bulk update rewrote every value; the next reset must full-wipe.
+    pub fn mark_all_dirty(&mut self) {
+        self.all_dirty = true;
+    }
+
+    /// Clear every frontier structure (end-of-run, or error cleanup).
+    pub fn drain_frontiers(&mut self) {
+        for f in self.frontiers.iter_mut() {
+            f.reset();
+        }
+        self.global_frontier.clear();
+        self.global_next.clear();
+        self.pending.clear();
+    }
+
+    /// Advance every partition pair and swap the global aggregate in —
+    /// the `Synchronize()` barrier, mirroring `BfsState`.
+    pub fn advance_frontiers(&mut self) {
+        for f in self.frontiers.iter_mut() {
+            f.advance();
+        }
+        std::mem::swap(&mut self.global_frontier, &mut self.global_next);
+        self.global_next.clear();
+    }
+
+    /// Mark the run completed cleanly (frontiers must be drained): the
+    /// next reset may recycle in O(touched).
+    pub fn finish(&mut self) {
+        debug_assert!(self.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
+        debug_assert!(!self.global_frontier.any() && !self.global_next.any());
+        debug_assert!(!self.pending.any());
+        self.recyclable = true;
+    }
+}
+
+impl<V: Copy + Default + Send> PoolEntry for ProgramState<V> {
+    fn shape_matches(&self, pg: &PartitionedGraph) -> bool {
+        ProgramState::shape_matches(self, pg)
+    }
+
+    fn fresh(pg: &PartitionedGraph) -> Self {
+        ProgramState::new(pg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_csr, EdgeList};
+    use crate::partition::{materialize, HardwareConfig, LayoutOptions};
+
+    fn pg(n: usize) -> PartitionedGraph {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+        let g = build_csr(&EdgeList { num_vertices: n, edges });
+        let cfg =
+            HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let half = n / 2;
+        let assign: Vec<u8> = (0..n).map(|v| u8::from(v >= half)).collect();
+        materialize(&g, assign, &cfg, &LayoutOptions::naive())
+    }
+
+    #[test]
+    fn clean_finish_enables_sparse_reset() {
+        let pg = pg(256);
+        let mut s: ProgramState<u64> = ProgramState::new(&pg);
+        let full = s.reset(|v| v as u64);
+        // Touch a handful, finish cleanly, reset again: sparse.
+        for v in [3usize, 9, 9, 40] {
+            s.values[v] = 999;
+            s.touch(v);
+        }
+        assert_eq!(s.touched_len(), 3, "touch dedups");
+        s.finish();
+        let sparse = s.reset(|v| v as u64);
+        assert!(sparse < full, "sparse reset must model fewer bytes ({sparse} vs {full})");
+        assert!(s.values.iter().enumerate().all(|(v, &x)| x == v as u64));
+    }
+
+    #[test]
+    fn poisoned_or_bulk_dirty_state_full_wipes() {
+        let pg = pg(128);
+        let mut s: ProgramState<u32> = ProgramState::new(&pg);
+        s.reset(|_| 7);
+        // Scribble without touch records — poisoned (no finish).
+        s.values[100] = 42;
+        s.pending.set(5);
+        s.frontiers[0].current.set(1);
+        s.global_frontier.set(1);
+        let _ = s.reset(|_| 7);
+        assert!(s.values.iter().all(|&x| x == 7));
+        assert!(!s.pending.any() && !s.global_frontier.any());
+        assert!(s.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
+
+        // mark_all_dirty forces the full wipe even after a clean finish.
+        s.values[3] = 1;
+        s.mark_all_dirty();
+        s.drain_frontiers();
+        s.finish();
+        s.reset(|_| 7);
+        assert!(s.values.iter().all(|&x| x == 7), "all-dirty values restored");
+    }
+
+    #[test]
+    fn advance_swaps_global_aggregate() {
+        let pg = pg(64);
+        let mut s: ProgramState<u8> = ProgramState::new(&pg);
+        s.reset(|_| 0);
+        s.frontiers[0].next.set(4);
+        s.global_next.set(4);
+        s.advance_frontiers();
+        assert!(s.frontiers[0].current.get(4));
+        assert!(s.global_frontier.get(4));
+        assert!(!s.global_next.any());
+    }
+}

@@ -6,6 +6,8 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::algo::sssp::DIST_INF;
+use crate::algo::{run_cc, run_pagerank, run_sssp, SsspRun, WeightFn};
 use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{Accelerator, CommMode, CommStats, ExecutionMode, SimAccelerator};
 use crate::graph::generator::{kronecker_par, real_world_analog_par, GeneratorConfig, RealWorldClass};
@@ -16,7 +18,10 @@ use crate::partition::{
     random_partition, specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
 };
 use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
-use crate::service::{run_batch, BatchOptions, QueryOutcome, ResidentGraph, SchedulePolicy};
+use crate::service::{
+    run_algo_batch, run_batch, AlgoOutcome, AlgoQuery, BatchOptions, QueryOutcome, ResidentGraph,
+    SchedulePolicy,
+};
 use crate::util::tables::{fmt_teps, fmt_time, Table};
 
 /// Minimal `--key value` / `--flag` argument map.
@@ -367,6 +372,177 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// SSSP edge weights from the common flags: `--unit-weights` or a
+/// deterministic per-edge hash in `[1, --max-weight]` (seeded by
+/// `--weight-seed`, independent of the graph seed). The default matches
+/// the service scheduler's [`crate::algo::default_weights`].
+fn weights(args: &Args) -> Result<WeightFn> {
+    if args.has("unit-weights") {
+        return Ok(WeightFn::Unit);
+    }
+    Ok(WeightFn::Hashed {
+        seed: args.get_parse("weight-seed", 0x7E75_EED5u64)?,
+        max_weight: args.get_parse("max-weight", 64u64)?.max(1),
+    })
+}
+
+/// Structural SSSP validation (the Graph500-check analogue): the root is
+/// settled at 0 and parents itself, every reached non-root vertex has an
+/// adjacent parent with a *tight* distance (`dist[v] == dist[p] + w`),
+/// unreached vertices have no parent, and no edge violates the triangle
+/// inequality (`dist[v] <= dist[u] + w(u, v)` for settled `u`).
+fn validate_sssp(g: &Csr, w: &WeightFn, run: &SsspRun) -> Result<()> {
+    let root = run.root as usize;
+    anyhow::ensure!(run.dist[root] == 0, "root distance must be 0");
+    anyhow::ensure!(run.parent[root] == run.root as i64, "root must parent itself");
+    for v in 0..g.num_vertices {
+        if run.dist[v] == DIST_INF {
+            anyhow::ensure!(run.parent[v] == -1, "unreached vertex {v} has a parent");
+            continue;
+        }
+        if v != root {
+            let p = run.parent[v];
+            anyhow::ensure!(
+                (0..g.num_vertices as i64).contains(&p),
+                "vertex {v}: parent {p} out of range"
+            );
+            let p = p as u32;
+            anyhow::ensure!(
+                g.neighbours(v as u32).iter().any(|&u| u == p),
+                "vertex {v}: parent {p} not adjacent"
+            );
+            let expect = run.dist[p as usize].saturating_add(w.weight(p, v as u32));
+            anyhow::ensure!(
+                run.dist[v] == expect,
+                "vertex {v}: dist {} is not tight via parent {p} ({expect})",
+                run.dist[v]
+            );
+        }
+        for &u in g.neighbours(v as u32) {
+            let bound = run.dist[v].saturating_add(w.weight(v as u32, u));
+            anyhow::ensure!(
+                run.dist[u as usize] <= bound,
+                "edge ({v}, {u}) violates the triangle inequality"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `totem-do sssp` — delta-stepping single-source shortest paths on the
+/// vertex-program substrate.
+pub fn cmd_sssp(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let hw = hardware(args)?;
+    let pg = partition_graph(args, &g, &hw)?;
+    let exec = ExecutionMode::from_threads(threads(args)?);
+    let root = args.get_parse("root", 0u32)?;
+    anyhow::ensure!(
+        (root as usize) < g.num_vertices,
+        "--root {root} out of range (graph has {} vertices)",
+        g.num_vertices
+    );
+    let delta = args.get_parse("delta", 8u64)?;
+    let w = weights(args)?;
+    println!(
+        "sssp graph={name} V={} E={} config={} root={root} delta={delta}",
+        g.num_vertices,
+        g.num_undirected_edges(),
+        hw.label()
+    );
+    let run = run_sssp(&pg, root, delta, w.clone(), exec)?;
+    let max_dist = run.dist.iter().filter(|&&d| d != DIST_INF).max().copied().unwrap_or(0);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["reached".to_string(), run.reached.to_string()]);
+    t.row(vec!["rounds (bucket drains)".to_string(), run.rounds.to_string()]);
+    t.row(vec!["max distance".to_string(), max_dist.to_string()]);
+    t.row(vec!["wall".to_string(), fmt_time(run.wall.as_secs_f64())]);
+    t.print();
+    if args.has("validate") {
+        validate_sssp(&g, &w, &run)?;
+        println!("validation: tree is tight and no edge is violated");
+    }
+    Ok(())
+}
+
+/// `totem-do cc` — weakly connected components via min-label propagation.
+pub fn cmd_cc(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let hw = hardware(args)?;
+    let pg = partition_graph(args, &g, &hw)?;
+    let exec = ExecutionMode::from_threads(threads(args)?);
+    println!(
+        "cc graph={name} V={} E={} config={}",
+        g.num_vertices,
+        g.num_undirected_edges(),
+        hw.label()
+    );
+    let run = run_cc(&pg, exec)?;
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["components".to_string(), run.components.to_string()]);
+    t.row(vec!["rounds".to_string(), run.rounds.to_string()]);
+    t.row(vec!["wall".to_string(), fmt_time(run.wall.as_secs_f64())]);
+    t.print();
+    if args.has("validate") {
+        for v in 0..g.num_vertices {
+            let l = run.labels[v];
+            anyhow::ensure!(l as usize <= v, "label {l} above vertex {v} (not a min)");
+            anyhow::ensure!(
+                run.labels[l as usize] == l,
+                "representative {l} not self-labelled"
+            );
+            for &u in g.neighbours(v as u32) {
+                anyhow::ensure!(
+                    run.labels[u as usize] == l,
+                    "edge ({v}, {u}) spans labels {l} vs {}",
+                    run.labels[u as usize]
+                );
+            }
+        }
+        println!("validation: labels are per-component minima");
+    }
+    Ok(())
+}
+
+/// `totem-do pagerank` — fixed-iteration, convergence-checked PageRank.
+pub fn cmd_pagerank(args: &Args) -> Result<()> {
+    let (g, name) = load_graph(args)?;
+    let hw = hardware(args)?;
+    let pg = partition_graph(args, &g, &hw)?;
+    let exec = ExecutionMode::from_threads(threads(args)?);
+    let damping = args.get_parse("damping", 0.85f64)?;
+    let iters = args.get_parse("pr-iters", 50u32)?;
+    let tol = args.get_parse("pr-tol", 1e-9f64)?;
+    println!(
+        "pagerank graph={name} V={} E={} config={} damping={damping} max_iters={iters} tol={tol:e}",
+        g.num_vertices,
+        g.num_undirected_edges(),
+        hw.label()
+    );
+    let run = run_pagerank(&pg, damping, iters, tol, exec)?;
+    let total: f64 = run.ranks.iter().sum();
+    let (top_v, top_r) = run
+        .ranks
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(v, &r)| (v, r))
+        .unwrap_or((0, 0.0));
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["iterations".to_string(), run.iterations.to_string()]);
+    t.row(vec!["last max delta".to_string(), format!("{:.3e}", run.last_delta)]);
+    t.row(vec!["rank mass".to_string(), format!("{total:.6}")]);
+    t.row(vec!["top vertex".to_string(), format!("{top_v} ({top_r:.6})")]);
+    t.row(vec!["wall".to_string(), fmt_time(run.wall.as_secs_f64())]);
+    t.print();
+    if args.has("validate") {
+        anyhow::ensure!(run.ranks.iter().all(|&r| r > 0.0), "ranks must be positive");
+        anyhow::ensure!(total <= 1.0 + 1e-9, "rank mass {total} exceeds 1");
+        println!("validation: ranks positive, mass conserved");
+    }
+    Ok(())
+}
+
 /// Build the resident graph a service command operates on: ingest +
 /// partition once per the common CLI flags, shared as an `Arc` exactly
 /// like a `GraphRegistry` entry. The single-graph CLI commands skip the
@@ -403,6 +579,9 @@ fn batch_options(args: &Args) -> Result<BatchOptions> {
         max_concurrency: args.get_parse("batch", 8usize)?,
         bfs_policy: self::policy(args)?,
         comm_mode: CommMode::Batched,
+        sssp_delta: args.get_parse("delta", 8u64)?,
+        pr_iters: args.get_parse("pr-iters", 50u32)?,
+        pr_tol: args.get_parse("pr-tol", 1e-9f64)?,
     })
 }
 
@@ -520,6 +699,10 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
     let rg = resident_from_args(args)?;
     let opts = batch_options(args)?;
     let roots = service_roots(args, &rg)?;
+    let algo = args.get("algo").unwrap_or("bfs");
+    if algo != "bfs" {
+        return cmd_batch_algo(args, &rg, &opts, &roots, algo);
+    }
     println!(
         "service graph={} V={} E={} config={} sched={:?} batch={} threads={} queries={}",
         rg.name,
@@ -548,6 +731,84 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
         args.has("verbose"),
         args.has("comm-stats"),
     );
+    anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
+    Ok(())
+}
+
+/// `totem-do batch --algo sssp|cc|pagerank` — the mixed-algorithm batch
+/// path. Rooted algorithms (sssp) take one query per root; whole-graph
+/// algorithms (cc, pagerank) use the roots list only to size the batch.
+fn cmd_batch_algo(
+    args: &Args,
+    rg: &ResidentGraph,
+    opts: &BatchOptions,
+    roots: &[u32],
+    algo: &str,
+) -> Result<()> {
+    let queries: Vec<AlgoQuery> = match algo {
+        "sssp" => roots.iter().map(|&r| AlgoQuery::Sssp { root: r }).collect(),
+        "cc" => roots.iter().map(|_| AlgoQuery::Cc).collect(),
+        "pagerank" | "pr" => roots.iter().map(|_| AlgoQuery::Pagerank).collect(),
+        other => bail!("unknown --algo {other:?} (expected bfs|sssp|cc|pagerank)"),
+    };
+    println!(
+        "service graph={} V={} E={} config={} algo={algo} sched={:?} batch={} threads={} queries={}",
+        rg.name,
+        rg.num_vertices(),
+        rg.csr.num_undirected_edges(),
+        rg.hw.label(),
+        opts.policy,
+        opts.max_concurrency,
+        opts.threads,
+        queries.len()
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = run_algo_batch(rg, &queries, opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut failed = 0usize;
+    for (i, outcome) in outcomes.iter().enumerate() {
+        match outcome {
+            AlgoOutcome::Failed { query, error } => {
+                failed += 1;
+                println!("  query {i:>4} {query:?} FAILED: {error}");
+            }
+            _ if args.has("verbose") => match outcome {
+                AlgoOutcome::Sssp(run) => println!(
+                    "  query {i:>4} sssp root {:<10} reached {:>9} rounds {}",
+                    run.root, run.reached, run.rounds
+                ),
+                AlgoOutcome::Cc(run) => println!(
+                    "  query {i:>4} cc   components {:>9} rounds {}",
+                    run.components, run.rounds
+                ),
+                AlgoOutcome::Pagerank(run) => println!(
+                    "  query {i:>4} pr   iterations {:>9} delta {:.3e}",
+                    run.iterations, run.last_delta
+                ),
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    let ok = outcomes.len() - failed;
+    println!(
+        "{ok} ok / {failed} failed in {} ({:.1} queries/s)",
+        fmt_time(wall),
+        ok as f64 / wall.max(1e-12)
+    );
+    let pools = [
+        ("sssp", rg.algo_states.sssp.stats()),
+        ("cc", rg.algo_states.cc.stats()),
+        ("pagerank", rg.algo_states.pagerank.stats()),
+    ];
+    for (name, st) in pools {
+        if st.created + st.recycled > 0 {
+            println!(
+                "state pool [{name}]: {} created, {} recycled, {} idle",
+                st.created, st.recycled, st.idle
+            );
+        }
+    }
     anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
     Ok(())
 }
@@ -678,11 +939,27 @@ pub fn usage() -> &'static str {
                  --comm-stats (per-traversal push/pull bytes+messages split\n\
                  by host/PCIe link — boundary-compacted adaptive wire sizes,\n\
                  with the full-V bitmap scheme's cost for comparison)\n\
+       sssp      delta-stepping single-source shortest paths (vertex-program\n\
+                 substrate; same adaptive frontiers + partitions as `bfs`)\n\
+                 --root R --delta W (bucket width, default 8)\n\
+                 --unit-weights | --max-weight W --weight-seed S\n\
+                 --validate (tight parents + triangle inequality)\n\
+                 plus the graph/hardware/--threads flags of `bfs`\n\
+       cc        weakly connected components (min-label propagation)\n\
+                 --validate (labels are per-component minima)\n\
+                 plus the graph/hardware/--threads flags of `bfs`\n\
+       pagerank  power-method PageRank with convergence check\n\
+                 --damping D --pr-iters N --pr-tol T\n\
+                 --validate (positive ranks, mass conserved)\n\
+                 plus the graph/hardware/--threads flags of `bfs`\n\
        batch     run a root campaign through the resident multi-query service\n\
                  (partition once, recycle traversal state, schedule K queries\n\
                  concurrently; per-query output bit-identical to `bfs`)\n\
                  --roots FILE | --nroots N --seed S\n\
                  --batch K --sched throughput|latency --threads N\n\
+                 --algo bfs|sssp|cc|pagerank (mixed-algorithm service path;\n\
+                 whole-graph algos use the roots list only to size the batch;\n\
+                 --delta/--pr-iters/--pr-tol set the per-algorithm knobs)\n\
                  --validate --verbose --strict (fail on any failed query)\n\
                  --comm-stats (as in `bfs`, aggregated over the batch)\n\
                  plus the graph/hardware flags of `bfs`\n\
@@ -787,6 +1064,64 @@ mod tests {
         let sampled = service_roots(&sa, &rg).unwrap();
         assert_eq!(sampled.len(), 4);
         assert!(sampled.iter().all(|&r| rg.degree(r) > 0));
+    }
+
+    #[test]
+    fn batch_options_carry_algo_knobs() {
+        let a = Args::parse(&argv(&["--delta", "16", "--pr-iters", "5", "--pr-tol", "0.01"]))
+            .unwrap();
+        let o = batch_options(&a).unwrap();
+        assert_eq!(o.sssp_delta, 16);
+        assert_eq!(o.pr_iters, 5);
+        assert_eq!(o.pr_tol, 0.01);
+        let d = batch_options(&Args::parse(&argv(&[])).unwrap()).unwrap();
+        assert_eq!((d.sssp_delta, d.pr_iters), (8, 50));
+    }
+
+    #[test]
+    fn weights_parse_unit_and_hashed() {
+        let u = weights(&Args::parse(&argv(&["--unit-weights"])).unwrap()).unwrap();
+        assert_eq!(u.weight(3, 9), 1);
+        let h =
+            weights(&Args::parse(&argv(&["--max-weight", "5", "--weight-seed", "7"])).unwrap())
+                .unwrap();
+        for (a, b) in [(0u32, 1u32), (8, 2)] {
+            assert!((1..=5).contains(&h.weight(a, b)));
+        }
+        // max-weight 0 clamps rather than dividing by zero.
+        let z = weights(&Args::parse(&argv(&["--max-weight", "0"])).unwrap()).unwrap();
+        assert_eq!(z.weight(0, 1), 1);
+    }
+
+    #[test]
+    fn algo_commands_run_and_validate_small_graphs() {
+        let base = ["--scale", "7", "--seed", "3", "--config", "2S0G", "--validate"];
+        let a = Args::parse(&argv(&base)).unwrap();
+        cmd_cc(&a).unwrap();
+        cmd_pagerank(&a).unwrap();
+        let mut with_root = base.to_vec();
+        with_root.extend(["--root", "0", "--delta", "4"]);
+        cmd_sssp(&Args::parse(&argv(&with_root)).unwrap()).unwrap();
+        // Out-of-range SSSP root is a clean error.
+        let mut bad = base.to_vec();
+        bad.extend(["--root", "99999999"]);
+        assert!(cmd_sssp(&Args::parse(&argv(&bad)).unwrap()).is_err());
+    }
+
+    #[test]
+    fn batch_algo_dispatch_accepts_known_and_rejects_unknown() {
+        let ok = Args::parse(&argv(&[
+            "--scale", "7", "--seed", "3", "--config", "2S0G", "--nroots", "3", "--algo",
+            "sssp", "--strict",
+        ]))
+        .unwrap();
+        cmd_batch(&ok).unwrap();
+        let bad = Args::parse(&argv(&[
+            "--scale", "7", "--seed", "3", "--config", "2S0G", "--nroots", "2", "--algo",
+            "zigzag",
+        ]))
+        .unwrap();
+        assert!(cmd_batch(&bad).is_err());
     }
 
     #[test]

@@ -352,6 +352,25 @@ impl Accelerator for SimAccelerator {
     }
 }
 
+/// Device-image PCIe pricing for one vertex-program superstep on a GPU
+/// partition. Unlike the BFS kernels (activation bitmaps only), generic
+/// programs move typed messages: the partition uploads its local
+/// frontier bitmap (`part_vertices / 8`) plus a count word, and each
+/// in/outbound message carries a 4-byte target id plus `msg_bytes` of
+/// payload. Transfers: frontier up + result down, plus one batched
+/// message transfer per non-empty direction. Returns
+/// `(pcie_bytes, pcie_transfers)`.
+pub fn program_step_pcie(
+    part_vertices: usize,
+    msg_bytes: u64,
+    msgs_in: u64,
+    msgs_out: u64,
+) -> (u64, u64) {
+    let bytes = part_vertices.div_ceil(8) as u64 + 4 + (msgs_in + msgs_out) * (4 + msg_bytes);
+    let transfers = 2 + u64::from(msgs_in > 0) + u64::from(msgs_out > 0);
+    (bytes, transfers)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,5 +544,16 @@ mod tests {
             v
         };
         assert_eq!(to_global(part, &a.next_frontier), to_global(&pg_naive.parts[1], &b.next_frontier));
+    }
+
+    #[test]
+    fn program_step_pcie_prices_messages_and_directions() {
+        // Quiet step: frontier bitmap + count up, result down — 2 xfers.
+        assert_eq!(program_step_pcie(64, 12, 0, 0), (8 + 4, 2));
+        // 3 inbound + 2 outbound 12-byte messages add (4 + 12) each and
+        // one batched transfer per non-empty direction.
+        assert_eq!(program_step_pcie(64, 12, 3, 2), (8 + 4 + 5 * 16, 4));
+        // Vertex count rounds up to whole bytes.
+        assert_eq!(program_step_pcie(9, 0, 1, 0), (2 + 4 + 4, 3));
     }
 }

@@ -159,10 +159,23 @@ impl CommBuffers {
     /// (Buluc & Madduri). Zero when either side is empty.
     #[inline]
     fn wire_cost(border_len: usize, occupancy: u64) -> u64 {
+        Self::payload_wire_cost(border_len, occupancy, 0)
+    }
+
+    /// [`Self::wire_cost`] generalized to payload-carrying vertex
+    /// programs: each of the `occupancy` combined per-target messages
+    /// ships `payload_bytes` of algorithm data on top of its identity,
+    /// which rides either in a sparse id list (4 bytes per member) or a
+    /// border-local bitmap (`len/8` total) — whichever identity encoding
+    /// is smaller. `payload_bytes == 0` is exactly the BFS wire.
+    #[inline]
+    pub fn payload_wire_cost(border_len: usize, occupancy: u64, payload_bytes: u64) -> u64 {
         if border_len == 0 || occupancy == 0 {
             0
         } else {
-            (border_len.div_ceil(8) as u64).min(4 * occupancy)
+            let sparse = occupancy * (4 + payload_bytes);
+            let dense = border_len.div_ceil(8) as u64 + occupancy * payload_bytes;
+            sparse.min(dense)
         }
     }
 
@@ -239,6 +252,25 @@ impl CommBuffers {
             s.dense_equiv_bytes = s.push_pcie.bytes;
             return s;
         }
+        // BFS pushes carry no payload beyond the activation bit itself.
+        self.payload_push_stats(pg, 0, crossing_activations)
+    }
+
+    /// [`Self::push_stats`]'s batched accounting, generalized to vertex
+    /// programs whose messages carry `payload_bytes` of data per target
+    /// (0 for BFS activation bitmaps, 4 for CC labels, 8 for PageRank
+    /// shares, 12 for SSSP relaxations). The merge operator acts as a
+    /// wire combiner — each `(link, target)` pair crosses at most once —
+    /// so link occupancy still prices the transfer, via
+    /// [`Self::payload_wire_cost`]. With `payload_bytes == 0` this is
+    /// bit-for-bit the PR 5 batched wire model.
+    pub fn payload_push_stats(
+        &self,
+        pg: &PartitionedGraph,
+        payload_bytes: u64,
+        crossing_activations: u64,
+    ) -> CommStats {
+        let mut s = CommStats { crossing_activations, ..Default::default() };
         for p in 0..self.np {
             // Bytes this source has for each destination.
             let mut up_bytes = 0u64;
@@ -247,11 +279,12 @@ impl CommBuffers {
                 if p == q || !self.outboxes[p][q].any() {
                     continue;
                 }
-                let bytes = Self::wire_cost(
-                    self.tables[p][q].len(),
-                    self.outboxes[p][q].count() as u64,
-                );
-                let dense = self.dense_dest_bytes[q];
+                let occ = self.outboxes[p][q].count() as u64;
+                let bytes =
+                    Self::payload_wire_cost(self.tables[p][q].len(), occ, payload_bytes);
+                // The dense baseline ships the full destination bitmap
+                // plus one payload slot per combined target.
+                let dense = self.dense_dest_bytes[q] + occ * payload_bytes;
                 if pg.parts[p].kind.is_gpu() {
                     up_bytes += bytes; // GPU -> host, batched below
                     up_dense += dense;
@@ -542,5 +575,36 @@ mod tests {
         assert_eq!(a.pull_pcie, LinkTraffic { bytes: 10, msgs: 1 });
         assert_eq!(a.total_bytes(), 20);
         assert_eq!(a.dense_equiv_bytes, 29);
+    }
+
+    #[test]
+    fn zero_payload_matches_batched_push_stats() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        cb.mark(0, 1, 3);
+        cb.mark(0, 1, 5);
+        cb.mark(1, 2, 6);
+        cb.mark(2, 1, 5);
+        let bfs = cb.push_stats(&pg, CommMode::Batched, 4);
+        let generic = cb.payload_push_stats(&pg, 0, 4);
+        assert_eq!(bfs, generic, "payload 0 is the PR 5 wire model");
+    }
+
+    #[test]
+    fn payload_messages_price_the_cheaper_encoding() {
+        let pg = pg3();
+        let mut cb = CommBuffers::new(&pg);
+        // Link (0, 1): border B(1, 0) = {3, 4, 5}. One 12-byte message:
+        // sparse = 1*(4+12) = 16 vs dense = ceil(3/8) + 1*12 = 13.
+        cb.mark(0, 1, 3);
+        let s = cb.payload_push_stats(&pg, 12, 1);
+        assert_eq!(s.push_host.bytes, 13, "dense bitmap + payload wins");
+        assert_eq!(s.push_host.msgs, 1);
+        // 4-byte labels: sparse = 1*(4+4) = 8 beats dense 1 + 4 = 5? No:
+        // dense = ceil(3/8) + 1*4 = 5, still cheaper on a tiny border.
+        let s = cb.payload_push_stats(&pg, 4, 1);
+        assert_eq!(s.push_host.bytes, 5);
+        // Dense baseline includes the payload slots.
+        assert_eq!(s.dense_equiv_bytes, 1 + 4);
     }
 }

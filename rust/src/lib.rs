@@ -19,6 +19,7 @@
 //! inventory (the hardware-substitution boundary, the parallel execution
 //! mode's deterministic-merge rule) and the experiment index.
 
+pub mod algo;
 pub mod cli;
 pub mod graph;
 pub mod metrics;

@@ -14,6 +14,9 @@ fn main() -> Result<()> {
     let args = cli::Args::parse(rest)?;
     match cmd.as_str() {
         "bfs" => cli::cmd_bfs(&args),
+        "sssp" => cli::cmd_sssp(&args),
+        "cc" => cli::cmd_cc(&args),
+        "pagerank" => cli::cmd_pagerank(&args),
         "batch" => cli::cmd_batch(&args),
         "serve" => cli::cmd_serve(&args),
         "baseline" => cli::cmd_baseline(&args),

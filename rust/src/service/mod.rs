@@ -19,6 +19,11 @@
 //!   [`SchedulePolicy`] trades latency (one query at a time, all threads
 //!   chunking its kernels) against throughput (many queries in flight,
 //!   the thread budget partitioned across them).
+//! * [`run_algo_batch`] — the mixed-algorithm generalization: one batch
+//!   may interleave BFS, SSSP, CC and PageRank queries ([`AlgoQuery`]).
+//!   Each algorithm draws recycled states from its own typed pool on the
+//!   resident graph ([`AlgoStatePools`]), and the same determinism
+//!   contract applies per algorithm (DESIGN.md Section 13).
 //!
 //! **Query-level determinism contract:** every completed query's output
 //! (`parent`, `depth`, per-level [`LevelStats`](crate::engine::LevelStats),
@@ -35,6 +40,9 @@ pub mod registry;
 pub mod scheduler;
 pub mod state_pool;
 
-pub use registry::{GraphRegistry, ResidentGraph};
-pub use scheduler::{run_batch, BatchOptions, QueryOutcome, SchedulePolicy};
-pub use state_pool::{PoolStats, StatePool};
+pub use registry::{AlgoStatePools, GraphRegistry, ResidentGraph};
+pub use scheduler::{
+    run_algo_batch, run_batch, AlgoOutcome, AlgoQuery, BatchOptions, QueryOutcome,
+    SchedulePolicy,
+};
+pub use state_pool::{PoolEntry, PoolStats, StatePool, TypedPool};

@@ -19,10 +19,22 @@ use crate::partition::{
     specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
 };
 
-use super::state_pool::StatePool;
+use crate::algo::{ProgramState, PrValue, SsspValue};
+
+use super::state_pool::{StatePool, TypedPool};
+
+/// Per-algorithm recyclable [`ProgramState`] pools. Each vertex-program
+/// value type sizes its state differently, so each algorithm keeps its
+/// own shape-bound free list (BFS keeps its classic [`StatePool`]).
+#[derive(Default)]
+pub struct AlgoStatePools {
+    pub sssp: TypedPool<ProgramState<SsspValue>>,
+    pub cc: TypedPool<ProgramState<u32>>,
+    pub pagerank: TypedPool<ProgramState<PrValue>>,
+}
 
 /// One resident graph: immutable after construction (interior mutability
-/// exists only inside the state pool's free list).
+/// exists only inside the state pools' free lists).
 pub struct ResidentGraph {
     pub name: String,
     pub csr: Csr,
@@ -31,8 +43,10 @@ pub struct ResidentGraph {
     /// Shared accelerator device image (SELL uploads), present iff the
     /// hardware shape has GPUs. Sessions clone `Arc`s out of it.
     sim_ctx: Option<SimContext>,
-    /// Recyclable traversal states for this graph's shape.
+    /// Recyclable BFS traversal states for this graph's shape.
     pub states: StatePool,
+    /// Recyclable vertex-program states, one pool per algorithm.
+    pub algo_states: AlgoStatePools,
 }
 
 impl ResidentGraph {
@@ -65,6 +79,7 @@ impl ResidentGraph {
             hw: hw.clone(),
             sim_ctx,
             states: StatePool::new(),
+            algo_states: AlgoStatePools::default(),
         }
     }
 

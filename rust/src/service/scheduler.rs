@@ -24,6 +24,10 @@
 
 use anyhow::Result;
 
+use crate::algo::{
+    cc_run_from, default_weights, pagerank_run_from, sssp_run_from, CcProgram, CcRun,
+    PagerankProgram, PagerankRun, ProgramRunner, SsspProgram, SsspRun,
+};
 use crate::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{CommMode, ExecutionMode, SimAccelerator};
 use crate::util::pool;
@@ -55,6 +59,12 @@ pub struct BatchOptions {
     /// BFS direction policy for every query in the batch.
     pub bfs_policy: PolicyKind,
     pub comm_mode: CommMode,
+    /// SSSP bucket width (delta-stepping's Δ) for [`AlgoQuery::Sssp`].
+    pub sssp_delta: u64,
+    /// PageRank iteration cap for [`AlgoQuery::Pagerank`].
+    pub pr_iters: u32,
+    /// PageRank convergence tolerance (max per-vertex rank delta).
+    pub pr_tol: f64,
 }
 
 impl Default for BatchOptions {
@@ -65,6 +75,9 @@ impl Default for BatchOptions {
             max_concurrency: 8,
             bfs_policy: PolicyKind::direction_optimized(),
             comm_mode: CommMode::Batched,
+            sssp_delta: 8,
+            pr_iters: 50,
+            pr_tol: 1e-9,
         }
     }
 }
@@ -220,6 +233,173 @@ pub fn run_batch(
         .collect())
 }
 
+/// One query in a mixed-algorithm batch. Rooted queries (BFS, SSSP) name
+/// their source; CC and PageRank are whole-graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoQuery {
+    Bfs { root: u32 },
+    Sssp { root: u32 },
+    Cc,
+    Pagerank,
+}
+
+impl AlgoQuery {
+    fn root(&self) -> Option<u32> {
+        match self {
+            AlgoQuery::Bfs { root } | AlgoQuery::Sssp { root } => Some(*root),
+            AlgoQuery::Cc | AlgoQuery::Pagerank => None,
+        }
+    }
+}
+
+/// Per-query result of [`run_algo_batch`], in submission order.
+#[derive(Clone, Debug)]
+pub enum AlgoOutcome {
+    Bfs(Box<BfsRun>),
+    Sssp(Box<SsspRun>),
+    Cc(Box<CcRun>),
+    Pagerank(Box<PagerankRun>),
+    Failed { query: AlgoQuery, error: String },
+}
+
+impl AlgoOutcome {
+    pub fn is_complete(&self) -> bool {
+        !matches!(self, AlgoOutcome::Failed { .. })
+    }
+}
+
+/// Run one query against the resident graph with a pooled, recycled
+/// program state. BFS rides the classic [`HybridRunner`] + [`StatePool`]
+/// path (and so supports GPU placements through the session
+/// accelerator); the vertex programs use their per-algorithm pools.
+fn run_one_algo(
+    rg: &ResidentGraph,
+    query: AlgoQuery,
+    opts: &BatchOptions,
+    exec: ExecutionMode,
+) -> Result<AlgoOutcome, String> {
+    let pg = &rg.pg;
+    match query {
+        AlgoQuery::Bfs { root } => {
+            let mut accel: Option<SimAccelerator> = rg.new_session_accel();
+            let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+            if has_gpu && accel.is_none() {
+                return Err("graph has GPU partitions but no resident device context".into());
+            }
+            let cfg = HybridConfig {
+                policy: opts.bfs_policy,
+                comm_mode: opts.comm_mode,
+                exec,
+                ..Default::default()
+            };
+            let state = rg.states.acquire(pg);
+            let mut runner = HybridRunner::with_state(pg, cfg, accel.as_mut(), state)
+                .map_err(|e| e.to_string())?;
+            let res = runner.run(root);
+            rg.states.release(runner.into_state());
+            res.map(|run| AlgoOutcome::Bfs(Box::new(run))).map_err(|e| e.to_string())
+        }
+        AlgoQuery::Sssp { root } => {
+            let program =
+                SsspProgram { root, delta: opts.sssp_delta, weights: default_weights() };
+            let state = rg.algo_states.sssp.acquire(pg);
+            let mut runner = ProgramRunner::with_state(pg, program, exec, state);
+            let res = runner.run();
+            rg.algo_states.sssp.release(runner.into_state());
+            res.map(|run| AlgoOutcome::Sssp(Box::new(sssp_run_from(root, run))))
+                .map_err(|e| e.to_string())
+        }
+        AlgoQuery::Cc => {
+            let state = rg.algo_states.cc.acquire(pg);
+            let mut runner = ProgramRunner::with_state(pg, CcProgram, exec, state);
+            let res = runner.run();
+            rg.algo_states.cc.release(runner.into_state());
+            res.map(|run| AlgoOutcome::Cc(Box::new(cc_run_from(run)))).map_err(|e| e.to_string())
+        }
+        AlgoQuery::Pagerank => {
+            let program = PagerankProgram {
+                num_vertices: pg.num_vertices,
+                damping: 0.85,
+                max_iters: opts.pr_iters,
+                tol: opts.pr_tol,
+            };
+            let state = rg.algo_states.pagerank.acquire(pg);
+            let mut runner = ProgramRunner::with_state(pg, program, exec, state);
+            let res = runner.run();
+            rg.algo_states.pagerank.release(runner.into_state());
+            res.map(|run| AlgoOutcome::Pagerank(Box::new(pagerank_run_from(run))))
+                .map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// Run a mixed-algorithm batch over a resident graph: the multi-query
+/// generalization of [`run_batch`]. Admission, lane planning and
+/// round-robin assignment are identical; each lane drains its queries
+/// through pooled per-algorithm states. Returns one [`AlgoOutcome`] per
+/// query, in input order; per-query outputs are bit-identical across
+/// policies, batch sizes and thread counts (the per-algorithm
+/// determinism contract, DESIGN.md Section 13).
+pub fn run_algo_batch(
+    rg: &ResidentGraph,
+    queries: &[AlgoQuery],
+    opts: &BatchOptions,
+) -> Result<Vec<AlgoOutcome>> {
+    let v = rg.num_vertices();
+    // Admission: out-of-range roots fail their own slot only.
+    let mut outcomes: Vec<Option<AlgoOutcome>> = queries
+        .iter()
+        .map(|&q| {
+            q.root().filter(|&r| (r as usize) >= v).map(|r| AlgoOutcome::Failed {
+                query: q,
+                error: format!("root {r} out of range (graph has {v} vertices)"),
+            })
+        })
+        .collect();
+    let admitted: Vec<(usize, AlgoQuery)> = queries
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| outcomes[i].is_none())
+        .map(|(i, &q)| (i, q))
+        .collect();
+
+    if !admitted.is_empty() {
+        let lane_budgets = plan_lanes(opts, admitted.len());
+        let lanes = lane_budgets.len();
+        let mut assignment: Vec<Vec<(usize, AlgoQuery)>> = vec![Vec::new(); lanes];
+        for (j, &q) in admitted.iter().enumerate() {
+            assignment[j % lanes].push(q);
+        }
+
+        let tasks: Vec<_> = assignment
+            .into_iter()
+            .zip(lane_budgets)
+            .map(|(lane, budget)| {
+                let exec = ExecutionMode::from_threads(budget);
+                move || -> Vec<(usize, Result<AlgoOutcome, String>)> {
+                    lane.into_iter()
+                        .map(|(i, q)| (i, run_one_algo(rg, q, opts, exec)))
+                        .collect()
+                }
+            })
+            .collect();
+
+        for lane_out in pool::run_tasks(lanes, tasks) {
+            for (i, res) in lane_out {
+                outcomes[i] = Some(match res {
+                    Ok(out) => out,
+                    Err(error) => AlgoOutcome::Failed { query: queries[i], error },
+                });
+            }
+        }
+    }
+
+    Ok(outcomes
+        .into_iter()
+        .map(|o| o.expect("every query produced an outcome"))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +486,73 @@ mod tests {
         let st = rg.states.stats();
         assert!(st.created <= 3, "at most one state per lane, got {st:?}");
         assert_eq!(st.idle, st.created, "all states returned to the pool");
+    }
+
+    fn assert_algo_outcomes_equal(a: &[AlgoOutcome], b: &[AlgoOutcome]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            match (x, y) {
+                (AlgoOutcome::Bfs(p), AlgoOutcome::Bfs(q)) => {
+                    assert_eq!(p.depth, q.depth, "query {i}");
+                    assert_eq!(p.parent, q.parent, "query {i}");
+                }
+                (AlgoOutcome::Sssp(p), AlgoOutcome::Sssp(q)) => {
+                    assert_eq!(p.dist, q.dist, "query {i}");
+                    assert_eq!(p.parent, q.parent, "query {i}");
+                }
+                (AlgoOutcome::Cc(p), AlgoOutcome::Cc(q)) => {
+                    assert_eq!(p.labels, q.labels, "query {i}");
+                }
+                (AlgoOutcome::Pagerank(p), AlgoOutcome::Pagerank(q)) => {
+                    assert_eq!(p.ranks, q.ranks, "query {i} (bit-identical f64s)");
+                }
+                other => panic!("query {i}: outcome kinds diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_algo_batch_is_schedule_invariant_and_reuses_pools() {
+        let rg = resident(0);
+        let queries = [
+            AlgoQuery::Bfs { root: 0 },
+            AlgoQuery::Sssp { root: 1 },
+            AlgoQuery::Cc,
+            AlgoQuery::Pagerank,
+            AlgoQuery::Sssp { root: 2 },
+        ];
+        let narrow = run_algo_batch(&rg, &queries, &BatchOptions::default()).unwrap();
+        assert!(narrow.iter().all(AlgoOutcome::is_complete));
+        let wide = run_algo_batch(
+            &rg,
+            &queries,
+            &BatchOptions { threads: 4, max_concurrency: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_algo_outcomes_equal(&narrow, &wide);
+        // The second SSSP query (and the second batch) recycled states.
+        assert!(rg.algo_states.sssp.stats().recycled >= 1);
+        let st = rg.algo_states.pagerank.stats();
+        assert_eq!(st.idle, st.created, "all program states returned to their pools");
+    }
+
+    #[test]
+    fn algo_batch_rejects_out_of_range_roots_per_slot() {
+        let rg = resident(0);
+        let v = rg.num_vertices() as u32;
+        let out = run_algo_batch(
+            &rg,
+            &[AlgoQuery::Sssp { root: v + 1 }, AlgoQuery::Cc],
+            &BatchOptions::default(),
+        )
+        .unwrap();
+        match &out[0] {
+            AlgoOutcome::Failed { query, error } => {
+                assert_eq!(*query, AlgoQuery::Sssp { root: v + 1 });
+                assert!(error.contains("out of range"), "{error}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert!(out[1].is_complete(), "whole-graph query unaffected");
     }
 }

@@ -1,13 +1,20 @@
-//! Traversal-state pool: recycle [`BfsState`] allocations across queries.
+//! Traversal-state pool: recycle per-query state allocations across
+//! queries.
 //!
-//! A `BfsState` for a scale-N graph is the service's dominant per-query
-//! allocation (depth/parent arrays, per-partition bitmaps, contribution
-//! fragments — tens of bytes per vertex). The pool keeps finished states
-//! and hands them back to the next query; `BfsState::reset` then restores
-//! pristine state in O(touched) when the previous run finished cleanly
-//! (sparse recycle) or O(V) when it did not (poisoned / first use). Either
-//! way the recycled state is bit-identical to a fresh allocation, so
-//! pooling never affects query output — only host wall-clock.
+//! A traversal state for a scale-N graph is the service's dominant
+//! per-query allocation (value arrays, per-partition bitmaps,
+//! contribution fragments — tens of bytes per vertex). The pool keeps
+//! finished states and hands them back to the next query; the state's
+//! own `reset` then restores pristine state in O(touched) when the
+//! previous run finished cleanly (sparse recycle) or O(V) when it did
+//! not (poisoned / first use). Either way the recycled state is
+//! bit-identical to a fresh allocation, so pooling never affects query
+//! output — only host wall-clock.
+//!
+//! [`TypedPool`] is generic over the entry ([`PoolEntry`]); the classic
+//! BFS pool is the [`StatePool`] alias, and each vertex-program
+//! algorithm gets its own typed pool (its `ProgramState<V>` sizes differ
+//! per value type, so they cannot share a free list).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -26,17 +33,47 @@ pub struct PoolStats {
     pub idle: u64,
 }
 
+/// A state type that can live in a [`TypedPool`]: it knows how to check
+/// that it was built for a given partitioning and how to build itself
+/// fresh for one.
+pub trait PoolEntry {
+    fn shape_matches(&self, pg: &PartitionedGraph) -> bool;
+    fn fresh(pg: &PartitionedGraph) -> Self;
+}
+
+impl PoolEntry for BfsState {
+    fn shape_matches(&self, pg: &PartitionedGraph) -> bool {
+        // Inherent method; the trait impl just forwards.
+        BfsState::shape_matches(self, pg)
+    }
+
+    fn fresh(pg: &PartitionedGraph) -> Self {
+        BfsState::new(pg)
+    }
+}
+
 /// A mutex-guarded free list of traversal states for **one** resident
 /// graph (states are shape-bound to their partitioning; the registry owns
-/// one pool per graph).
-#[derive(Default)]
-pub struct StatePool {
-    free: Mutex<Vec<BfsState>>,
+/// one pool per graph and algorithm).
+pub struct TypedPool<S> {
+    free: Mutex<Vec<S>>,
     created: AtomicU64,
     recycled: AtomicU64,
 }
 
-impl StatePool {
+// Manual impl: `derive(Default)` would demand `S: Default`, but an empty
+// free list needs no such bound.
+impl<S> Default for TypedPool<S> {
+    fn default() -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            created: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+}
+
+impl<S: PoolEntry> TypedPool<S> {
     pub fn new() -> Self {
         Self::default()
     }
@@ -45,7 +82,7 @@ impl StatePool {
     /// allocated otherwise. Defensive shape check — a state that does not
     /// match `pg` (should be impossible for a per-graph pool) is dropped
     /// rather than handed out.
-    pub fn acquire(&self, pg: &PartitionedGraph) -> BfsState {
+    pub fn acquire(&self, pg: &PartitionedGraph) -> S {
         let candidate = self.free.lock().expect("state pool poisoned").pop();
         match candidate {
             Some(s) if s.shape_matches(pg) => {
@@ -54,16 +91,16 @@ impl StatePool {
             }
             _ => {
                 self.created.fetch_add(1, Ordering::Relaxed);
-                BfsState::new(pg)
+                S::fresh(pg)
             }
         }
     }
 
     /// Return a state after a query. Works for failed queries too: a state
     /// released mid-run is poisoned and its next `reset` performs the full
-    /// wipe (see `BfsState::finish`), so callers never need to
+    /// wipe (see the entry's `finish`), so callers never need to
     /// special-case the error path.
-    pub fn release(&self, state: BfsState) {
+    pub fn release(&self, state: S) {
         self.free.lock().expect("state pool poisoned").push(state);
     }
 
@@ -76,9 +113,13 @@ impl StatePool {
     }
 }
 
+/// The classic BFS traversal-state pool.
+pub type StatePool = TypedPool<BfsState>;
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::ProgramState;
     use crate::graph::{build_csr, EdgeList};
     use crate::partition::{materialize, HardwareConfig, LayoutOptions};
 
@@ -136,5 +177,27 @@ mod tests {
         assert!(s.visited.iter().all(|b| !b.any()));
         assert!(s.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
         assert!(!s.global_frontier.bits.any() && !s.global_next.any());
+    }
+
+    #[test]
+    fn typed_pools_recycle_program_states() {
+        let pg = pg(64);
+        let pool: TypedPool<ProgramState<u64>> = TypedPool::new();
+        // Poison a state (values + frontier/pending bits, no finish),
+        // release it, and check the recycled state resets pristine.
+        let mut s = pool.acquire(&pg);
+        s.reset(|_| 7u64);
+        s.values[3] = 99;
+        s.touch(3);
+        s.frontiers[0].current.set(1);
+        s.global_frontier.set(1);
+        s.pending.set(5);
+        pool.release(s);
+        let mut s = pool.acquire(&pg);
+        assert_eq!(pool.stats().recycled, 1);
+        s.reset(|_| 7u64);
+        assert!(s.values.iter().all(|&v| v == 7));
+        assert!(s.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
+        assert!(!s.global_frontier.any() && !s.global_next.any() && !s.pending.any());
     }
 }

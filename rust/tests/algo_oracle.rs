@@ -1,0 +1,375 @@
+//! Differential oracle harness for the vertex-program algorithms
+//! (DESIGN.md Section 13): every algorithm is checked against an
+//! *independent* sequential reference — Dijkstra for SSSP, union-find
+//! for CC, dense power iteration for PageRank — over randomized RMAT,
+//! Erdős–Rényi and arbitrary edge-list graphs, at CPU-only and hybrid
+//! placements, across a thread ladder.
+//!
+//! SSSP distances/parents and CC labels must match their oracles
+//! *exactly*; PageRank ranks are epsilon-bounded against the dense
+//! reference (the engine's partitioned accumulation order differs from
+//! the oracle's, so f64 sums drift within rounding) but must be
+//! **bit-identical** across thread counts and service schedules — the
+//! per-algorithm determinism contract.
+//!
+//! The CI matrix exports `TOTEM_DO_TEST_THREADS`; values above the
+//! default ladder join it.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use totem_do::algo::sssp::DIST_INF;
+use totem_do::algo::{run_cc, run_pagerank, run_sssp, WeightFn};
+use totem_do::engine::ExecutionMode;
+use totem_do::graph::generator::{erdos_renyi, kronecker, GeneratorConfig};
+use totem_do::graph::{build_csr, Csr};
+use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
+use totem_do::service::{run_algo_batch, AlgoOutcome, AlgoQuery, BatchOptions, ResidentGraph};
+use totem_do::util::proptest_lite::{gen, run_cases};
+use totem_do::util::Xoshiro256;
+
+fn thread_ladder() -> Vec<usize> {
+    let mut ts = vec![1, 2, 4];
+    if let Some(t) =
+        std::env::var("TOTEM_DO_TEST_THREADS").ok().and_then(|s| s.parse::<usize>().ok())
+    {
+        if !ts.contains(&t) {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+/// The two acceptance placements: CPU-only (2S0G) and hybrid (2S2G).
+fn placements() -> [HardwareConfig; 2] {
+    [
+        HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 },
+        HardwareConfig { cpu_sockets: 2, gpus: 2, gpu_mem_bytes: 1 << 22, gpu_max_degree: 32 },
+    ]
+}
+
+/// A random graph from one of three families: Graph500 RMAT, uniform
+/// Erdős–Rényi, or an arbitrary (possibly degenerate) edge list.
+fn random_graph(rng: &mut Xoshiro256) -> Csr {
+    let seed = rng.next_u64();
+    let el = match rng.next_below(3) {
+        0 => kronecker(&GeneratorConfig::graph500(gen::int_in(rng, 5, 7) as u32, seed)),
+        1 => erdos_renyi(gen::int_in(rng, 16, 120), gen::int_in(rng, 0, 400), seed),
+        _ => gen::edge_list(rng, 120, 400),
+    };
+    build_csr(&el)
+}
+
+fn random_root(rng: &mut Xoshiro256, g: &Csr) -> u32 {
+    rng.next_below(g.num_vertices as u64) as u32
+}
+
+// ---------------------------------------------------------------- SSSP
+
+/// Textbook binary-heap Dijkstra — shares nothing with the engine but
+/// the weight function.
+fn dijkstra(g: &Csr, root: u32, w: &WeightFn) -> Vec<u64> {
+    let mut dist = vec![DIST_INF; g.num_vertices];
+    dist[root as usize] = 0;
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0u64, root)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        for &v in g.neighbours(u) {
+            let nd = d.saturating_add(w.weight(u, v));
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+/// Structural parent-tree checks that hold for *any* valid tight
+/// shortest-path tree (the parent choice itself is pinned separately by
+/// the cross-thread bit-identity assertion).
+fn check_sssp_parents(g: &Csr, root: u32, dist: &[u64], parent: &[i64], w: &WeightFn) {
+    for v in 0..g.num_vertices {
+        if dist[v] == DIST_INF {
+            assert_eq!(parent[v], -1, "unreached vertex {v} has a parent");
+        } else if v == root as usize {
+            assert_eq!(parent[v], root as i64, "root must parent itself");
+        } else {
+            let p = parent[v];
+            assert!((0..g.num_vertices as i64).contains(&p), "vertex {v}: parent {p}");
+            let p = p as u32;
+            assert!(
+                g.neighbours(v as u32).iter().any(|&u| u == p),
+                "vertex {v}: parent {p} not adjacent"
+            );
+            assert_eq!(
+                dist[v],
+                dist[p as usize].saturating_add(w.weight(p, v as u32)),
+                "vertex {v}: distance not tight via parent {p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sssp_matches_dijkstra_and_is_thread_invariant() {
+    run_cases(30, 0x55E9, |rng| {
+        let g = random_graph(rng);
+        let root = random_root(rng, &g);
+        // Draw weights and delta ONCE, before any ladder loop.
+        let w = if rng.next_below(4) == 0 {
+            WeightFn::Unit
+        } else {
+            WeightFn::Hashed { seed: rng.next_u64(), max_weight: 1 + rng.next_below(15) }
+        };
+        let delta = [1u64, 4, 16][rng.next_below(3) as usize];
+        let oracle = dijkstra(&g, root, &w);
+        for hw in placements() {
+            let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+            let mut base: Option<(Vec<u64>, Vec<i64>, u32)> = None;
+            for threads in thread_ladder() {
+                let run =
+                    run_sssp(&pg, root, delta, w.clone(), ExecutionMode::from_threads(threads))
+                        .unwrap();
+                assert_eq!(run.dist, oracle, "{} threads={threads}", hw.label());
+                check_sssp_parents(&g, root, &run.dist, &run.parent, &w);
+                match &base {
+                    None => base = Some((run.dist, run.parent, run.rounds)),
+                    Some((d, p, r)) => {
+                        assert_eq!(&run.dist, d, "dist drifted at threads={threads}");
+                        assert_eq!(&run.parent, p, "parents drifted at threads={threads}");
+                        assert_eq!(run.rounds, *r, "schedule drifted at threads={threads}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------------ CC
+
+/// Union-find oracle: the label of `v` is the minimum vertex id in its
+/// component.
+fn union_find_labels(g: &Csr) -> Vec<u32> {
+    let n = g.num_vertices;
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for u in 0..n as u32 {
+        for &v in g.neighbours(u) {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru != rv {
+                // Union by id: smaller root wins, giving min labels
+                // directly after path compression.
+                let (lo, hi) = (ru.min(rv), ru.max(rv));
+                parent[hi as usize] = lo;
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+#[test]
+fn cc_matches_union_find() {
+    run_cases(30, 0xCC01, |rng| {
+        let g = random_graph(rng);
+        let oracle = union_find_labels(&g);
+        for hw in placements() {
+            let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+            for threads in thread_ladder() {
+                let run = run_cc(&pg, ExecutionMode::from_threads(threads)).unwrap();
+                assert_eq!(run.labels, oracle, "{} threads={threads}", hw.label());
+                assert_eq!(
+                    run.components as usize,
+                    oracle.iter().enumerate().filter(|&(v, &l)| l == v as u32).count()
+                );
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------ PageRank
+
+/// Dense power iteration over the undirected CSR — same update rule,
+/// naive ascending-vertex accumulation order.
+fn power_iteration(g: &Csr, damping: f64, iters: u32) -> Vec<f64> {
+    let n = g.num_vertices.max(1) as f64;
+    let mut rank = vec![1.0 / n; g.num_vertices];
+    let teleport = (1.0 - damping) / n;
+    for _ in 0..iters {
+        let mut acc = vec![0.0f64; g.num_vertices];
+        for u in 0..g.num_vertices {
+            let deg = g.degree(u as u32);
+            if deg > 0 {
+                let share = rank[u] / deg as f64;
+                for &v in g.neighbours(u as u32) {
+                    acc[v as usize] += share;
+                }
+            }
+        }
+        for (r, a) in rank.iter_mut().zip(&acc) {
+            *r = teleport + damping * a;
+        }
+    }
+    rank
+}
+
+#[test]
+fn pagerank_matches_power_iteration_within_epsilon() {
+    const ITERS: u32 = 40;
+    run_cases(20, 0x9A6E, |rng| {
+        let g = random_graph(rng);
+        // tol = 0.0 on both sides: the engine may still stop early only
+        // at an exact fixpoint, where further iterations are no-ops.
+        let oracle = power_iteration(&g, 0.85, ITERS);
+        for hw in placements() {
+            let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+            let mut base: Option<Vec<f64>> = None;
+            for threads in thread_ladder() {
+                let run =
+                    run_pagerank(&pg, 0.85, ITERS, 0.0, ExecutionMode::from_threads(threads))
+                        .unwrap();
+                for (v, (&got, &want)) in run.ranks.iter().zip(&oracle).enumerate() {
+                    assert!(
+                        (got - want).abs() <= 1e-9,
+                        "vertex {v}: rank {got} vs oracle {want} ({} threads={threads})",
+                        hw.label()
+                    );
+                }
+                match &base {
+                    None => base = Some(run.ranks),
+                    // Bit-identical f64s, not epsilon-close.
+                    Some(b) => assert_eq!(&run.ranks, b, "ranks drifted at threads={threads}"),
+                }
+            }
+        }
+    });
+}
+
+// ----------------------------------------------------------- service
+
+fn assert_outcomes_equal(a: &[AlgoOutcome], b: &[AlgoOutcome], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (AlgoOutcome::Bfs(p), AlgoOutcome::Bfs(q)) => {
+                assert_eq!(p.depth, q.depth, "{what}: query {i} depth");
+                assert_eq!(p.parent, q.parent, "{what}: query {i} parent");
+            }
+            (AlgoOutcome::Sssp(p), AlgoOutcome::Sssp(q)) => {
+                assert_eq!(p.dist, q.dist, "{what}: query {i} dist");
+                assert_eq!(p.parent, q.parent, "{what}: query {i} parent");
+                assert_eq!(p.rounds, q.rounds, "{what}: query {i} rounds");
+            }
+            (AlgoOutcome::Cc(p), AlgoOutcome::Cc(q)) => {
+                assert_eq!(p.labels, q.labels, "{what}: query {i} labels");
+            }
+            (AlgoOutcome::Pagerank(p), AlgoOutcome::Pagerank(q)) => {
+                assert_eq!(p.ranks, q.ranks, "{what}: query {i} ranks (bit-identical)");
+            }
+            other => panic!("{what}: query {i} outcome kinds diverged: {other:?}"),
+        }
+    }
+}
+
+fn mixed_queries(g: &Csr) -> Vec<AlgoQuery> {
+    let roots = totem_do::metrics::sample_roots(g.num_vertices, |v| g.degree(v), 4, 7);
+    vec![
+        AlgoQuery::Bfs { root: roots[0] },
+        AlgoQuery::Sssp { root: roots[1 % roots.len()] },
+        AlgoQuery::Cc,
+        AlgoQuery::Pagerank,
+        AlgoQuery::Sssp { root: roots[2 % roots.len()] },
+        AlgoQuery::Bfs { root: roots[3 % roots.len()] },
+        AlgoQuery::Pagerank,
+        AlgoQuery::Cc,
+    ]
+}
+
+#[test]
+fn service_batches_are_bit_identical_across_schedules() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 11)));
+    for hw in placements() {
+        let rg = ResidentGraph::build("oracle", g.clone(), &hw, &LayoutOptions::paper(), 1);
+        let queries = mixed_queries(&rg.csr);
+        let baseline = run_algo_batch(
+            &rg,
+            &queries,
+            &BatchOptions { threads: 1, max_concurrency: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(baseline.iter().all(AlgoOutcome::is_complete));
+        for threads in thread_ladder() {
+            for batch in [1usize, 4] {
+                let got = run_algo_batch(
+                    &rg,
+                    &queries,
+                    &BatchOptions {
+                        threads,
+                        max_concurrency: batch,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert_outcomes_equal(
+                    &baseline,
+                    &got,
+                    &format!("{} threads={threads} batch={batch}", hw.label()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_states_self_heal_per_algorithm() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(7, 13)));
+    let hw = placements()[0].clone();
+    let rg = ResidentGraph::build("heal", g, &hw, &LayoutOptions::paper(), 1);
+    let queries = mixed_queries(&rg.csr);
+    let opts = BatchOptions::default();
+    let baseline = run_algo_batch(&rg, &queries, &opts).unwrap();
+    assert!(baseline.iter().all(AlgoOutcome::is_complete));
+
+    // Poison every algorithm's pool: scribble on values and frontier
+    // bits, release without finishing. The next acquire+reset must heal.
+    {
+        let mut s = rg.algo_states.sssp.acquire(&rg.pg);
+        s.values[0] = totem_do::algo::SsspValue { dist: 123, parent: 9 };
+        s.pending.set(1);
+        s.frontiers[0].current.set(2);
+        s.global_frontier.set(2);
+        rg.algo_states.sssp.release(s);
+    }
+    {
+        let mut s = rg.algo_states.cc.acquire(&rg.pg);
+        s.values[0] = 77;
+        s.frontiers[0].next.set(3);
+        s.global_next.set(3);
+        rg.algo_states.cc.release(s);
+    }
+    {
+        let mut s = rg.algo_states.pagerank.acquire(&rg.pg);
+        s.values[0] = totem_do::algo::PrValue { rank: 42.0, acc: -1.0 };
+        s.global_frontier.set(4);
+        rg.algo_states.pagerank.release(s);
+    }
+
+    let healed = run_algo_batch(&rg, &queries, &opts).unwrap();
+    assert_outcomes_equal(&baseline, &healed, "after poisoning");
+    for (name, st) in [
+        ("sssp", rg.algo_states.sssp.stats()),
+        ("cc", rg.algo_states.cc.stats()),
+        ("pagerank", rg.algo_states.pagerank.stats()),
+    ] {
+        assert!(st.recycled >= 1, "{name} pool never recycled: {st:?}");
+    }
+}

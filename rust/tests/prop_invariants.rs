@@ -1,9 +1,10 @@
 //! Property-based invariants over random graphs, partitionings and roots
 //! (in-repo property substrate; proptest is not vendored offline).
 
+use totem_do::algo::{run_bfs_program, run_cc, run_pagerank, run_sssp, WeightFn};
 use totem_do::bfs::{validate_graph500, HybridConfig, HybridRunner, PolicyKind};
 use totem_do::engine::state::{PARENT_REMOTE, PARENT_UNSET};
-use totem_do::engine::SimAccelerator;
+use totem_do::engine::{ExecutionMode, SimAccelerator};
 use totem_do::graph::generator::{erdos_renyi, kronecker, GeneratorConfig};
 use totem_do::graph::{build_csr, Csr};
 use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions};
@@ -191,6 +192,119 @@ fn prop_border_renumbering_roundtrips_as_inverse_bijection() {
                     );
                 }
             }
+        }
+    });
+}
+
+/// BFS-regression pin for the vertex-program refactor: on CPU-only
+/// placements the generic runner must reproduce the pre-refactor
+/// `HybridRunner` *exactly* — parents, levels, and the per-level
+/// direction schedule — at every thread count. (pe_work/comm models are
+/// intentionally not pinned: the frameworks price kernels differently.)
+#[test]
+fn prop_vertex_program_bfs_reproduces_hybrid_cpu_exactly() {
+    run_cases(60, 0xBF60, |rng| {
+        let el = gen::edge_list(rng, 120, 500);
+        let g = build_csr(&el);
+        let cfg_hw = HardwareConfig {
+            cpu_sockets: gen::int_in(rng, 1, 3),
+            gpus: 0,
+            gpu_mem_bytes: 0,
+            gpu_max_degree: 32,
+        };
+        let (pg, _) = specialized_partition(&g, &cfg_hw, &LayoutOptions::paper());
+        let policy = if rng.next_below(2) == 0 {
+            PolicyKind::direction_optimized()
+        } else {
+            PolicyKind::AlwaysTopDown
+        };
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        let accel: Option<&mut SimAccelerator> = None;
+        let mut runner =
+            HybridRunner::new(&pg, HybridConfig { policy, ..Default::default() }, accel)
+                .unwrap();
+        let hybrid = runner.run(root).unwrap();
+        for threads in [1usize, 4] {
+            let prog =
+                run_bfs_program(&pg, root, policy, ExecutionMode::from_threads(threads))
+                    .unwrap();
+            assert_eq!(prog.depth, hybrid.depth, "threads={threads}: depths diverge");
+            assert_eq!(prog.parent, hybrid.parent, "threads={threads}: parents diverge");
+            assert_eq!(prog.levels.len(), hybrid.levels.len(), "level-schedule length");
+            for (pl, hl) in prog.levels.iter().zip(&hybrid.levels) {
+                assert_eq!(pl.direction, hl.direction, "level {}: direction", hl.level);
+                assert_eq!(pl.frontier_size, hl.frontier_size, "level {}", hl.level);
+                assert_eq!(pl.frontier_degree_sum, hl.frontier_degree_sum, "level {}", hl.level);
+            }
+        }
+    });
+}
+
+/// On GPU placements the accelerator kernels visit neighbours in SELL
+/// order, so parent *choices* may legitimately differ from the generic
+/// runner's queue order — but depths, the direction schedule, and
+/// Graph500 validity must agree.
+#[test]
+fn prop_vertex_program_bfs_matches_hybrid_on_gpu_placements() {
+    run_cases(40, 0xBF61, |rng| {
+        let el = gen::edge_list(rng, 120, 500);
+        let g = build_csr(&el);
+        let cfg_hw = HardwareConfig {
+            cpu_sockets: gen::int_in(rng, 1, 2),
+            gpus: gen::int_in(rng, 1, 2),
+            gpu_mem_bytes: 1 << gen::int_in(rng, 14, 22),
+            gpu_max_degree: [4usize, 16, 32][gen::int_in(rng, 0, 2)],
+        };
+        let (pg, _) = specialized_partition(&g, &cfg_hw, &LayoutOptions::paper());
+        let policy = if rng.next_below(2) == 0 {
+            PolicyKind::direction_optimized()
+        } else {
+            PolicyKind::AlwaysTopDown
+        };
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
+        let mut runner =
+            HybridRunner::new(&pg, HybridConfig { policy, ..Default::default() }, Some(&mut sim))
+                .unwrap();
+        let hybrid = runner.run(root).unwrap();
+        let prog = run_bfs_program(&pg, root, policy, ExecutionMode::Sequential).unwrap();
+        assert_eq!(prog.depth, hybrid.depth, "depths diverge on GPU placement");
+        assert_eq!(prog.levels.len(), hybrid.levels.len(), "level-schedule length");
+        for (pl, hl) in prog.levels.iter().zip(&hybrid.levels) {
+            assert_eq!(pl.direction, hl.direction, "level {}: direction", hl.level);
+            assert_eq!(pl.frontier_size, hl.frontier_size, "level {}", hl.level);
+        }
+        validate_graph500(&g, root, &prog.parent, &prog.depth).unwrap();
+    });
+}
+
+/// Per-algorithm determinism thread-ladder: SSSP distances/parents/
+/// round schedules, CC labels, and PageRank ranks (bit-identical f64s)
+/// must not depend on the kernel thread count.
+#[test]
+fn prop_algo_outputs_are_thread_invariant() {
+    run_cases(30, 0xA160, |rng| {
+        let el = gen::edge_list(rng, 100, 400);
+        let g = build_csr(&el);
+        let (pg, _) = specialized_partition(&g, &hw(rng), &LayoutOptions::paper());
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        // Draw per-case knobs once, before the ladder.
+        let delta = 1 + rng.next_below(8);
+        let w = WeightFn::Hashed { seed: rng.next_u64(), max_weight: 1 + rng.next_below(10) };
+        let s0 = run_sssp(&pg, root, delta, w.clone(), ExecutionMode::Sequential).unwrap();
+        let c0 = run_cc(&pg, ExecutionMode::Sequential).unwrap();
+        let p0 = run_pagerank(&pg, 0.85, 20, 0.0, ExecutionMode::Sequential).unwrap();
+        for threads in [2usize, 4] {
+            let exec = ExecutionMode::from_threads(threads);
+            let s = run_sssp(&pg, root, delta, w.clone(), exec).unwrap();
+            assert_eq!(s.dist, s0.dist, "threads={threads}");
+            assert_eq!(s.parent, s0.parent, "threads={threads}");
+            assert_eq!(s.rounds, s0.rounds, "threads={threads}");
+            let c = run_cc(&pg, exec).unwrap();
+            assert_eq!(c.labels, c0.labels, "threads={threads}");
+            let p = run_pagerank(&pg, 0.85, 20, 0.0, exec).unwrap();
+            assert_eq!(p.ranks, p0.ranks, "threads={threads} (bit-identical f64s)");
+            assert_eq!(p.iterations, p0.iterations, "threads={threads}");
         }
     });
 }
