@@ -13,6 +13,11 @@
 //! requires (the arithmetic mean overstates a campaign dominated by a few
 //! fast searches and is deliberately not reported).
 
+// Still on the deprecated BFS-only `run_batch` wrapper for one release —
+// this example is the shim's named consumer; it migrates to
+// `run_requests` when the shim is removed.
+#![allow(deprecated)]
+
 use anyhow::{anyhow, Result};
 
 use totem_do::bench_support as bs;

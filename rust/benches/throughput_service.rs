@@ -14,7 +14,10 @@
 use totem_do::bench_support as bs;
 use totem_do::metrics;
 use totem_do::runtime::DeviceModel;
-use totem_do::service::{run_batch, BatchOptions, GraphRegistry, ResidentGraph, SchedulePolicy};
+use totem_do::service::{
+    run_requests, AlgoOutput, AlgoQuery, BatchOptions, GraphRegistry, QueryRequest, ResidentGraph,
+    SchedulePolicy,
+};
 use totem_do::util::tables::{fmt_teps, fmt_time, Table};
 
 fn main() {
@@ -39,6 +42,8 @@ fn main() {
         ))
         .expect("fresh registry");
     let roots = bs::roots_for(&rg.csr, nqueries, 9);
+    let requests: Vec<QueryRequest> =
+        roots.iter().map(|&r| QueryRequest::new(AlgoQuery::Bfs { root: r })).collect();
     let device = DeviceModel::default();
 
     let mut t = Table::new(vec![
@@ -70,15 +75,15 @@ fn main() {
     for (label, policy, k) in configs {
         let opts = BatchOptions { threads, policy, max_concurrency: k, ..Default::default() };
         // Warm the pool and the page cache once, unmeasured.
-        run_batch(&rg, &roots[..roots.len().min(2)], &opts).expect("warmup");
+        run_requests(&rg, &requests[..requests.len().min(2)], &opts);
         let t0 = std::time::Instant::now();
-        let outcomes = run_batch(&rg, &roots, &opts).expect("batch");
+        let responses = run_requests(&rg, &requests, &opts);
         let wall = t0.elapsed().as_secs_f64();
 
         let mut latencies = Vec::new();
         let mut teps = Vec::new();
-        for o in &outcomes {
-            let run = o.run().expect("sampled roots are valid");
+        for r in &responses {
+            let Some(AlgoOutput::Bfs(run)) = r.output() else { panic!("sampled roots are valid") };
             let lat = device.query_latency(run, &rg.pg);
             latencies.push(lat);
             if run.traversed_edges() > 0 {
@@ -86,7 +91,7 @@ fn main() {
             }
         }
         let lat = metrics::latency_summary(&latencies);
-        let qps = outcomes.len() as f64 / wall.max(1e-12);
+        let qps = responses.len() as f64 / wall.max(1e-12);
         if k == 1 {
             serial_qps = qps;
         }
@@ -105,7 +110,7 @@ fn main() {
             ("schedule", label.to_string()),
             ("batch", k.to_string()),
             ("threads", threads.to_string()),
-            ("queries", outcomes.len().to_string()),
+            ("queries", responses.len().to_string()),
             ("qps", format!("{qps:.3}")),
             ("latency_p50_s", format!("{:.3e}", lat.p50)),
             ("latency_p99_s", format!("{:.3e}", lat.p99)),

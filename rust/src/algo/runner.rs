@@ -29,12 +29,12 @@
 
 use std::ops::Range;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::bfs::direction::{CoordinatorView, DirectionPolicy};
 use crate::engine::accel::program_step_pcie;
 use crate::engine::comm::CommBuffers;
-use crate::engine::{run_steps, Direction, ExecutionMode, LevelStats, PeWork};
+use crate::engine::{run_steps, CancelToken, Direction, ExecutionMode, LevelStats, PeWork};
 use crate::partition::PartitionedGraph;
 use crate::util::pool;
 
@@ -81,6 +81,9 @@ pub struct ProgramRunner<'g, P: VertexProgram> {
     comm: CommBuffers,
     /// Per-partition materialized frontier queues (reused across rounds).
     queues: Vec<Vec<u32>>,
+    /// Cooperative cancellation, checked once per round at the BSP
+    /// barrier. Defaults to the free never-fires token.
+    cancel: CancelToken,
 }
 
 impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
@@ -101,7 +104,23 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
         let state =
             if state.shape_matches(pg) { state } else { ProgramState::new(pg) };
         let np = pg.parts.len();
-        Self { pg, program, exec, state, comm: CommBuffers::new(pg), queues: vec![Vec::new(); np] }
+        Self {
+            pg,
+            program,
+            exec,
+            state,
+            comm: CommBuffers::new(pg),
+            queues: vec![Vec::new(); np],
+            cancel: CancelToken::default(),
+        }
+    }
+
+    /// Arm cooperative cancellation (the serving tier's deadline
+    /// enforcement point). Checked at every round barrier; a cancelled
+    /// run drains its frontiers and finishes the state cleanly, so the
+    /// pooled release after the error still recycles in O(touched).
+    pub fn set_cancel_token(&mut self, cancel: CancelToken) {
+        self.cancel = cancel;
     }
 
     /// Recover the state for pooling (poisoned states self-heal on their
@@ -180,6 +199,19 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
         let round_limit = (v_total as u64) * 64 + 64;
 
         loop {
+            // ---- cancellation checkpoint (round barrier) ----
+            // Mirrors the BFS driver: drain live frontier bits and finish
+            // the state so the pooled release after this error is
+            // recyclable, not poisoned.
+            if self.cancel.is_cancelled() {
+                self.state.drain_frontiers();
+                self.state.finish();
+                return Err(anyhow!(
+                    "{} cancelled at superstep barrier (round {round})",
+                    self.program.name()
+                ));
+            }
+
             if bucketed && !self.select_bucket_frontier() {
                 break;
             }

@@ -50,7 +50,8 @@ use super::top_down::cpu_top_down;
 use super::BfsRun;
 use crate::engine::comm::{CommBuffers, CommMode};
 use crate::engine::{
-    parallel, Accelerator, BfsState, ChunkScratch, Direction, ExecutionMode, LevelStats, PeWork,
+    parallel, Accelerator, BfsState, CancelToken, ChunkScratch, Direction, ExecutionMode,
+    LevelStats, PeWork,
 };
 use crate::partition::PartitionedGraph;
 use crate::util::{pool, Bitmap};
@@ -118,6 +119,9 @@ pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
     incoming: Bitmap,
     gpu_frontier: Vec<i32>,
     gpu_merge: Vec<u32>,
+    /// Cooperative cancellation, checked once per superstep at the BSP
+    /// barrier. Defaults to the free never-fires token.
+    cancel: CancelToken,
 }
 
 impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
@@ -177,8 +181,18 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             incoming: Bitmap::new(pg.num_vertices),
             gpu_frontier: Vec::new(),
             gpu_merge: Vec::new(),
+            cancel: CancelToken::default(),
             pg,
         })
+    }
+
+    /// Arm cooperative cancellation for subsequent runs: the serving
+    /// tier's deadline enforcement point. The token is checked at every
+    /// superstep barrier; on cancellation the run drains its frontiers
+    /// and finishes the state cleanly, so a pooled release after the
+    /// error still recycles in O(touched).
+    pub fn set_cancel_token(&mut self, cancel: CancelToken) {
+        self.cancel = cancel;
     }
 
     /// Hand the traversal state back (pool recycling). A state whose last
@@ -232,6 +246,17 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         let mut prev_frontier = 1u64;
 
         loop {
+            // ---- cancellation checkpoint (superstep barrier) ----
+            // Every vertex-state invariant holds here, so a cancelled run
+            // can drain its live frontier bits (O(frontier)) and finish
+            // the state cleanly: the pooled release after this error is
+            // recyclable, not poisoned.
+            if self.cancel.is_cancelled() {
+                self.state.drain_frontiers();
+                self.state.finish();
+                return Err(anyhow!("BFS cancelled at superstep barrier (level {level})"));
+            }
+
             // ---- frontier census (drives Fig 1 and termination) ----
             // Read-only per-partition sums; identical in either mode.
             let mut frontier_size = 0u64;

@@ -19,8 +19,9 @@ use crate::partition::{
 };
 use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
 use crate::service::{
-    run_algo_batch, run_batch, AlgoOutcome, AlgoQuery, BatchOptions, QueryOutcome, ResidentGraph,
-    SchedulePolicy,
+    run_open_loop, run_requests, serve_session, AlgoOptions, AlgoOutput, AlgoQuery, ArrivalProcess,
+    BatchOptions, OpenLoopConfig, QueryRequest, QueryResponse, ResidentGraph, SchedulePolicy,
+    ServeOptions,
 };
 use crate::util::tables::{fmt_teps, fmt_time, Table};
 
@@ -442,7 +443,7 @@ pub fn cmd_sssp(args: &Args) -> Result<()> {
         "--root {root} out of range (graph has {} vertices)",
         g.num_vertices
     );
-    let delta = args.get_parse("delta", 8u64)?;
+    let delta = algo_options(args, "sssp")?.sssp_delta();
     let w = weights(args)?;
     println!(
         "sssp graph={name} V={} E={} config={} root={root} delta={delta}",
@@ -510,9 +511,7 @@ pub fn cmd_pagerank(args: &Args) -> Result<()> {
     let hw = hardware(args)?;
     let pg = partition_graph(args, &g, &hw)?;
     let exec = ExecutionMode::from_threads(threads(args)?);
-    let damping = args.get_parse("damping", 0.85f64)?;
-    let iters = args.get_parse("pr-iters", 50u32)?;
-    let tol = args.get_parse("pr-tol", 1e-9f64)?;
+    let (damping, iters, tol) = algo_options(args, "pagerank")?.pagerank_params();
     println!(
         "pagerank graph={name} V={} E={} config={} damping={damping} max_iters={iters} tol={tol:e}",
         g.num_vertices,
@@ -566,6 +565,19 @@ fn parse_root_tokens(line: &str, out: &mut Vec<u32>) -> Result<()> {
     Ok(())
 }
 
+/// Per-token root parsing for the interactive `serve` loop: one result
+/// per token, so a typo in the middle of a line costs only that query —
+/// the valid roots around it are still served (roots *files* stay
+/// strict: a bad file is a configuration error, not an interactive slip).
+fn parse_roots_isolated(line: &str) -> Vec<std::result::Result<u32, String>> {
+    line.split('#')
+        .next()
+        .unwrap_or("")
+        .split_whitespace()
+        .map(|tok| tok.parse::<u32>().map_err(|_| format!("bad root {tok:?}")))
+        .collect()
+}
+
 /// Scheduler knobs from the common service flags.
 fn batch_options(args: &Args) -> Result<BatchOptions> {
     let policy = match args.get("sched").unwrap_or("throughput") {
@@ -579,9 +591,39 @@ fn batch_options(args: &Args) -> Result<BatchOptions> {
         max_concurrency: args.get_parse("batch", 8usize)?,
         bfs_policy: self::policy(args)?,
         comm_mode: CommMode::Batched,
-        sssp_delta: args.get_parse("delta", 8u64)?,
-        pr_iters: args.get_parse("pr-iters", 50u32)?,
-        pr_tol: args.get_parse("pr-tol", 1e-9f64)?,
+    })
+}
+
+/// Per-query algorithm knobs from the CLI flags — the one constructor
+/// behind `sssp`, `pagerank`, `batch --algo` and `serve`: every command
+/// resolves `--delta`/`--damping`/`--pr-iters`/`--pr-tol` through here
+/// into a typed [`AlgoOptions`].
+fn algo_options(args: &Args, algo: &str) -> Result<AlgoOptions> {
+    Ok(match algo {
+        "bfs" => AlgoOptions::Bfs,
+        "sssp" => AlgoOptions::Sssp { delta: args.get_parse("delta", 8u64)? },
+        "cc" => AlgoOptions::Cc,
+        "pagerank" | "pr" => AlgoOptions::Pagerank {
+            damping: args.get_parse("damping", 0.85f64)?,
+            iters: args.get_parse("pr-iters", 50u32)?,
+            tol: args.get_parse("pr-tol", 1e-9f64)?,
+        },
+        other => bail!("unknown --algo {other:?} (expected bfs|sssp|cc|pagerank)"),
+    })
+}
+
+/// Serving-session knobs layered over [`batch_options`].
+fn serve_options(args: &Args) -> Result<ServeOptions> {
+    let default_deadline = if args.get("deadline-ms").is_some() {
+        Some(std::time::Duration::from_millis(args.get_parse("deadline-ms", 0u64)?))
+    } else {
+        None
+    };
+    Ok(ServeOptions {
+        batch: batch_options(args)?,
+        queue_depth: args.get_parse("queue-depth", 64usize)?,
+        cache_capacity: args.get_parse("cache-cap", 64usize)?,
+        default_deadline,
     })
 }
 
@@ -614,7 +656,7 @@ fn service_roots(args: &Args, rg: &ResidentGraph) -> Result<Vec<u32>> {
 /// afterwards).
 fn report_batch(
     rg: &ResidentGraph,
-    outcomes: &[QueryOutcome],
+    responses: &[QueryResponse],
     wall_seconds: f64,
     validate: bool,
     verbose: bool,
@@ -626,9 +668,9 @@ fn report_batch(
     let mut failed = 0usize;
     let mut comm_total = CommStats::default();
     let mut comm_runs = 0usize;
-    for (i, outcome) in outcomes.iter().enumerate() {
-        match outcome {
-            QueryOutcome::Complete(run) => {
+    for (i, resp) in responses.iter().enumerate() {
+        match resp.output() {
+            Some(AlgoOutput::Bfs(run)) => {
                 if validate {
                     if let Err(e) = validate_graph500(&rg.csr, run.root, &run.parent, &run.depth)
                     {
@@ -660,9 +702,11 @@ fn report_batch(
                     );
                 }
             }
-            QueryOutcome::Failed { root, error } => {
+            _ => {
                 failed += 1;
-                println!("  query {i:>4} root {root:<10} FAILED: {error}");
+                let root = resp.request.algo.root().unwrap_or(0);
+                let error = resp.error.as_deref().unwrap_or("unexpected output shape");
+                println!("  query {i:>4} root {root:<10} {:?}: {error}", resp.status);
             }
         }
     }
@@ -720,12 +764,14 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
              SimAccelerator device image"
         );
     }
+    let requests: Vec<QueryRequest> =
+        roots.iter().map(|&r| QueryRequest::new(AlgoQuery::Bfs { root: r })).collect();
     let t0 = std::time::Instant::now();
-    let outcomes = run_batch(&rg, &roots, &opts)?;
+    let responses = run_requests(&rg, &requests, &opts);
     let wall = t0.elapsed().as_secs_f64();
     let (_ok, failed) = report_batch(
         &rg,
-        &outcomes,
+        &responses,
         wall,
         args.has("validate"),
         args.has("verbose"),
@@ -751,6 +797,9 @@ fn cmd_batch_algo(
         "pagerank" | "pr" => roots.iter().map(|_| AlgoQuery::Pagerank).collect(),
         other => bail!("unknown --algo {other:?} (expected bfs|sssp|cc|pagerank)"),
     };
+    let options = algo_options(args, algo)?;
+    let requests: Vec<QueryRequest> =
+        queries.iter().map(|&q| QueryRequest::new(q).with_options(options)).collect();
     println!(
         "service graph={} V={} E={} config={} algo={algo} sched={:?} batch={} threads={} queries={}",
         rg.name,
@@ -763,25 +812,26 @@ fn cmd_batch_algo(
         queries.len()
     );
     let t0 = std::time::Instant::now();
-    let outcomes = run_algo_batch(rg, &queries, opts)?;
+    let responses = run_requests(rg, &requests, opts);
     let wall = t0.elapsed().as_secs_f64();
     let mut failed = 0usize;
-    for (i, outcome) in outcomes.iter().enumerate() {
-        match outcome {
-            AlgoOutcome::Failed { query, error } => {
+    for (i, resp) in responses.iter().enumerate() {
+        match resp.output() {
+            None => {
                 failed += 1;
-                println!("  query {i:>4} {query:?} FAILED: {error}");
+                let error = resp.error.as_deref().unwrap_or("unknown");
+                println!("  query {i:>4} {:?} {:?}: {error}", resp.request.algo, resp.status);
             }
-            _ if args.has("verbose") => match outcome {
-                AlgoOutcome::Sssp(run) => println!(
+            Some(out) if args.has("verbose") => match out {
+                AlgoOutput::Sssp(run) => println!(
                     "  query {i:>4} sssp root {:<10} reached {:>9} rounds {}",
                     run.root, run.reached, run.rounds
                 ),
-                AlgoOutcome::Cc(run) => println!(
+                AlgoOutput::Cc(run) => println!(
                     "  query {i:>4} cc   components {:>9} rounds {}",
                     run.components, run.rounds
                 ),
-                AlgoOutcome::Pagerank(run) => println!(
+                AlgoOutput::Pagerank(run) => println!(
                     "  query {i:>4} pr   iterations {:>9} delta {:.3e}",
                     run.iterations, run.last_delta
                 ),
@@ -790,7 +840,7 @@ fn cmd_batch_algo(
             _ => {}
         }
     }
-    let ok = outcomes.len() - failed;
+    let ok = responses.len() - failed;
     println!(
         "{ok} ok / {failed} failed in {} ({:.1} queries/s)",
         fmt_time(wall),
@@ -813,25 +863,144 @@ fn cmd_batch_algo(
     Ok(())
 }
 
-/// `totem-do serve` — the resident engine as an interactive service: load
-/// once, then answer batches of root queries from stdin (one batch per
-/// line, whitespace-separated roots; `quit` or EOF ends the session).
+/// The query shape a `serve`/`batch` `--algo` flag names for one root.
+fn algo_query(algo: &str, root: u32) -> Result<AlgoQuery> {
+    Ok(match algo {
+        "bfs" => AlgoQuery::Bfs { root },
+        "sssp" => AlgoQuery::Sssp { root },
+        "cc" => AlgoQuery::Cc,
+        "pagerank" | "pr" => AlgoQuery::Pagerank,
+        other => bail!("unknown --algo {other:?} (expected bfs|sssp|cc|pagerank)"),
+    })
+}
+
+/// One served response, printed as a stable `key=value` line. Validation
+/// failures are reported per query, never fatal to the session.
+fn print_served_response(
+    rg: &ResidentGraph,
+    device: &DeviceModel,
+    resp: &QueryResponse,
+    validate: bool,
+) {
+    match resp.output() {
+        Some(AlgoOutput::Bfs(run)) => {
+            let checked = if !validate {
+                ""
+            } else if let Err(e) = validate_graph500(&rg.csr, run.root, &run.parent, &run.depth) {
+                println!("root={} error=validation failed: {e}", run.root);
+                return;
+            } else {
+                " validated=ok"
+            };
+            println!(
+                "root={} reached={} levels={} modeled={} traversed_edges={} cached={}{checked}",
+                run.root,
+                run.reached_vertices,
+                run.levels.len(),
+                fmt_time(device.query_latency(run, &rg.pg)),
+                run.traversed_edges(),
+                resp.timings.cache_hit
+            );
+        }
+        Some(_) => println!(
+            "query={:?} status=Done cached={} service={}",
+            resp.request.algo,
+            resp.timings.cache_hit,
+            fmt_time(resp.timings.service_s)
+        ),
+        None => {
+            let root =
+                resp.request.algo.root().map(|r| r.to_string()).unwrap_or_else(|| "-".into());
+            println!(
+                "root={root} status={:?} error={}",
+                resp.status,
+                resp.error.as_deref().unwrap_or("")
+            );
+        }
+    }
+}
+
+/// `totem-do serve` — the resident engine as a *concurrent* serving
+/// front-end (DESIGN.md Section 14): load once, then answer queries
+/// through the bounded submission queue, with per-query deadlines
+/// cancelled at superstep barriers and the per-graph hot-root result
+/// cache. Two modes:
+///
+/// * default: interactive stdin loop (one whitespace-separated batch of
+///   roots per line; `quit` or EOF ends). Each line becomes one serving
+///   session over the shared lanes; a bad token or a failed query costs
+///   only itself — the rest of the line is still served, and the cache
+///   persists across lines.
+/// * `--arrivals poisson|uniform`: open-loop load generation at `--qps`
+///   offered load over `--queries` submissions cycling through the
+///   sampled roots; reports the point's latency/rejection/cache profile.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead;
     let rg = resident_from_args(args)?;
-    let opts = batch_options(args)?;
+    let sopts = serve_options(args)?;
+    let algo = args.get("algo").unwrap_or("bfs");
+    let options = algo_options(args, algo)?;
     let validate = args.has("validate");
     let device = DeviceModel::default();
     println!(
-        "serving graph={} V={} E={} config={} sched={:?} batch={} threads={}",
+        "serving graph={} V={} E={} config={} sched={:?} batch={} threads={} queue_depth={} \
+         cache_cap={} deadline_ms={}",
         rg.name,
         rg.num_vertices(),
         rg.csr.num_undirected_edges(),
         rg.hw.label(),
-        opts.policy,
-        opts.max_concurrency,
-        opts.threads
+        sopts.batch.policy,
+        sopts.batch.max_concurrency,
+        sopts.batch.threads,
+        sopts.queue_depth,
+        sopts.cache_capacity,
+        sopts
+            .default_deadline
+            .map(|d| d.as_millis().to_string())
+            .unwrap_or_else(|| "none".into())
     );
+    if let Some(a) = args.get("arrivals") {
+        let cfg = OpenLoopConfig {
+            arrivals: ArrivalProcess::parse(a)?,
+            offered_qps: args.get_parse("qps", 100.0f64)?,
+            queries: args.get_parse("queries", 256usize)?,
+            seed: args.get_parse("seed", 42u64)?,
+        };
+        let roots = service_roots(args, &rg)?;
+        let mut requests = Vec::with_capacity(roots.len());
+        for &r in &roots {
+            requests.push(QueryRequest::new(algo_query(algo, r)?).with_options(options));
+        }
+        let p = run_open_loop(&rg, &sopts, &cfg, &requests);
+        let c = p.counts;
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["offered load".to_string(), format!("{:.1} queries/s", p.offered_qps)]);
+        t.row(vec!["achieved".to_string(), format!("{:.1} queries/s", p.achieved_qps)]);
+        t.row(vec![
+            "admission".to_string(),
+            format!(
+                "{} done / {} rejected / {} deadline-exceeded",
+                c.done, c.rejected, c.deadline_exceeded
+            ),
+        ]);
+        t.row(vec!["rejection rate".to_string(), format!("{:.1}%", c.rejection_rate() * 100.0)]);
+        t.row(vec![
+            "cache".to_string(),
+            format!(
+                "{} hits / {} misses ({:.1}%)",
+                c.cache_hits,
+                c.cache_misses,
+                c.cache_hit_rate() * 100.0
+            ),
+        ]);
+        t.row(vec!["latency p50".to_string(), fmt_time(p.latency.p50)]);
+        t.row(vec!["latency p99".to_string(), fmt_time(p.latency.p99)]);
+        t.row(vec!["latency p999".to_string(), fmt_time(p.latency.p999)]);
+        t.row(vec!["cold service p50".to_string(), fmt_time(p.cold_service.p50)]);
+        t.row(vec!["hit service p50".to_string(), fmt_time(p.hit_service.p50)]);
+        t.print();
+        return Ok(());
+    }
     println!("enter whitespace-separated roots (one batch per line); 'quit' or EOF ends");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
@@ -843,48 +1012,50 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if bare == "quit" || bare == "exit" {
             break;
         }
-        let mut roots = Vec::new();
-        if let Err(e) = parse_root_tokens(bare, &mut roots) {
-            println!("error: {e} (expected vertex ids)");
-            continue;
-        }
-        let t0 = std::time::Instant::now();
-        let outcomes = run_batch(&rg, &roots, &opts)?;
-        let wall = t0.elapsed().as_secs_f64();
-        for outcome in &outcomes {
-            match outcome {
-                QueryOutcome::Complete(run) => {
-                    // Served results never go out unvalidated when the
-                    // flag is set; a check failure is reported per query,
-                    // not fatal to the session.
-                    let checked = if !validate {
-                        ""
-                    } else if let Err(e) =
-                        validate_graph500(&rg.csr, run.root, &run.parent, &run.depth)
-                    {
-                        println!("root={} error=validation failed: {e}", run.root);
-                        continue;
-                    } else {
-                        " validated=ok"
-                    };
-                    println!(
-                        "root={} reached={} levels={} modeled={} traversed_edges={}{checked}",
-                        run.root,
-                        run.reached_vertices,
-                        run.levels.len(),
-                        fmt_time(device.query_latency(run, &rg.pg)),
-                        run.traversed_edges()
-                    );
+        // Per-token isolation: a typo'd root is one failed query, not a
+        // dead session (the old loop aborted on the first bad token or
+        // failed query).
+        let mut requests = Vec::new();
+        for tok in parse_roots_isolated(bare) {
+            match tok {
+                Ok(root) => {
+                    requests.push(QueryRequest::new(algo_query(algo, root)?).with_options(options))
                 }
-                QueryOutcome::Failed { root, error } => println!("root={root} error={error}"),
+                Err(e) => println!("error: {e} (query skipped)"),
             }
         }
-        println!("batch of {} served in {}", outcomes.len(), fmt_time(wall));
+        if requests.is_empty() {
+            continue;
+        }
+        let report = serve_session(&rg, &sopts, |s| {
+            for req in &requests {
+                s.submit(*req);
+            }
+        });
+        for resp in &report.responses {
+            print_served_response(&rg, &device, resp, validate);
+        }
+        let c = report.counts;
+        println!(
+            "line of {} served in {}: {} done, {} rejected, {} deadline-exceeded, {} invalid, \
+             cache {}/{} hits",
+            c.submitted,
+            fmt_time(report.wall.as_secs_f64()),
+            c.done,
+            c.rejected,
+            c.deadline_exceeded,
+            c.invalid_root,
+            c.cache_hits,
+            c.cache_hits + c.cache_misses
+        );
     }
     let pool = rg.states.stats();
     println!(
-        "session done: {} states created, {} recycled, {} idle",
-        pool.created, pool.recycled, pool.idle
+        "session done: {} states created, {} recycled, {} idle; {} results cached",
+        pool.created,
+        pool.recycled,
+        pool.idle,
+        rg.cache.len()
     );
     Ok(())
 }
@@ -959,15 +1130,25 @@ pub fn usage() -> &'static str {
                  --batch K --sched throughput|latency --threads N\n\
                  --algo bfs|sssp|cc|pagerank (mixed-algorithm service path;\n\
                  whole-graph algos use the roots list only to size the batch;\n\
-                 --delta/--pr-iters/--pr-tol set the per-algorithm knobs)\n\
+                 --delta/--damping/--pr-iters/--pr-tol set per-query knobs)\n\
                  --validate --verbose --strict (fail on any failed query)\n\
                  --comm-stats (as in `bfs`, aggregated over the batch)\n\
                  plus the graph/hardware flags of `bfs`\n\
-       serve     resident service loop: load once, then answer batches of\n\
-                 roots from stdin (one whitespace-separated batch per line;\n\
-                 'quit' or EOF ends); takes `batch`'s graph/hardware/\n\
-                 scheduling flags plus --validate (per-query result lines\n\
-                 replace --verbose/--strict)\n\
+       serve     concurrent serving front-end: load once, then answer queries\n\
+                 through a bounded submission queue with admission control,\n\
+                 per-query deadlines and a hot-root result cache\n\
+                 --queue-depth N (reject beyond N queued, default 64)\n\
+                 --cache-cap N (result cache entries, 0 disables, default 64)\n\
+                 --deadline-ms T (default per-query deadline; cancelled at\n\
+                 superstep barriers, answered DeadlineExceeded)\n\
+                 default mode reads stdin (one whitespace-separated batch of\n\
+                 roots per line; a bad token or failed query costs only that\n\
+                 query; 'quit' or EOF ends; the cache persists across lines)\n\
+                 --arrivals poisson|uniform switches to open-loop load\n\
+                 generation: --qps F --queries N over sampled roots, printing\n\
+                 p50/p99/p999, rejection rate and cache hit rate\n\
+                 takes `batch`'s graph/hardware/scheduling/--algo flags plus\n\
+                 --validate (per-query result lines replace --verbose/--strict)\n\
        baseline  single-address-space reference BFS\n\
                  --policy do|td --sockets N --naive --roots K --validate\n\
        generate  write a workload graph\n\
@@ -1067,15 +1248,44 @@ mod tests {
     }
 
     #[test]
-    fn batch_options_carry_algo_knobs() {
+    fn algo_options_one_constructor_for_every_command() {
         let a = Args::parse(&argv(&["--delta", "16", "--pr-iters", "5", "--pr-tol", "0.01"]))
             .unwrap();
-        let o = batch_options(&a).unwrap();
-        assert_eq!(o.sssp_delta, 16);
-        assert_eq!(o.pr_iters, 5);
-        assert_eq!(o.pr_tol, 0.01);
-        let d = batch_options(&Args::parse(&argv(&[])).unwrap()).unwrap();
-        assert_eq!((d.sssp_delta, d.pr_iters), (8, 50));
+        assert_eq!(algo_options(&a, "sssp").unwrap(), AlgoOptions::Sssp { delta: 16 });
+        assert_eq!(
+            algo_options(&a, "pagerank").unwrap(),
+            AlgoOptions::Pagerank { damping: 0.85, iters: 5, tol: 0.01 }
+        );
+        assert_eq!(algo_options(&a, "bfs").unwrap(), AlgoOptions::Bfs);
+        assert!(algo_options(&a, "zigzag").is_err());
+        let d = Args::parse(&argv(&[])).unwrap();
+        assert_eq!(algo_options(&d, "sssp").unwrap().sssp_delta(), 8);
+        assert_eq!(algo_options(&d, "pr").unwrap().pagerank_params(), (0.85, 50, 1e-9));
+    }
+
+    #[test]
+    fn serve_options_parse_queue_cache_and_deadline() {
+        let a = Args::parse(&argv(&[
+            "--queue-depth", "3", "--cache-cap", "0", "--deadline-ms", "250",
+        ]))
+        .unwrap();
+        let o = serve_options(&a).unwrap();
+        assert_eq!(o.queue_depth, 3);
+        assert_eq!(o.cache_capacity, 0);
+        assert_eq!(o.default_deadline, Some(std::time::Duration::from_millis(250)));
+        let d = serve_options(&Args::parse(&argv(&[])).unwrap()).unwrap();
+        assert_eq!((d.queue_depth, d.cache_capacity), (64, 64));
+        assert_eq!(d.default_deadline, None);
+    }
+
+    #[test]
+    fn isolated_root_parsing_keeps_good_tokens() {
+        let parsed = parse_roots_isolated("1 banana 3 # trailing comment");
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0], Ok(1));
+        assert!(parsed[1].is_err());
+        assert_eq!(parsed[2], Ok(3));
+        assert!(parse_roots_isolated("# only a comment").is_empty());
     }
 
     #[test]

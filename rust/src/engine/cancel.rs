@@ -1,0 +1,109 @@
+//! Cooperative cancellation for superstep runners.
+//!
+//! A [`CancelToken`] is the serving tier's handle into a running
+//! traversal: the scheduler arms it with a deadline (or trips it
+//! explicitly) and the runner checks it once per superstep, at the BSP
+//! barrier where every vertex-state invariant holds. Cancelling there —
+//! and only there — means an abandoned query can drain its frontiers and
+//! release its pooled state through the normal `finish()` path, so the
+//! next acquisition still takes the sparse O(touched) reset instead of
+//! the O(V) poisoned-state wipe (Section 13 lifecycle).
+//!
+//! The default token is *free*: no allocation, every check a constant
+//! `None` test — standalone runs pay nothing for the serving tier.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Shared cancellation flag with an optional wall-clock deadline,
+/// checked cooperatively at superstep barriers.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<Inner>>,
+}
+
+impl CancelToken {
+    /// A token that can never fire — the no-cost default for standalone
+    /// runs (identical to `CancelToken::default()`).
+    pub fn none() -> Self {
+        Self { inner: None }
+    }
+
+    /// An armed token with no deadline; fires only via [`cancel`].
+    ///
+    /// [`cancel`]: CancelToken::cancel
+    pub fn new() -> Self {
+        Self {
+            inner: Some(Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: None,
+            })),
+        }
+    }
+
+    /// An armed token that also fires once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        Self {
+            inner: Some(Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(deadline),
+            })),
+        }
+    }
+
+    /// Trip the token explicitly; all clones observe the cancellation.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// True once the token is tripped or its deadline has passed. The
+    /// runner calls this at every superstep barrier.
+    pub fn is_cancelled(&self) -> bool {
+        match &self.inner {
+            None => false,
+            Some(inner) => {
+                inner.cancelled.load(Ordering::Acquire)
+                    || inner.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn default_token_never_fires() {
+        let t = CancelToken::default();
+        assert!(!t.is_cancelled());
+        t.cancel(); // no-op on the free token
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn explicit_cancel_is_visible_through_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn past_deadline_fires_without_explicit_cancel() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.is_cancelled());
+        let later = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!later.is_cancelled());
+    }
+}

@@ -35,12 +35,14 @@
 //! ```
 
 pub mod accel;
+pub mod cancel;
 pub mod comm;
 pub mod frontier;
 pub mod parallel;
 pub mod state;
 
 pub use accel::{Accelerator, BottomUpResult, SimAccelerator, SimContext, TopDownResult};
+pub use cancel::CancelToken;
 pub use comm::{CommMode, CommStats};
 pub use frontier::{Frontier, FrontierPair, GlobalFrontier};
 pub use parallel::{run_steps, ExecutionMode};

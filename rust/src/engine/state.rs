@@ -203,6 +203,20 @@ impl BfsState {
         self.recyclable = true;
     }
 
+    /// Drain every frontier and global bitmap — the cancellation path's
+    /// bridge to [`Self::finish`]. A cancelled run stops at a superstep
+    /// barrier with live frontier bits; scrubbing them here is O(frontier)
+    /// (the sparse queues remember exactly which words to clear), after
+    /// which `finish()` holds and the next [`Self::reset`] still takes the
+    /// O(touched) recycle path for the value arrays.
+    pub fn drain_frontiers(&mut self) {
+        for f in self.frontiers.iter_mut() {
+            f.reset();
+        }
+        self.global_frontier.bits.clear();
+        self.global_next.clear();
+    }
+
     /// How many distinct vertices this run has activated so far (the
     /// sparse-reset workload; equals the reached count after a clean run).
     pub fn touched_len(&self) -> usize {

@@ -4,6 +4,8 @@
 //! searches from random non-singleton roots, report the harmonic mean of
 //! per-search TEPS (undirected traversed edges / time).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::Xoshiro256;
 
 /// Harmonic mean (the Graph500 aggregate for rates).
@@ -55,6 +57,9 @@ pub struct LatencySummary {
     pub mean: f64,
     pub p50: f64,
     pub p99: f64,
+    /// Tail beyond p99 — the open-loop serving bench's saturation signal
+    /// (queueing delay shows up here first).
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -68,7 +73,74 @@ pub fn latency_summary(latencies: &[f64]) -> LatencySummary {
         mean: mean(&sorted),
         p50: percentile_of_sorted(&sorted, 50.0),
         p99: percentile_of_sorted(&sorted, 99.0),
+        p999: percentile_of_sorted(&sorted, 99.9),
         max: sorted.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Live counters of one serving session, bumped lock-free by producers
+/// (admission outcomes) and worker lanes (completion outcomes). Relaxed
+/// ordering everywhere: these are statistics, not synchronization — the
+/// session barrier (`pool::run_tasks` join) orders the final snapshot.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    pub submitted: AtomicU64,
+    pub admitted: AtomicU64,
+    /// Refused at admission (queue full) or failed in the engine.
+    pub rejected: AtomicU64,
+    pub done: AtomicU64,
+    pub deadline_exceeded: AtomicU64,
+    pub invalid_root: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+}
+
+impl ServeCounters {
+    pub fn snapshot(&self) -> ServeCounts {
+        ServeCounts {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            done: self.done.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            invalid_root: self.invalid_root.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`ServeCounters`] (what reports carry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeCounts {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub done: u64,
+    pub deadline_exceeded: u64,
+    pub invalid_root: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServeCounts {
+    /// Fraction of submissions refused — the admission controller's
+    /// overflow valve; rises past saturation while admitted latency
+    /// stays bounded.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.submitted as f64
+    }
+
+    /// Fraction of cache lookups answered from the memo.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / lookups as f64
     }
 }
 
@@ -155,8 +227,33 @@ mod tests {
         assert!((s.mean - 0.25).abs() < 1e-12);
         assert_eq!(s.p50, 0.2);
         assert_eq!(s.p99, 0.4);
+        assert_eq!(s.p999, 0.4, "n=4: both tail ranks land on the max sample");
         assert_eq!(s.max, 0.4);
         assert_eq!(latency_summary(&[]).n, 0);
+        // With 10k samples the tail ranks separate.
+        let xs: Vec<f64> = (1..=10_000).map(|i| i as f64).collect();
+        let s = latency_summary(&xs);
+        assert_eq!(s.p50, 5000.0);
+        assert_eq!(s.p99, 9900.0);
+        assert_eq!(s.p999, 9990.0);
+    }
+
+    #[test]
+    fn serve_counters_snapshot_and_rates() {
+        let c = ServeCounters::default();
+        c.submitted.fetch_add(10, Ordering::Relaxed);
+        c.admitted.fetch_add(8, Ordering::Relaxed);
+        c.rejected.fetch_add(2, Ordering::Relaxed);
+        c.done.fetch_add(8, Ordering::Relaxed);
+        c.cache_hits.fetch_add(6, Ordering::Relaxed);
+        c.cache_misses.fetch_add(2, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.done, 8);
+        assert!((s.rejection_rate() - 0.2).abs() < 1e-12);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(ServeCounts::default().rejection_rate(), 0.0);
+        assert_eq!(ServeCounts::default().cache_hit_rate(), 0.0);
     }
 
     #[test]

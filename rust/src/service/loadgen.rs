@@ -1,0 +1,210 @@
+//! Open-loop load generation for the serving front-end.
+//!
+//! Closed-loop benchmarks (issue the next query when the previous one
+//! finishes) can never observe overload: the arrival rate adapts itself
+//! to capacity. An *open-loop* driver submits on a fixed schedule
+//! regardless of completions — exactly how independent clients behave —
+//! so past saturation the queue fills, the admission controller starts
+//! rejecting, and the tail latency of admitted queries is an honest
+//! number instead of an artifact of self-throttling.
+//!
+//! One [`run_open_loop`] call drives one offered-load point: a producer
+//! thread submits `queries` requests at `offered_qps` (Poisson or
+//! uniform inter-arrivals) while the serving lanes drain, then the
+//! responses are folded into a [`LoadPoint`] (percentiles, rejection
+//! rate, cache traffic). Sweeping `offered_qps` across a capacity
+//! multiple ladder yields the classic latency-vs-load curve
+//! (`benches/serve_load.rs`).
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{latency_summary, LatencySummary, ServeCounts};
+use crate::util::Xoshiro256;
+
+use super::registry::ResidentGraph;
+use super::scheduler::{QueryRequest, QueryStatus};
+use super::server::{serve_session, ServeOptions};
+
+/// Inter-arrival law of the synthetic clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrivals (memoryless clients — the standard
+    /// open-loop model; bursts stress the queue).
+    Poisson,
+    /// Fixed inter-arrivals (a metronome; isolates service-time jitter
+    /// from arrival burstiness).
+    Uniform,
+}
+
+impl ArrivalProcess {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            "uniform" => Ok(ArrivalProcess::Uniform),
+            other => bail!("unknown arrival process {other:?} (expected poisson|uniform)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Uniform => "uniform",
+        }
+    }
+
+    /// Seconds until the next arrival at `rate_qps` offered load.
+    fn inter_arrival(&self, rate_qps: f64, rng: &mut Xoshiro256) -> f64 {
+        let mean = 1.0 / rate_qps.max(1e-9);
+        match self {
+            ArrivalProcess::Uniform => mean,
+            ArrivalProcess::Poisson => {
+                // Inverse-CDF exponential; `1 - u` is in (0, 1], so the
+                // log argument never reaches zero.
+                let u = rng.next_f64();
+                -(1.0 - u).max(f64::MIN_POSITIVE).ln() * mean
+            }
+        }
+    }
+}
+
+/// One offered-load point's driving parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopConfig {
+    pub arrivals: ArrivalProcess,
+    /// Offered load in queries per second (the schedule's rate — what
+    /// clients *attempt*, not what the server absorbs).
+    pub offered_qps: f64,
+    /// Total submissions for this point.
+    pub queries: usize,
+    /// Arrival-schedule RNG seed (deterministic schedules per point).
+    pub seed: u64,
+}
+
+/// What one offered-load point measured.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadPoint {
+    pub offered_qps: f64,
+    /// Completed (Done) queries per wall-clock second.
+    pub achieved_qps: f64,
+    pub wall_s: f64,
+    pub counts: ServeCounts,
+    /// End-to-end (queue + service) latency of Done queries.
+    pub latency: LatencySummary,
+    /// Service latency of cache-miss completions (real engine runs).
+    pub cold_service: LatencySummary,
+    /// Service latency of cache-hit completions (memo lookups).
+    pub hit_service: LatencySummary,
+}
+
+/// Drive one open-loop point: submit `cfg.queries` requests on the
+/// arrival schedule (cycling through `requests`), then fold the session
+/// report into a [`LoadPoint`]. The schedule is *cumulative*: each
+/// arrival time is fixed up front relative to session start, so a slow
+/// query delays no later submission — late submissions fire immediately,
+/// which is what keeps the loop open.
+pub fn run_open_loop(
+    rg: &ResidentGraph,
+    serve_opts: &ServeOptions,
+    cfg: &OpenLoopConfig,
+    requests: &[QueryRequest],
+) -> LoadPoint {
+    assert!(!requests.is_empty(), "open-loop driver needs at least one request template");
+    let report = serve_session(rg, serve_opts, |s| {
+        let mut rng = Xoshiro256::new(cfg.seed);
+        let start = Instant::now();
+        let mut at = 0.0f64;
+        for i in 0..cfg.queries {
+            at += cfg.arrivals.inter_arrival(cfg.offered_qps, &mut rng);
+            let target = Duration::from_secs_f64(at);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                thread::sleep(target - elapsed);
+            }
+            s.submit(requests[i % requests.len()]);
+        }
+    });
+    let mut total = Vec::new();
+    let mut cold = Vec::new();
+    let mut hit = Vec::new();
+    for r in &report.responses {
+        if r.status == QueryStatus::Done {
+            total.push(r.timings.total_s);
+            if r.timings.cache_hit {
+                hit.push(r.timings.service_s);
+            } else {
+                cold.push(r.timings.service_s);
+            }
+        }
+    }
+    let wall_s = report.wall.as_secs_f64();
+    LoadPoint {
+        offered_qps: cfg.offered_qps,
+        achieved_qps: report.counts.done as f64 / wall_s.max(1e-9),
+        wall_s,
+        counts: report.counts,
+        latency: latency_summary(&total),
+        cold_service: latency_summary(&cold),
+        hit_service: latency_summary(&hit),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_csr;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::partition::{HardwareConfig, LayoutOptions};
+    use crate::service::AlgoQuery;
+
+    #[test]
+    fn arrival_parsing_and_labels() {
+        assert_eq!(ArrivalProcess::parse("poisson").unwrap(), ArrivalProcess::Poisson);
+        assert_eq!(ArrivalProcess::parse("uniform").unwrap(), ArrivalProcess::Uniform);
+        assert!(ArrivalProcess::parse("burst").is_err());
+        assert_eq!(ArrivalProcess::Poisson.label(), "poisson");
+    }
+
+    #[test]
+    fn inter_arrival_means_match_the_rate() {
+        let mut rng = Xoshiro256::new(11);
+        let rate = 50.0;
+        assert_eq!(ArrivalProcess::Uniform.inter_arrival(rate, &mut rng), 1.0 / rate);
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| ArrivalProcess::Poisson.inter_arrival(rate, &mut rng)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "sample mean {mean} off 1/{rate}");
+        assert!((0..100).all(|_| ArrivalProcess::Poisson.inter_arrival(rate, &mut rng) >= 0.0));
+    }
+
+    #[test]
+    fn open_loop_point_accounts_for_every_submission() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 5)));
+        let hw = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let rg = ResidentGraph::build("lg", g, &hw, &LayoutOptions::paper(), 1);
+        let requests = [
+            QueryRequest::new(AlgoQuery::Bfs { root: 0 }),
+            QueryRequest::new(AlgoQuery::Bfs { root: 5 }),
+        ];
+        let cfg = OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson,
+            offered_qps: 1.0e6,
+            queries: 8,
+            seed: 3,
+        };
+        let point = run_open_loop(&rg, &ServeOptions::default(), &cfg, &requests);
+        let c = point.counts;
+        assert_eq!(c.submitted, 8);
+        assert_eq!(c.done + c.rejected + c.deadline_exceeded + c.invalid_root, 8);
+        assert_eq!(c.done, 8, "queue depth 64 absorbs an 8-query burst");
+        assert_eq!(point.latency.n, 8);
+        assert!(point.latency.p999 >= point.latency.p99);
+        assert!(point.latency.p99 >= point.latency.p50);
+        assert!(point.achieved_qps > 0.0);
+        // Two distinct roots cycled 4x through a warm cache: 2 misses.
+        assert_eq!(c.cache_misses, 2);
+        assert_eq!(c.cache_hits, 6);
+    }
+}

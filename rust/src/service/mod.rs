@@ -14,16 +14,24 @@
 //!   queries stop paying allocation + wipe cost. States released after a
 //!   failed query are poisoned and take the full wipe — recycling is
 //!   always safe.
-//! * [`run_batch`] — the batched query scheduler: admit K concurrent root
-//!   queries and schedule them across the shared `util::pool` workers.
-//!   [`SchedulePolicy`] trades latency (one query at a time, all threads
-//!   chunking its kernels) against throughput (many queries in flight,
-//!   the thread budget partitioned across them).
-//! * [`run_algo_batch`] — the mixed-algorithm generalization: one batch
-//!   may interleave BFS, SSSP, CC and PageRank queries ([`AlgoQuery`]).
-//!   Each algorithm draws recycled states from its own typed pool on the
-//!   resident graph ([`AlgoStatePools`]), and the same determinism
-//!   contract applies per algorithm (DESIGN.md Section 13).
+//! * [`run_requests`] — the batched query scheduler behind the typed
+//!   request/response surface: admit [`QueryRequest`]s (any mix of BFS,
+//!   SSSP, CC, PageRank with per-request [`AlgoOptions`] and deadlines)
+//!   and schedule them across the shared `util::pool` workers, answering
+//!   each with a [`QueryResponse`]. [`SchedulePolicy`] trades latency
+//!   (one query at a time, all threads chunking its kernels) against
+//!   throughput (many queries in flight, the thread budget partitioned
+//!   across them). Each algorithm draws recycled states from its own
+//!   typed pool on the resident graph ([`AlgoStatePools`]).
+//!   [`run_algo_batch`] is a thin default-options adapter over it.
+//! * [`serve_session`] — the concurrent open-loop front-end (DESIGN.md
+//!   Section 14): a bounded multi-producer submission queue with
+//!   admission control ([`QueryStatus::Rejected`] past
+//!   [`ServeOptions::queue_depth`]), per-query deadlines enforced at
+//!   superstep barriers via [`CancelToken`](crate::engine::CancelToken),
+//!   and a per-graph hot-root [`ResultCache`] invalidated on registry
+//!   swap/evict. [`loadgen`] drives it open-loop (Poisson/uniform
+//!   arrivals) to measure latency-vs-offered-load honestly.
 //!
 //! **Query-level determinism contract:** every completed query's output
 //! (`parent`, `depth`, per-level [`LevelStats`](crate::engine::LevelStats),
@@ -36,13 +44,19 @@
 //! Sections 4/9/10), so splitting the thread budget between queries
 //! changes wall-clock only.
 
+pub mod loadgen;
 pub mod registry;
 pub mod scheduler;
+pub mod server;
 pub mod state_pool;
 
+pub use loadgen::{run_open_loop, ArrivalProcess, LoadPoint, OpenLoopConfig};
 pub use registry::{AlgoStatePools, GraphRegistry, ResidentGraph};
+#[allow(deprecated)]
+pub use scheduler::run_batch;
 pub use scheduler::{
-    run_algo_batch, run_batch, AlgoOutcome, AlgoQuery, BatchOptions, QueryOutcome,
-    SchedulePolicy,
+    run_algo_batch, run_requests, AlgoOptions, AlgoOutcome, AlgoOutput, AlgoQuery, BatchOptions,
+    QueryOutcome, QueryRequest, QueryResponse, QueryStatus, QueryTimings, SchedulePolicy,
 };
+pub use server::{serve_session, ResultCache, ServeOptions, ServeReport, Submitter};
 pub use state_pool::{PoolEntry, PoolStats, StatePool, TypedPool};

@@ -21,6 +21,7 @@ use crate::partition::{
 
 use crate::algo::{ProgramState, PrValue, SsspValue};
 
+use super::server::ResultCache;
 use super::state_pool::{StatePool, TypedPool};
 
 /// Per-algorithm recyclable [`ProgramState`] pools. Each vertex-program
@@ -47,6 +48,11 @@ pub struct ResidentGraph {
     pub states: StatePool,
     /// Recyclable vertex-program states, one pool per algorithm.
     pub algo_states: AlgoStatePools,
+    /// Hot-root result memo for the serving tier (repeated roots are the
+    /// common case on social-graph workloads). Keyed per algorithm
+    /// config; invalidated wholesale when the registry evicts or swaps
+    /// this graph. Batch entry points bypass it.
+    pub cache: ResultCache,
 }
 
 impl ResidentGraph {
@@ -80,6 +86,7 @@ impl ResidentGraph {
             sim_ctx,
             states: StatePool::new(),
             algo_states: AlgoStatePools::default(),
+            cache: ResultCache::new(),
         }
     }
 
@@ -128,9 +135,35 @@ impl GraphRegistry {
     }
 
     /// Evict a graph. Queries already holding the `Arc` keep working; the
-    /// memory is reclaimed when the last holder drops it.
+    /// memory is reclaimed when the last holder drops it. The evicted
+    /// graph's hot-root cache is cleared immediately, so no holder can
+    /// keep serving memoized results for a graph the registry disowned.
     pub fn remove(&self, name: &str) -> bool {
-        self.entries.lock().expect("registry poisoned").remove(name).is_some()
+        let removed = self.entries.lock().expect("registry poisoned").remove(name);
+        match removed {
+            Some(old) => {
+                old.cache.clear();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Replace (or first-register) a graph under its name — the graph-
+    /// refresh path. The displaced entry's hot-root cache is cleared
+    /// *before* the new Arc is returned: sessions still holding the old
+    /// graph recompute rather than serve stale memoized results.
+    pub fn swap(&self, graph: ResidentGraph) -> Arc<ResidentGraph> {
+        let arc = Arc::new(graph);
+        let old = self
+            .entries
+            .lock()
+            .expect("registry poisoned")
+            .insert(arc.name.clone(), Arc::clone(&arc));
+        if let Some(old) = old {
+            old.cache.clear();
+        }
+        arc
     }
 
     pub fn names(&self) -> Vec<String> {

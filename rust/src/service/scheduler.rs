@@ -1,12 +1,12 @@
-//! The batched query scheduler: admit K concurrent root queries over one
-//! resident graph and schedule them across the shared worker budget.
+//! The batched query scheduler: admit K concurrent queries over one
+//! resident graph and schedule them across the shared worker budget —
+//! behind one typed request/response surface.
 //!
 //! Two levels of parallelism compose here:
 //!
-//! * **Inter-query** (this module): `W` worker lanes each own a recycled
-//!   [`BfsState`](crate::engine::BfsState) and a session accelerator view,
-//!   and drain their round-robin share of the batch through one
-//!   [`HybridRunner`].
+//! * **Inter-query** (this module): `W` worker lanes each own recycled
+//!   pooled state and a session accelerator view, and drain their
+//!   round-robin share of the batch.
 //! * **Intra-query** (PR 3's engine): each query's supersteps fan out into
 //!   edge-weight-balanced kernel chunks on its per-query thread budget.
 //!
@@ -16,11 +16,23 @@
 //! the budget across them (one spawn per lane per batch instead of per
 //! kernel phase per level, better cache residency, higher queries/sec).
 //!
+//! **One execution path.** [`run_requests`] is the scheduler: it admits
+//! [`QueryRequest`]s, plans lanes, arms per-request deadline tokens, and
+//! answers with [`QueryResponse`]s. [`run_algo_batch`] is a thin adapter
+//! that wraps bare [`AlgoQuery`]s in default-option requests, and
+//! `run_batch` (deprecated) wraps bare BFS roots the same way — neither
+//! contains scheduling logic. The concurrent front-end
+//! ([`serve_session`](super::server::serve_session)) reuses the same
+//! per-query executor under its own admission queue.
+//!
 //! Scheduling never changes results: per-query outputs are bit-identical
 //! across policies, batch sizes, and thread counts (the query-level
 //! determinism contract, DESIGN.md Section 11), because the engine is
 //! bit-identical across `ExecutionMode`s and queries share nothing
 //! mutable.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -29,7 +41,7 @@ use crate::algo::{
     PagerankProgram, PagerankRun, ProgramRunner, SsspProgram, SsspRun,
 };
 use crate::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
-use crate::engine::{CommMode, ExecutionMode, SimAccelerator};
+use crate::engine::{CancelToken, CommMode, ExecutionMode, SimAccelerator};
 use crate::util::pool;
 
 use super::registry::ResidentGraph;
@@ -46,7 +58,9 @@ pub enum SchedulePolicy {
     Throughput,
 }
 
-/// Batch admission knobs.
+/// Batch-level scheduling knobs: how queries share the machine. Query-
+/// level knobs (per-algorithm parameters, deadlines) live on each
+/// [`QueryRequest`] instead — the two axes are deliberately disentangled.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchOptions {
     /// Total worker-thread budget shared by all in-flight queries.
@@ -59,12 +73,6 @@ pub struct BatchOptions {
     /// BFS direction policy for every query in the batch.
     pub bfs_policy: PolicyKind,
     pub comm_mode: CommMode,
-    /// SSSP bucket width (delta-stepping's Δ) for [`AlgoQuery::Sssp`].
-    pub sssp_delta: u64,
-    /// PageRank iteration cap for [`AlgoQuery::Pagerank`].
-    pub pr_iters: u32,
-    /// PageRank convergence tolerance (max per-vertex rank delta).
-    pub pr_tol: f64,
 }
 
 impl Default for BatchOptions {
@@ -75,15 +83,216 @@ impl Default for BatchOptions {
             max_concurrency: 8,
             bfs_policy: PolicyKind::direction_optimized(),
             comm_mode: CommMode::Batched,
-            sssp_delta: 8,
-            pr_iters: 50,
-            pr_tol: 1e-9,
         }
     }
 }
 
-/// Per-query result, in submission order. Admission and engine failures
-/// are per-query — one bad root never takes down the batch.
+/// One query in a mixed-algorithm batch. Rooted queries (BFS, SSSP) name
+/// their source; CC and PageRank are whole-graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoQuery {
+    Bfs { root: u32 },
+    Sssp { root: u32 },
+    Cc,
+    Pagerank,
+}
+
+impl AlgoQuery {
+    /// The query's source vertex, if it has one (admission validation).
+    pub fn root(&self) -> Option<u32> {
+        match self {
+            AlgoQuery::Bfs { root } | AlgoQuery::Sssp { root } => Some(*root),
+            AlgoQuery::Cc | AlgoQuery::Pagerank => None,
+        }
+    }
+}
+
+/// Per-query algorithm parameters, carried on the request (not the batch:
+/// two SSSP queries in one batch may use different bucket widths). The
+/// variant should match the request's [`AlgoQuery`]; a mismatched variant
+/// falls back to that algorithm's defaults, so it can never misconfigure
+/// a different algorithm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AlgoOptions {
+    /// BFS has no per-query knobs (direction policy is batch-level —
+    /// it is a property of the serving configuration, not the query).
+    Bfs,
+    /// Delta-stepping bucket width Δ.
+    Sssp { delta: u64 },
+    Cc,
+    Pagerank { damping: f64, iters: u32, tol: f64 },
+}
+
+impl AlgoOptions {
+    /// The matching default options for a query (Δ=8; PageRank d=0.85,
+    /// ≤50 iterations, tol=1e-9 — the PR 6 `BatchOptions` defaults).
+    pub fn default_for(algo: AlgoQuery) -> Self {
+        match algo {
+            AlgoQuery::Bfs { .. } => AlgoOptions::Bfs,
+            AlgoQuery::Sssp { .. } => AlgoOptions::Sssp { delta: 8 },
+            AlgoQuery::Cc => AlgoOptions::Cc,
+            AlgoQuery::Pagerank => {
+                AlgoOptions::Pagerank { damping: 0.85, iters: 50, tol: 1e-9 }
+            }
+        }
+    }
+
+    /// Δ for an SSSP run: the request's width (clamped ≥ 1), or the
+    /// default for mismatched variants (the CLI and executor both route
+    /// through here — one knob-resolution path).
+    pub fn sssp_delta(self) -> u64 {
+        match self {
+            AlgoOptions::Sssp { delta } => delta.max(1),
+            _ => 8,
+        }
+    }
+
+    /// `(damping, max iterations, tolerance)` for a PageRank run, with
+    /// defaults for mismatched variants.
+    pub fn pagerank_params(self) -> (f64, u32, f64) {
+        match self {
+            AlgoOptions::Pagerank { damping, iters, tol } => (damping, iters, tol),
+            _ => (0.85, 50, 1e-9),
+        }
+    }
+}
+
+/// One typed query against a resident graph: what to run, with which
+/// per-query parameters, by when.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryRequest {
+    pub algo: AlgoQuery,
+    pub options: AlgoOptions,
+    /// Service deadline, measured from submission. A query that cannot
+    /// finish in time is cancelled cooperatively at the next superstep
+    /// barrier and answered [`QueryStatus::DeadlineExceeded`]; `None`
+    /// runs to completion.
+    pub deadline: Option<Duration>,
+}
+
+impl QueryRequest {
+    /// A request with the algorithm's default options and no deadline.
+    pub fn new(algo: AlgoQuery) -> Self {
+        Self { algo, options: AlgoOptions::default_for(algo), deadline: None }
+    }
+
+    pub fn with_options(mut self, options: AlgoOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Terminal status of one request — every submission gets exactly one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryStatus {
+    /// Completed; the response carries the output.
+    Done,
+    /// Not executed: admission control shed it (queue full) or the
+    /// engine failed it. The response's `error` says which.
+    Rejected,
+    /// Cancelled at a superstep barrier after its deadline passed (or
+    /// expired while still queued). Pooled state was released cleanly.
+    DeadlineExceeded,
+    /// The named root is outside the graph's vertex range.
+    InvalidRoot,
+}
+
+/// A completed query's output, tagged by algorithm. `Arc`-shared in
+/// responses so the hot-root cache can answer repeats without copying
+/// the O(V) result arrays.
+#[derive(Clone, Debug)]
+pub enum AlgoOutput {
+    Bfs(BfsRun),
+    Sssp(SsspRun),
+    Cc(CcRun),
+    Pagerank(PagerankRun),
+}
+
+/// Where one response's wall-clock went (host-measured; the modeled
+/// paper-testbed latency still comes from `runtime::device` over the
+/// run's work counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryTimings {
+    /// Submission to execution start (admission-queue wait).
+    pub queue_s: f64,
+    /// Execution start to finish (zero for never-executed rejections).
+    pub service_s: f64,
+    /// Submission to response.
+    pub total_s: f64,
+    /// Answered from the hot-root result cache.
+    pub cache_hit: bool,
+}
+
+/// The answer to one [`QueryRequest`].
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub request: QueryRequest,
+    pub status: QueryStatus,
+    /// Present iff `status == Done`.
+    pub output: Option<Arc<AlgoOutput>>,
+    /// Present for every non-`Done` status.
+    pub error: Option<String>,
+    pub timings: QueryTimings,
+}
+
+impl QueryResponse {
+    pub fn is_done(&self) -> bool {
+        self.status == QueryStatus::Done
+    }
+
+    pub fn output(&self) -> Option<&AlgoOutput> {
+        self.output.as_deref()
+    }
+
+    pub(crate) fn done(
+        request: QueryRequest,
+        output: Arc<AlgoOutput>,
+        timings: QueryTimings,
+    ) -> Self {
+        Self { request, status: QueryStatus::Done, output: Some(output), error: None, timings }
+    }
+
+    pub(crate) fn failed(
+        request: QueryRequest,
+        status: QueryStatus,
+        error: String,
+        timings: QueryTimings,
+    ) -> Self {
+        Self { request, status, output: None, error: Some(error), timings }
+    }
+}
+
+/// Why the executor did not produce an output: cancelled cooperatively
+/// (deadline) vs a genuine engine failure.
+pub(crate) enum QueryError {
+    Cancelled(String),
+    Engine(String),
+}
+
+/// Per-query result of [`run_algo_batch`], in submission order.
+#[derive(Clone, Debug)]
+pub enum AlgoOutcome {
+    Bfs(Box<BfsRun>),
+    Sssp(Box<SsspRun>),
+    Cc(Box<CcRun>),
+    Pagerank(Box<PagerankRun>),
+    Failed { query: AlgoQuery, error: String },
+}
+
+impl AlgoOutcome {
+    pub fn is_complete(&self) -> bool {
+        !matches!(self, AlgoOutcome::Failed { .. })
+    }
+}
+
+/// Per-query result of `run_batch`, in submission order. Admission and
+/// engine failures are per-query — one bad root never takes down the
+/// batch.
 #[derive(Clone, Debug)]
 pub enum QueryOutcome {
     /// The completed run (boxed: a `BfsRun` carries O(V) arrays).
@@ -111,7 +320,7 @@ impl QueryOutcome {
 /// lanes carry the extra worker, so no budgeted thread sits idle for the
 /// batch. Budget splits are a pure scheduling choice (per-query output is
 /// `ExecutionMode`-invariant).
-fn plan_lanes(opts: &BatchOptions, admitted: usize) -> Vec<usize> {
+pub(crate) fn plan_lanes(opts: &BatchOptions, admitted: usize) -> Vec<usize> {
     let threads = opts.threads.max(1);
     match opts.policy {
         SchedulePolicy::Latency => vec![threads],
@@ -123,168 +332,42 @@ fn plan_lanes(opts: &BatchOptions, admitted: usize) -> Vec<usize> {
     }
 }
 
-/// Run a batch of root queries over a resident graph. Returns one
-/// [`QueryOutcome`] per input root, in input order.
-///
-/// Out-of-range roots (`root >= |V|`) are rejected cleanly at admission;
-/// isolated roots (degree 0) are *valid* and produce the trivial
-/// single-vertex traversal, exactly as a standalone run does.
-pub fn run_batch(
+/// Execute one query against the resident graph with pooled, recycled
+/// program state — THE per-query execution path; every scheduler entry
+/// point and the concurrent front-end funnel through here. BFS rides the
+/// classic [`HybridRunner`] + state-pool path (and so supports GPU
+/// placements through the session accelerator); the vertex programs use
+/// their per-algorithm pools. The cancel token is armed with the
+/// request's deadline and checked at every superstep barrier; a
+/// cancelled run drains its frontiers before releasing, so its pooled
+/// state stays recyclable.
+pub(crate) fn execute_query(
     rg: &ResidentGraph,
-    roots: &[u32],
-    opts: &BatchOptions,
-) -> Result<Vec<QueryOutcome>> {
-    let v = rg.num_vertices();
-    // Admission: out-of-range roots fail their own slot only.
-    let mut outcomes: Vec<Option<QueryOutcome>> = roots
-        .iter()
-        .map(|&r| {
-            ((r as usize) >= v).then(|| QueryOutcome::Failed {
-                root: r,
-                error: format!("root {r} out of range (graph has {v} vertices)"),
-            })
-        })
-        .collect();
-    let admitted: Vec<(usize, u32)> = roots
-        .iter()
-        .enumerate()
-        .filter(|&(i, _)| outcomes[i].is_none())
-        .map(|(i, &r)| (i, r))
-        .collect();
-
-    if !admitted.is_empty() {
-        let lane_budgets = plan_lanes(opts, admitted.len());
-        let lanes = lane_budgets.len();
-
-        // Deterministic round-robin assignment (results are per-query
-        // deterministic anyway; this just keeps lane contents stable).
-        let mut assignment: Vec<Vec<(usize, u32)>> = vec![Vec::new(); lanes];
-        for (j, &q) in admitted.iter().enumerate() {
-            assignment[j % lanes].push(q);
-        }
-
-        let tasks: Vec<_> = assignment
-            .into_iter()
-            .zip(lane_budgets)
-            .map(|(lane, budget)| {
-                let cfg = HybridConfig {
-                    policy: opts.bfs_policy,
-                    comm_mode: opts.comm_mode,
-                    exec: ExecutionMode::from_threads(budget),
-                    ..Default::default()
-                };
-                move || -> Vec<(usize, Result<Box<BfsRun>, String>)> {
-                    // `with_state` fails only on a state-shape mismatch
-                    // (excluded by the per-graph pool's acquire check) or
-                    // GPU partitions without an accelerator — checked here
-                    // so the error path never consumes a pooled state.
-                    let mut accel: Option<SimAccelerator> = rg.new_session_accel();
-                    let has_gpu = rg.pg.parts.iter().any(|p| p.kind.is_gpu());
-                    if has_gpu && accel.is_none() {
-                        let msg = "graph has GPU partitions but no resident device context";
-                        return lane
-                            .into_iter()
-                            .map(|(i, root)| (i, Err(format!("root {root}: {msg}"))))
-                            .collect();
-                    }
-                    let state = rg.states.acquire(&rg.pg);
-                    let mut runner = match HybridRunner::with_state(
-                        &rg.pg,
-                        cfg,
-                        accel.as_mut(),
-                        state,
-                    ) {
-                        Ok(r) => r,
-                        Err(e) => {
-                            // Unreachable given the checks above; fail the
-                            // lane's queries rather than panic a worker.
-                            let msg = e.to_string();
-                            return lane
-                                .into_iter()
-                                .map(|(i, root)| (i, Err(format!("root {root}: {msg}"))))
-                                .collect();
-                        }
-                    };
-                    let mut out = Vec::with_capacity(lane.len());
-                    for (i, root) in lane {
-                        out.push((i, runner.run(root).map(Box::new).map_err(|e| e.to_string())));
-                    }
-                    // Recycle the lane's traversal state (poisoned states
-                    // self-heal on their next reset).
-                    rg.states.release(runner.into_state());
-                    out
-                }
-            })
-            .collect();
-
-        for lane_out in pool::run_tasks(lanes, tasks) {
-            for (i, res) in lane_out {
-                outcomes[i] = Some(match res {
-                    Ok(run) => QueryOutcome::Complete(run),
-                    Err(error) => QueryOutcome::Failed { root: roots[i], error },
-                });
-            }
-        }
-    }
-
-    Ok(outcomes
-        .into_iter()
-        .map(|o| o.expect("every query produced an outcome"))
-        .collect())
-}
-
-/// One query in a mixed-algorithm batch. Rooted queries (BFS, SSSP) name
-/// their source; CC and PageRank are whole-graph.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum AlgoQuery {
-    Bfs { root: u32 },
-    Sssp { root: u32 },
-    Cc,
-    Pagerank,
-}
-
-impl AlgoQuery {
-    fn root(&self) -> Option<u32> {
-        match self {
-            AlgoQuery::Bfs { root } | AlgoQuery::Sssp { root } => Some(*root),
-            AlgoQuery::Cc | AlgoQuery::Pagerank => None,
-        }
-    }
-}
-
-/// Per-query result of [`run_algo_batch`], in submission order.
-#[derive(Clone, Debug)]
-pub enum AlgoOutcome {
-    Bfs(Box<BfsRun>),
-    Sssp(Box<SsspRun>),
-    Cc(Box<CcRun>),
-    Pagerank(Box<PagerankRun>),
-    Failed { query: AlgoQuery, error: String },
-}
-
-impl AlgoOutcome {
-    pub fn is_complete(&self) -> bool {
-        !matches!(self, AlgoOutcome::Failed { .. })
-    }
-}
-
-/// Run one query against the resident graph with a pooled, recycled
-/// program state. BFS rides the classic [`HybridRunner`] + [`StatePool`]
-/// path (and so supports GPU placements through the session
-/// accelerator); the vertex programs use their per-algorithm pools.
-fn run_one_algo(
-    rg: &ResidentGraph,
-    query: AlgoQuery,
+    algo: AlgoQuery,
+    options: AlgoOptions,
     opts: &BatchOptions,
     exec: ExecutionMode,
-) -> Result<AlgoOutcome, String> {
+    cancel: CancelToken,
+) -> Result<AlgoOutput, QueryError> {
+    // An engine error while the token is tripped is (and is reported as)
+    // a cancellation: the runner's only token-sensitive exit is the
+    // barrier checkpoint.
+    let classify = |e: anyhow::Error, cancel: &CancelToken| {
+        if cancel.is_cancelled() {
+            QueryError::Cancelled(e.to_string())
+        } else {
+            QueryError::Engine(e.to_string())
+        }
+    };
     let pg = &rg.pg;
-    match query {
+    match algo {
         AlgoQuery::Bfs { root } => {
             let mut accel: Option<SimAccelerator> = rg.new_session_accel();
             let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
             if has_gpu && accel.is_none() {
-                return Err("graph has GPU partitions but no resident device context".into());
+                return Err(QueryError::Engine(
+                    "graph has GPU partitions but no resident device context".into(),
+                ));
             }
             let cfg = HybridConfig {
                 policy: opts.bfs_policy,
@@ -294,79 +377,92 @@ fn run_one_algo(
             };
             let state = rg.states.acquire(pg);
             let mut runner = HybridRunner::with_state(pg, cfg, accel.as_mut(), state)
-                .map_err(|e| e.to_string())?;
+                .map_err(|e| QueryError::Engine(e.to_string()))?;
+            runner.set_cancel_token(cancel.clone());
             let res = runner.run(root);
             rg.states.release(runner.into_state());
-            res.map(|run| AlgoOutcome::Bfs(Box::new(run))).map_err(|e| e.to_string())
+            res.map(AlgoOutput::Bfs).map_err(|e| classify(e, &cancel))
         }
         AlgoQuery::Sssp { root } => {
             let program =
-                SsspProgram { root, delta: opts.sssp_delta, weights: default_weights() };
+                SsspProgram { root, delta: options.sssp_delta(), weights: default_weights() };
             let state = rg.algo_states.sssp.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, program, exec, state);
+            runner.set_cancel_token(cancel.clone());
             let res = runner.run();
             rg.algo_states.sssp.release(runner.into_state());
-            res.map(|run| AlgoOutcome::Sssp(Box::new(sssp_run_from(root, run))))
-                .map_err(|e| e.to_string())
+            res.map(|run| AlgoOutput::Sssp(sssp_run_from(root, run)))
+                .map_err(|e| classify(e, &cancel))
         }
         AlgoQuery::Cc => {
             let state = rg.algo_states.cc.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, CcProgram, exec, state);
+            runner.set_cancel_token(cancel.clone());
             let res = runner.run();
             rg.algo_states.cc.release(runner.into_state());
-            res.map(|run| AlgoOutcome::Cc(Box::new(cc_run_from(run)))).map_err(|e| e.to_string())
+            res.map(|run| AlgoOutput::Cc(cc_run_from(run))).map_err(|e| classify(e, &cancel))
         }
         AlgoQuery::Pagerank => {
-            let program = PagerankProgram {
-                num_vertices: pg.num_vertices,
-                damping: 0.85,
-                max_iters: opts.pr_iters,
-                tol: opts.pr_tol,
-            };
+            let (damping, iters, tol) = options.pagerank_params();
+            let program =
+                PagerankProgram { num_vertices: pg.num_vertices, damping, max_iters: iters, tol };
             let state = rg.algo_states.pagerank.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, program, exec, state);
+            runner.set_cancel_token(cancel.clone());
             let res = runner.run();
             rg.algo_states.pagerank.release(runner.into_state());
-            res.map(|run| AlgoOutcome::Pagerank(Box::new(pagerank_run_from(run))))
-                .map_err(|e| e.to_string())
+            res.map(|run| AlgoOutput::Pagerank(pagerank_run_from(run)))
+                .map_err(|e| classify(e, &cancel))
         }
     }
 }
 
-/// Run a mixed-algorithm batch over a resident graph: the multi-query
-/// generalization of [`run_batch`]. Admission, lane planning and
-/// round-robin assignment are identical; each lane drains its queries
-/// through pooled per-algorithm states. Returns one [`AlgoOutcome`] per
-/// query, in input order; per-query outputs are bit-identical across
-/// policies, batch sizes and thread counts (the per-algorithm
-/// determinism contract, DESIGN.md Section 13).
-pub fn run_algo_batch(
+/// Run a batch of typed requests over a resident graph — the unified
+/// scheduler path. Returns one [`QueryResponse`] per request, in input
+/// order; the call itself is infallible (every failure mode is a
+/// per-request status).
+///
+/// Out-of-range roots (`root >= |V|`) answer [`QueryStatus::InvalidRoot`]
+/// at admission; isolated roots (degree 0) are *valid* and produce the
+/// trivial single-vertex traversal, exactly as a standalone run does.
+/// Deadlines are measured from batch entry; a request whose deadline
+/// passes before its lane reaches it answers
+/// [`QueryStatus::DeadlineExceeded`] without consuming pooled state.
+pub fn run_requests(
     rg: &ResidentGraph,
-    queries: &[AlgoQuery],
+    requests: &[QueryRequest],
     opts: &BatchOptions,
-) -> Result<Vec<AlgoOutcome>> {
+) -> Vec<QueryResponse> {
+    let submitted = Instant::now();
     let v = rg.num_vertices();
     // Admission: out-of-range roots fail their own slot only.
-    let mut outcomes: Vec<Option<AlgoOutcome>> = queries
+    let mut responses: Vec<Option<QueryResponse>> = requests
         .iter()
-        .map(|&q| {
-            q.root().filter(|&r| (r as usize) >= v).map(|r| AlgoOutcome::Failed {
-                query: q,
-                error: format!("root {r} out of range (graph has {v} vertices)"),
+        .map(|&req| {
+            req.algo.root().filter(|&r| (r as usize) >= v).map(|r| {
+                QueryResponse::failed(
+                    req,
+                    QueryStatus::InvalidRoot,
+                    format!("root {r} out of range (graph has {v} vertices)"),
+                    QueryTimings::default(),
+                )
             })
         })
         .collect();
-    let admitted: Vec<(usize, AlgoQuery)> = queries
+    let admitted: Vec<(usize, QueryRequest)> = requests
         .iter()
         .enumerate()
-        .filter(|&(i, _)| outcomes[i].is_none())
-        .map(|(i, &q)| (i, q))
+        .filter(|&(i, _)| responses[i].is_none())
+        .map(|(i, &req)| (i, req))
         .collect();
 
     if !admitted.is_empty() {
         let lane_budgets = plan_lanes(opts, admitted.len());
         let lanes = lane_budgets.len();
-        let mut assignment: Vec<Vec<(usize, AlgoQuery)>> = vec![Vec::new(); lanes];
+
+        // Deterministic round-robin assignment (results are per-query
+        // deterministic anyway; this just keeps lane contents stable).
+        let mut assignment: Vec<Vec<(usize, QueryRequest)>> = vec![Vec::new(); lanes];
         for (j, &q) in admitted.iter().enumerate() {
             assignment[j % lanes].push(q);
         }
@@ -376,31 +472,133 @@ pub fn run_algo_batch(
             .zip(lane_budgets)
             .map(|(lane, budget)| {
                 let exec = ExecutionMode::from_threads(budget);
-                move || -> Vec<(usize, Result<AlgoOutcome, String>)> {
+                move || -> Vec<(usize, QueryResponse)> {
                     lane.into_iter()
-                        .map(|(i, q)| (i, run_one_algo(rg, q, opts, exec)))
+                        .map(|(i, req)| (i, run_one_request(rg, req, opts, exec, submitted)))
                         .collect()
                 }
             })
             .collect();
 
         for lane_out in pool::run_tasks(lanes, tasks) {
-            for (i, res) in lane_out {
-                outcomes[i] = Some(match res {
-                    Ok(out) => out,
-                    Err(error) => AlgoOutcome::Failed { query: queries[i], error },
-                });
+            for (i, resp) in lane_out {
+                responses[i] = Some(resp);
             }
         }
     }
 
-    Ok(outcomes
+    responses
         .into_iter()
-        .map(|o| o.expect("every query produced an outcome"))
+        .map(|o| o.expect("every request produced a response"))
+        .collect()
+}
+
+/// Execute one request on a lane: arm the deadline token, run, classify.
+fn run_one_request(
+    rg: &ResidentGraph,
+    req: QueryRequest,
+    opts: &BatchOptions,
+    exec: ExecutionMode,
+    submitted: Instant,
+) -> QueryResponse {
+    let queue_s = submitted.elapsed().as_secs_f64();
+    let cancel = match req.deadline {
+        Some(d) => CancelToken::with_deadline(submitted + d),
+        None => CancelToken::none(),
+    };
+    // Deadline already blown while queued behind the lane's earlier
+    // queries: answer without consuming pooled state.
+    if cancel.is_cancelled() {
+        return QueryResponse::failed(
+            req,
+            QueryStatus::DeadlineExceeded,
+            "deadline expired before execution started".into(),
+            QueryTimings { queue_s, service_s: 0.0, total_s: queue_s, cache_hit: false },
+        );
+    }
+    let t0 = Instant::now();
+    let res = execute_query(rg, req.algo, req.options, opts, exec, cancel);
+    let service_s = t0.elapsed().as_secs_f64();
+    let timings =
+        QueryTimings { queue_s, service_s, total_s: queue_s + service_s, cache_hit: false };
+    match res {
+        Ok(output) => QueryResponse::done(req, Arc::new(output), timings),
+        Err(QueryError::Cancelled(e)) => {
+            QueryResponse::failed(req, QueryStatus::DeadlineExceeded, e, timings)
+        }
+        Err(QueryError::Engine(e)) => QueryResponse::failed(req, QueryStatus::Rejected, e, timings),
+    }
+}
+
+/// Run a mixed-algorithm batch over a resident graph — a thin adapter
+/// over [`run_requests`] (bare queries become default-option requests
+/// with no deadline). Returns one [`AlgoOutcome`] per query, in input
+/// order; per-query outputs are bit-identical across policies, batch
+/// sizes and thread counts (the per-algorithm determinism contract,
+/// DESIGN.md Section 13).
+pub fn run_algo_batch(
+    rg: &ResidentGraph,
+    queries: &[AlgoQuery],
+    opts: &BatchOptions,
+) -> Result<Vec<AlgoOutcome>> {
+    let requests: Vec<QueryRequest> = queries.iter().map(|&q| QueryRequest::new(q)).collect();
+    let responses = run_requests(rg, &requests, opts);
+    Ok(queries
+        .iter()
+        .zip(responses)
+        .map(|(&query, resp)| match resp.output {
+            Some(arc) => {
+                // Batch-path responses are never cache-shared, so the Arc
+                // unwraps without copying the O(V) arrays.
+                match Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone()) {
+                    AlgoOutput::Bfs(run) => AlgoOutcome::Bfs(Box::new(run)),
+                    AlgoOutput::Sssp(run) => AlgoOutcome::Sssp(Box::new(run)),
+                    AlgoOutput::Cc(run) => AlgoOutcome::Cc(Box::new(run)),
+                    AlgoOutput::Pagerank(run) => AlgoOutcome::Pagerank(Box::new(run)),
+                }
+            }
+            None => AlgoOutcome::Failed {
+                query,
+                error: resp.error.unwrap_or_else(|| format!("{:?}", resp.status)),
+            },
+        })
+        .collect())
+}
+
+/// Run a batch of BFS root queries over a resident graph. Returns one
+/// [`QueryOutcome`] per input root, in input order.
+///
+/// Out-of-range roots (`root >= |V|`) are rejected cleanly at admission;
+/// isolated roots (degree 0) are *valid* and produce the trivial
+/// single-vertex traversal, exactly as a standalone run does.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `run_requests` (typed requests) or `run_algo_batch`; \
+            this BFS-only wrapper will be removed next release"
+)]
+pub fn run_batch(
+    rg: &ResidentGraph,
+    roots: &[u32],
+    opts: &BatchOptions,
+) -> Result<Vec<QueryOutcome>> {
+    let queries: Vec<AlgoQuery> = roots.iter().map(|&root| AlgoQuery::Bfs { root }).collect();
+    let outcomes = run_algo_batch(rg, &queries, opts)?;
+    Ok(roots
+        .iter()
+        .zip(outcomes)
+        .map(|(&root, o)| match o {
+            AlgoOutcome::Bfs(run) => QueryOutcome::Complete(run),
+            AlgoOutcome::Failed { error, .. } => QueryOutcome::Failed { root, error },
+            other => QueryOutcome::Failed {
+                root,
+                error: format!("BFS query answered with a non-BFS output: {other:?}"),
+            },
+        })
         .collect())
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // `run_batch` keeps its regression coverage until removal
 mod tests {
     use super::*;
     use crate::graph::generator::{kronecker, GeneratorConfig};
@@ -470,6 +668,7 @@ mod tests {
     fn empty_batch_is_fine() {
         let rg = resident(0);
         assert!(run_batch(&rg, &[], &BatchOptions::default()).unwrap().is_empty());
+        assert!(run_requests(&rg, &[], &BatchOptions::default()).is_empty());
     }
 
     #[test]
@@ -554,5 +753,68 @@ mod tests {
             other => panic!("expected rejection, got {other:?}"),
         }
         assert!(out[1].is_complete(), "whole-graph query unaffected");
+    }
+
+    #[test]
+    fn typed_requests_answer_per_request_statuses() {
+        let rg = resident(0);
+        let v = rg.num_vertices() as u32;
+        let reqs = [
+            QueryRequest::new(AlgoQuery::Bfs { root: 0 }),
+            QueryRequest::new(AlgoQuery::Bfs { root: v + 3 }),
+            QueryRequest::new(AlgoQuery::Sssp { root: 1 })
+                .with_options(AlgoOptions::Sssp { delta: 4 }),
+        ];
+        let out = run_requests(&rg, &reqs, &BatchOptions::default());
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].status, QueryStatus::Done);
+        assert!(matches!(out[0].output(), Some(AlgoOutput::Bfs(_))));
+        assert!(out[0].timings.total_s >= out[0].timings.service_s);
+        assert_eq!(out[1].status, QueryStatus::InvalidRoot);
+        assert!(out[1].error.as_deref().unwrap().contains("out of range"));
+        assert_eq!(out[2].status, QueryStatus::Done);
+        assert!(matches!(out[2].output(), Some(AlgoOutput::Sssp(_))));
+    }
+
+    #[test]
+    fn zero_deadline_is_exceeded_and_releases_pool_state() {
+        let rg = resident(0);
+        // Warm the pool so the deadline path would have a state to poison
+        // if it mishandled release.
+        let warm = [QueryRequest::new(AlgoQuery::Bfs { root: 0 })];
+        run_requests(&rg, &warm, &BatchOptions::default());
+        let idle_before = rg.states.stats().idle;
+        let reqs = [
+            QueryRequest::new(AlgoQuery::Bfs { root: 0 }).with_deadline(Duration::ZERO),
+            QueryRequest::new(AlgoQuery::Bfs { root: 1 }),
+        ];
+        let out = run_requests(&rg, &reqs, &BatchOptions::default());
+        assert_eq!(out[0].status, QueryStatus::DeadlineExceeded);
+        assert!(out[0].output.is_none());
+        assert_eq!(out[1].status, QueryStatus::Done, "deadline miss is per-request");
+        let st = rg.states.stats();
+        assert_eq!(st.idle, st.created, "no pooled state leaked");
+        assert!(st.idle >= idle_before);
+    }
+
+    #[test]
+    fn per_request_options_differ_within_one_batch() {
+        let rg = resident(0);
+        let coarse = QueryRequest::new(AlgoQuery::Sssp { root: 0 })
+            .with_options(AlgoOptions::Sssp { delta: 1 });
+        let fine = QueryRequest::new(AlgoQuery::Sssp { root: 0 })
+            .with_options(AlgoOptions::Sssp { delta: 1 << 20 });
+        let out = run_requests(&rg, &[coarse, fine], &BatchOptions::default());
+        let (a, b) = match (out[0].output(), out[1].output()) {
+            (Some(AlgoOutput::Sssp(a)), Some(AlgoOutput::Sssp(b))) => (a, b),
+            other => panic!("expected two SSSP outputs, got {other:?}"),
+        };
+        assert_eq!(a.dist, b.dist, "distances are Δ-invariant");
+        assert!(
+            a.rounds > b.rounds,
+            "Δ=1 drains many more buckets than one giant bucket ({} vs {})",
+            a.rounds,
+            b.rounds
+        );
     }
 }

@@ -1,0 +1,600 @@
+//! The concurrent serving front-end: a multi-producer submission queue
+//! feeding a fixed set of worker lanes over the shared scoped-thread
+//! pool, with admission control, per-query deadlines, and a hot-root
+//! result cache (DESIGN.md Section 14).
+//!
+//! Contrast with [`run_requests`](super::scheduler::run_requests): the
+//! batch scheduler sees its whole workload up front and round-robins it;
+//! the server runs *open-loop* — producers submit whenever they like,
+//! and three mechanisms keep an overloaded session stable:
+//!
+//! * **Admission control**: the submission queue is bounded
+//!   ([`ServeOptions::queue_depth`]); beyond it, submissions answer
+//!   [`QueryStatus::Rejected`] immediately instead of queueing without
+//!   bound. Past saturation, rejections absorb the excess offered load
+//!   while the latency of *admitted* queries stays bounded by
+//!   `queue_depth × service time`.
+//! * **Deadlines**: each request's deadline (its own, or the session
+//!   default) arms a [`CancelToken`] checked at superstep barriers; an
+//!   expired query stops in O(1 superstep), drains its frontiers, and
+//!   releases its pooled state recyclable — an abandoned query costs
+//!   O(touched), not a poisoned O(V) wipe.
+//! * **Hot-root cache**: completed outputs are memoized per graph under
+//!   a key covering the query and every result-affecting config knob.
+//!   Repeated roots — the common case on social-graph workloads — are
+//!   answered from the memo in O(1). Thread counts and execution mode
+//!   are deliberately *not* in the key: results are bit-identical across
+//!   them (Section 11), so a cached answer is indistinguishable from a
+//!   recomputed one.
+//!
+//! Every submission gets exactly one [`QueryResponse`]; the report lists
+//! them in submission order, so serving is order-invariant at the result
+//! level no matter which lane answered which query.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bfs::PolicyKind;
+use crate::engine::{CancelToken, CommMode, ExecutionMode};
+use crate::metrics::{ServeCounters, ServeCounts};
+use crate::util::pool;
+
+use super::registry::ResidentGraph;
+use super::scheduler::{
+    execute_query, plan_lanes, AlgoOptions, AlgoOutput, AlgoQuery, BatchOptions, QueryError,
+    QueryRequest, QueryResponse, QueryStatus, QueryTimings,
+};
+
+/// Serving-session knobs, layered over the batch-level scheduling knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Lane planning and per-query thread budgets (the lane count is
+    /// `plan_lanes(batch, batch.max_concurrency)` — fixed for the
+    /// session, since an open-loop server cannot know its batch size).
+    pub batch: BatchOptions,
+    /// Admission bound: a submission finding this many queries already
+    /// queued is rejected (`Overloaded`) instead of enqueued.
+    pub queue_depth: usize,
+    /// Hot-root cache capacity in entries (LRU beyond it); 0 disables
+    /// caching entirely.
+    pub cache_capacity: usize,
+    /// Deadline applied to requests that do not carry their own.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            batch: BatchOptions::default(),
+            queue_depth: 64,
+            cache_capacity: 64,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Everything one serving session produced.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// One response per submission, in submission order.
+    pub responses: Vec<QueryResponse>,
+    /// Session counter snapshot (admission, completion, cache traffic).
+    pub counts: ServeCounts,
+    /// Wall-clock of the whole session (producer plus queue drain).
+    pub wall: Duration,
+}
+
+/// Cache key: the query plus every batch-level knob that affects the
+/// *result* (direction policy, comm mode). Thread budgets and execution
+/// mode are excluded on purpose — outputs are bit-identical across them
+/// (DESIGN.md Section 11), which is exactly what makes the memo sound.
+/// Floats are keyed by bit pattern, so distinct-but-equal configs can
+/// only ever miss (recompute), never alias to a wrong hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct CacheKey {
+    algo: u8,
+    root: u32,
+    opt: [u64; 3],
+    policy: [u64; 3],
+    comm: CommMode,
+}
+
+fn cache_key(algo: AlgoQuery, options: AlgoOptions, batch: &BatchOptions) -> CacheKey {
+    let (tag, root) = match algo {
+        AlgoQuery::Bfs { root } => (0u8, root),
+        AlgoQuery::Sssp { root } => (1, root),
+        AlgoQuery::Cc => (2, 0),
+        AlgoQuery::Pagerank => (3, 0),
+    };
+    let opt = match options {
+        AlgoOptions::Bfs | AlgoOptions::Cc => [0, 0, 0],
+        AlgoOptions::Sssp { delta } => [delta, 0, 0],
+        AlgoOptions::Pagerank { damping, iters, tol } => {
+            [damping.to_bits(), u64::from(iters), tol.to_bits()]
+        }
+    };
+    let policy = match batch.bfs_policy {
+        PolicyKind::AlwaysTopDown => [0, 0, 0],
+        PolicyKind::DirectionOptimized { alpha, bu_steps } => {
+            [1, alpha.to_bits(), u64::from(bu_steps)]
+        }
+    };
+    CacheKey { algo: tag, root, opt, policy, comm: batch.comm_mode }
+}
+
+struct CacheEntry {
+    key: CacheKey,
+    output: Arc<AlgoOutput>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    entries: Vec<CacheEntry>,
+    tick: u64,
+}
+
+/// Per-graph hot-root result memo with LRU eviction. Lives on the
+/// [`ResidentGraph`] so every session over one graph shares it, and so
+/// the registry can invalidate it wholesale on swap/evict. A linear scan
+/// over a few dozen entries is cheaper here than hashing: capacities are
+/// small by design (the memo holds O(V) outputs).
+#[derive(Default)]
+pub struct ResultCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl ResultCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resident entry count (the serve CLI and tests observe this).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("result cache poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wholesale invalidation — the registry calls this when the graph
+    /// is evicted or swapped, so stale results cannot outlive the data
+    /// they were computed from.
+    pub fn clear(&self) {
+        self.inner.lock().expect("result cache poisoned").entries.clear();
+    }
+
+    fn get(&self, key: &CacheKey) -> Option<Arc<AlgoOutput>> {
+        let mut inner = self.inner.lock().expect("result cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner.entries.iter_mut().find(|e| &e.key == key)?;
+        e.last_used = tick;
+        Some(Arc::clone(&e.output))
+    }
+
+    fn insert(&self, key: CacheKey, output: Arc<AlgoOutput>, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("result cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+            // Two lanes raced the same cold key; either output is the
+            // same bits (determinism), keep the newer Arc.
+            e.output = output;
+            e.last_used = tick;
+            return;
+        }
+        while inner.entries.len() >= capacity {
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("capacity > 0, so the full cache is non-empty");
+            inner.entries.swap_remove(lru);
+        }
+        inner.entries.push(CacheEntry { key, output, last_used: tick });
+    }
+}
+
+/// One queued query awaiting a lane.
+struct Job {
+    id: u64,
+    request: QueryRequest,
+    submitted: Instant,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Shared state of one serving session.
+struct Session<'g> {
+    rg: &'g ResidentGraph,
+    opts: ServeOptions,
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+    next_id: AtomicU64,
+    counters: ServeCounters,
+    responses: Mutex<Vec<(u64, QueryResponse)>>,
+}
+
+/// The producer's handle into a running session: submit requests, get a
+/// submission id back (responses are listed in id = submission order).
+pub struct Submitter<'a, 'g> {
+    session: &'a Session<'g>,
+}
+
+impl Submitter<'_, '_> {
+    /// Submit one request. Never blocks on query execution: invalid
+    /// roots and overload are answered immediately; everything else is
+    /// enqueued for the lanes. Returns the submission id.
+    pub fn submit(&self, request: QueryRequest) -> u64 {
+        self.session.submit(request)
+    }
+}
+
+impl<'g> Session<'g> {
+    fn new(rg: &'g ResidentGraph, opts: ServeOptions) -> Self {
+        Self {
+            rg,
+            opts,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+            next_id: AtomicU64::new(0),
+            counters: ServeCounters::default(),
+            responses: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn respond(&self, id: u64, resp: QueryResponse) {
+        self.responses.lock().expect("serve responses poisoned").push((id, resp));
+    }
+
+    fn submit(&self, mut request: QueryRequest) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        if request.deadline.is_none() {
+            request.deadline = self.opts.default_deadline;
+        }
+        // Root validation at admission — cheap, and it keeps invalid
+        // queries from occupying queue slots.
+        let v = self.rg.num_vertices();
+        if let Some(r) = request.algo.root() {
+            if r as usize >= v {
+                self.counters.invalid_root.fetch_add(1, Ordering::Relaxed);
+                self.respond(
+                    id,
+                    QueryResponse::failed(
+                        request,
+                        QueryStatus::InvalidRoot,
+                        format!("root {r} out of range (graph has {v} vertices)"),
+                        QueryTimings::default(),
+                    ),
+                );
+                return id;
+            }
+        }
+        {
+            let mut q = self.queue.lock().expect("serve queue poisoned");
+            if !q.closed && q.jobs.len() < self.opts.queue_depth {
+                q.jobs.push_back(Job { id, request, submitted: Instant::now() });
+                self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                self.cond.notify_one();
+                return id;
+            }
+        }
+        self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+        self.respond(
+            id,
+            QueryResponse::failed(
+                request,
+                QueryStatus::Rejected,
+                format!("overloaded: queue depth {} reached", self.opts.queue_depth),
+                QueryTimings::default(),
+            ),
+        );
+        id
+    }
+
+    fn close(&self) {
+        self.queue.lock().expect("serve queue poisoned").closed = true;
+        self.cond.notify_all();
+    }
+
+    /// One lane's life: pop, execute, respond, until closed and drained.
+    fn lane_worker(&self, exec: ExecutionMode) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().expect("serve queue poisoned");
+                loop {
+                    if let Some(job) = q.jobs.pop_front() {
+                        break Some(job);
+                    }
+                    if q.closed {
+                        break None;
+                    }
+                    q = self.cond.wait(q).expect("serve queue poisoned");
+                }
+            };
+            let Some(job) = job else { return };
+            let resp = self.process(job.request, job.submitted, exec);
+            self.respond(job.id, resp);
+        }
+    }
+
+    /// Execute one admitted query on a lane: deadline check, cache
+    /// lookup, then the shared per-query executor.
+    fn process(&self, req: QueryRequest, submitted: Instant, exec: ExecutionMode) -> QueryResponse {
+        let queue_s = submitted.elapsed().as_secs_f64();
+        let cancel = match req.deadline {
+            Some(d) => CancelToken::with_deadline(submitted + d),
+            None => CancelToken::none(),
+        };
+        // Expired while queued: answer without consuming pooled state.
+        if cancel.is_cancelled() {
+            self.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            return QueryResponse::failed(
+                req,
+                QueryStatus::DeadlineExceeded,
+                "deadline expired while queued".into(),
+                QueryTimings { queue_s, service_s: 0.0, total_s: queue_s, cache_hit: false },
+            );
+        }
+        let caching = self.opts.cache_capacity > 0;
+        let key = cache_key(req.algo, req.options, &self.opts.batch);
+        let t0 = Instant::now();
+        if caching {
+            if let Some(output) = self.rg.cache.get(&key) {
+                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.done.fetch_add(1, Ordering::Relaxed);
+                let service_s = t0.elapsed().as_secs_f64();
+                let timings = QueryTimings {
+                    queue_s,
+                    service_s,
+                    total_s: queue_s + service_s,
+                    cache_hit: true,
+                };
+                return QueryResponse::done(req, output, timings);
+            }
+            self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let res = execute_query(self.rg, req.algo, req.options, &self.opts.batch, exec, cancel);
+        let service_s = t0.elapsed().as_secs_f64();
+        let timings =
+            QueryTimings { queue_s, service_s, total_s: queue_s + service_s, cache_hit: false };
+        match res {
+            Ok(output) => {
+                let output = Arc::new(output);
+                if caching {
+                    self.rg.cache.insert(key, Arc::clone(&output), self.opts.cache_capacity);
+                }
+                self.counters.done.fetch_add(1, Ordering::Relaxed);
+                QueryResponse::done(req, output, timings)
+            }
+            Err(QueryError::Cancelled(e)) => {
+                self.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                QueryResponse::failed(req, QueryStatus::DeadlineExceeded, e, timings)
+            }
+            Err(QueryError::Engine(e)) => {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                QueryResponse::failed(req, QueryStatus::Rejected, e, timings)
+            }
+        }
+    }
+}
+
+/// Run one serving session: spawn the worker lanes plus the caller's
+/// producer on the scoped pool, let the producer submit freely, drain
+/// the queue after it returns, and report every response in submission
+/// order.
+///
+/// The producer runs concurrently with the lanes (open-loop: submission
+/// never waits for execution). When it returns, the session closes —
+/// already-admitted queries still complete; nothing new is admitted.
+pub fn serve_session<F>(rg: &ResidentGraph, opts: &ServeOptions, producer: F) -> ServeReport
+where
+    F: FnOnce(&Submitter) + Send,
+{
+    let t0 = Instant::now();
+    let session = Session::new(rg, *opts);
+    {
+        let session = &session;
+        let lane_budgets = plan_lanes(&opts.batch, opts.batch.max_concurrency.max(1));
+        let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(lane_budgets.len() + 1);
+        tasks.push(Box::new(move || {
+            producer(&Submitter { session });
+            session.close();
+        }));
+        for budget in lane_budgets {
+            let exec = ExecutionMode::from_threads(budget);
+            tasks.push(Box::new(move || session.lane_worker(exec)));
+        }
+        // One worker per task: lanes block on the queue until the
+        // producer closes it, so all tasks must run concurrently.
+        pool::run_tasks(tasks.len(), tasks);
+    }
+    let mut responses = session.responses.into_inner().expect("serve responses poisoned");
+    responses.sort_by_key(|&(id, _)| id);
+    ServeReport {
+        responses: responses.into_iter().map(|(_, r)| r).collect(),
+        counts: session.counters.snapshot(),
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_csr;
+    use crate::graph::generator::{kronecker, GeneratorConfig};
+    use crate::partition::{HardwareConfig, LayoutOptions};
+
+    fn resident() -> ResidentGraph {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(8, 5)));
+        let hw = HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        ResidentGraph::build("t", g, &hw, &LayoutOptions::paper(), 1)
+    }
+
+    fn bfs(root: u32) -> QueryRequest {
+        QueryRequest::new(AlgoQuery::Bfs { root })
+    }
+
+    #[test]
+    fn session_answers_every_submission_in_order() {
+        let rg = resident();
+        let report = serve_session(&rg, &ServeOptions::default(), |s| {
+            for root in [0u32, 5, 9] {
+                s.submit(bfs(root));
+            }
+        });
+        assert_eq!(report.responses.len(), 3);
+        for (resp, root) in report.responses.iter().zip([0u32, 5, 9]) {
+            assert_eq!(resp.status, QueryStatus::Done);
+            assert_eq!(resp.request.algo, AlgoQuery::Bfs { root });
+        }
+        assert_eq!(report.counts.done, 3);
+        assert_eq!(report.counts.admitted, 3);
+    }
+
+    #[test]
+    fn invalid_roots_are_isolated_per_submission() {
+        let rg = resident();
+        let v = rg.num_vertices() as u32;
+        let report = serve_session(&rg, &ServeOptions::default(), |s| {
+            s.submit(bfs(0));
+            s.submit(bfs(v + 1));
+            s.submit(bfs(1));
+        });
+        let statuses: Vec<QueryStatus> = report.responses.iter().map(|r| r.status).collect();
+        let expect = vec![QueryStatus::Done, QueryStatus::InvalidRoot, QueryStatus::Done];
+        assert_eq!(statuses, expect);
+        assert_eq!(report.counts.invalid_root, 1);
+        assert_eq!(report.counts.done, 2);
+    }
+
+    #[test]
+    fn zero_queue_depth_rejects_everything() {
+        let rg = resident();
+        let opts = ServeOptions { queue_depth: 0, ..Default::default() };
+        let report = serve_session(&rg, &opts, |s| {
+            s.submit(bfs(0));
+            s.submit(bfs(1));
+        });
+        assert!(report.responses.iter().all(|r| r.status == QueryStatus::Rejected));
+        assert_eq!(report.counts.rejected, 2);
+        assert_eq!(report.counts.admitted, 0);
+        assert!((report.counts.rejection_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_root_hits_the_cache_with_identical_output() {
+        let rg = resident();
+        let opts = ServeOptions {
+            batch: BatchOptions { threads: 1, max_concurrency: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let report = serve_session(&rg, &opts, |s| {
+            s.submit(bfs(3));
+            s.submit(bfs(3));
+        });
+        assert!(!report.responses[0].timings.cache_hit);
+        assert!(report.responses[1].timings.cache_hit, "single lane: repeat must hit");
+        let (a, b) = match (report.responses[0].output(), report.responses[1].output()) {
+            (Some(AlgoOutput::Bfs(a)), Some(AlgoOutput::Bfs(b))) => (a, b),
+            other => panic!("expected two BFS outputs, got {other:?}"),
+        };
+        assert_eq!(a.depth, b.depth);
+        assert_eq!(a.parent, b.parent);
+        assert_eq!(report.counts.cache_hits, 1);
+        assert_eq!(report.counts.cache_misses, 1);
+        assert_eq!(rg.cache.len(), 1);
+    }
+
+    #[test]
+    fn cache_capacity_zero_disables_memoization() {
+        let rg = resident();
+        let opts = ServeOptions {
+            batch: BatchOptions { threads: 1, max_concurrency: 1, ..Default::default() },
+            cache_capacity: 0,
+            ..Default::default()
+        };
+        let report = serve_session(&rg, &opts, |s| {
+            s.submit(bfs(3));
+            s.submit(bfs(3));
+        });
+        assert!(report.responses.iter().all(|r| !r.timings.cache_hit));
+        assert_eq!(report.counts.cache_hits + report.counts.cache_misses, 0);
+        assert!(rg.cache.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_key() {
+        let cache = ResultCache::new();
+        let batch = BatchOptions::default();
+        let out = Arc::new(AlgoOutput::Cc(crate::algo::CcRun {
+            labels: vec![0],
+            components: 1,
+            levels: Vec::new(),
+            rounds: 0,
+            wall: Duration::ZERO,
+        }));
+        let key = |root| cache_key(AlgoQuery::Bfs { root }, AlgoOptions::Bfs, &batch);
+        cache.insert(key(0), Arc::clone(&out), 2);
+        cache.insert(key(1), Arc::clone(&out), 2);
+        assert!(cache.get(&key(0)).is_some(), "freshen key 0");
+        cache.insert(key(2), Arc::clone(&out), 2);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key(1)).is_none(), "key 1 was the LRU");
+        assert!(cache.get(&key(0)).is_some());
+        assert!(cache.get(&key(2)).is_some());
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn distinct_configs_key_separately() {
+        let a = cache_key(
+            AlgoQuery::Sssp { root: 1 },
+            AlgoOptions::Sssp { delta: 8 },
+            &BatchOptions::default(),
+        );
+        let b = cache_key(
+            AlgoQuery::Sssp { root: 1 },
+            AlgoOptions::Sssp { delta: 16 },
+            &BatchOptions::default(),
+        );
+        assert_ne!(a, b, "Δ is result-affecting for round counts");
+        let td = BatchOptions { bfs_policy: PolicyKind::AlwaysTopDown, ..Default::default() };
+        let c = cache_key(AlgoQuery::Bfs { root: 1 }, AlgoOptions::Bfs, &BatchOptions::default());
+        let d = cache_key(AlgoQuery::Bfs { root: 1 }, AlgoOptions::Bfs, &td);
+        assert_ne!(c, d, "direction policy changes level schedules");
+        let e = cache_key(
+            AlgoQuery::Bfs { root: 1 },
+            AlgoOptions::Bfs,
+            &BatchOptions { threads: 7, max_concurrency: 3, ..Default::default() },
+        );
+        assert_eq!(c, e, "thread budgets are result-invariant, so they share a key");
+    }
+
+    #[test]
+    fn default_deadline_zero_expires_queued_queries() {
+        let rg = resident();
+        let opts = ServeOptions { default_deadline: Some(Duration::ZERO), ..Default::default() };
+        let report = serve_session(&rg, &opts, |s| {
+            s.submit(bfs(0));
+        });
+        assert_eq!(report.responses[0].status, QueryStatus::DeadlineExceeded);
+        assert_eq!(report.counts.deadline_exceeded, 1);
+        let st = rg.states.stats();
+        assert_eq!(st.idle, st.created, "no pooled state consumed or leaked");
+    }
+}

@@ -1,0 +1,252 @@
+//! Serving-front-end equivalence (DESIGN.md Section 14): the typed
+//! concurrent session must be a transparent wrapper around the engine —
+//! no knob of the serving layer (result cache, lane count, schedule
+//! policy, arrival order, co-submitted failures, expired deadlines) may
+//! change a completed query's bits relative to a standalone run.
+//!
+//! Families under test: cached vs uncached vs standalone bit-equality;
+//! invariance to lane count / policy / arrival order; per-query failure
+//! isolation in a mixed valid/invalid/expired stream (the regression net
+//! for the `serve` stdin loop, which used to abort the whole session on
+//! the first bad query); cache invalidation on registry swap; and the
+//! pooled-state lifecycle under expired deadlines (nothing leaks,
+//! serving recovers bit-identically).
+
+use std::time::Duration;
+
+use totem_do::bfs::{BfsRun, HybridConfig, HybridRunner};
+use totem_do::engine::SimAccelerator;
+use totem_do::graph::build_csr;
+use totem_do::graph::generator::{kronecker, GeneratorConfig};
+use totem_do::metrics;
+use totem_do::partition::{HardwareConfig, LayoutOptions};
+use totem_do::service::{
+    serve_session, AlgoOutput, AlgoQuery, BatchOptions, GraphRegistry, QueryRequest, QueryResponse,
+    QueryStatus, ResidentGraph, SchedulePolicy, ServeOptions,
+};
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 24, gpu_max_degree: 32 }
+}
+
+fn resident(scale: u32, seed: u64, cfg: &HardwareConfig) -> ResidentGraph {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(scale, seed)));
+    ResidentGraph::build("g", g, cfg, &LayoutOptions::paper(), 1)
+}
+
+/// Standalone reference: a fresh runner + fresh state, exactly what one
+/// `cmd_bfs` invocation does.
+fn standalone(rg: &ResidentGraph, root: u32) -> BfsRun {
+    let mut sim = (rg.hw.gpus > 0)
+        .then(|| SimAccelerator::new(rg.pg.parts.len(), rg.num_vertices()));
+    let cfg = HybridConfig::default();
+    let mut runner = HybridRunner::new(&rg.pg, cfg, sim.as_mut()).unwrap();
+    runner.run(root).unwrap()
+}
+
+fn bfs_out(resp: &QueryResponse) -> &BfsRun {
+    match resp.output() {
+        Some(AlgoOutput::Bfs(run)) => run,
+        other => panic!("expected a BFS completion, got {other:?} ({:?})", resp.status),
+    }
+}
+
+fn assert_same_run(reference: &BfsRun, got: &BfsRun, what: &str) {
+    assert_eq!(reference.root, got.root, "{what}");
+    assert_eq!(reference.depth, got.depth, "{what}: level assignments diverge");
+    assert_eq!(reference.parent, got.parent, "{what}: parent trees diverge");
+    assert_eq!(reference.levels, got.levels, "{what}: per-level stats diverge");
+    assert_eq!(reference.init_bytes, got.init_bytes, "{what}: modeled init bytes diverge");
+    assert_eq!(reference.aggregation_bytes, got.aggregation_bytes, "{what}");
+    assert_eq!(reference.reached_vertices, got.reached_vertices, "{what}");
+    assert_eq!(reference.reached_edge_endpoints, got.reached_edge_endpoints, "{what}");
+}
+
+fn bfs(root: u32) -> QueryRequest {
+    QueryRequest::new(AlgoQuery::Bfs { root })
+}
+
+fn serve_opts(lanes: usize, cache_capacity: usize) -> ServeOptions {
+    ServeOptions {
+        batch: BatchOptions { threads: lanes, max_concurrency: lanes, ..Default::default() },
+        queue_depth: 64,
+        cache_capacity,
+        default_deadline: None,
+    }
+}
+
+/// Memoization must be invisible in the bits: with the cache on, the
+/// second pass over the same roots answers from the memo (`cache_hit`
+/// set) yet every response — hit or miss, CPU-only or hybrid — equals
+/// the standalone reference exactly. With the cache off, nothing is
+/// memoized and the bits still match.
+#[test]
+fn cached_and_uncached_serving_bit_identical_to_standalone() {
+    for cfg_hw in [hw(2, 0), hw(2, 2)] {
+        let rg = resident(10, 11, &cfg_hw);
+        let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 4, 3);
+        let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+        for cache_capacity in [0usize, 64] {
+            // Single lane: FIFO service order, so pass 1 is all misses
+            // and pass 2 all hits — deterministically.
+            let opts = serve_opts(1, cache_capacity);
+            let report = serve_session(&rg, &opts, |s| {
+                for _pass in 0..2 {
+                    for &r in &roots {
+                        s.submit(bfs(r));
+                    }
+                }
+            });
+            assert_eq!(report.responses.len(), roots.len() * 2);
+            for (i, resp) in report.responses.iter().enumerate() {
+                let what = format!("{} cache_cap={cache_capacity} query {i}", cfg_hw.label());
+                assert_eq!(resp.status, QueryStatus::Done, "{what}");
+                let expect_hit = cache_capacity > 0 && i >= roots.len();
+                assert_eq!(resp.timings.cache_hit, expect_hit, "{what}: cache flag");
+                assert_same_run(&reference[i % roots.len()], bfs_out(resp), &what);
+            }
+            if cache_capacity == 0 {
+                assert!(rg.cache.is_empty(), "capacity 0 must disable memoization");
+            } else {
+                assert_eq!(rg.cache.len(), roots.len());
+            }
+            rg.cache.clear();
+        }
+    }
+}
+
+/// Lane count, schedule policy, and arrival order pick *which lane runs
+/// what when* — never what a query answers.
+#[test]
+fn serving_invariant_to_lane_count_policy_and_arrival_order() {
+    let rg = resident(10, 21, &hw(2, 2));
+    let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 8, 4);
+    let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+    for lanes in [1usize, 2, 4] {
+        for policy in [SchedulePolicy::Throughput, SchedulePolicy::Latency] {
+            for reversed in [false, true] {
+                let mut opts = serve_opts(lanes, 8);
+                opts.batch.policy = policy;
+                let order: Vec<usize> = if reversed {
+                    (0..roots.len()).rev().collect()
+                } else {
+                    (0..roots.len()).collect()
+                };
+                let report = serve_session(&rg, &opts, |s| {
+                    for &i in &order {
+                        s.submit(bfs(roots[i]));
+                    }
+                });
+                assert_eq!(report.counts.done, roots.len() as u64);
+                for (slot, resp) in report.responses.iter().enumerate() {
+                    let i = order[slot];
+                    let what = format!(
+                        "lanes={lanes} policy={policy:?} reversed={reversed} root {}",
+                        roots[i]
+                    );
+                    assert_same_run(&reference[i], bfs_out(resp), &what);
+                }
+            }
+        }
+    }
+}
+
+/// The `serve` regression (one bad query used to abort the session):
+/// invalid roots and expired deadlines answer their own slot only;
+/// every co-submitted valid query completes bit-identically.
+#[test]
+fn mixed_stream_isolates_failures_per_query() {
+    let rg = resident(9, 5, &hw(2, 0));
+    let n = rg.num_vertices() as u32;
+    let good = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 3, 8);
+    let reference: Vec<BfsRun> = good.iter().map(|&r| standalone(&rg, r)).collect();
+    let report = serve_session(&rg, &serve_opts(2, 0), |s| {
+        s.submit(bfs(good[0]));
+        s.submit(bfs(n + 7));
+        s.submit(bfs(good[1]));
+        s.submit(bfs(good[2]).with_deadline(Duration::ZERO));
+        s.submit(bfs(good[2]));
+    });
+    let r = &report.responses;
+    assert_eq!(r.len(), 5, "every submission is answered");
+    assert_eq!(r[1].status, QueryStatus::InvalidRoot);
+    let msg = r[1].error.as_deref().unwrap_or("");
+    assert!(msg.contains("out of range"), "{msg}");
+    assert_eq!(r[3].status, QueryStatus::DeadlineExceeded);
+    assert_same_run(&reference[0], bfs_out(&r[0]), "valid before the invalid root");
+    assert_same_run(&reference[1], bfs_out(&r[2]), "valid after the invalid root");
+    assert_same_run(&reference[2], bfs_out(&r[4]), "valid after the expired deadline");
+    assert_eq!(report.counts.done, 3);
+    assert_eq!(report.counts.invalid_root, 1);
+    assert_eq!(report.counts.deadline_exceeded, 1);
+}
+
+/// Registry swap is the cache-coherence point: the displaced graph's
+/// memo is cleared *before* the new Arc is visible, so a session still
+/// holding the old graph recomputes instead of serving stale bits.
+#[test]
+fn registry_swap_invalidates_the_displaced_cache() {
+    let registry = GraphRegistry::new();
+    let old = registry.insert(resident(9, 5, &hw(2, 0))).expect("fresh registry");
+    let root = metrics::sample_roots(old.num_vertices(), |v| old.degree(v), 1, 2)[0];
+    let opts = serve_opts(1, 8);
+    let report = serve_session(&old, &opts, |s| {
+        s.submit(bfs(root));
+        s.submit(bfs(root));
+    });
+    assert_eq!(report.counts.cache_hits, 1, "second ask was memoized");
+    assert_eq!(old.cache.len(), 1);
+
+    let fresh = registry.swap(resident(9, 6, &hw(2, 0)));
+    assert!(old.cache.is_empty(), "displaced entry's cache must be cleared on swap");
+    assert!(fresh.cache.is_empty(), "the replacement starts cold");
+
+    // A holder of the displaced Arc recomputes rather than serving the
+    // stale memo — and the recomputation still matches standalone.
+    let report = serve_session(&old, &opts, |s| {
+        s.submit(bfs(root));
+    });
+    assert!(!report.responses[0].timings.cache_hit, "stale memo must not resurface");
+    assert_same_run(&standalone(&old, root), bfs_out(&report.responses[0]), "post-swap recompute");
+}
+
+/// Deadline-expired queries must be free: answered without consuming
+/// pooled traversal state, leaking nothing, and leaving the pool able
+/// to serve bit-identical results afterwards.
+#[test]
+fn expired_deadlines_release_pool_state_and_serving_recovers() {
+    let rg = resident(9, 7, &hw(2, 0));
+    let roots = metrics::sample_roots(rg.num_vertices(), |v| rg.degree(v), 4, 2);
+    let reference: Vec<BfsRun> = roots.iter().map(|&r| standalone(&rg, r)).collect();
+    let normal = serve_opts(2, 0);
+
+    let report = serve_session(&rg, &normal, |s| {
+        for &r in &roots {
+            s.submit(bfs(r));
+        }
+    });
+    assert_eq!(report.counts.done, roots.len() as u64);
+    let created = rg.states.stats().created;
+    assert!(created >= 1, "the warm round allocated pooled state");
+    assert_eq!(rg.states.stats().idle, created, "all states parked after the round");
+
+    let expired = ServeOptions { default_deadline: Some(Duration::ZERO), ..normal };
+    let report = serve_session(&rg, &expired, |s| {
+        for &r in &roots {
+            s.submit(bfs(r));
+        }
+    });
+    assert!(report.responses.iter().all(|r| r.status == QueryStatus::DeadlineExceeded));
+    let st = rg.states.stats();
+    assert_eq!(st.created, created, "expired queries consumed no pooled state");
+    assert_eq!(st.idle, st.created, "nothing leaked");
+
+    let report = serve_session(&rg, &normal, |s| {
+        for &r in &roots {
+            s.submit(bfs(r));
+        }
+    });
+    for (i, resp) in report.responses.iter().enumerate() {
+        assert_same_run(&reference[i], bfs_out(resp), &format!("post-expiry query {i}"));
+    }
+}

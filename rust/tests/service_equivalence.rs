@@ -15,6 +15,12 @@
 //! tested thread ladder, so both legs exercise genuinely different
 //! schedules of the same bit-identical query stream.
 
+// This suite deliberately keeps exercising the deprecated `run_batch`
+// shim until its removal — it is the regression net proving the shim
+// stays bit-identical to the typed path it wraps. The typed-surface
+// equivalents live in `serve_equivalence.rs`.
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use totem_do::bfs::{BfsRun, HybridConfig, HybridRunner};
