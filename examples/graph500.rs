@@ -18,6 +18,9 @@
 // `run_requests` when the shim is removed.
 #![allow(deprecated)]
 
+// Bench/harness timing is host wall-clock measurement by definition.
+#![allow(clippy::disallowed_methods)]
+
 use anyhow::{anyhow, Result};
 
 use totem_do::bench_support as bs;

@@ -5,6 +5,9 @@
 //! programs, traversed edges for BFS) and iteration/round counts — the
 //! cross-algorithm cost picture the single-BFS figures cannot show.
 
+// Bench/harness timing is host wall-clock measurement by definition.
+#![allow(clippy::disallowed_methods)]
+
 use totem_do::bench_support as bs;
 use totem_do::partition::LayoutOptions;
 use totem_do::service::{run_algo_batch, AlgoOutcome, AlgoQuery, BatchOptions, ResidentGraph};

@@ -3,6 +3,9 @@
 //! their Sim mirror. This is the L1/L3 hot-path measurement used by the
 //! perf pass (EXPERIMENTS.md Section Perf).
 
+// Bench/harness timing is host wall-clock measurement by definition.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use totem_do::bench_support as bs;

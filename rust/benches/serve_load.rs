@@ -11,6 +11,9 @@
 //! the request mix is served from the result cache at memo-lookup
 //! latency, an order of magnitude under cold service.
 
+// Bench/harness timing is host wall-clock measurement by definition.
+#![allow(clippy::disallowed_methods)]
+
 use totem_do::bench_support as bs;
 use totem_do::service::{
     run_open_loop, run_requests, AlgoQuery, ArrivalProcess, BatchOptions, GraphRegistry,

@@ -11,6 +11,9 @@
 //! outputs are bit-identical in every row (the service determinism
 //! contract); only the schedule — and therefore queries/sec — changes.
 
+// Bench/harness timing is host wall-clock measurement by definition.
+#![allow(clippy::disallowed_methods)]
+
 use totem_do::bench_support as bs;
 use totem_do::metrics;
 use totem_do::runtime::DeviceModel;

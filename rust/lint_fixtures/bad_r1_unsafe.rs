@@ -1,0 +1,6 @@
+//! Known-bad fixture for R1: `unsafe` without `// SAFETY:`.
+
+pub fn first(xs: &[u32]) -> u32 {
+    // the bounds are fine, trust me
+    unsafe { *xs.get_unchecked(0) }
+}

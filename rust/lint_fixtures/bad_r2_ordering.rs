@@ -1,0 +1,7 @@
+//! Known-bad fixture for R2: memory ordering without `// ORDERING:`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn set(flag: &AtomicBool) {
+    flag.store(true, Ordering::SeqCst);
+}

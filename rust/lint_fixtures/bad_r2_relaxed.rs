@@ -1,0 +1,10 @@
+//! Known-bad fixture for R2's allowlist clause: `Relaxed` is annotated,
+//! but this path is not a counter-only allowlisted module — the
+//! violation must still fire.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(n: &AtomicU64) {
+    // ORDERING: Relaxed — just a counter (but this module isn't allowlisted).
+    n.fetch_add(1, Ordering::Relaxed);
+}

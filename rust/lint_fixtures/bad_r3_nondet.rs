@@ -1,0 +1,13 @@
+//! Known-bad fixture for R3: hash collection in a deterministic path
+//! (the lint runs over fixtures with `--assume-deterministic`) without
+//! `// NONDET-OK:`.
+
+use std::collections::HashMap;
+
+pub fn degree_histogram(degrees: &[u32]) -> HashMap<u32, u32> {
+    let mut h = HashMap::new();
+    for &d in degrees {
+        *h.entry(d).or_insert(0) += 1;
+    }
+    h
+}

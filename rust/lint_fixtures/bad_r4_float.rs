@@ -1,0 +1,7 @@
+//! Known-bad fixture for R4: float reduction in a deterministic path
+//! without a `// NONDET-OK:` note on iteration order.
+
+pub fn mass(ranks: &[f64]) -> f64 {
+    let total: f64 = ranks.iter().sum();
+    total
+}

@@ -1,0 +1,4 @@
+//! Known-bad fixture for R5: `#[allow(...)]` with no reason comment.
+
+#[allow(dead_code)]
+pub fn orphan() {}

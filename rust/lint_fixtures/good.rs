@@ -1,0 +1,32 @@
+//! Known-good fixture: every contract-relevant construct carries its
+//! annotation. Must lint clean even under `--assume-deterministic`.
+//! (Not compiled — lives outside `src/`, scanned only by the lint.)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn annotated_unsafe(xs: &[u32]) -> u32 {
+    // SAFETY: index 0 exists — caller guarantees xs is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+pub fn annotated_ordering(flag: &AtomicBool) -> bool {
+    // ORDERING: Acquire pairs with the Release store in the setter;
+    // observing true also publishes everything written before it.
+    flag.load(Ordering::Acquire)
+}
+
+pub fn annotated_clock() -> std::time::Duration {
+    // NONDET-OK: wall-clock used for reporting only; the measured value
+    // never feeds back into traversal output.
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}
+
+pub fn annotated_float_reduce(xs: &[f64]) -> f64 {
+    // NONDET-OK: slice iteration is index order — canonical and stable.
+    let total: f64 = xs.iter().sum();
+    total
+}
+
+#[allow(dead_code)] // exercised by the known-bad fixture suite only
+pub fn reasoned_allow() {}

@@ -136,6 +136,9 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
     /// Run the program to completion. Deterministic given the
     /// partitioning — including across [`ExecutionMode`]s.
     pub fn run(&mut self) -> Result<ProgramRun<P::Value>> {
+        // NONDET-OK: host wall-clock for the reported `wall` field only;
+        // no control-flow or output bit depends on it.
+        #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
         let t0 = std::time::Instant::now();
         let np = self.pg.parts.len();
         let v_total = self.pg.num_vertices;

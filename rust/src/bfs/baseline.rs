@@ -62,6 +62,9 @@ impl BaselineRun {
 
 /// Run a baseline BFS over the whole CSR in one address space.
 pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
+    // NONDET-OK: host wall-clock for the reported `wall` field only;
+    // no control-flow or output bit depends on it.
+    #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
     let t0 = std::time::Instant::now();
     let nv = g.num_vertices;
     let mut depth = vec![-1i32; nv];

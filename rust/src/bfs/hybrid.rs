@@ -217,6 +217,9 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// Run one BFS from `root`. Deterministic given the partitioning —
     /// including across [`ExecutionMode`]s.
     pub fn run(&mut self, root: u32) -> Result<BfsRun> {
+        // NONDET-OK: host wall-clock for the reported `wall` field only;
+        // no control-flow or output bit depends on it.
+        #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
         let t0 = std::time::Instant::now();
         let np = self.pg.parts.len();
         let v_total = self.pg.num_vertices;

@@ -1,0 +1,71 @@
+//! Determinism-contract lint gate (DESIGN.md Section 15).
+//!
+//! Usage:
+//!   contract_lint [--assume-deterministic] [PATH ...]
+//!
+//! With no PATH, lints the crate's own `src/` tree. Exits 0 when clean,
+//! 1 on violations, 2 on usage or IO errors. CI runs the bare form as a
+//! required gate and the flagged form against the known-bad fixtures.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use totem_do::lint::{lint_path, LintConfig};
+
+fn main() -> ExitCode {
+    let mut cfg = LintConfig::default();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--assume-deterministic" => cfg.assume_deterministic = true,
+            "--help" | "-h" => {
+                println!(
+                    "contract_lint [--assume-deterministic] [PATH ...]\n\
+                     Enforces the determinism contract (DESIGN.md Section 15):\n\
+                     R1 unsafe needs // SAFETY:   R2 Ordering::* needs // ORDERING:\n\
+                     R3 nondet sources need // NONDET-OK:   R4 float reductions too\n\
+                     R5 #[allow(...)] needs a reason comment.\n\
+                     Default PATH is this crate's src/ tree."
+                );
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("contract_lint: unknown flag `{flag}` (see --help)");
+                return ExitCode::from(2);
+            }
+            p => paths.push(PathBuf::from(p)),
+        }
+    }
+    if paths.is_empty() {
+        // Runtime env first (set by `cargo run`), compile-time fallback
+        // so the installed binary still finds its sources.
+        let manifest = std::env::var("CARGO_MANIFEST_DIR")
+            .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+        paths.push(PathBuf::from(manifest).join("src"));
+    }
+
+    let mut files = 0usize;
+    let mut violations = Vec::new();
+    for path in &paths {
+        match lint_path(path, &cfg) {
+            Ok((n, v)) => {
+                files += n;
+                violations.extend(v);
+            }
+            Err(e) => {
+                eprintln!("contract_lint: {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if violations.is_empty() {
+        println!("contract_lint: {files} file(s), 0 violations");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("contract_lint: {files} file(s), {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -12,6 +12,11 @@
 //! The default token is *free*: no allocation, every check a constant
 //! `None` test — standalone runs pay nothing for the serving tier.
 
+// Deadlines are genuine wall-clock policy: expiry timing is allowed to
+// vary per run, and cancellation lands only at superstep barriers where
+// output bits are unaffected (see `is_cancelled`).
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -60,6 +65,10 @@ impl CancelToken {
     /// Trip the token explicitly; all clones observe the cancellation.
     pub fn cancel(&self) {
         if let Some(inner) = &self.inner {
+            // ORDERING: Release — pairs with the Acquire load in
+            // `is_cancelled`, so a runner that observes the flag also
+            // observes everything the canceller wrote before tripping it
+            // (e.g. the reason recorded on the query slot).
             inner.cancelled.store(true, Ordering::Release);
         }
     }
@@ -67,13 +76,19 @@ impl CancelToken {
     /// True once the token is tripped or its deadline has passed. The
     /// runner calls this at every superstep barrier.
     pub fn is_cancelled(&self) -> bool {
-        match &self.inner {
-            None => false,
-            Some(inner) => {
-                inner.cancelled.load(Ordering::Acquire)
-                    || inner.deadline.is_some_and(|d| Instant::now() >= d)
-            }
+        let Some(inner) = &self.inner else {
+            return false;
+        };
+        // ORDERING: Acquire — pairs with the Release store in `cancel`;
+        // see there for the published-writes argument.
+        if inner.cancelled.load(Ordering::Acquire) {
+            return true;
         }
+        // NONDET-OK: the wall clock decides *whether* a query is
+        // abandoned, never *what* it computes — cancellation lands at a
+        // BSP barrier and a cancelled query produces no output, so timing
+        // variance cannot leak into traversal bits.
+        inner.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -101,9 +116,90 @@ mod tests {
 
     #[test]
     fn past_deadline_fires_without_explicit_cancel() {
+        // NONDET-OK: deadline arithmetic relative to the current instant;
+        // asserts policy (fires/doesn't), not output bits.
         let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
         assert!(t.is_cancelled());
+        // NONDET-OK: same — a deadline an hour out cannot have passed.
         let later = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
         assert!(!later.is_cancelled());
+    }
+
+    // --- cross-thread contract tests (runnable under Miri and TSan;
+    //     spin loops yield so Miri's scheduler makes progress) ---
+
+    #[test]
+    fn cancel_is_visible_across_threads() {
+        let t = CancelToken::new();
+        std::thread::scope(|s| {
+            let watcher = t.clone();
+            let handle = s.spawn(move || {
+                while !watcher.is_cancelled() {
+                    std::thread::yield_now();
+                }
+                true
+            });
+            t.cancel();
+            assert!(handle.join().expect("watcher thread"));
+        });
+    }
+
+    #[test]
+    fn double_cancel_is_idempotent() {
+        let t = CancelToken::new();
+        t.cancel();
+        assert!(t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled(), "second cancel must not reset the flag");
+        let c = t.clone();
+        c.cancel();
+        assert!(t.is_cancelled() && c.is_cancelled());
+    }
+
+    #[test]
+    fn concurrent_cancels_from_many_threads_settle_once() {
+        let t = CancelToken::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = t.clone();
+                s.spawn(move || {
+                    c.cancel();
+                    assert!(c.is_cancelled());
+                });
+            }
+        });
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_publishes_prior_writes() {
+        use std::cell::UnsafeCell;
+
+        struct Shared(UnsafeCell<u32>);
+        // SAFETY: the test provides the synchronization being validated —
+        // the writer mutates the cell strictly before `cancel()` (Release)
+        // and the reader touches it strictly after observing
+        // `is_cancelled()` (Acquire), so accesses never overlap.
+        unsafe impl Sync for Shared {}
+
+        let payload = Shared(UnsafeCell::new(0));
+        let t = CancelToken::new();
+        std::thread::scope(|s| {
+            let writer_token = t.clone();
+            let payload = &payload;
+            s.spawn(move || {
+                // SAFETY: no reader looks at the cell until the Release
+                // store in cancel() publishes this write (see Sync impl).
+                unsafe { *payload.0.get() = 42 };
+                writer_token.cancel();
+            });
+            while !t.is_cancelled() {
+                std::thread::yield_now();
+            }
+            // SAFETY: the Acquire load above observed the flag, so the
+            // writer's store to the cell happens-before this read.
+            let seen = unsafe { *payload.0.get() };
+            assert_eq!(seen, 42, "cancel must publish writes made before it");
+        });
     }
 }

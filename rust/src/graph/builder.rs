@@ -112,8 +112,13 @@ pub fn build_csr_par(el: &EdgeList, threads: usize) -> Csr {
                     if a == b {
                         continue;
                     }
+                    // ORDERING: Relaxed store — chunk-private cursor slots
+                    // are disjoint by construction (prefix-summed hists);
+                    // nothing reads col until run_tasks joins.
                     col_shared[cur[a as usize] as usize].store(b, Ordering::Relaxed);
                     cur[a as usize] += 1;
+                    // ORDERING: Relaxed store — same disjoint-slot argument
+                    // for the reverse edge.
                     col_shared[cur[b as usize] as usize].store(a, Ordering::Relaxed);
                     cur[b as usize] += 1;
                 }

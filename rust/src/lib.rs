@@ -19,6 +19,11 @@
 //! inventory (the hardware-substitution boundary, the parallel execution
 //! mode's deterministic-merge rule) and the experiment index.
 
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with its own `// SAFETY:` comment (contract rule R1,
+// DESIGN.md Section 15).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algo;
 pub mod cli;
 pub mod graph;
@@ -26,6 +31,7 @@ pub mod metrics;
 pub mod bench_support;
 pub mod bfs;
 pub mod engine;
+pub mod lint;
 pub mod partition;
 pub mod runtime;
 pub mod service;

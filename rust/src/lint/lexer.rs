@@ -1,0 +1,274 @@
+//! Comment/string-aware line lexer for the contract lint.
+//!
+//! Splits a Rust source file into per-line `(code, comment)` channel
+//! pairs: string and char-literal *contents* are blanked out of the code
+//! channel (a rule token inside a literal can never match), and comment
+//! text — line, doc, and possibly nested multi-line block comments — is
+//! routed to the comment channel (annotation tags are found wherever the
+//! author put them). No external parser crates: the pass must build in
+//! the offline/vendored workspace (DESIGN.md Section 15), so this is a
+//! small hand-rolled state machine rather than a syn dependency.
+//!
+//! Supported literal forms: `"..."` (with escapes and `\`-newline
+//! continuations), `r"..."`/`r#"..."#` raw strings, char literals
+//! including `'"'` and escaped forms, lifetimes (left in the code
+//! channel), and raw identifiers (`r#match` is code, not a raw string).
+
+/// One source line, split into its code and comment channels.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Line {
+    /// Code text with string/char-literal contents blanked out (literal
+    /// delimiters survive as `"` markers so the shape stays readable).
+    pub code: String,
+    /// Concatenated comment text appearing on the line (line, doc, and
+    /// block comments alike).
+    pub comment: String,
+}
+
+/// Lexer state that survives line breaks.
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Inside a block comment; Rust block comments nest, so track depth.
+    Block(u32),
+    /// Inside a `"..."` string literal.
+    Str,
+    /// Inside a raw string literal opened with this many `#`s.
+    RawStr(u32),
+}
+
+/// Lex `source` into per-line code/comment channel pairs. Lines are
+/// returned in file order; line `i` of the output is line `i + 1` of the
+/// file.
+pub fn lex(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut line = Line::default();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        if c == '\r' {
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied();
+        match mode {
+            Mode::Code => {
+                if c == '/' && next == Some('/') {
+                    // Line comment (also `///` and `//!`): the rest of
+                    // the line goes to the comment channel.
+                    i += 2;
+                    while i < chars.len() && chars[i] != '\n' {
+                        line.comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&chars, i) {
+                    match raw_str_hashes(&chars, i + 1) {
+                        Some(h) => {
+                            // `r"` / `r#"` ... : raw string opener. Skip
+                            // past `r`, the hashes, and the quote.
+                            line.code.push('"');
+                            mode = Mode::RawStr(h);
+                            i += 2 + h as usize;
+                        }
+                        None => {
+                            // Plain identifier starting with `r`, or a
+                            // raw identifier like `r#match`.
+                            line.code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    i = lex_quote(&chars, i, &mut line.code);
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped character — but never skip past a
+                    // line break (`\`-newline continuation), which the
+                    // top of the loop must see to keep line numbers true.
+                    match next {
+                        Some('\n') | Some('\r') => i += 1,
+                        _ => i += 2,
+                    }
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1; // blank out literal content
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1; // blank out literal content
+                }
+            }
+        }
+    }
+    if !line.code.is_empty() || !line.comment.is_empty() {
+        lines.push(line);
+    }
+    lines
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+/// At `j` (just past an `r`), count `#`s; `Some(n)` if a `"` follows
+/// them (a raw-string opener), `None` otherwise (identifier territory).
+fn raw_str_hashes(chars: &[char], j: usize) -> Option<u32> {
+    let mut k = j;
+    while chars.get(k) == Some(&'#') {
+        k += 1;
+    }
+    if chars.get(k) == Some(&'"') {
+        Some((k - j) as u32)
+    } else {
+        None
+    }
+}
+
+/// At `j` (just past a `"` inside a raw string), true when `hashes`
+/// closing `#`s follow.
+fn closes_raw(chars: &[char], j: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(j + k) == Some(&'#'))
+}
+
+/// Handle a `'` in code position: either a char literal (contents
+/// blanked, including the `'"'` case that would otherwise derail string
+/// detection) or a lifetime (left in the code channel). Returns the
+/// index to resume at.
+fn lex_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: skip the escape head, then scan to the
+        // closing quote (covers '\n', '\'', '\u{..}').
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        code.push('\'');
+        return (j + 1).min(chars.len());
+    }
+    if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        // Simple one-char literal like 'x' or '"'.
+        code.push('\'');
+        return i + 3;
+    }
+    // Lifetime (`'a`, `'_`, `'static`): keep the tick as code.
+    code.push('\'');
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_lines(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_route_to_the_comment_channel() {
+        let lines = lex("let x = 1; // SAFETY: fine\n// ORDERING: also fine\n");
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert!(lines[0].comment.contains("SAFETY: fine"));
+        assert_eq!(lines[1].code.trim(), "");
+        assert!(lines[1].comment.contains("ORDERING: also fine"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let lines = lex("let s = \"unsafe { Ordering::Relaxed }\";\n");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("Relaxed"));
+        assert!(lines[0].code.contains("let s ="));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_the_string() {
+        let lines = lex("let s = \"a\\\"unsafe\\\"b\"; let t = 1;\n");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked_and_raw_identifiers_are_not() {
+        let lines = lex("let s = r#\"unsafe \" quote\"#; let r#match = 1;\n");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("match = 1;"), "{}", lines[0].code);
+    }
+
+    #[test]
+    fn multiline_strings_and_block_comments_keep_line_numbers() {
+        let src = "let a = \"one\ntwo\";\n/* block\nunsafe in comment\n*/\nlet b = 2;\n";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 6);
+        assert!(lines[3].code.trim().is_empty());
+        assert!(lines[3].comment.contains("unsafe in comment"));
+        assert_eq!(lines[5].code.trim(), "let b = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let lines = code_lines("/* a /* b */ still comment */ let x = 1;\n");
+        assert_eq!(lines[0].trim(), "let x = 1;");
+    }
+
+    #[test]
+    fn char_literal_with_quote_does_not_open_a_string() {
+        let lines = lex("if c == '\"' { x(\"unsafe\"); }\n");
+        assert!(!lines[0].code.contains("unsafe"), "{}", lines[0].code);
+        assert!(lines[0].code.contains("if c =="));
+    }
+
+    #[test]
+    fn escaped_char_literals_and_lifetimes() {
+        let lines = lex("let c = '\\''; fn f<'a>(x: &'a str) {}\n");
+        assert!(lines[0].code.contains("fn f<'a>(x: &'a str)"), "{}", lines[0].code);
+    }
+
+    #[test]
+    fn last_line_without_newline_is_kept() {
+        let lines = lex("let x = 1;");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+    }
+}

@@ -1,0 +1,246 @@
+//! The five determinism-contract rules (DESIGN.md Section 15).
+//!
+//! Each rule walks the lexed line stream from [`super::lexer`] and emits
+//! [`Violation`]s. Matching is token-based on the code channel (ident
+//! boundaries on both sides, so `unsafe` never matches
+//! `unsafe_op_in_unsafe_fn`); annotations are searched in the comment
+//! channel of the flagged line and of the contiguous comment/attribute
+//! block immediately above it.
+
+use super::lexer::Line;
+use super::{LintConfig, Rule, Violation};
+
+/// Annotation tag for R1: justifies an `unsafe` block or fn.
+pub const TAG_SAFETY: &str = "SAFETY:";
+/// Annotation tag for R2: justifies a memory-ordering choice.
+pub const TAG_ORDERING: &str = "ORDERING:";
+/// Annotation tag for R3/R4: acknowledges a nondeterminism source.
+pub const TAG_NONDET: &str = "NONDET-OK:";
+
+/// The five memory orderings, paired with whether each is `Relaxed`
+/// (which carries the extra module-allowlist restriction).
+const ORDERING_TOKENS: [(&str, bool); 5] = [
+    ("Ordering::Relaxed", true),
+    ("Ordering::Acquire", false),
+    ("Ordering::Release", false),
+    ("Ordering::AcqRel", false),
+    ("Ordering::SeqCst", false),
+];
+
+/// Nondeterminism sources banned from deterministic paths (R3):
+/// hash collections iterate in RandomState order; clocks vary per run.
+const NONDET_TOKENS: [&str; 5] =
+    ["HashMap", "HashSet", "RandomState", "Instant::now", "SystemTime"];
+
+/// True when `needle` occurs in `hay` delimited by non-identifier
+/// characters on both sides. `::`-qualified needles work because `:` is
+/// not an identifier character.
+fn has_token(hay: &str, needle: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let left_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let right_ok = end == bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// True when line `idx` carries `tag` — in its own comment channel, or
+/// in the contiguous block of pure-comment / attribute lines directly
+/// above it. The upward walk stops at the first blank or code line, so
+/// an annotation can't act at a distance.
+fn annotated(lines: &[Line], idx: usize, tag: &str) -> bool {
+    if lines[idx].comment.contains(tag) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        let code = l.code.trim();
+        let pure_comment = code.is_empty() && !l.comment.is_empty();
+        let attribute = code.starts_with("#[") || code.starts_with("#![");
+        if !(pure_comment || attribute) {
+            return false;
+        }
+        if l.comment.contains(tag) {
+            return true;
+        }
+    }
+    false
+}
+
+fn violation(file: &str, idx: usize, rule: Rule, message: String) -> Violation {
+    Violation { file: file.to_string(), line: idx + 1, rule, message }
+}
+
+/// R1: every `unsafe` occurrence (block or fn) must carry `// SAFETY:`.
+pub fn check_unsafe(file: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        // `unsafe impl Send/Sync` is still an unsafe assertion — it
+        // needs the same justification, so no carve-out.
+        if !annotated(lines, idx, TAG_SAFETY) {
+            out.push(violation(
+                file,
+                idx,
+                Rule::R1Safety,
+                "`unsafe` without a `// SAFETY:` justification on or above the line".into(),
+            ));
+        }
+    }
+}
+
+/// R2: every `Ordering::*` use must carry `// ORDERING:`; `Relaxed` is
+/// additionally restricted to the counter-only module allowlist.
+pub fn check_ordering(file: &str, lines: &[Line], cfg: &LintConfig, out: &mut Vec<Violation>) {
+    for (idx, line) in lines.iter().enumerate() {
+        let mut any = false;
+        let mut relaxed = false;
+        for (token, is_relaxed) in ORDERING_TOKENS {
+            if has_token(&line.code, token) {
+                any = true;
+                relaxed |= is_relaxed;
+            }
+        }
+        if !any {
+            continue;
+        }
+        // One violation per line even if several orderings appear on it.
+        if !annotated(lines, idx, TAG_ORDERING) {
+            out.push(violation(
+                file,
+                idx,
+                Rule::R2Ordering,
+                "memory ordering without a `// ORDERING:` justification on or above the line"
+                    .into(),
+            ));
+        }
+        if relaxed && !cfg.relaxed_allowed(file) {
+            out.push(violation(
+                file,
+                idx,
+                Rule::R2Ordering,
+                "`Ordering::Relaxed` outside the counter-only allowlist (lint RELAXED_ALLOWLIST)"
+                    .into(),
+            ));
+        }
+    }
+}
+
+/// R3: hash collections and wall clocks are banned in deterministic
+/// paths unless `// NONDET-OK:` explains why the result can't leak into
+/// traversal output.
+pub fn check_nondet_sources(
+    file: &str,
+    lines: &[Line],
+    cfg: &LintConfig,
+    out: &mut Vec<Violation>,
+) {
+    if !cfg.is_deterministic(file) {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        for token in NONDET_TOKENS {
+            if has_token(&line.code, token) && !annotated(lines, idx, TAG_NONDET) {
+                out.push(violation(
+                    file,
+                    idx,
+                    Rule::R3NondetSource,
+                    format!("`{token}` in a deterministic path without a `// NONDET-OK:` reason"),
+                ));
+                break; // one violation per line
+            }
+        }
+    }
+}
+
+/// R4: float reductions in deterministic paths must be annotated —
+/// `.sum()`/`.fold(` over `f64`/`f32` is order-sensitive and threatens
+/// the PageRank bit-identity guarantee unless the iteration order is
+/// canonical. Heuristic: the float type and the reduction must appear on
+/// the same line (multi-line chains with the type ascription elsewhere
+/// are out of reach of a line lexer — documented limitation).
+pub fn check_float_reduce(file: &str, lines: &[Line], cfg: &LintConfig, out: &mut Vec<Violation>) {
+    if !cfg.is_deterministic(file) {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        let reduces = line.code.contains(".sum()") || line.code.contains(".fold(");
+        let floaty = has_token(&line.code, "f64") || has_token(&line.code, "f32");
+        if reduces && floaty && !annotated(lines, idx, TAG_NONDET) {
+            out.push(violation(
+                file,
+                idx,
+                Rule::R4FloatReduce,
+                "float reduction in a deterministic path without a `// NONDET-OK:` order note"
+                    .into(),
+            ));
+        }
+    }
+}
+
+/// R5: `#[allow(...)]` / `#![allow(...)]` must carry a reason comment on
+/// the same line or on the pure-comment line directly above.
+pub fn check_bare_allow(file: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.trim_start();
+        let is_allow = code.starts_with("#[allow(") || code.starts_with("#![allow(");
+        if !is_allow {
+            continue;
+        }
+        let same_line = !line.comment.trim().is_empty();
+        let above = idx > 0 && {
+            let prev = &lines[idx - 1];
+            prev.code.trim().is_empty() && !prev.comment.trim().is_empty()
+        };
+        if !(same_line || above) {
+            out.push(violation(
+                file,
+                idx,
+                Rule::R5BareAllow,
+                "`#[allow(...)]` without a reason comment (same line or directly above)".into(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_matching_respects_ident_boundaries() {
+        assert!(has_token("unsafe { x }", "unsafe"));
+        assert!(!has_token("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(has_token("load(Ordering::Relaxed)", "Ordering::Relaxed"));
+        assert!(!has_token("MyOrdering::Relaxedish", "Ordering::Relaxed"));
+        assert!(has_token("use std::sync::atomic::Ordering::Relaxed;", "Ordering::Relaxed"));
+    }
+
+    #[test]
+    fn annotation_walks_contiguous_comment_and_attribute_block() {
+        let src = "// SAFETY: fine\n#[inline]\nunsafe fn f() {}\n";
+        let lines = crate::lint::lexer::lex(src);
+        assert!(annotated(&lines, 2, TAG_SAFETY));
+    }
+
+    #[test]
+    fn annotation_does_not_cross_blank_or_code_lines() {
+        let src = "// SAFETY: stale\nlet x = 1;\nunsafe { y() };\n";
+        let lines = crate::lint::lexer::lex(src);
+        assert!(!annotated(&lines, 2, TAG_SAFETY));
+    }
+}

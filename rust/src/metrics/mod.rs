@@ -78,10 +78,51 @@ pub fn latency_summary(latencies: &[f64]) -> LatencySummary {
     }
 }
 
+/// Statistics-counter operations over `AtomicU64`. This trait is the
+/// crate's single home for `Relaxed` counter traffic: every serving-path
+/// statistic goes through `bump`/`bump_by`/`read` so the ordering
+/// argument lives here once instead of at fifteen call sites (contract
+/// rule R2, DESIGN.md Section 15).
+pub trait CounterExt {
+    /// Increment by one.
+    fn bump(&self);
+    /// Increment by `n`.
+    fn bump_by(&self, n: u64);
+    /// Read the current value.
+    fn read(&self) -> u64;
+}
+
+impl CounterExt for AtomicU64 {
+    #[inline]
+    fn bump(&self) {
+        self.bump_by(1);
+    }
+
+    #[inline]
+    fn bump_by(&self, n: u64) {
+        // ORDERING: Relaxed — pure statistics, never a synchronization
+        // edge: no reader makes a memory-visibility decision from these
+        // values. Totals are exact because RMW atomicity never loses an
+        // increment; readers either tolerate point-in-time skew (live
+        // progress reports) or read after the session's `pool::run_tasks`
+        // join, which orders everything.
+        self.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn read(&self) -> u64 {
+        // ORDERING: Relaxed — see `bump_by`; snapshot coherence across
+        // *different* counters is not promised (nor needed — rates are
+        // ratios of large totals read after the barrier).
+        self.load(Ordering::Relaxed)
+    }
+}
+
 /// Live counters of one serving session, bumped lock-free by producers
-/// (admission outcomes) and worker lanes (completion outcomes). Relaxed
-/// ordering everywhere: these are statistics, not synchronization — the
-/// session barrier (`pool::run_tasks` join) orders the final snapshot.
+/// (admission outcomes) and worker lanes (completion outcomes). All
+/// access goes through [`CounterExt`]: these are statistics, not
+/// synchronization — the session barrier (`pool::run_tasks` join) orders
+/// the final snapshot.
 #[derive(Debug, Default)]
 pub struct ServeCounters {
     pub submitted: AtomicU64,
@@ -98,14 +139,14 @@ pub struct ServeCounters {
 impl ServeCounters {
     pub fn snapshot(&self) -> ServeCounts {
         ServeCounts {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            admitted: self.admitted.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
-            done: self.done.load(Ordering::Relaxed),
-            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
-            invalid_root: self.invalid_root.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            submitted: self.submitted.read(),
+            admitted: self.admitted.read(),
+            rejected: self.rejected.read(),
+            done: self.done.read(),
+            deadline_exceeded: self.deadline_exceeded.read(),
+            invalid_root: self.invalid_root.read(),
+            cache_hits: self.cache_hits.read(),
+            cache_misses: self.cache_misses.read(),
         }
     }
 }
@@ -241,12 +282,12 @@ mod tests {
     #[test]
     fn serve_counters_snapshot_and_rates() {
         let c = ServeCounters::default();
-        c.submitted.fetch_add(10, Ordering::Relaxed);
-        c.admitted.fetch_add(8, Ordering::Relaxed);
-        c.rejected.fetch_add(2, Ordering::Relaxed);
-        c.done.fetch_add(8, Ordering::Relaxed);
-        c.cache_hits.fetch_add(6, Ordering::Relaxed);
-        c.cache_misses.fetch_add(2, Ordering::Relaxed);
+        c.submitted.bump_by(10);
+        c.admitted.bump_by(8);
+        c.rejected.bump_by(2);
+        c.done.bump_by(8);
+        c.cache_hits.bump_by(6);
+        c.cache_misses.bump_by(2);
         let s = c.snapshot();
         assert_eq!(s.submitted, 10);
         assert_eq!(s.done, 8);

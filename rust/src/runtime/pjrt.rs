@@ -11,6 +11,10 @@
 //! one bottom-up level = one executable invocation per slice, each against
 //! the variant whose `(n, d)` fits the slice.
 
+// Executable/operand registries keyed by (kernel, variant): lookup-only
+// maps, never iterated into traversal output, so hash order is inert.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::path::Path;
 

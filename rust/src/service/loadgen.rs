@@ -16,6 +16,10 @@
 //! multiple ladder yields the classic latency-vs-load curve
 //! (`benches/serve_load.rs`).
 
+// Open-loop load generation is wall-clock by definition: arrival
+// schedules and latency measurements are real time, not output bits.
+#![allow(clippy::disallowed_methods)]
+
 use std::thread;
 use std::time::{Duration, Instant};
 

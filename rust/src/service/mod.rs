@@ -52,7 +52,7 @@ pub mod state_pool;
 
 pub use loadgen::{run_open_loop, ArrivalProcess, LoadPoint, OpenLoopConfig};
 pub use registry::{AlgoStatePools, GraphRegistry, ResidentGraph};
-#[allow(deprecated)]
+#[allow(deprecated)] // re-exporting the deprecated shim must not warn here
 pub use scheduler::run_batch;
 pub use scheduler::{
     run_algo_batch, run_requests, AlgoOptions, AlgoOutcome, AlgoOutput, AlgoQuery, BatchOptions,

@@ -31,6 +31,11 @@
 //! them in submission order, so serving is order-invariant at the result
 //! level no matter which lane answered which query.
 
+// Serving is wall-clock territory by design: queue timestamps, deadline
+// arming, and latency attribution measure real time and never feed
+// traversal output (results stay bit-identical to standalone runs).
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -38,7 +43,7 @@ use std::time::{Duration, Instant};
 
 use crate::bfs::PolicyKind;
 use crate::engine::{CancelToken, CommMode, ExecutionMode};
-use crate::metrics::{ServeCounters, ServeCounts};
+use crate::metrics::{CounterExt, ServeCounters, ServeCounts};
 use crate::util::pool;
 
 use super::registry::ResidentGraph;
@@ -260,8 +265,11 @@ impl<'g> Session<'g> {
     }
 
     fn submit(&self, mut request: QueryRequest) -> u64 {
+        // ORDERING: Relaxed — the RMW's atomicity alone guarantees unique,
+        // dense submission ids; the ticket publishes no memory, and every
+        // structure it indexes is guarded by its own mutex.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.counters.submitted.bump();
         if request.deadline.is_none() {
             request.deadline = self.opts.default_deadline;
         }
@@ -270,7 +278,7 @@ impl<'g> Session<'g> {
         let v = self.rg.num_vertices();
         if let Some(r) = request.algo.root() {
             if r as usize >= v {
-                self.counters.invalid_root.fetch_add(1, Ordering::Relaxed);
+                self.counters.invalid_root.bump();
                 self.respond(
                     id,
                     QueryResponse::failed(
@@ -287,12 +295,12 @@ impl<'g> Session<'g> {
             let mut q = self.queue.lock().expect("serve queue poisoned");
             if !q.closed && q.jobs.len() < self.opts.queue_depth {
                 q.jobs.push_back(Job { id, request, submitted: Instant::now() });
-                self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                self.counters.admitted.bump();
                 self.cond.notify_one();
                 return id;
             }
         }
-        self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+        self.counters.rejected.bump();
         self.respond(
             id,
             QueryResponse::failed(
@@ -341,7 +349,7 @@ impl<'g> Session<'g> {
         };
         // Expired while queued: answer without consuming pooled state.
         if cancel.is_cancelled() {
-            self.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            self.counters.deadline_exceeded.bump();
             return QueryResponse::failed(
                 req,
                 QueryStatus::DeadlineExceeded,
@@ -354,8 +362,8 @@ impl<'g> Session<'g> {
         let t0 = Instant::now();
         if caching {
             if let Some(output) = self.rg.cache.get(&key) {
-                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-                self.counters.done.fetch_add(1, Ordering::Relaxed);
+                self.counters.cache_hits.bump();
+                self.counters.done.bump();
                 let service_s = t0.elapsed().as_secs_f64();
                 let timings = QueryTimings {
                     queue_s,
@@ -365,7 +373,7 @@ impl<'g> Session<'g> {
                 };
                 return QueryResponse::done(req, output, timings);
             }
-            self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+            self.counters.cache_misses.bump();
         }
         let res = execute_query(self.rg, req.algo, req.options, &self.opts.batch, exec, cancel);
         let service_s = t0.elapsed().as_secs_f64();
@@ -377,15 +385,15 @@ impl<'g> Session<'g> {
                 if caching {
                     self.rg.cache.insert(key, Arc::clone(&output), self.opts.cache_capacity);
                 }
-                self.counters.done.fetch_add(1, Ordering::Relaxed);
+                self.counters.done.bump();
                 QueryResponse::done(req, output, timings)
             }
             Err(QueryError::Cancelled(e)) => {
-                self.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                self.counters.deadline_exceeded.bump();
                 QueryResponse::failed(req, QueryStatus::DeadlineExceeded, e, timings)
             }
             Err(QueryError::Engine(e)) => {
-                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                self.counters.rejected.bump();
                 QueryResponse::failed(req, QueryStatus::Rejected, e, timings)
             }
         }

@@ -16,7 +16,6 @@
 //! algorithm gets its own typed pool (its `ProgramState<V>` sizes differ
 //! per value type, so they cannot share a free list).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::engine::BfsState;
@@ -52,24 +51,34 @@ impl PoolEntry for BfsState {
     }
 }
 
+/// Free list plus its observability counters, all behind one mutex.
+///
+/// PR-8 concurrency audit outcome: `created`/`recycled` used to be
+/// standalone `Relaxed` atomics bumped outside the free-list lock, so a
+/// `stats()` reader could observe a popped list with a not-yet-bumped
+/// counter and see transient states like `idle == 0, recycled == 0`
+/// after a recycle — exactly the skew a cross-thread `idle == created`
+/// pool-pinning assertion would trip on. Folding the counters into the
+/// mutex makes every snapshot coherent and the mutex supplies the
+/// happens-before edge; no atomics (and no ordering argument) remain.
+struct PoolInner<S> {
+    free: Vec<S>,
+    created: u64,
+    recycled: u64,
+}
+
 /// A mutex-guarded free list of traversal states for **one** resident
 /// graph (states are shape-bound to their partitioning; the registry owns
 /// one pool per graph and algorithm).
 pub struct TypedPool<S> {
-    free: Mutex<Vec<S>>,
-    created: AtomicU64,
-    recycled: AtomicU64,
+    inner: Mutex<PoolInner<S>>,
 }
 
 // Manual impl: `derive(Default)` would demand `S: Default`, but an empty
 // free list needs no such bound.
 impl<S> Default for TypedPool<S> {
     fn default() -> Self {
-        Self {
-            free: Mutex::new(Vec::new()),
-            created: AtomicU64::new(0),
-            recycled: AtomicU64::new(0),
-        }
+        Self { inner: Mutex::new(PoolInner { free: Vec::new(), created: 0, recycled: 0 }) }
     }
 }
 
@@ -83,17 +92,22 @@ impl<S: PoolEntry> TypedPool<S> {
     /// match `pg` (should be impossible for a per-graph pool) is dropped
     /// rather than handed out.
     pub fn acquire(&self, pg: &PartitionedGraph) -> S {
-        let candidate = self.free.lock().expect("state pool poisoned").pop();
-        match candidate {
-            Some(s) if s.shape_matches(pg) => {
-                self.recycled.fetch_add(1, Ordering::Relaxed);
-                s
+        let recycled = {
+            let mut inner = self.inner.lock().expect("state pool poisoned");
+            match inner.free.pop() {
+                Some(s) if s.shape_matches(pg) => {
+                    inner.recycled += 1;
+                    Some(s)
+                }
+                _ => {
+                    inner.created += 1;
+                    None
+                }
             }
-            _ => {
-                self.created.fetch_add(1, Ordering::Relaxed);
-                S::fresh(pg)
-            }
-        }
+        };
+        // Fresh allocation happens outside the lock — it is the O(V)
+        // slow path and must not serialize concurrent acquires.
+        recycled.unwrap_or_else(|| S::fresh(pg))
     }
 
     /// Return a state after a query. Works for failed queries too: a state
@@ -101,14 +115,18 @@ impl<S: PoolEntry> TypedPool<S> {
     /// wipe (see the entry's `finish`), so callers never need to
     /// special-case the error path.
     pub fn release(&self, state: S) {
-        self.free.lock().expect("state pool poisoned").push(state);
+        self.inner.lock().expect("state pool poisoned").free.push(state);
     }
 
+    /// Coherent point-in-time snapshot: counters and free-list length are
+    /// read under the same lock acquisition, so invariants like
+    /// `idle <= created` hold in every observation.
     pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().expect("state pool poisoned");
         PoolStats {
-            created: self.created.load(Ordering::Relaxed),
-            recycled: self.recycled.load(Ordering::Relaxed),
-            idle: self.free.lock().expect("state pool poisoned").len() as u64,
+            created: inner.created,
+            recycled: inner.recycled,
+            idle: inner.free.len() as u64,
         }
     }
 }

@@ -153,12 +153,20 @@ impl AtomicBitmap<'_> {
     #[inline]
     pub fn set(&self, i: usize) {
         debug_assert!(i < self.bits);
+        // ORDERING: Relaxed fetch-or — set-union marks are commutative, so
+        // any interleaving yields the same word; readers only consume the
+        // bitmap after the superstep barrier (thread join), which provides
+        // the happens-before edge.
         self.words[i >> 5].fetch_or(1 << (i & 31), Ordering::Relaxed);
     }
 
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.bits);
+        // ORDERING: Relaxed load — within a kernel this is a same-thread
+        // dedup probe (a miss only costs a redundant commutative set);
+        // cross-thread reads happen after the barrier join settles all
+        // writes.
         (self.words[i >> 5].load(Ordering::Relaxed) >> (i & 31)) & 1 == 1
     }
 }

@@ -218,10 +218,14 @@ mod tests {
         let tasks: Vec<_> = (0..31)
             .map(|_| {
                 let c = &counter;
+                // ORDERING: Relaxed — pure event counter; the assertion
+                // reads it only after run_tasks joins every worker.
                 move || c.fetch_add(1, Ordering::Relaxed)
             })
             .collect();
         let out = run_tasks(4, tasks);
+        // ORDERING: Relaxed — read after the join above; no concurrent
+        // writers remain.
         assert_eq!(counter.load(Ordering::Relaxed), 31);
         // Each task observed a distinct pre-increment value.
         let mut seen: Vec<usize> = out;

@@ -5,6 +5,10 @@
 //! reports the failing case's seed so it can be replayed as a unit test.
 //! No shrinking — generators are written to produce small cases directly.
 
+// Generator helpers deduplicate candidate values through HashSets whose
+// iteration order never reaches any output — only membership is used.
+#![allow(clippy::disallowed_types)]
+
 use crate::util::rng::Xoshiro256;
 
 /// Run `n` property cases. On panic, re-raises with the case seed attached.

@@ -123,6 +123,8 @@ impl Xoshiro256 {
 }
 
 #[cfg(test)]
+// Tests use HashSet for membership/uniqueness checks only.
+#[allow(clippy::disallowed_types)]
 mod tests {
     use super::*;
 
