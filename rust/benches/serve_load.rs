@@ -77,7 +77,7 @@ fn main() {
     let capacity_qps = (rounds * cap_requests.len()) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
     println!("closed-loop capacity: {capacity_qps:.1} queries/s (cache-free, {lanes} lanes)");
 
-    let opts = ServeOptions { batch, queue_depth, cache_capacity: 64, default_deadline: None };
+    let opts = ServeOptions { batch, queue_depth, cache_capacity: 64, ..Default::default() };
     let mut t = Table::new(vec![
         "offered xC", "offered q/s", "achieved q/s", "rejected", "cache", "p50", "p99", "p999",
     ]);

@@ -1,0 +1,12 @@
+//! Known-bad fixture for the R3 clock-seam rule: an OS-clock read in a
+//! deterministic path (the lint runs over fixtures with
+//! `--assume-deterministic`) is rejected *even with* `// NONDET-OK:` —
+//! annotation does not exempt clocks. Timing must route through
+//! `obs::Clock`; only the seam itself (`obs/clock.rs`) may read the OS
+//! clock.
+
+pub fn annotated_clock_still_rejected() -> std::time::Duration {
+    // NONDET-OK: reporting only — not sufficient for clock reads.
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}

@@ -15,11 +15,12 @@ pub fn annotated_ordering(flag: &AtomicBool) -> bool {
     flag.load(Ordering::Acquire)
 }
 
-pub fn annotated_clock() -> std::time::Duration {
-    // NONDET-OK: wall-clock used for reporting only; the measured value
-    // never feeds back into traversal output.
-    let t0 = std::time::Instant::now();
-    t0.elapsed()
+pub fn annotated_hash_map(xs: &[u32]) -> usize {
+    // NONDET-OK: diagnostic de-dup only; the map is never iterated, so
+    // RandomState order can't reach traversal output. (Clock reads have
+    // no such escape — they must route through obs::Clock.)
+    let seen: std::collections::HashSet<u32> = xs.iter().copied().collect();
+    seen.len()
 }
 
 pub fn annotated_float_reduce(xs: &[f64]) -> f64 {

@@ -80,7 +80,18 @@ pub fn cc_run_from(run: ProgramRun<u32>) -> CcRun {
 
 /// Run min-label connected components.
 pub fn run_cc(pg: &PartitionedGraph, exec: ExecutionMode) -> Result<CcRun> {
+    run_cc_traced(pg, exec, None)
+}
+
+/// [`run_cc`] with an optional superstep trace sink (`--trace` on the
+/// CLI); `None` is exactly `run_cc`.
+pub fn run_cc_traced(
+    pg: &PartitionedGraph,
+    exec: ExecutionMode,
+    trace: Option<std::sync::Arc<crate::obs::TraceRecorder>>,
+) -> Result<CcRun> {
     let mut runner = ProgramRunner::new(pg, CcProgram, exec);
+    runner.set_trace(trace);
     let run = runner.run()?;
     Ok(cc_run_from(run))
 }

@@ -47,11 +47,14 @@ pub mod sssp;
 pub mod state;
 
 pub use bfs::{run_bfs_program, BfsProgram, BfsProgramRun, BfsValue};
-pub use cc::{cc_run_from, run_cc, CcProgram, CcRun};
-pub use pagerank::{pagerank_run_from, run_pagerank, PagerankProgram, PagerankRun, PrValue};
+pub use cc::{cc_run_from, run_cc, run_cc_traced, CcProgram, CcRun};
+pub use pagerank::{
+    pagerank_run_from, run_pagerank, run_pagerank_traced, PagerankProgram, PagerankRun, PrValue,
+};
 pub use runner::{ProgramRun, ProgramRunner};
 pub use sssp::{
-    default_weights, run_sssp, sssp_run_from, SsspMsg, SsspProgram, SsspRun, SsspValue, WeightFn,
+    default_weights, run_sssp, run_sssp_traced, sssp_run_from, SsspMsg, SsspProgram, SsspRun,
+    SsspValue, WeightFn,
 };
 pub use state::ProgramState;
 

@@ -132,8 +132,22 @@ pub fn run_pagerank(
     tol: f64,
     exec: ExecutionMode,
 ) -> Result<PagerankRun> {
+    run_pagerank_traced(pg, damping, max_iters, tol, exec, None)
+}
+
+/// [`run_pagerank`] with an optional superstep trace sink (`--trace` on
+/// the CLI); `None` is exactly `run_pagerank`.
+pub fn run_pagerank_traced(
+    pg: &PartitionedGraph,
+    damping: f64,
+    max_iters: u32,
+    tol: f64,
+    exec: ExecutionMode,
+    trace: Option<std::sync::Arc<crate::obs::TraceRecorder>>,
+) -> Result<PagerankRun> {
     let program = PagerankProgram { num_vertices: pg.num_vertices, damping, max_iters, tol };
     let mut runner = ProgramRunner::new(pg, program, exec);
+    runner.set_trace(trace);
     let run = runner.run()?;
     Ok(pagerank_run_from(run))
 }

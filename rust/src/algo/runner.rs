@@ -28,6 +28,8 @@
 //! programs (PageRank) need every message.
 
 use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -35,6 +37,7 @@ use crate::bfs::direction::{CoordinatorView, DirectionPolicy};
 use crate::engine::accel::program_step_pcie;
 use crate::engine::comm::CommBuffers;
 use crate::engine::{run_steps, CancelToken, Direction, ExecutionMode, LevelStats, PeWork};
+use crate::obs::{Clock, DecisionTrace, LevelTrace, PeTrace, TraceRecorder};
 use crate::partition::PartitionedGraph;
 use crate::util::pool;
 
@@ -84,6 +87,15 @@ pub struct ProgramRunner<'g, P: VertexProgram> {
     /// Cooperative cancellation, checked once per round at the BSP
     /// barrier. Defaults to the free never-fires token.
     cancel: CancelToken,
+    /// The timing seam (DESIGN.md Section 16); all wall readings and
+    /// trace timestamps come from here.
+    clock: Clock,
+    /// Per-round trace sink; `None` records nothing. Program-round
+    /// records carry the engine's per-PE work counters and comm stats;
+    /// their `kernel_ns`/`merge_ns` are reported as 0 (the generic
+    /// runner's kernels return whole-chunk deltas, not spans — only the
+    /// BFS driver measures per-PE time).
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
@@ -112,7 +124,25 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             comm: CommBuffers::new(pg),
             queues: vec![Vec::new(); np],
             cancel: CancelToken::default(),
+            clock: Clock::real(),
+            trace: None,
         }
+    }
+
+    /// Install the clock all subsequent timing reads (DESIGN.md
+    /// Section 16); virtual clocks make trace output byte-stable.
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Attach (or detach) a trace recorder; the runner adopts its clock.
+    /// Tracing reads round stats at barriers and nothing else — output
+    /// bits are identical on or off.
+    pub fn set_trace(&mut self, trace: Option<Arc<TraceRecorder>>) {
+        if let Some(tr) = &trace {
+            self.clock = tr.clock().clone();
+        }
+        self.trace = trace;
     }
 
     /// Arm cooperative cancellation (the serving tier's deadline
@@ -136,10 +166,8 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
     /// Run the program to completion. Deterministic given the
     /// partitioning — including across [`ExecutionMode`]s.
     pub fn run(&mut self) -> Result<ProgramRun<P::Value>> {
-        // NONDET-OK: host wall-clock for the reported `wall` field only;
-        // no control-flow or output bit depends on it.
-        #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
-        let t0 = std::time::Instant::now();
+        // Wall clock through the seam: reporting-only, never control flow.
+        let t0_ns = self.clock.now_ns();
         let np = self.pg.parts.len();
         let v_total = self.pg.num_vertices;
         let bucketed = self.program.uses_buckets();
@@ -192,6 +220,14 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             self.state.advance_frontiers();
         }
 
+        if let Some(tr) = &self.trace {
+            // SeedSet::All runs have no single root; 0 marks the record.
+            let root = match self.program.seeds() {
+                SeedSet::One(r) => r,
+                SeedSet::All => 0,
+            };
+            tr.run_start(self.program.name(), root);
+        }
         let mut policy = self.program.direction_policy().map(DirectionPolicy::new);
         let mut levels: Vec<LevelStats> = Vec::new();
         let mut round: u32 = 0;
@@ -207,6 +243,9 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             // the state so the pooled release after this error is
             // recyclable, not poisoned.
             if self.cancel.is_cancelled() {
+                if let Some(tr) = &self.trace {
+                    tr.cancel_event(round, "cancelled_at_barrier");
+                }
                 self.state.drain_frontiers();
                 self.state.finish();
                 return Err(anyhow!(
@@ -214,6 +253,7 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
                     self.program.name()
                 ));
             }
+            let round_start_ns = if self.trace.is_some() { self.clock.now_ns() } else { 0 };
 
             if bucketed && !self.select_bucket_frontier() {
                 break;
@@ -266,9 +306,10 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
                 self.state.advance_frontiers();
             }
 
+            let mut decision = None;
             if let Some(p) = policy.as_mut() {
                 let view = self.coordinator_view();
-                p.advance(view);
+                decision = Some(p.advance_explained(view));
             }
 
             {
@@ -280,6 +321,9 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
                 }
             }
 
+            if let Some(tr) = &self.trace {
+                tr.level(self.round_trace(&stats, decision, round_start_ns));
+            }
             levels.push(stats);
             round += 1;
             if self.program.halt(round, last_delta) {
@@ -294,14 +338,59 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
         self.state.drain_frontiers();
         self.state.finish();
 
+        let wall_ns = self.clock.now_ns().saturating_sub(t0_ns);
+        if let Some(tr) = &self.trace {
+            let touched = self.state.values.len() as u64;
+            tr.run_end(levels.len(), touched, wall_ns);
+        }
         Ok(ProgramRun {
             values: self.state.values.clone(),
             levels,
             rounds: round,
             init_bytes,
             last_delta,
-            wall: t0.elapsed(),
+            wall: Duration::from_nanos(wall_ns),
         })
+    }
+
+    /// Assemble one round's trace record. Rounds without a direction
+    /// policy (PageRank's all-active scatter, bucketed SSSP) are tagged
+    /// `"scatter"`; per-PE times are 0 by design (see the `trace` field).
+    fn round_trace(
+        &self,
+        stats: &LevelStats,
+        decision: Option<crate::bfs::DirectionDecision>,
+        start_ns: u64,
+    ) -> LevelTrace {
+        let pe = (0..self.pg.parts.len())
+            .map(|pid| PeTrace {
+                pid,
+                kind: if self.pg.parts[pid].kind.is_gpu() { "gpu" } else { "cpu" },
+                work: stats.pe_work[pid],
+                kernel_ns: 0,
+                merge_ns: 0,
+            })
+            .collect();
+        LevelTrace {
+            level: stats.level,
+            direction: stats.direction.map_or("scatter", |d| d.tag()),
+            frontier_size: stats.frontier_size,
+            frontier_degree_sum: stats.frontier_degree_sum,
+            frontier_sparse: self.state.frontiers[0].current.is_sparse(),
+            start_ns,
+            end_ns: self.clock.now_ns(),
+            decision: decision.map(|d| DecisionTrace {
+                frontier_out_edges: d.frontier_out_edges,
+                unexplored_edges: d.unexplored_edges,
+                alpha: d.alpha,
+                beta: d.beta,
+                bu_taken: d.bu_taken,
+                switched_back: d.switched_back,
+                next_direction: d.next.tag(),
+            }),
+            pe,
+            comm: stats.comm,
+        }
     }
 
     /// Drain the lowest pending bucket into the current frontiers.

@@ -183,7 +183,21 @@ pub fn run_sssp(
     weights: WeightFn,
     exec: ExecutionMode,
 ) -> Result<SsspRun> {
+    run_sssp_traced(pg, root, delta, weights, exec, None)
+}
+
+/// [`run_sssp`] with an optional superstep trace sink (`--trace` on the
+/// CLI); `None` is exactly `run_sssp`.
+pub fn run_sssp_traced(
+    pg: &PartitionedGraph,
+    root: u32,
+    delta: u64,
+    weights: WeightFn,
+    exec: ExecutionMode,
+    trace: Option<Arc<crate::obs::TraceRecorder>>,
+) -> Result<SsspRun> {
     let mut runner = ProgramRunner::new(pg, SsspProgram { root, delta, weights }, exec);
+    runner.set_trace(trace);
     let run = runner.run()?;
     Ok(sssp_run_from(root, run))
 }

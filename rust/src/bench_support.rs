@@ -202,23 +202,37 @@ pub fn roots_for(g: &Csr, count: usize, seed: u64) -> Vec<u32> {
     metrics::sample_roots(g.num_vertices, |v| g.degree(v), count, seed)
 }
 
+/// Record-format version stamped into every `kv` record. Bump when a
+/// field is renamed or its meaning changes, so downstream tooling can
+/// dispatch instead of guessing from shape.
+pub const KV_SCHEMA_VERSION: &str = "1";
+
 /// Print a machine-readable result line. When `TOTEM_DO_BENCH_JSON` names
 /// a file, the record is also appended there as one JSON object per line
 /// (JSON-lines), so CI can collect bench artifacts without reparsing
-/// stdout.
+/// stdout. Every record leads with `schema=`[`KV_SCHEMA_VERSION`].
 pub fn kv(bench: &str, keys: &[(&str, String)]) {
+    let stamped = stamp_schema(keys);
     let mut line = format!("RESULT bench={bench}");
-    for (k, v) in keys {
+    for (k, v) in &stamped {
         line.push_str(&format!(" {k}={v}"));
     }
     println!("{line}");
     if let Ok(path) = std::env::var("TOTEM_DO_BENCH_JSON") {
         if !path.is_empty() {
-            if let Err(e) = append_json_line(&path, bench, keys) {
+            if let Err(e) = append_json_line(&path, bench, &stamped) {
                 eprintln!("warning: bench JSON sink {path}: {e}");
             }
         }
     }
+}
+
+/// Prepend the `schema` version field to a record's keys.
+fn stamp_schema<'a>(keys: &[(&'a str, String)]) -> Vec<(&'a str, String)> {
+    let mut stamped = Vec::with_capacity(keys.len() + 1);
+    stamped.push(("schema", KV_SCHEMA_VERSION.to_string()));
+    stamped.extend(keys.iter().map(|(k, v)| (*k, v.clone())));
+    stamped
 }
 
 /// Append one `{"bench": ..., key: value, ...}` JSON object to `path`.
@@ -254,6 +268,14 @@ fn json_escape(s: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_records_lead_with_the_schema_version() {
+        let stamped = stamp_schema(&[("scale", "15".to_string())]);
+        assert_eq!(stamped[0], ("schema", KV_SCHEMA_VERSION.to_string()));
+        assert_eq!(stamped[1], ("scale", "15".to_string()));
+        assert_eq!(stamp_schema(&[]).len(), 1, "even empty records carry the version");
+    }
 
     #[test]
     fn json_escape_handles_specials() {

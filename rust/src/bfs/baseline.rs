@@ -62,10 +62,9 @@ impl BaselineRun {
 
 /// Run a baseline BFS over the whole CSR in one address space.
 pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
-    // NONDET-OK: host wall-clock for the reported `wall` field only;
+    // Reporting-only wall clock through the seam (DESIGN.md Section 16);
     // no control-flow or output bit depends on it.
-    #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
-    let t0 = std::time::Instant::now();
+    let clock = crate::obs::Clock::real();
     let nv = g.num_vertices;
     let mut depth = vec![-1i32; nv];
     let mut parent = vec![-1i64; nv];
@@ -193,7 +192,7 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
         levels,
         reached_vertices: reached,
         reached_edge_endpoints: endpoints,
-        wall: t0.elapsed(),
+        wall: std::time::Duration::from_nanos(clock.now_ns()),
     }
 }
 

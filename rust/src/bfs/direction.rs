@@ -47,6 +47,28 @@ pub struct CoordinatorView {
     pub unexplored_edges: u64,
 }
 
+/// Everything that went into one direction decision — the explainability
+/// record behind a trace's `decision` field (DESIGN.md Section 16). Pure
+/// data: capturing it never changes what [`DirectionPolicy::advance`]
+/// would have decided.
+#[derive(Clone, Copy, Debug)]
+pub struct DirectionDecision {
+    /// Coordinator-local frontier out-edges the heuristic compared.
+    pub frontier_out_edges: u64,
+    /// Coordinator-local unexplored edges the heuristic compared.
+    pub unexplored_edges: u64,
+    /// Beamer alpha in effect (0.0 for [`PolicyKind::AlwaysTopDown`]).
+    pub alpha: f64,
+    /// Fixed bottom-up step budget (0 for [`PolicyKind::AlwaysTopDown`]).
+    pub beta: u32,
+    /// Bottom-up steps taken so far (after this decision).
+    pub bu_taken: u32,
+    /// Whether the one-shot fixed-step return has already fired.
+    pub switched_back: bool,
+    /// The direction the decision selected for the next level.
+    pub next: Direction,
+}
+
 /// Mutable policy state across one BFS run.
 #[derive(Clone, Debug)]
 pub struct DirectionPolicy {
@@ -68,6 +90,17 @@ impl DirectionPolicy {
     /// Decide the direction for the next level, given the coordinator's
     /// local view. Called once per superstep, by the coordinator only.
     pub fn advance(&mut self, view: CoordinatorView) -> Direction {
+        self.advance_explained(view).next
+    }
+
+    /// [`advance`](Self::advance), plus the full decision record for
+    /// tracing. The state transition is identical — `advance` delegates
+    /// here — so tracing on vs off cannot diverge.
+    pub fn advance_explained(&mut self, view: CoordinatorView) -> DirectionDecision {
+        let (alpha, beta) = match self.kind {
+            PolicyKind::AlwaysTopDown => (0.0, 0),
+            PolicyKind::DirectionOptimized { alpha, bu_steps } => (alpha, bu_steps),
+        };
         match self.kind {
             PolicyKind::AlwaysTopDown => {}
             PolicyKind::DirectionOptimized { alpha, bu_steps } => match self.current {
@@ -93,7 +126,15 @@ impl DirectionPolicy {
                 }
             },
         }
-        self.current
+        DirectionDecision {
+            frontier_out_edges: view.frontier_out_edges,
+            unexplored_edges: view.unexplored_edges,
+            alpha,
+            beta,
+            bu_taken: self.bu_taken,
+            switched_back: self.switched_back,
+            next: self.current,
+        }
     }
 
     pub fn reset(&mut self) {
@@ -142,6 +183,23 @@ mod tests {
     fn zero_frontier_never_triggers_switch() {
         let mut p = DirectionPolicy::new(PolicyKind::direction_optimized());
         assert_eq!(p.advance(view(0, 0)), Direction::TopDown);
+    }
+
+    #[test]
+    fn explained_decision_carries_inputs_and_matches_advance() {
+        let mut p = DirectionPolicy::new(PolicyKind::direction_optimized());
+        let mut q = p.clone();
+        let d = p.advance_explained(view(1_000, 10_000));
+        assert_eq!(d.next, q.advance(view(1_000, 10_000)));
+        assert_eq!(d.frontier_out_edges, 1_000);
+        assert_eq!(d.unexplored_edges, 10_000);
+        assert_eq!(d.alpha, 14.0);
+        assert_eq!(d.beta, 3);
+        assert!(!d.switched_back);
+        // AlwaysTopDown reports zeroed tuning knobs.
+        let mut t = DirectionPolicy::new(PolicyKind::AlwaysTopDown);
+        let d = t.advance_explained(view(1_000, 1));
+        assert_eq!((d.alpha, d.beta, d.next), (0.0, 0, Direction::TopDown));
     }
 
     #[test]

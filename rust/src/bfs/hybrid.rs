@@ -41,6 +41,8 @@
 //! concurrently-busy PEs per level — DESIGN.md §1).
 
 use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -53,6 +55,7 @@ use crate::engine::{
     parallel, Accelerator, BfsState, CancelToken, ChunkScratch, Direction, ExecutionMode,
     LevelStats, PeWork,
 };
+use crate::obs::{Clock, DecisionTrace, LevelTrace, PeTrace, Span, SpanRing, TraceRecorder};
 use crate::partition::PartitionedGraph;
 use crate::util::{pool, Bitmap};
 
@@ -122,6 +125,25 @@ pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
     /// Cooperative cancellation, checked once per superstep at the BSP
     /// barrier. Defaults to the free never-fires token.
     cancel: CancelToken,
+    /// The timing seam (DESIGN.md Section 16): every timestamp this
+    /// runner takes — wall clock, kernel spans, deadline checks armed by
+    /// the serving tier — reads this clock. Virtual clocks make trace
+    /// output byte-stable.
+    clock: Clock,
+    /// Superstep trace sink; `None` (the default) records nothing and
+    /// costs nothing. Tracing only *reads* engine state: merge order,
+    /// modeled costs, and traversal output are identical on or off
+    /// (`tests/trace_determinism.rs`).
+    trace: Option<Arc<TraceRecorder>>,
+    /// Per-chunk kernel span rings, indexed like `chunks` — workers push
+    /// into their own ring (disjoint, lock-free), the coordinator drains
+    /// at the barrier in plan order.
+    span_rings: Vec<SpanRing>,
+    /// Per-pid `(kernel_ns, merge_ns)` accumulators for the level being
+    /// traced; reset per level. Chunk spans aggregate here, so emitted
+    /// records are thread-count invariant (chunk counts vary with the
+    /// worker budget, partitions do not).
+    pe_ns: Vec<(u64, u64)>,
 }
 
 impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
@@ -171,19 +193,42 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 }
             }
         }
+        let np = pg.parts.len();
         Ok(Self {
             state,
             comm: CommBuffers::new(pg),
             cfg,
             accel,
-            queues: (0..pg.parts.len()).map(|_| Vec::new()).collect(),
+            queues: (0..np).map(|_| Vec::new()).collect(),
             chunks: Vec::new(),
             incoming: Bitmap::new(pg.num_vertices),
             gpu_frontier: Vec::new(),
             gpu_merge: Vec::new(),
             cancel: CancelToken::default(),
+            clock: Clock::real(),
+            trace: None,
+            span_rings: Vec::new(),
+            pe_ns: vec![(0, 0); np],
             pg,
         })
+    }
+
+    /// Install the clock all subsequent timing reads (DESIGN.md
+    /// Section 16). The default is a real clock anchored at construction;
+    /// tests install a virtual clock for byte-stable timings.
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Attach (or detach) a superstep trace recorder. The runner adopts
+    /// the recorder's clock so record timestamps and kernel spans share
+    /// one timebase. Tracing never perturbs the traversal: it reads
+    /// engine state at barriers and nothing else.
+    pub fn set_trace(&mut self, trace: Option<Arc<TraceRecorder>>) {
+        if let Some(tr) = &trace {
+            self.clock = tr.clock().clone();
+        }
+        self.trace = trace;
     }
 
     /// Arm cooperative cancellation for subsequent runs: the serving
@@ -217,10 +262,8 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// Run one BFS from `root`. Deterministic given the partitioning —
     /// including across [`ExecutionMode`]s.
     pub fn run(&mut self, root: u32) -> Result<BfsRun> {
-        // NONDET-OK: host wall-clock for the reported `wall` field only;
-        // no control-flow or output bit depends on it.
-        #[allow(clippy::disallowed_methods)] // ditto — reporting-only clock
-        let t0 = std::time::Instant::now();
+        // Wall clock through the seam: reporting-only, never control flow.
+        let t0_ns = self.clock.now_ns();
         let np = self.pg.parts.len();
         let v_total = self.pg.num_vertices;
         anyhow::ensure!((root as usize) < v_total, "root {root} out of range");
@@ -240,6 +283,9 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             self.accel.as_deref_mut().unwrap().mark_visited(root_pid, &[li]);
         }
 
+        if let Some(tr) = &self.trace {
+            tr.run_start("bfs", root);
+        }
         let mut levels: Vec<LevelStats> = Vec::new();
         let mut level: u32 = 0;
         // Last level's frontier size gates the parallel census: spawning
@@ -255,10 +301,18 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             // the state cleanly: the pooled release after this error is
             // recyclable, not poisoned.
             if self.cancel.is_cancelled() {
+                if let Some(tr) = &self.trace {
+                    tr.cancel_event(level, "cancelled_at_barrier");
+                }
                 self.state.drain_frontiers();
                 self.state.finish();
                 return Err(anyhow!("BFS cancelled at superstep barrier (level {level})"));
             }
+            let level_start_ns = if self.trace.is_some() { self.clock.now_ns() } else { 0 };
+            // Coordinator partition 0's representation choice stands in
+            // for "the frontier's shape" in the trace — it owns the hubs,
+            // so it is where sparse→dense flips first.
+            let frontier_sparse = self.state.frontiers[0].current.is_sparse();
 
             // ---- frontier census (drives Fig 1 and termination) ----
             // Read-only per-partition sums; identical in either mode.
@@ -307,6 +361,10 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 ..Default::default()
             };
 
+            if self.trace.is_some() {
+                self.pe_ns.iter_mut().for_each(|e| *e = (0, 0));
+            }
+
             match policy.current() {
                 Direction::TopDown => self.superstep_top_down(level, &mut stats)?,
                 Direction::BottomUp => self.superstep_bottom_up(level, &mut stats)?,
@@ -317,9 +375,15 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             self.state.advance_frontiers();
 
             // ---- coordinator's local direction decision (§3.3) ----
+            // `advance_explained` is `advance` plus the decision record;
+            // the state transition is identical, so the traced and
+            // untraced runs walk the same direction schedule.
             let view = self.coordinator_view();
-            policy.advance(view);
+            let decision = policy.advance_explained(view);
 
+            if let Some(tr) = &self.trace {
+                tr.level(self.level_trace(&stats, decision, level_start_ns, frontier_sparse));
+            }
             levels.push(stats);
             level += 1;
         }
@@ -351,6 +415,10 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         // failed-query states safe.
         self.state.finish();
 
+        let wall_ns = self.clock.now_ns().saturating_sub(t0_ns);
+        if let Some(tr) = &self.trace {
+            tr.run_end(levels.len(), reached, wall_ns);
+        }
         Ok(BfsRun {
             root,
             depth: self.state.depth.clone(),
@@ -360,8 +428,48 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             aggregation_bytes,
             reached_vertices: reached,
             reached_edge_endpoints: endpoints,
-            wall: t0.elapsed(),
+            wall: Duration::from_nanos(wall_ns),
         })
+    }
+
+    /// Assemble one level's trace record from the stats the engine
+    /// already computed plus the per-pid span aggregates. Read-only.
+    fn level_trace(
+        &self,
+        stats: &LevelStats,
+        decision: crate::bfs::DirectionDecision,
+        start_ns: u64,
+        frontier_sparse: bool,
+    ) -> LevelTrace {
+        let pe = (0..self.pg.parts.len())
+            .map(|pid| PeTrace {
+                pid,
+                kind: if self.pg.parts[pid].kind.is_gpu() { "gpu" } else { "cpu" },
+                work: stats.pe_work[pid],
+                kernel_ns: self.pe_ns[pid].0,
+                merge_ns: self.pe_ns[pid].1,
+            })
+            .collect();
+        LevelTrace {
+            level: stats.level,
+            direction: stats.direction.expect("hybrid levels always have a direction").tag(),
+            frontier_size: stats.frontier_size,
+            frontier_degree_sum: stats.frontier_degree_sum,
+            frontier_sparse,
+            start_ns,
+            end_ns: self.clock.now_ns(),
+            decision: Some(DecisionTrace {
+                frontier_out_edges: decision.frontier_out_edges,
+                unexplored_edges: decision.unexplored_edges,
+                alpha: decision.alpha,
+                beta: decision.beta,
+                bu_taken: decision.bu_taken,
+                switched_back: decision.switched_back,
+                next_direction: decision.next.tag(),
+            }),
+            pe,
+            comm: stats.comm,
+        }
     }
 
     /// Worker threads only pay off when the level has real work; top-down
@@ -395,32 +503,69 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         kernel: ChunkKernel<'_>,
     ) -> u64 {
         let pg = self.pg;
+        let tracing = self.trace.is_some();
         while self.chunks.len() < plan.len() {
             self.chunks.push(ChunkScratch::new(pg.num_vertices));
+        }
+        while tracing && self.span_rings.len() < plan.len() {
+            // One span per slot per superstep; capacity 4 is margin.
+            self.span_rings.push(SpanRing::with_capacity(4));
         }
         {
             let (slots, gnext) = self.state.split_for_superstep();
             let kernel = &kernel;
+            let clock = &self.clock;
+            let mut rings = self.span_rings.iter_mut();
             let mut tasks = Vec::new();
-            for ((pid, range), scratch) in plan.iter().cloned().zip(self.chunks.iter_mut()) {
+            for (ci, ((pid, range), scratch)) in
+                plan.iter().cloned().zip(self.chunks.iter_mut()).enumerate()
+            {
                 let slot = slots[pid];
                 let gn = gnext;
-                tasks.push(move || match kernel {
-                    ChunkKernel::TopDown { queues } => {
-                        cpu_top_down(pg, pid, slot, &gn, &queues[pid][range], scratch)
+                // Each chunk times itself on a clone of the seam clock and
+                // writes into its own ring — no sharing, no locks, and
+                // nothing the kernel computes depends on the reading.
+                let timer = if tracing {
+                    rings.next().map(|ring| (clock.clone(), ring))
+                } else {
+                    None
+                };
+                tasks.push(move || {
+                    let start_ns = timer.as_ref().map(|(c, _)| c.now_ns());
+                    match kernel {
+                        ChunkKernel::TopDown { queues } => {
+                            cpu_top_down(pg, pid, slot, &gn, &queues[pid][range], scratch)
+                        }
+                        ChunkKernel::BottomUp { gf } => {
+                            cpu_bottom_up(pg, pid, slot, gf, &gn, range, scratch)
+                        }
                     }
-                    ChunkKernel::BottomUp { gf } => {
-                        cpu_bottom_up(pg, pid, slot, gf, &gn, range, scratch)
+                    if let Some((c, ring)) = timer {
+                        let end_ns = c.now_ns();
+                        ring.push(Span { pid, chunk: ci, start_ns: start_ns.unwrap(), end_ns });
                     }
                 });
             }
             parallel::run_steps(exec, tasks);
         }
+        // Aggregate kernel spans per pid at the barrier, in plan order —
+        // ascending (pid, chunk), same rule as the merge below.
+        if tracing {
+            for (ci, &(pid, _)) in plan.iter().enumerate() {
+                for s in self.span_rings[ci].drain() {
+                    self.pe_ns[pid].0 += s.end_ns.saturating_sub(s.start_ns);
+                }
+            }
+        }
         let mut crossing = 0u64;
         for (i, &(pid, _)) in plan.iter().enumerate() {
+            let m0 = if tracing { self.clock.now_ns() } else { 0 };
             let (work, cr) = self.merge_chunk(pid, i, level);
             stats.pe_work[pid].add(&work);
             crossing += cr;
+            if tracing {
+                self.pe_ns[pid].1 += self.clock.now_ns().saturating_sub(m0);
+            }
         }
         crossing
     }
@@ -500,9 +645,14 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
 
         // ---- accelerator partitions (single shared device context,
         // driven from the coordinating thread) ----
+        let tracing = self.trace.is_some();
         for pid in 0..np {
             if pg.parts[pid].kind.is_gpu() {
+                let k0 = if tracing { self.clock.now_ns() } else { 0 };
                 let work = self.gpu_top_down(pid, level)?;
+                if tracing {
+                    self.pe_ns[pid].0 += self.clock.now_ns().saturating_sub(k0);
+                }
                 stats.pe_work[pid] = work;
                 crossing += work.activated; // crossing splits counted below
             }
@@ -515,6 +665,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         // full-V buffers produced.
         stats.comm = self.comm.push_stats(pg, self.cfg.comm_mode, crossing);
         for q in 0..np {
+            let m0 = if tracing { self.clock.now_ns() } else { 0 };
             self.incoming.clear();
             if !self.comm.gather(q, &mut self.incoming) {
                 continue;
@@ -535,6 +686,9 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             } else {
                 let newly = self.state.merge_pushed(q, &self.incoming, level + 1);
                 stats.pe_work[q].activated += newly;
+            }
+            if tracing {
+                self.pe_ns[q].1 += self.clock.now_ns().saturating_sub(m0);
             }
         }
         Ok(())
@@ -575,9 +729,14 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         // ---- concurrent kernel phase + deterministic barrier merge ----
         self.run_chunk_plan(&plan, exec, level, stats, ChunkKernel::BottomUp { gf: &gf });
         // ---- accelerator partitions ----
+        let tracing = self.trace.is_some();
         for pid in 0..np {
             if pg.parts[pid].kind.is_gpu() {
+                let k0 = if tracing { self.clock.now_ns() } else { 0 };
                 stats.pe_work[pid] = self.gpu_bottom_up(pid, &gf, level)?;
+                if tracing {
+                    self.pe_ns[pid].0 += self.clock.now_ns().saturating_sub(k0);
+                }
             }
         }
         self.state.global_frontier.bits = gf;
@@ -898,6 +1057,27 @@ mod tests {
         assert_eq!(fsum, run.reached_vertices);
         // Init bytes cover at least depth+parent.
         assert!(run.init_bytes >= (g.num_vertices * 8) as u64);
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_traversal() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 2)));
+        let (pg, _) = specialized_partition(&g, &hw(2, 0), &LayoutOptions::paper());
+        let cfg = HybridConfig::default();
+        let mut plain = HybridRunner::<SimAccelerator>::new(&pg, cfg, None).unwrap();
+        let base = plain.run(3).unwrap();
+        let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
+        let mut traced = HybridRunner::<SimAccelerator>::new(&pg, cfg, None).unwrap();
+        traced.set_trace(Some(rec.clone()));
+        let run = traced.run(3).unwrap();
+        assert_eq!(base.depth, run.depth);
+        assert_eq!(base.parent, run.parent);
+        assert_eq!(base.levels, run.levels, "tracing must not change modeled stats");
+        // run_start + one record per level + run_end.
+        assert_eq!(rec.len(), run.levels.len() + 2);
+        let text = rec.to_jsonl();
+        assert!(text.contains("\"event\":\"run_start\""));
+        assert!(text.contains("\"direction\":\"top_down\""));
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod top_down;
 pub mod validate;
 
 pub use baseline::{baseline_bfs, BaselineKind, BaselineRun};
-pub use direction::{DirectionPolicy, PolicyKind};
+pub use direction::{DirectionDecision, DirectionPolicy, PolicyKind};
 pub use hybrid::{HybridConfig, HybridRunner};
 pub use validate::validate_graph500;
 

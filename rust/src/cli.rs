@@ -7,25 +7,27 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algo::sssp::DIST_INF;
-use crate::algo::{run_cc, run_pagerank, run_sssp, SsspRun, WeightFn};
+use crate::algo::{run_cc_traced, run_pagerank_traced, run_sssp_traced, SsspRun, WeightFn};
 use crate::bfs::{baseline_bfs, validate_graph500, BaselineKind, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{Accelerator, CommMode, CommStats, ExecutionMode, SimAccelerator};
 use crate::graph::generator::{kronecker_par, real_world_analog_par, GeneratorConfig, RealWorldClass};
 use crate::graph::stats::degree_stats;
 use crate::graph::{build_csr_par, io, Csr, EdgeList};
 use crate::metrics;
+use crate::obs::{Clock, TraceRecorder};
 use crate::partition::{
     random_partition, specialized_partition_par, HardwareConfig, LayoutOptions, PartitionedGraph,
 };
 use crate::runtime::{default_artifact_dir, mteps_per_watt, DeviceModel, EnergyModel, PjrtAccelerator};
 use crate::service::{
-    run_open_loop, run_requests, serve_session, AlgoOptions, AlgoOutput, AlgoQuery, ArrivalProcess,
-    BatchOptions, OpenLoopConfig, QueryRequest, QueryResponse, ResidentGraph, SchedulePolicy,
-    ServeOptions,
+    run_open_loop, run_requests_traced, serve_session, AlgoOptions, AlgoOutput, AlgoQuery,
+    ArrivalProcess, BatchOptions, OpenLoopConfig, QueryRequest, QueryResponse, ResidentGraph,
+    SchedulePolicy, ServeOptions,
 };
 use crate::util::tables::{fmt_teps, fmt_time, Table};
 
@@ -168,6 +170,42 @@ fn policy(args: &Args) -> Result<PolicyKind> {
         "td" | "top-down" => Ok(PolicyKind::AlwaysTopDown),
         other => bail!("unknown --policy {other:?}"),
     }
+}
+
+/// Build a superstep trace recorder when `--trace`/`--trace-chrome` ask
+/// for one. CLI traces run on the real clock: the timestamps are host
+/// wall-clock, while the record *sequence* stays deterministic — the
+/// engine merges worker spans in (pid, chunk) order at barriers
+/// (DESIGN.md Section 16).
+fn trace_recorder(args: &Args) -> Option<Arc<TraceRecorder>> {
+    (args.get("trace").is_some() || args.get("trace-chrome").is_some())
+        .then(|| Arc::new(TraceRecorder::new(Clock::real())))
+}
+
+/// Flush a recorder to the `--trace` (JSON-lines) and `--trace-chrome`
+/// (chrome://tracing viewer) destinations.
+fn write_trace(args: &Args, trace: &Option<Arc<TraceRecorder>>) -> Result<()> {
+    let Some(tr) = trace else { return Ok(()) };
+    if let Some(path) = args.get("trace") {
+        tr.write_jsonl(path).with_context(|| format!("writing trace {path}"))?;
+        println!("trace: {} records -> {path}", tr.len());
+    }
+    if let Some(path) = args.get("trace-chrome") {
+        tr.write_chrome(path).with_context(|| format!("writing chrome trace {path}"))?;
+        println!("trace: chrome export -> {path}");
+    }
+    Ok(())
+}
+
+/// Write the session's Prometheus-style snapshots to `--metrics-file`
+/// (requires `--metrics-every N` to have produced any).
+fn write_metrics(args: &Args, snapshots: &[String]) -> Result<()> {
+    if let Some(path) = args.get("metrics-file") {
+        std::fs::write(path, snapshots.concat())
+            .with_context(|| format!("writing metrics {path}"))?;
+        println!("metrics: {} snapshots -> {path}", snapshots.len());
+    }
+    Ok(())
 }
 
 /// `totem-do generate` — write a workload graph to disk.
@@ -318,6 +356,8 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     let device = DeviceModel::default();
     let energy = EnergyModel::default();
     let mut runner = HybridRunner::new(&pg, cfg, accel)?;
+    let trace = trace_recorder(args);
+    runner.set_trace(trace.clone());
     let mut teps_model = Vec::new();
     let mut teps_wall = Vec::new();
     let mut joules = Vec::new();
@@ -374,6 +414,7 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
     if validate {
         println!("validation: all {} searches passed Graph500 checks", roots.len());
     }
+    write_trace(args, &trace)?;
     Ok(())
 }
 
@@ -455,7 +496,8 @@ pub fn cmd_sssp(args: &Args) -> Result<()> {
         g.num_undirected_edges(),
         hw.label()
     );
-    let run = run_sssp(&pg, root, delta, w.clone(), exec)?;
+    let trace = trace_recorder(args);
+    let run = run_sssp_traced(&pg, root, delta, w.clone(), exec, trace.clone())?;
     let max_dist = run.dist.iter().filter(|&&d| d != DIST_INF).max().copied().unwrap_or(0);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["reached".to_string(), run.reached.to_string()]);
@@ -467,6 +509,7 @@ pub fn cmd_sssp(args: &Args) -> Result<()> {
         validate_sssp(&g, &w, &run)?;
         println!("validation: tree is tight and no edge is violated");
     }
+    write_trace(args, &trace)?;
     Ok(())
 }
 
@@ -482,7 +525,8 @@ pub fn cmd_cc(args: &Args) -> Result<()> {
         g.num_undirected_edges(),
         hw.label()
     );
-    let run = run_cc(&pg, exec)?;
+    let trace = trace_recorder(args);
+    let run = run_cc_traced(&pg, exec, trace.clone())?;
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["components".to_string(), run.components.to_string()]);
     t.row(vec!["rounds".to_string(), run.rounds.to_string()]);
@@ -506,6 +550,7 @@ pub fn cmd_cc(args: &Args) -> Result<()> {
         }
         println!("validation: labels are per-component minima");
     }
+    write_trace(args, &trace)?;
     Ok(())
 }
 
@@ -522,7 +567,8 @@ pub fn cmd_pagerank(args: &Args) -> Result<()> {
         g.num_undirected_edges(),
         hw.label()
     );
-    let run = run_pagerank(&pg, damping, iters, tol, exec)?;
+    let trace = trace_recorder(args);
+    let run = run_pagerank_traced(&pg, damping, iters, tol, exec, trace.clone())?;
     let total: f64 = run.ranks.iter().sum();
     let (top_v, top_r) = run
         .ranks
@@ -543,6 +589,7 @@ pub fn cmd_pagerank(args: &Args) -> Result<()> {
         anyhow::ensure!(total <= 1.0 + 1e-9, "rank mass {total} exceeds 1");
         println!("validation: ranks positive, mass conserved");
     }
+    write_trace(args, &trace)?;
     Ok(())
 }
 
@@ -628,6 +675,7 @@ fn serve_options(args: &Args) -> Result<ServeOptions> {
         queue_depth: args.get_parse("queue-depth", 64usize)?,
         cache_capacity: args.get_parse("cache-cap", 64usize)?,
         default_deadline,
+        metrics_every: args.get_parse("metrics-every", 0usize)?,
     })
 }
 
@@ -770,8 +818,9 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
     }
     let requests: Vec<QueryRequest> =
         roots.iter().map(|&r| QueryRequest::new(AlgoQuery::Bfs { root: r })).collect();
+    let trace = trace_recorder(args);
     let t0 = std::time::Instant::now();
-    let responses = run_requests(&rg, &requests, &opts);
+    let responses = run_requests_traced(&rg, &requests, &opts, trace.as_ref());
     let wall = t0.elapsed().as_secs_f64();
     let (_ok, failed) = report_batch(
         &rg,
@@ -781,6 +830,7 @@ pub fn cmd_batch(args: &Args) -> Result<()> {
         args.has("verbose"),
         args.has("comm-stats"),
     );
+    write_trace(args, &trace)?;
     anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
     Ok(())
 }
@@ -815,8 +865,9 @@ fn cmd_batch_algo(
         opts.threads,
         queries.len()
     );
+    let trace = trace_recorder(args);
     let t0 = std::time::Instant::now();
-    let responses = run_requests(rg, &requests, opts);
+    let responses = run_requests_traced(rg, &requests, opts, trace.as_ref());
     let wall = t0.elapsed().as_secs_f64();
     let mut failed = 0usize;
     for (i, resp) in responses.iter().enumerate() {
@@ -863,6 +914,7 @@ fn cmd_batch_algo(
             );
         }
     }
+    write_trace(args, &trace)?;
     anyhow::ensure!(failed == 0 || !args.has("strict"), "{failed} queries failed");
     Ok(())
 }
@@ -1003,10 +1055,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         t.row(vec!["cold service p50".to_string(), fmt_time(p.cold_service.p50)]);
         t.row(vec!["hit service p50".to_string(), fmt_time(p.hit_service.p50)]);
         t.print();
+        write_metrics(args, &p.metrics)?;
         return Ok(());
     }
     println!("enter whitespace-separated roots (one batch per line); 'quit' or EOF ends");
     let stdin = std::io::stdin();
+    let mut snapshots: Vec<String> = Vec::new();
     for line in stdin.lock().lines() {
         let line = line?;
         let bare = line.split('#').next().unwrap_or("").trim();
@@ -1039,6 +1093,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         for resp in &report.responses {
             print_served_response(&rg, &device, resp, validate);
         }
+        snapshots.extend(report.metrics.iter().cloned());
         let c = report.counts;
         println!(
             "line of {} served in {}: {} done, {} rejected, {} deadline-exceeded, {} invalid, \
@@ -1061,6 +1116,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         pool.idle,
         rg.cache.len()
     );
+    write_metrics(args, &snapshots)?;
     Ok(())
 }
 
@@ -1114,19 +1170,24 @@ pub fn usage() -> &'static str {
                  --comm-stats (per-traversal push/pull bytes+messages split\n\
                  by host/PCIe link — boundary-compacted adaptive wire sizes,\n\
                  with the full-V bitmap scheme's cost for comparison)\n\
+                 --trace FILE (JSON-lines superstep trace: per-level direction\n\
+                 decision with alpha/beta inputs, frontier stats, per-PE kernel\n\
+                 and merge times, wire bytes vs the dense-equivalent cost)\n\
+                 --trace-chrome FILE (same spans as a chrome://tracing export)\n\
        sssp      delta-stepping single-source shortest paths (vertex-program\n\
                  substrate; same adaptive frontiers + partitions as `bfs`)\n\
                  --root R --delta W (bucket width, default 8)\n\
                  --unit-weights | --max-weight W --weight-seed S\n\
                  --validate (tight parents + triangle inequality)\n\
+                 --trace FILE (superstep trace, as in `bfs`)\n\
                  plus the graph/hardware/--threads flags of `bfs`\n\
        cc        weakly connected components (min-label propagation)\n\
                  --validate (labels are per-component minima)\n\
-                 plus the graph/hardware/--threads flags of `bfs`\n\
+                 --trace FILE; plus the graph/hardware/--threads flags of `bfs`\n\
        pagerank  power-method PageRank with convergence check\n\
                  --damping D --pr-iters N --pr-tol T\n\
                  --validate (positive ranks, mass conserved)\n\
-                 plus the graph/hardware/--threads flags of `bfs`\n\
+                 --trace FILE; plus the graph/hardware/--threads flags of `bfs`\n\
        batch     run a root campaign through the resident multi-query service\n\
                  (partition once, recycle traversal state, schedule K queries\n\
                  concurrently; per-query output bit-identical to `bfs`)\n\
@@ -1137,6 +1198,7 @@ pub fn usage() -> &'static str {
                  --delta/--damping/--pr-iters/--pr-tol set per-query knobs)\n\
                  --validate --verbose --strict (fail on any failed query)\n\
                  --comm-stats (as in `bfs`, aggregated over the batch)\n\
+                 --trace FILE (one trace block per query, in submission order)\n\
                  plus the graph/hardware flags of `bfs`\n\
        serve     concurrent serving front-end: load once, then answer queries\n\
                  through a bounded submission queue with admission control,\n\
@@ -1151,6 +1213,10 @@ pub fn usage() -> &'static str {
                  --arrivals poisson|uniform switches to open-loop load\n\
                  generation: --qps F --queries N over sampled roots, printing\n\
                  p50/p99/p999, rejection rate and cache hit rate\n\
+                 --metrics-every N (Prometheus-style snapshot every N answered\n\
+                 queries plus one at session end: counters, queue depth, pool\n\
+                 occupancy, cold-vs-hit latency histograms)\n\
+                 --metrics-file FILE (write the collected snapshots)\n\
                  takes `batch`'s graph/hardware/scheduling/--algo flags plus\n\
                  --validate (per-query result lines replace --verbose/--strict)\n\
        baseline  single-address-space reference BFS\n\
@@ -1277,9 +1343,12 @@ mod tests {
         assert_eq!(o.queue_depth, 3);
         assert_eq!(o.cache_capacity, 0);
         assert_eq!(o.default_deadline, Some(std::time::Duration::from_millis(250)));
+        let m = serve_options(&Args::parse(&argv(&["--metrics-every", "5"])).unwrap()).unwrap();
+        assert_eq!(m.metrics_every, 5);
         let d = serve_options(&Args::parse(&argv(&[])).unwrap()).unwrap();
         assert_eq!((d.queue_depth, d.cache_capacity), (64, 64));
         assert_eq!(d.default_deadline, None);
+        assert_eq!(d.metrics_every, 0, "snapshots are opt-in");
     }
 
     #[test]
@@ -1320,6 +1389,49 @@ mod tests {
         let mut bad = base.to_vec();
         bad.extend(["--root", "99999999"]);
         assert!(cmd_sssp(&Args::parse(&argv(&bad)).unwrap()).is_err());
+    }
+
+    #[test]
+    fn trace_flags_write_jsonl_and_chrome_files() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let jsonl = dir.join(format!("totem_do_cli_trace_{pid}.jsonl"));
+        let chrome = dir.join(format!("totem_do_cli_trace_{pid}.chrome.json"));
+        let mut v = argv(&["--scale", "7", "--seed", "3", "--config", "2S0G", "--root", "0"]);
+        v.push("--trace".into());
+        v.push(jsonl.to_str().unwrap().into());
+        v.push("--trace-chrome".into());
+        v.push(chrome.to_str().unwrap().into());
+        let a = Args::parse(&v).unwrap();
+        cmd_bfs(&a).unwrap();
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        assert!(text.lines().next().unwrap().contains("\"event\":\"run_start\""));
+        assert!(text.lines().any(|l| l.contains("\"event\":\"level\"")));
+        assert!(text.lines().last().unwrap().contains("\"event\":\"run_end\""));
+        assert!(std::fs::read_to_string(&chrome).unwrap().starts_with("{\"traceEvents\":["));
+        std::fs::remove_file(&jsonl).ok();
+        std::fs::remove_file(&chrome).ok();
+
+        // The vertex programs share the flag (distinct file per algo so
+        // parallel test binaries never race on a shared path).
+        for algo in ["sssp", "cc", "pagerank"] {
+            let p = dir.join(format!("totem_do_cli_trace_{pid}_{algo}.jsonl"));
+            let mut v = argv(&["--scale", "7", "--seed", "3", "--config", "2S0G"]);
+            v.push("--trace".into());
+            v.push(p.to_str().unwrap().into());
+            let a = Args::parse(&v).unwrap();
+            match algo {
+                "sssp" => cmd_sssp(&a).unwrap(),
+                "cc" => cmd_cc(&a).unwrap(),
+                _ => cmd_pagerank(&a).unwrap(),
+            }
+            let text = std::fs::read_to_string(&p).unwrap();
+            assert!(
+                text.lines().any(|l| l.contains("\"event\":\"level\"")),
+                "{algo} trace holds level records"
+            );
+            std::fs::remove_file(&p).ok();
+        }
     }
 
     #[test]

@@ -9,25 +9,30 @@
 //! next acquisition still takes the sparse O(touched) reset instead of
 //! the O(V) poisoned-state wipe (Section 13 lifecycle).
 //!
+//! Deadlines read time through [`obs::Clock`](crate::obs::Clock) — the
+//! crate's one audited timing seam (DESIGN.md Section 16). The clock
+//! decides *whether* a query is abandoned, never *what* it computes:
+//! cancellation lands at a BSP barrier and a cancelled query produces no
+//! output, so timing variance cannot leak into traversal bits. Tests arm
+//! deadlines on a virtual clock and advance it by hand.
+//!
 //! The default token is *free*: no allocation, every check a constant
 //! `None` test — standalone runs pay nothing for the serving tier.
 
-// Deadlines are genuine wall-clock policy: expiry timing is allowed to
-// vary per run, and cancellation lands only at superstep barriers where
-// output bits are unaffected (see `is_cancelled`).
-#![allow(clippy::disallowed_methods)]
-
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
+
+use crate::obs::Clock;
 
 struct Inner {
     cancelled: AtomicBool,
-    deadline: Option<Instant>,
+    /// Deadline as (clock, expiry in that clock's nanoseconds).
+    deadline: Option<(Clock, u64)>,
 }
 
-/// Shared cancellation flag with an optional wall-clock deadline,
-/// checked cooperatively at superstep barriers.
+/// Shared cancellation flag with an optional clock deadline, checked
+/// cooperatively at superstep barriers.
 #[derive(Clone, Default)]
 pub struct CancelToken {
     inner: Option<Arc<Inner>>,
@@ -52,14 +57,23 @@ impl CancelToken {
         }
     }
 
-    /// An armed token that also fires once `deadline` passes.
-    pub fn with_deadline(deadline: Instant) -> Self {
+    /// An armed token that also fires once `clock` reads `at_ns` or
+    /// later. The clock is captured (clones share it), so a virtual
+    /// clock advanced elsewhere fires deadlines here.
+    pub fn with_deadline(clock: Clock, at_ns: u64) -> Self {
         Self {
             inner: Some(Arc::new(Inner {
                 cancelled: AtomicBool::new(false),
-                deadline: Some(deadline),
+                deadline: Some((clock, at_ns)),
             })),
         }
+    }
+
+    /// An armed token whose deadline is `after` from `clock`'s current
+    /// reading — the serving tier's "deadline from submission" shape.
+    pub fn with_deadline_in(clock: Clock, after: Duration) -> Self {
+        let at = clock.now_ns().saturating_add(after.as_nanos().min(u128::from(u64::MAX)) as u64);
+        Self::with_deadline(clock, at)
     }
 
     /// Trip the token explicitly; all clones observe the cancellation.
@@ -84,18 +98,13 @@ impl CancelToken {
         if inner.cancelled.load(Ordering::Acquire) {
             return true;
         }
-        // NONDET-OK: the wall clock decides *whether* a query is
-        // abandoned, never *what* it computes — cancellation lands at a
-        // BSP barrier and a cancelled query produces no output, so timing
-        // variance cannot leak into traversal bits.
-        inner.deadline.is_some_and(|d| Instant::now() >= d)
+        inner.deadline.as_ref().is_some_and(|(clock, at)| clock.now_ns() >= *at)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     #[test]
     fn default_token_never_fires() {
@@ -115,14 +124,35 @@ mod tests {
     }
 
     #[test]
-    fn past_deadline_fires_without_explicit_cancel() {
-        // NONDET-OK: deadline arithmetic relative to the current instant;
-        // asserts policy (fires/doesn't), not output bits.
-        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+    fn deadline_fires_when_the_clock_reaches_it() {
+        let clock = Clock::virtual_at(1_000);
+        let t = CancelToken::with_deadline(clock.clone(), 1_500);
+        assert!(!t.is_cancelled());
+        clock.advance_ns(499);
+        assert!(!t.is_cancelled(), "999 ns short of the deadline");
+        clock.advance_ns(1);
+        assert!(t.is_cancelled(), "exactly at the deadline");
+        clock.advance_ns(10_000);
+        assert!(t.is_cancelled(), "deadlines latch — time only moves forward");
+    }
+
+    #[test]
+    fn with_deadline_in_offsets_from_the_clocks_current_reading() {
+        let clock = Clock::virtual_at(0);
+        clock.advance_ns(5_000);
+        let t = CancelToken::with_deadline_in(clock.clone(), Duration::from_nanos(100));
+        assert!(!t.is_cancelled());
+        clock.advance_ns(100);
         assert!(t.is_cancelled());
-        // NONDET-OK: same — a deadline an hour out cannot have passed.
-        let later = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
-        assert!(!later.is_cancelled());
+        // An already-passed deadline (zero duration) fires immediately.
+        let now = CancelToken::with_deadline_in(clock.clone(), Duration::ZERO);
+        assert!(now.is_cancelled());
+    }
+
+    #[test]
+    fn real_clock_deadline_far_out_does_not_fire() {
+        let t = CancelToken::with_deadline_in(Clock::real(), Duration::from_secs(3600));
+        assert!(!t.is_cancelled(), "a deadline an hour out cannot have passed");
     }
 
     // --- cross-thread contract tests (runnable under Miri and TSan;
@@ -169,6 +199,25 @@ mod tests {
             }
         });
         assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_check_is_safe_across_threads() {
+        // A virtual-clock deadline advanced on one thread fires for a
+        // token checked on another (the Arc'd counter is the share point).
+        let clock = Clock::virtual_at(0);
+        let t = CancelToken::with_deadline(clock.clone(), 100);
+        std::thread::scope(|s| {
+            let watcher = t.clone();
+            let handle = s.spawn(move || {
+                while !watcher.is_cancelled() {
+                    std::thread::yield_now();
+                }
+                true
+            });
+            clock.advance_ns(100);
+            assert!(handle.join().expect("watcher thread"));
+        });
     }
 
     #[test]

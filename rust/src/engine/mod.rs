@@ -62,6 +62,15 @@ impl Direction {
             Direction::BottomUp => "bottom-up",
         }
     }
+
+    /// Snake-case tag for machine-readable output (trace records, CI
+    /// assertions); `label()` stays the human-facing spelling.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Direction::TopDown => "top_down",
+            Direction::BottomUp => "bottom_up",
+        }
+    }
 }
 
 /// Work performed by one processing element during one superstep — the

@@ -32,6 +32,7 @@ pub mod bench_support;
 pub mod bfs;
 pub mod engine;
 pub mod lint;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod service;

@@ -8,8 +8,11 @@
 //! - **R1** every `unsafe` block/fn carries `// SAFETY:`;
 //! - **R2** every `Ordering::*` use carries `// ORDERING:`, and
 //!   `Relaxed` only appears in the counter-only module allowlist;
-//! - **R3** hash collections and wall clocks are banned in
-//!   deterministic paths unless annotated `// NONDET-OK:`;
+//! - **R3** hash collections are banned in deterministic paths unless
+//!   annotated `// NONDET-OK:`; wall clocks (`Instant::now` /
+//!   `SystemTime`) are banned there *outright* — annotated or not —
+//!   everywhere except the clock seam itself (`obs/clock.rs`), which
+//!   all timing must route through (PR 9);
 //! - **R4** float reductions in deterministic paths must be annotated
 //!   (iteration-order sensitivity — the PageRank bit-identity guard);
 //! - **R5** `#[allow(...)]` requires a trailing reason comment.
@@ -65,16 +68,28 @@ impl fmt::Display for Violation {
 /// Module prefixes (relative to `src/`) where the determinism contract
 /// holds: everything that can influence traversal output bits. `bfs/`
 /// is included beyond the issue's list — the hybrid driver and kernels
-/// feed the same bit-identity contract as `engine/`.
-const DETERMINISTIC_PATHS: [&str; 7] = [
+/// feed the same bit-identity contract as `engine/`. `obs/` is included
+/// because trace records and histograms are asserted byte-identical
+/// across thread counts (DESIGN.md Section 16).
+const DETERMINISTIC_PATHS: [&str; 8] = [
     "engine/",
     "algo/",
     "partition/",
     "graph/",
     "bfs/",
+    "obs/",
     "util/bitmap.rs",
     "util/pool.rs",
 ];
+
+/// The clock seam (DESIGN.md Section 16): the only files on
+/// deterministic paths where the R3 clock tokens (`Instant::now`,
+/// `SystemTime`) are tolerated — with the usual `// NONDET-OK:`
+/// annotation. Everywhere else on those paths a clock read is a
+/// violation *even when annotated*: timing must route through
+/// `obs::Clock`, which is what keeps the R3 clock audit in one place
+/// and trace output bit-stable under the virtual clock.
+const CLOCK_SEAM_FILES: [&str; 1] = ["obs/clock.rs"];
 
 /// Counter-only modules where `Ordering::Relaxed` is permitted (with an
 /// `// ORDERING:` justification, like any other ordering). Each entry
@@ -126,6 +141,14 @@ impl LintConfig {
         }
         let rel = normalize(file);
         RELAXED_ALLOWLIST.iter().any(|p| rel.ends_with(p))
+    }
+
+    /// Is `file` the clock seam (annotated OS-clock reads tolerated)?
+    /// Path-based even under `assume_deterministic`, so the fixture
+    /// corpus exercises the hardened rule while the real seam passes.
+    pub fn clock_seam_exempt(&self, file: &str) -> bool {
+        let rel = normalize(file);
+        CLOCK_SEAM_FILES.iter().any(|p| rel.ends_with(p))
     }
 }
 
@@ -202,11 +225,12 @@ mod tests {
 
     #[test]
     fn bad_fixtures_each_trip_their_rule() {
-        let cases: [(&str, &str, &str); 6] = [
+        let cases: [(&str, &str, &str); 7] = [
             ("bad_r1_unsafe.rs", include_str!("../../lint_fixtures/bad_r1_unsafe.rs"), "R1"),
             ("bad_r2_ordering.rs", include_str!("../../lint_fixtures/bad_r2_ordering.rs"), "R2"),
             ("bad_r2_relaxed.rs", include_str!("../../lint_fixtures/bad_r2_relaxed.rs"), "R2"),
             ("bad_r3_nondet.rs", include_str!("../../lint_fixtures/bad_r3_nondet.rs"), "R3"),
+            ("bad_r3_clock.rs", include_str!("../../lint_fixtures/bad_r3_clock.rs"), "R3"),
             ("bad_r4_float.rs", include_str!("../../lint_fixtures/bad_r4_float.rs"), "R4"),
             ("bad_r5_allow.rs", include_str!("../../lint_fixtures/bad_r5_allow.rs"), "R5"),
         ];
@@ -281,10 +305,36 @@ mod tests {
         assert!(cfg.is_deterministic("rust/src/engine/comm.rs"));
         assert!(cfg.is_deterministic("/abs/path/rust/src/util/bitmap.rs"));
         assert!(cfg.is_deterministic("rust\\src\\algo\\runner.rs"));
+        assert!(cfg.is_deterministic("rust/src/obs/trace.rs"));
         assert!(!cfg.is_deterministic("rust/src/cli.rs"));
         assert!(!cfg.is_deterministic("rust/src/service/server.rs"));
         assert!(cfg.relaxed_allowed("rust/src/service/server.rs"));
         assert!(!cfg.relaxed_allowed("rust/src/service/state_pool.rs"));
+        assert!(cfg.clock_seam_exempt("rust/src/obs/clock.rs"));
+        assert!(cfg.clock_seam_exempt("/abs/rust\\src\\obs\\clock.rs"));
+        assert!(!cfg.clock_seam_exempt("rust/src/obs/trace.rs"));
+        assert!(!cfg.clock_seam_exempt("rust/src/engine/cancel.rs"));
+        // The exemption is path-based even for the fixture config.
+        assert!(DET.clock_seam_exempt("rust/src/obs/clock.rs"));
+        assert!(!DET.clock_seam_exempt("lint_fixtures/bad_r3_clock.rs"));
+    }
+
+    #[test]
+    fn clock_reads_outside_the_seam_fail_even_annotated() {
+        let src = "// NONDET-OK: reporting only — not sufficient for clocks.\n\
+                   let t0 = Instant::now();\n";
+        // On a deterministic path the annotation does not help: timing
+        // must route through obs::Clock.
+        let v = lint_source("rust/src/engine/cancel.rs", src, &CFG);
+        assert_eq!(rules_hit(&v), ["R3"]);
+        assert!(v[0].message.contains("obs::Clock"), "message steers to the seam: {v:?}");
+        // The seam itself is held to the ordinary R3 standard: annotated
+        // passes, unannotated fails.
+        assert!(lint_source("rust/src/obs/clock.rs", src, &CFG).is_empty());
+        let bare = "let t0 = Instant::now();\n";
+        assert_eq!(rules_hit(&lint_source("rust/src/obs/clock.rs", bare, &CFG)), ["R3"]);
+        // Off the deterministic paths clocks stay unrestricted.
+        assert!(lint_source("rust/src/cli.rs", src, &CFG).is_empty());
     }
 
     // --- the teeth: the crate's own sources must be contract-clean ---

@@ -27,10 +27,15 @@ const ORDERING_TOKENS: [(&str, bool); 5] = [
     ("Ordering::SeqCst", false),
 ];
 
-/// Nondeterminism sources banned from deterministic paths (R3):
-/// hash collections iterate in RandomState order; clocks vary per run.
-const NONDET_TOKENS: [&str; 5] =
-    ["HashMap", "HashSet", "RandomState", "Instant::now", "SystemTime"];
+/// Nondeterminism sources banned from deterministic paths (R3) unless
+/// annotated: hash collections iterate in RandomState order.
+const NONDET_TOKENS: [&str; 3] = ["HashMap", "HashSet", "RandomState"];
+
+/// OS-clock reads: banned from deterministic paths *outright* — no
+/// annotation escape — except inside the clock seam (`obs/clock.rs`,
+/// `LintConfig::clock_seam_exempt`), where the ordinary `// NONDET-OK:`
+/// requirement applies. All timing routes through `obs::Clock`.
+const CLOCK_TOKENS: [&str; 2] = ["Instant::now", "SystemTime"];
 
 /// True when `needle` occurs in `hay` delimited by non-identifier
 /// characters on both sides. `::`-qualified needles work because `:` is
@@ -140,9 +145,11 @@ pub fn check_ordering(file: &str, lines: &[Line], cfg: &LintConfig, out: &mut Ve
     }
 }
 
-/// R3: hash collections and wall clocks are banned in deterministic
-/// paths unless `// NONDET-OK:` explains why the result can't leak into
-/// traversal output.
+/// R3: hash collections are banned in deterministic paths unless
+/// `// NONDET-OK:` explains why the result can't leak into traversal
+/// output; wall clocks are banned there outright — annotated or not —
+/// everywhere except the clock seam itself (`obs/clock.rs`), which all
+/// timing must route through via `obs::Clock`.
 pub fn check_nondet_sources(
     file: &str,
     lines: &[Line],
@@ -152,7 +159,40 @@ pub fn check_nondet_sources(
     if !cfg.is_deterministic(file) {
         return;
     }
+    let seam = cfg.clock_seam_exempt(file);
     for (idx, line) in lines.iter().enumerate() {
+        let mut flagged = false;
+        for token in CLOCK_TOKENS {
+            if !has_token(&line.code, token) {
+                continue;
+            }
+            if !seam {
+                out.push(violation(
+                    file,
+                    idx,
+                    Rule::R3NondetSource,
+                    format!(
+                        "`{token}` in a deterministic path: route timing through `obs::Clock` \
+                         (the clock seam, obs/clock.rs) — annotation does not exempt clocks"
+                    ),
+                ));
+                flagged = true;
+            } else if !annotated(lines, idx, TAG_NONDET) {
+                out.push(violation(
+                    file,
+                    idx,
+                    Rule::R3NondetSource,
+                    format!("`{token}` in the clock seam without a `// NONDET-OK:` reason"),
+                ));
+                flagged = true;
+            }
+            if flagged {
+                break; // one violation per line
+            }
+        }
+        if flagged {
+            continue;
+        }
         for token in NONDET_TOKENS {
             if has_token(&line.code, token) && !annotated(lines, idx, TAG_NONDET) {
                 out.push(violation(

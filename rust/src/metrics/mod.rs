@@ -32,20 +32,27 @@ pub fn teps(traversed_edges: u64, seconds: f64) -> f64 {
 
 /// Nearest-rank percentile of unsorted samples (`p` in `[0, 100]`; the
 /// Graph500 reporting convention — no interpolation, every reported value
-/// is an actually observed sample). Empty input yields 0.
+/// is an actually observed sample). NaN samples are dropped before
+/// ranking (a NaN latency is a measurement bug, not a tail event — under
+/// `total_cmp` it would sort past +inf and poison every high percentile).
+/// Empty input — or input that is all NaN — yields the 0.0 sentinel:
+/// "no observations", distinguishable from any real latency, which is
+/// positive.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    let mut sorted = xs.to_vec();
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
     sorted.sort_by(f64::total_cmp);
     percentile_of_sorted(&sorted, p)
 }
 
-/// Nearest-rank percentile of an already ascending-sorted sample slice.
+/// Nearest-rank percentile of an already ascending-sorted, NaN-free
+/// sample slice. Empty input yields the 0.0 sentinel. A single sample is
+/// every percentile of itself (rank clamps to 1).
 fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
     let rank = ((p.clamp(0.0, 100.0) / 100.0) * sorted.len() as f64).ceil() as usize;
-    sorted[rank.max(1) - 1]
+    sorted[rank.max(1).min(sorted.len()) - 1]
 }
 
 /// Latency distribution of a query campaign (seconds; typically the
@@ -63,10 +70,14 @@ pub struct LatencySummary {
     pub max: f64,
 }
 
+/// Summarize a latency sample set. NaN samples are dropped (see
+/// [`percentile`]); `n` counts the samples that survived, so a summary
+/// with `n == 0` means "nothing observed" and every statistic is the
+/// 0.0 sentinel.
 pub fn latency_summary(latencies: &[f64]) -> LatencySummary {
     // One sort shared by every rank (latency samples are non-negative,
     // so the sorted maximum is the last element).
-    let mut sorted = latencies.to_vec();
+    let mut sorted: Vec<f64> = latencies.iter().copied().filter(|x| !x.is_nan()).collect();
     sorted.sort_by(f64::total_cmp);
     LatencySummary {
         n: sorted.len(),
@@ -259,6 +270,60 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 99.0), 4.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Single sample: every rank clamps onto it.
+        for p in [0.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5, "p={p}");
+        }
+        // NaN samples are dropped, not ranked past +inf.
+        let xs = [1.0, f64::NAN, 3.0, 2.0, f64::NAN];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0, "NaN must not be the reported max");
+        // All-NaN degenerates to the empty-input sentinel.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), 0.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+    }
+
+    #[test]
+    fn latency_summary_edge_cases() {
+        // Empty: all-sentinel summary.
+        let s = latency_summary(&[]);
+        assert_eq!((s.n, s.mean, s.p50, s.p99, s.p999, s.max), (0, 0.0, 0.0, 0.0, 0.0, 0.0));
+        // Single sample: every statistic is that sample.
+        let s = latency_summary(&[0.25]);
+        assert_eq!((s.n, s.mean, s.p50, s.p99, s.p999, s.max), (1, 0.25, 0.25, 0.25, 0.25, 0.25));
+        // NaN is excluded from n, mean, and every rank.
+        let s = latency_summary(&[0.1, f64::NAN, 0.3]);
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.2).abs() < 1e-12);
+        assert_eq!(s.max, 0.3);
+        assert!(!s.p999.is_nan());
+        // All-NaN behaves exactly like empty.
+        let s = latency_summary(&[f64::NAN]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn rate_guards_hold_at_zero_denominators() {
+        // Zero submissions / zero lookups: the 0.0 sentinel, never NaN.
+        let zero = ServeCounts::default();
+        assert_eq!(zero.rejection_rate(), 0.0);
+        assert_eq!(zero.cache_hit_rate(), 0.0);
+        // Rejections without submissions (can't happen live, but the
+        // guard keys on the denominator only).
+        let weird = ServeCounts { rejected: 3, ..ServeCounts::default() };
+        assert_eq!(weird.rejection_rate(), 0.0);
+        // Hits with no misses and vice versa stay well-defined.
+        let all_hits = ServeCounts { cache_hits: 5, ..ServeCounts::default() };
+        assert_eq!(all_hits.cache_hit_rate(), 1.0);
+        let all_miss = ServeCounts { cache_misses: 5, ..ServeCounts::default() };
+        assert_eq!(all_miss.cache_hit_rate(), 0.0);
     }
 
     #[test]

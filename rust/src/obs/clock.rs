@@ -1,0 +1,128 @@
+//! The audited clock seam (DESIGN.md Section 16).
+//!
+//! Every timestamp the engine, runner, and service layers take goes
+//! through [`Clock`]. This file is the *only* place in the crate's
+//! deterministic paths allowed to touch the OS clock — the contract
+//! lint's R3 clock-seam rule (`lint::rules`) rejects `Instant::now` /
+//! `SystemTime` everywhere else on those paths, even when annotated.
+//! Two implementations share the one API:
+//!
+//! * **Real** — anchored at construction; `now_ns` is monotonic
+//!   nanoseconds since the anchor. Production timing.
+//! * **Virtual** — a shared counter advanced only by [`Clock::advance_ns`].
+//!   Never reads the OS. Un-advanced, every timestamp is `0`, which makes
+//!   trace output byte-stable across runs and thread counts — the
+//!   substrate of the trace-determinism tests.
+//!
+//! Cloning is cheap and intentional: clones of a virtual clock share the
+//! same counter (an `Arc`), so a deadline checked on a worker thread sees
+//! the coordinator's advances.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::CounterExt;
+
+/// Nanosecond clock behind the crate's timing seam. `Default` is the
+/// real clock anchored at the call.
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Monotonic OS clock, reported relative to the construction anchor.
+    Real(Instant),
+    /// Manually-advanced counter; shared through clones.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A real clock anchored now.
+    pub fn real() -> Self {
+        // NONDET-OK: this is the clock seam itself — the one audited
+        // wall-clock read site; consumers only ever see reporting-grade
+        // durations that never feed back into traversal output.
+        #[allow(clippy::disallowed_methods)] // ditto — the seam's anchor read
+        Clock::Real(Instant::now())
+    }
+
+    /// A virtual clock starting at `start_ns`, advanced only by
+    /// [`Clock::advance_ns`].
+    pub fn virtual_at(start_ns: u64) -> Self {
+        Clock::Virtual(Arc::new(AtomicU64::new(start_ns)))
+    }
+
+    /// Nanoseconds since the anchor (real) or the current counter value
+    /// (virtual).
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Real(anchor) => anchor.elapsed().as_nanos() as u64,
+            Clock::Virtual(ns) => ns.read(),
+        }
+    }
+
+    /// Seconds since the anchor — convenience for reporting.
+    pub fn now_s(&self) -> f64 {
+        self.now_ns() as f64 / 1e9
+    }
+
+    /// Advance a virtual clock by `ns`; no-op on the real clock (time
+    /// advances itself there).
+    pub fn advance_ns(&self, ns: u64) {
+        if let Clock::Virtual(counter) = self {
+            counter.bump_by(ns);
+        }
+    }
+
+    /// True for the virtual implementation (tests and deterministic
+    /// trace capture).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::real()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_starts_where_told_and_advances() {
+        let c = Clock::virtual_at(5);
+        assert!(c.is_virtual());
+        assert_eq!(c.now_ns(), 5);
+        c.advance_ns(10);
+        assert_eq!(c.now_ns(), 15);
+        assert!((c.now_s() - 15e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn virtual_clones_share_the_counter() {
+        let a = Clock::virtual_at(0);
+        let b = a.clone();
+        a.advance_ns(7);
+        assert_eq!(b.now_ns(), 7);
+        b.advance_ns(3);
+        assert_eq!(a.now_ns(), 10);
+    }
+
+    #[test]
+    fn real_clock_is_monotonic_and_ignores_advance() {
+        let c = Clock::real();
+        assert!(!c.is_virtual());
+        let t0 = c.now_ns();
+        c.advance_ns(1_000_000_000); // no-op
+        let t1 = c.now_ns();
+        assert!(t1 >= t0);
+        // Anchored at construction: readings stay far below a year.
+        assert!(t1 < 365 * 24 * 3600 * 1_000_000_000);
+    }
+
+    #[test]
+    fn default_is_real() {
+        assert!(!Clock::default().is_virtual());
+    }
+}

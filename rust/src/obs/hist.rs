@@ -1,0 +1,334 @@
+//! Log-bucketed latency histogram with deterministic merge
+//! (DESIGN.md Section 16).
+//!
+//! An HDR-style base-2 histogram over nanoseconds, pure integer
+//! arithmetic end to end: values `0..8` land in unit-width buckets;
+//! above that each power-of-two range splits into 8 sub-buckets, so any
+//! recorded value's bucket upper edge overstates it by at most 12.5 %.
+//! Everything — bucket index, quantiles, merge — is platform-independent
+//! integer math (no `log`/float rounding), so two histograms built from
+//! the same multiset of samples are identical byte for byte regardless
+//! of recording order, thread count, or host. That is what lets the
+//! serving tier replace the sorted-`Vec` percentile path: merge is
+//! bucket-wise addition, O(1) memory per lane, same answer any way the
+//! samples arrive.
+
+use crate::metrics::LatencySummary;
+
+/// Unit-width buckets below this value (indices `0..8`).
+const LINEAR_MAX: u64 = 8;
+/// 8 unit buckets + 8 sub-buckets per power-of-two range for exponents
+/// 3..=63.
+const N_BUCKETS: usize = 8 + 61 * 8;
+
+/// Bucket index of a nanosecond value. Exact below [`LINEAR_MAX`];
+/// above, `8 + (exponent - 3) * 8 + sub` where `sub` is the top three
+/// mantissa bits after the leading one.
+fn bucket_index(ns: u64) -> usize {
+    if ns < LINEAR_MAX {
+        return ns as usize;
+    }
+    let m = 63 - ns.leading_zeros() as u64; // 2^m <= ns < 2^(m+1), m >= 3
+    let sub = (ns >> (m - 3)) & 0x7;
+    (8 + (m - 3) * 8 + sub) as usize
+}
+
+/// Inclusive upper edge of bucket `idx` — the value quantiles report.
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let k = (idx - 8) as u64;
+    let m = 3 + k / 8;
+    let sub = k % 8;
+    let width = 1u64 << (m - 3);
+    // lower = 2^m + sub * width; upper = lower + width - 1. At the top
+    // bucket (m = 63, sub = 7) this lands exactly on u64::MAX without
+    // overflowing because the subtraction happens before the add.
+    (1u64 << m) + sub * width + (width - 1)
+}
+
+/// Log-bucketed histogram of nanosecond samples. `Default` is empty.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64, // u64::MAX while empty
+    max_ns: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0u64; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Record a seconds sample. Sentinel behaviour (documented, never a
+    /// panic): NaN, negative, and -inf record as `0`; +inf and anything
+    /// past `u64::MAX` nanoseconds saturate into the top bucket.
+    pub fn record_secs(&mut self, s: f64) {
+        let ns = if s.is_nan() || s <= 0.0 {
+            0
+        } else {
+            let scaled = s * 1e9;
+            if scaled >= u64::MAX as f64 {
+                u64::MAX
+            } else {
+                scaled as u64
+            }
+        };
+        self.record_ns(ns);
+    }
+
+    /// Bucket-wise merge — commutative and associative, so per-lane
+    /// histograms fold into one session histogram in any order with an
+    /// identical result.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of samples (saturating at `u64::MAX` ns).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Smallest recorded sample; 0 when empty.
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min_ns }
+    }
+
+    /// Largest recorded sample (exact, not bucketed); 0 when empty.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`, clamped). Returns the
+    /// bucket upper edge holding that rank, clamped to the exact
+    /// maximum — so `quantile_ns(1.0) == max_ns()` and every reported
+    /// value overstates a real sample by at most 12.5 %. Empty input
+    /// yields the documented sentinel 0.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(idx).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Quantile in seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 / 1e9
+    }
+
+    /// Fold into the crate's reporting shape (seconds). `mean` is exact
+    /// (sum / count); the percentiles are bucket upper edges.
+    pub fn summary(&self) -> LatencySummary {
+        let mean = if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e9
+        };
+        LatencySummary {
+            n: self.count as usize,
+            mean,
+            p50: self.quantile_s(0.50),
+            p99: self.quantile_s(0.99),
+            p999: self.quantile_s(0.999),
+            max: self.max_ns as f64 / 1e9,
+        }
+    }
+
+    /// Append a Prometheus-style text rendering: cumulative `_bucket`
+    /// lines (seconds, non-empty buckets only) closed by `+Inf`, then
+    /// `_sum` and `_count`.
+    pub fn render_prometheus(&self, name: &str, out: &mut String) {
+        use std::fmt::Write;
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let le = bucket_upper(idx) as f64 / 1e9;
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum {}", self.sum_ns as f64 / 1e9);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..LINEAR_MAX {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_upper(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn bucket_edges_are_monotone_and_cover_u64() {
+        let mut prev = 0u64;
+        for idx in 0..N_BUCKETS {
+            let up = bucket_upper(idx);
+            if idx > 0 {
+                assert!(up > prev, "bucket {idx} upper {up} <= previous {prev}");
+            }
+            prev = up;
+        }
+        assert_eq!(bucket_upper(N_BUCKETS - 1), u64::MAX);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_upper_bounds_relative_error() {
+        // Any value's bucket upper edge overstates it by at most 12.5 %.
+        for shift in 3..63u64 {
+            for fuzz in [0u64, 1, 3, 7] {
+                let v = (1u64 << shift) + fuzz * (1u64 << shift.saturating_sub(3));
+                let up = bucket_upper(bucket_index(v));
+                assert!(up >= v);
+                assert!(up as f64 <= v as f64 * 1.125 + 1.0, "v={v} up={up}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_match_exact_ranks_on_small_sets() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 2, 3, 4] {
+            h.record_ns(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile_ns(0.5), 2);
+        assert_eq!(h.quantile_ns(1.0), 4);
+        assert_eq!(h.quantile_ns(0.0), 1, "rank clamps to the first sample");
+        assert_eq!(h.min_ns(), 1);
+        assert_eq!(h.max_ns(), 4);
+    }
+
+    #[test]
+    fn empty_histogram_uses_sentinels() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        let s = h.summary();
+        assert_eq!((s.n, s.mean, s.max), (0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn record_secs_sentinels_never_panic() {
+        let mut h = LogHistogram::new();
+        h.record_secs(f64::NAN);
+        h.record_secs(-1.0);
+        h.record_secs(f64::NEG_INFINITY);
+        assert_eq!(h.quantile_ns(1.0), 0, "NaN/negative record as 0");
+        h.record_secs(f64::INFINITY);
+        assert_eq!(h.max_ns(), u64::MAX, "+inf saturates to the top bucket");
+        h.record_secs(1.5e-3);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording_regardless_of_split() {
+        let samples: Vec<u64> = (0..500u64).map(|i| i * i * 977 + 13).collect();
+        let mut whole = LogHistogram::new();
+        for &s in &samples {
+            whole.record_ns(s);
+        }
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (i, &s) in samples.iter().enumerate() {
+            if i % 3 == 0 {
+                a.record_ns(s);
+            } else {
+                b.record_ns(s);
+            }
+        }
+        let mut merged = b.clone();
+        merged.merge(&a);
+        assert_eq!(merged.counts, whole.counts);
+        assert_eq!(merged.count, whole.count);
+        assert_eq!(merged.sum_ns, whole.sum_ns);
+        assert_eq!((merged.min_ns, merged.max_ns), (whole.min_ns, whole.max_ns));
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile_ns(q), whole.quantile_ns(q));
+        }
+    }
+
+    #[test]
+    fn summary_percentiles_are_ordered() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1000);
+        }
+        let s = h.summary();
+        assert!(s.p50 <= s.p99);
+        assert!(s.p99 <= s.p999);
+        assert!(s.p999 <= s.max);
+        assert!(s.p50 > 0.0);
+        // Bucketed p50 overstates the exact median by at most 12.5 %.
+        assert!(s.p50 <= 5_000_000.0 / 1e9 * 1.125);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_cumulative_and_closed() {
+        let mut h = LogHistogram::new();
+        h.record_ns(3);
+        h.record_ns(3);
+        h.record_ns(1_000_000);
+        let mut out = String::new();
+        h.render_prometheus("t_seconds", &mut out);
+        assert!(out.contains("t_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("t_seconds_count 3"));
+        let buckets: Vec<&str> =
+            out.lines().filter(|l| l.contains("_bucket") && !l.contains("+Inf")).collect();
+        assert_eq!(buckets.len(), 2, "only non-empty buckets render");
+        assert!(buckets[0].ends_with(" 2"), "cumulative count: {}", buckets[0]);
+        assert!(buckets[1].ends_with(" 3"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability: the clock seam, superstep tracing, and serving
+//! telemetry (DESIGN.md Section 16).
+//!
+//! Three deliberately small pieces share one constraint — *observing a
+//! run must never change it*:
+//!
+//! * [`Clock`] — the audited timing seam. Real (monotonic OS clock) and
+//!   virtual (manually advanced) implementations behind one nanosecond
+//!   API; `obs/clock.rs` is the only file on the crate's deterministic
+//!   paths allowed to read the OS clock (enforced by the contract lint's
+//!   R3 clock-seam rule).
+//! * [`TraceRecorder`] / [`SpanRing`] — per-traversal superstep traces:
+//!   direction decisions with their alpha/beta inputs, frontier shape,
+//!   per-PE kernel/merge times aggregated from per-chunk span rings in
+//!   deterministic `(pid, chunk)` order, per-link wire bytes vs the
+//!   dense-equivalent comparison, and cancellation events. Exports
+//!   JSON-lines and `chrome://tracing`.
+//! * [`LogHistogram`] — log-bucketed latency histogram with a
+//!   deterministic bucket-wise merge; the serving tier's percentile
+//!   substrate and the source of its Prometheus-style text snapshots.
+//!
+//! Tracing and telemetry read engine state, never steer it: merge order,
+//! modeled costs, and traversal output are bit-identical with tracing on
+//! or off (pinned by `tests/trace_determinism.rs`).
+
+pub mod clock;
+pub mod hist;
+pub mod trace;
+
+pub use clock::Clock;
+pub use hist::LogHistogram;
+pub use trace::{DecisionTrace, LevelTrace, PeTrace, Span, SpanRing, TraceRecord, TraceRecorder};

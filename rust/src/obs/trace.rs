@@ -1,0 +1,483 @@
+//! Superstep trace recorder (DESIGN.md Section 16).
+//!
+//! Captures, per traversal, the paper-style per-level story the engine
+//! already computes internally: which direction each level ran *and the
+//! alpha/beta inputs that chose it*, frontier size and representation,
+//! per-PE kernel/merge times, and the per-link wire bytes next to their
+//! dense-equivalent comparison. Two exports: JSON-lines (one record per
+//! line, `jq`-friendly) and the `chrome://tracing` event-array format.
+//!
+//! **Determinism.** Worker chunks record kernel spans into per-chunk
+//! [`SpanRing`]s (disjoint, no sharing); the coordinator drains them at
+//! the level barrier in ascending `(pid, chunk)` plan order and
+//! aggregates *per partition* — chunk counts depend on the thread
+//! budget, partitions do not, so the emitted records are thread-count
+//! invariant. Timestamps come from the recorder's [`Clock`]: under an
+//! un-advanced virtual clock every `*_ns` field is 0 and trace bytes are
+//! identical across runs and thread ladders (the trace-determinism
+//! test); under the real clock only the timing fields vary. Recording
+//! never touches engine state — merge order and modeled costs are
+//! unchanged whether tracing is on or off.
+
+use std::sync::Mutex;
+
+use crate::engine::{CommStats, PeWork};
+
+use super::Clock;
+
+/// One kernel execution measured on a worker, identified by its merge
+/// position.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub pid: usize,
+    pub chunk: usize,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Fixed-capacity ring of [`Span`]s owned by one kernel chunk slot —
+/// workers push without locks or allocation (past warmup), the
+/// coordinator drains at the barrier. Overflow overwrites the oldest
+/// span and is counted, never reallocates.
+#[derive(Debug)]
+pub struct SpanRing {
+    spans: Vec<Span>,
+    cap: usize,
+    next: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn with_capacity(cap: usize) -> Self {
+        SpanRing { spans: Vec::with_capacity(cap.max(1)), cap: cap.max(1), next: 0, dropped: 0 }
+    }
+
+    pub fn push(&mut self, s: Span) {
+        if self.spans.len() < self.cap {
+            self.spans.push(s);
+        } else {
+            self.spans[self.next] = s;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Spans in push order (oldest first), emptying the ring.
+    pub fn drain(&mut self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.spans.len());
+        out.extend_from_slice(&self.spans[self.next..]);
+        out.extend_from_slice(&self.spans[..self.next]);
+        self.spans.clear();
+        self.next = 0;
+        out
+    }
+
+    /// Spans overwritten since construction (0 in practice: rings are
+    /// drained every barrier).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The direction policy's inputs and outcome for one level — the
+/// explainability payload (paper Section 3.3: alpha/beta switch rule).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionTrace {
+    pub frontier_out_edges: u64,
+    pub unexplored_edges: u64,
+    pub alpha: f64,
+    pub beta: u32,
+    /// Bottom-up steps taken so far (compared against beta).
+    pub bu_taken: u32,
+    pub switched_back: bool,
+    /// Direction the *next* level will run (snake_case tag).
+    pub next_direction: &'static str,
+}
+
+/// Per-partition slice of one level record: the engine's work counters
+/// plus measured kernel/merge time.
+#[derive(Clone, Copy, Debug)]
+pub struct PeTrace {
+    pub pid: usize,
+    /// `"cpu"` or `"gpu"`.
+    pub kind: &'static str,
+    pub work: PeWork,
+    pub kernel_ns: u64,
+    pub merge_ns: u64,
+}
+
+/// Everything recorded about one superstep.
+#[derive(Clone, Debug)]
+pub struct LevelTrace {
+    pub level: u32,
+    /// Snake_case direction tag (`top_down` / `bottom_up`).
+    pub direction: &'static str,
+    pub frontier_size: u64,
+    pub frontier_degree_sum: u64,
+    /// Frontier representation at level start (adaptive sparse queue vs
+    /// dense bitmap — thread-count invariant).
+    pub frontier_sparse: bool,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub decision: Option<DecisionTrace>,
+    /// Ascending pid; aggregated from chunk spans at the barrier.
+    pub pe: Vec<PeTrace>,
+    pub comm: CommStats,
+}
+
+/// One trace record — a line in the JSON-lines export.
+#[derive(Clone, Debug)]
+pub enum TraceRecord {
+    RunStart { algo: &'static str, root: u32, ts_ns: u64 },
+    Level(Box<LevelTrace>),
+    Cancel { level: u32, reason: &'static str, ts_ns: u64 },
+    RunEnd { levels: usize, reached: u64, wall_ns: u64, ts_ns: u64 },
+}
+
+/// Shared, append-only recorder. The engine appends records from the
+/// coordinator thread only; the mutex exists so one recorder can also
+/// collect whole-query blocks from concurrent service lanes
+/// ([`TraceRecorder::absorb`]) without interleaving inside a record.
+pub struct TraceRecorder {
+    clock: Clock,
+    records: Mutex<Vec<TraceRecord>>,
+}
+
+impl TraceRecorder {
+    pub fn new(clock: Clock) -> Self {
+        TraceRecorder { clock, records: Mutex::new(Vec::new()) }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    fn push(&self, r: TraceRecord) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    pub fn run_start(&self, algo: &'static str, root: u32) {
+        self.push(TraceRecord::RunStart { algo, root, ts_ns: self.clock.now_ns() });
+    }
+
+    pub fn level(&self, lt: LevelTrace) {
+        self.push(TraceRecord::Level(Box::new(lt)));
+    }
+
+    pub fn cancel_event(&self, level: u32, reason: &'static str) {
+        self.push(TraceRecord::Cancel { level, reason, ts_ns: self.clock.now_ns() });
+    }
+
+    pub fn run_end(&self, levels: usize, reached: u64, wall_ns: u64) {
+        self.push(TraceRecord::RunEnd { levels, reached, wall_ns, ts_ns: self.clock.now_ns() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove and return everything recorded so far (per-query recorders
+    /// hand their block to a session recorder this way).
+    pub fn take_records(&self) -> Vec<TraceRecord> {
+        std::mem::take(&mut *self.records.lock().unwrap())
+    }
+
+    /// Append a block of records atomically (no interleaving with other
+    /// writers).
+    pub fn absorb(&self, mut block: Vec<TraceRecord>) {
+        self.records.lock().unwrap().append(&mut block);
+    }
+
+    /// JSON-lines export: one object per record, `\n`-terminated.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.records.lock().unwrap().iter() {
+            render_jsonl(r, &mut out);
+        }
+        out
+    }
+
+    /// `chrome://tracing` export: a JSON object with a `traceEvents`
+    /// array — complete (`"X"`) slices per level (tid 0) and per PE
+    /// kernel (tid = pid + 1), instant events for cancellations; each
+    /// traversal gets its own `pid` lane in run-start order.
+    pub fn to_chrome(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut run = 0i64;
+        for r in self.records.lock().unwrap().iter() {
+            render_chrome(r, &mut run, &mut first, &mut out);
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+
+    pub fn write_chrome(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome())
+    }
+}
+
+fn render_jsonl(r: &TraceRecord, out: &mut String) {
+    use std::fmt::Write;
+    match r {
+        TraceRecord::RunStart { algo, root, ts_ns } => {
+            let _ = writeln!(
+                out,
+                "{{\"event\":\"run_start\",\"algo\":\"{algo}\",\"root\":{root},\"ts_ns\":{ts_ns}}}"
+            );
+        }
+        TraceRecord::Level(lt) => {
+            let _ = write!(
+                out,
+                "{{\"event\":\"level\",\"level\":{},\"direction\":\"{}\",\"frontier_size\":{},\
+                 \"frontier_degree_sum\":{},\"frontier_sparse\":{},\"start_ns\":{},\"end_ns\":{}",
+                lt.level,
+                lt.direction,
+                lt.frontier_size,
+                lt.frontier_degree_sum,
+                lt.frontier_sparse,
+                lt.start_ns,
+                lt.end_ns
+            );
+            match &lt.decision {
+                None => out.push_str(",\"decision\":null"),
+                Some(d) => {
+                    let _ = write!(
+                        out,
+                        ",\"decision\":{{\"frontier_out_edges\":{},\"unexplored_edges\":{},\
+                         \"alpha\":{},\"beta\":{},\"bu_taken\":{},\"switched_back\":{},\
+                         \"next_direction\":\"{}\"}}",
+                        d.frontier_out_edges,
+                        d.unexplored_edges,
+                        d.alpha,
+                        d.beta,
+                        d.bu_taken,
+                        d.switched_back,
+                        d.next_direction
+                    );
+                }
+            }
+            out.push_str(",\"pe\":[");
+            for (i, pe) in lt.pe.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "{{\"pid\":{},\"kind\":\"{}\",\"edges_examined\":{},\"vertices_scanned\":{},\
+                     \"activated\":{},\"kernel_ns\":{},\"merge_ns\":{}}}",
+                    pe.pid,
+                    pe.kind,
+                    pe.work.edges_examined,
+                    pe.work.vertices_scanned,
+                    pe.work.activated,
+                    pe.kernel_ns,
+                    pe.merge_ns
+                );
+            }
+            let c = &lt.comm;
+            let _ = writeln!(
+                out,
+                "],\"wire_bytes\":{},\"dense_equiv_bytes\":{},\"push_host_bytes\":{},\
+                 \"push_pcie_bytes\":{},\"pull_host_bytes\":{},\"pull_pcie_bytes\":{},\
+                 \"push_msgs\":{},\"pull_msgs\":{},\"crossing_activations\":{}}}",
+                c.total_bytes(),
+                c.dense_equiv_bytes,
+                c.push_host.bytes,
+                c.push_pcie.bytes,
+                c.pull_host.bytes,
+                c.pull_pcie.bytes,
+                c.push_host.msgs + c.push_pcie.msgs,
+                c.pull_host.msgs + c.pull_pcie.msgs,
+                c.crossing_activations
+            );
+        }
+        TraceRecord::Cancel { level, reason, ts_ns } => {
+            let _ = writeln!(
+                out,
+                "{{\"event\":\"cancel\",\"level\":{level},\"reason\":\"{reason}\",\
+                 \"ts_ns\":{ts_ns}}}"
+            );
+        }
+        TraceRecord::RunEnd { levels, reached, wall_ns, ts_ns } => {
+            let _ = writeln!(
+                out,
+                "{{\"event\":\"run_end\",\"levels\":{levels},\"reached\":{reached},\
+                 \"wall_ns\":{wall_ns},\"ts_ns\":{ts_ns}}}"
+            );
+        }
+    }
+}
+
+fn chrome_sep(first: &mut bool, out: &mut String) {
+    if *first {
+        *first = false;
+    } else {
+        out.push(',');
+    }
+}
+
+fn render_chrome(r: &TraceRecord, run: &mut i64, first: &mut bool, out: &mut String) {
+    use std::fmt::Write;
+    match r {
+        TraceRecord::RunStart { algo, root, ts_ns } => {
+            *run += 1;
+            chrome_sep(first, out);
+            let _ = write!(
+                out,
+                "{{\"name\":\"{algo} root {root}\",\"ph\":\"i\",\"s\":\"p\",\"pid\":{run},\
+                 \"tid\":0,\"ts\":{}}}",
+                *ts_ns as f64 / 1e3
+            );
+        }
+        TraceRecord::Level(lt) => {
+            let ts = lt.start_ns as f64 / 1e3;
+            let dur = lt.end_ns.saturating_sub(lt.start_ns) as f64 / 1e3;
+            chrome_sep(first, out);
+            let _ = write!(
+                out,
+                "{{\"name\":\"L{} {}\",\"ph\":\"X\",\"pid\":{run},\"tid\":0,\"ts\":{ts},\
+                 \"dur\":{dur},\"args\":{{\"frontier_size\":{},\"wire_bytes\":{}}}}}",
+                lt.level,
+                lt.direction,
+                lt.frontier_size,
+                lt.comm.total_bytes()
+            );
+            for pe in &lt.pe {
+                chrome_sep(first, out);
+                let _ = write!(
+                    out,
+                    "{{\"name\":\"pe{} {} kernel\",\"ph\":\"X\",\"pid\":{run},\"tid\":{},\
+                     \"ts\":{ts},\"dur\":{},\"args\":{{\"edges_examined\":{}}}}}",
+                    pe.pid,
+                    pe.kind,
+                    pe.pid + 1,
+                    pe.kernel_ns as f64 / 1e3,
+                    pe.work.edges_examined
+                );
+            }
+        }
+        TraceRecord::Cancel { level, reason, ts_ns } => {
+            chrome_sep(first, out);
+            let _ = write!(
+                out,
+                "{{\"name\":\"cancel L{level}: {reason}\",\"ph\":\"i\",\"s\":\"p\",\
+                 \"pid\":{run},\"tid\":0,\"ts\":{}}}",
+                *ts_ns as f64 / 1e3
+            );
+        }
+        TraceRecord::RunEnd { .. } => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_level(level: u32) -> LevelTrace {
+        LevelTrace {
+            level,
+            direction: "top_down",
+            frontier_size: 4,
+            frontier_degree_sum: 9,
+            frontier_sparse: true,
+            start_ns: 0,
+            end_ns: 0,
+            decision: Some(DecisionTrace {
+                frontier_out_edges: 9,
+                unexplored_edges: 100,
+                alpha: 14.0,
+                beta: 3,
+                bu_taken: 0,
+                switched_back: false,
+                next_direction: "top_down",
+            }),
+            pe: vec![PeTrace {
+                pid: 0,
+                kind: "cpu",
+                work: PeWork { edges_examined: 9, ..Default::default() },
+                kernel_ns: 0,
+                merge_ns: 0,
+            }],
+            comm: CommStats::default(),
+        }
+    }
+
+    #[test]
+    fn span_ring_preserves_order_and_counts_overflow() {
+        let mut r = SpanRing::with_capacity(2);
+        let s = |i: u64| Span { pid: 0, chunk: i as usize, start_ns: i, end_ns: i };
+        r.push(s(1));
+        r.push(s(2));
+        r.push(s(3)); // overwrites span 1
+        assert_eq!(r.dropped(), 1);
+        let drained = r.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!((drained[0].chunk, drained[1].chunk), (2, 3), "oldest first");
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_objects_with_the_asserted_fields() {
+        let rec = TraceRecorder::new(Clock::virtual_at(0));
+        rec.run_start("bfs", 7);
+        rec.level(sample_level(0));
+        rec.cancel_event(1, "deadline");
+        rec.run_end(1, 4, 0);
+        let text = rec.to_jsonl();
+        assert_eq!(text.lines().count(), 4);
+        for line in text.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "bad line: {line}");
+        }
+        let level_line = text.lines().nth(1).unwrap();
+        assert!(level_line.contains("\"direction\":\"top_down\""));
+        assert!(level_line.contains("\"wire_bytes\":0"));
+        assert!(level_line.contains("\"dense_equiv_bytes\":0"));
+        assert!(level_line.contains("\"alpha\":14"));
+        assert!(text.lines().nth(2).unwrap().contains("\"reason\":\"deadline\""));
+    }
+
+    #[test]
+    fn virtual_clock_makes_traces_byte_stable() {
+        let build = || {
+            let rec = TraceRecorder::new(Clock::virtual_at(0));
+            rec.run_start("bfs", 3);
+            rec.level(sample_level(0));
+            rec.run_end(1, 4, 0);
+            rec.to_jsonl()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn chrome_export_wraps_a_trace_events_array() {
+        let rec = TraceRecorder::new(Clock::virtual_at(0));
+        rec.run_start("bfs", 1);
+        rec.level(sample_level(0));
+        rec.run_end(1, 1, 0);
+        let text = rec.to_chrome();
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.trim_end().ends_with("]}"));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("pe0 cpu kernel"));
+    }
+
+    #[test]
+    fn absorb_moves_blocks_without_duplicating() {
+        let local = TraceRecorder::new(Clock::virtual_at(0));
+        local.run_start("sssp", 2);
+        local.run_end(0, 1, 0);
+        let shared = TraceRecorder::new(Clock::virtual_at(0));
+        shared.absorb(local.take_records());
+        assert!(local.is_empty());
+        assert_eq!(shared.len(), 2);
+    }
+}

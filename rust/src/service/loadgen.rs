@@ -18,14 +18,15 @@
 
 // Open-loop load generation is wall-clock by definition: arrival
 // schedules and latency measurements are real time, not output bits.
-#![allow(clippy::disallowed_methods)]
+// Timing reads go through `obs::Clock` (the audited seam).
 
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::metrics::{latency_summary, LatencySummary, ServeCounts};
+use crate::metrics::{LatencySummary, ServeCounts};
+use crate::obs::{Clock, LogHistogram};
 use crate::util::Xoshiro256;
 
 use super::registry::ResidentGraph;
@@ -88,7 +89,7 @@ pub struct OpenLoopConfig {
 }
 
 /// What one offered-load point measured.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct LoadPoint {
     pub offered_qps: f64,
     /// Completed (Done) queries per wall-clock second.
@@ -101,6 +102,9 @@ pub struct LoadPoint {
     pub cold_service: LatencySummary,
     /// Service latency of cache-hit completions (memo lookups).
     pub hit_service: LatencySummary,
+    /// The session's Prometheus-style snapshots (empty unless
+    /// [`ServeOptions::metrics_every`] is set).
+    pub metrics: Vec<String>,
 }
 
 /// Drive one open-loop point: submit `cfg.queries` requests on the
@@ -118,28 +122,33 @@ pub fn run_open_loop(
     assert!(!requests.is_empty(), "open-loop driver needs at least one request template");
     let report = serve_session(rg, serve_opts, |s| {
         let mut rng = Xoshiro256::new(cfg.seed);
-        let start = Instant::now();
+        let clock = Clock::real();
+        let start_ns = clock.now_ns();
         let mut at = 0.0f64;
         for i in 0..cfg.queries {
             at += cfg.arrivals.inter_arrival(cfg.offered_qps, &mut rng);
             let target = Duration::from_secs_f64(at);
-            let elapsed = start.elapsed();
+            let elapsed = Duration::from_nanos(clock.now_ns().saturating_sub(start_ns));
             if target > elapsed {
                 thread::sleep(target - elapsed);
             }
             s.submit(requests[i % requests.len()]);
         }
     });
-    let mut total = Vec::new();
-    let mut cold = Vec::new();
-    let mut hit = Vec::new();
+    // Log-bucketed histograms replace the sorted-Vec percentile path:
+    // O(1) memory however many queries the point drives, and the
+    // summaries come from the same deterministic-merge machinery the
+    // server's own snapshots use (DESIGN.md Section 16).
+    let mut total = LogHistogram::new();
+    let mut cold = LogHistogram::new();
+    let mut hit = LogHistogram::new();
     for r in &report.responses {
         if r.status == QueryStatus::Done {
-            total.push(r.timings.total_s);
+            total.record_secs(r.timings.total_s);
             if r.timings.cache_hit {
-                hit.push(r.timings.service_s);
+                hit.record_secs(r.timings.service_s);
             } else {
-                cold.push(r.timings.service_s);
+                cold.record_secs(r.timings.service_s);
             }
         }
     }
@@ -149,9 +158,10 @@ pub fn run_open_loop(
         achieved_qps: report.counts.done as f64 / wall_s.max(1e-9),
         wall_s,
         counts: report.counts,
-        latency: latency_summary(&total),
-        cold_service: latency_summary(&cold),
-        hit_service: latency_summary(&hit),
+        latency: total.summary(),
+        cold_service: cold.summary(),
+        hit_service: hit.summary(),
+        metrics: report.metrics,
     }
 }
 

@@ -55,8 +55,9 @@ pub use registry::{AlgoStatePools, GraphRegistry, ResidentGraph};
 #[allow(deprecated)] // re-exporting the deprecated shim must not warn here
 pub use scheduler::run_batch;
 pub use scheduler::{
-    run_algo_batch, run_requests, AlgoOptions, AlgoOutcome, AlgoOutput, AlgoQuery, BatchOptions,
-    QueryOutcome, QueryRequest, QueryResponse, QueryStatus, QueryTimings, SchedulePolicy,
+    run_algo_batch, run_requests, run_requests_traced, AlgoOptions, AlgoOutcome, AlgoOutput,
+    AlgoQuery, BatchOptions, QueryOutcome, QueryRequest, QueryResponse, QueryStatus, QueryTimings,
+    SchedulePolicy,
 };
-pub use server::{serve_session, ResultCache, ServeOptions, ServeReport, Submitter};
+pub use server::{serve_session, ResultCache, ServeHists, ServeOptions, ServeReport, Submitter};
 pub use state_pool::{PoolEntry, PoolStats, StatePool, TypedPool};

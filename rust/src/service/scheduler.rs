@@ -31,12 +31,8 @@
 //! bit-identical across `ExecutionMode`s and queries share nothing
 //! mutable.
 
-// Scheduler timing (queue/service attribution, deadline arming) is
-// wall-clock policy and reporting; outputs stay bit-identical.
-#![allow(clippy::disallowed_methods)]
-
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -46,6 +42,7 @@ use crate::algo::{
 };
 use crate::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
 use crate::engine::{CancelToken, CommMode, ExecutionMode, SimAccelerator};
+use crate::obs::{Clock, TraceRecord, TraceRecorder};
 use crate::util::pool;
 
 use super::registry::ResidentGraph;
@@ -217,15 +214,18 @@ pub enum AlgoOutput {
     Pagerank(PagerankRun),
 }
 
-/// Where one response's wall-clock went (host-measured; the modeled
-/// paper-testbed latency still comes from `runtime::device` over the
-/// run's work counters).
+/// Where one response's wall-clock went (host-measured on the session's
+/// [`Clock`]; the modeled paper-testbed latency still comes from
+/// `runtime::device` over the run's work counters).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct QueryTimings {
     /// Submission to execution start (admission-queue wait).
     pub queue_s: f64,
     /// Execution start to finish (zero for never-executed rejections).
     pub service_s: f64,
+    /// Hot-root cache probe time (inside `service_s`; the dominant term
+    /// when `cache_hit` — a hit never touches the engine).
+    pub cache_lookup_s: f64,
     /// Submission to response.
     pub total_s: f64,
     /// Answered from the hot-root result cache.
@@ -344,7 +344,9 @@ pub(crate) fn plan_lanes(opts: &BatchOptions, admitted: usize) -> Vec<usize> {
 /// their per-algorithm pools. The cancel token is armed with the
 /// request's deadline and checked at every superstep barrier; a
 /// cancelled run drains its frontiers before releasing, so its pooled
-/// state stays recyclable.
+/// state stays recyclable. `trace` attaches a superstep trace recorder
+/// to the run (the runner adopts the recorder's clock); recording never
+/// changes results.
 pub(crate) fn execute_query(
     rg: &ResidentGraph,
     algo: AlgoQuery,
@@ -352,6 +354,7 @@ pub(crate) fn execute_query(
     opts: &BatchOptions,
     exec: ExecutionMode,
     cancel: CancelToken,
+    trace: Option<&Arc<TraceRecorder>>,
 ) -> Result<AlgoOutput, QueryError> {
     // An engine error while the token is tripped is (and is reported as)
     // a cancellation: the runner's only token-sensitive exit is the
@@ -383,6 +386,7 @@ pub(crate) fn execute_query(
             let mut runner = HybridRunner::with_state(pg, cfg, accel.as_mut(), state)
                 .map_err(|e| QueryError::Engine(e.to_string()))?;
             runner.set_cancel_token(cancel.clone());
+            runner.set_trace(trace.cloned());
             let res = runner.run(root);
             rg.states.release(runner.into_state());
             res.map(AlgoOutput::Bfs).map_err(|e| classify(e, &cancel))
@@ -393,6 +397,7 @@ pub(crate) fn execute_query(
             let state = rg.algo_states.sssp.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, program, exec, state);
             runner.set_cancel_token(cancel.clone());
+            runner.set_trace(trace.cloned());
             let res = runner.run();
             rg.algo_states.sssp.release(runner.into_state());
             res.map(|run| AlgoOutput::Sssp(sssp_run_from(root, run)))
@@ -402,6 +407,7 @@ pub(crate) fn execute_query(
             let state = rg.algo_states.cc.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, CcProgram, exec, state);
             runner.set_cancel_token(cancel.clone());
+            runner.set_trace(trace.cloned());
             let res = runner.run();
             rg.algo_states.cc.release(runner.into_state());
             res.map(|run| AlgoOutput::Cc(cc_run_from(run))).map_err(|e| classify(e, &cancel))
@@ -413,6 +419,7 @@ pub(crate) fn execute_query(
             let state = rg.algo_states.pagerank.acquire(pg);
             let mut runner = ProgramRunner::with_state(pg, program, exec, state);
             runner.set_cancel_token(cancel.clone());
+            runner.set_trace(trace.cloned());
             let res = runner.run();
             rg.algo_states.pagerank.release(runner.into_state());
             res.map(|run| AlgoOutput::Pagerank(pagerank_run_from(run)))
@@ -437,7 +444,23 @@ pub fn run_requests(
     requests: &[QueryRequest],
     opts: &BatchOptions,
 ) -> Vec<QueryResponse> {
-    let submitted = Instant::now();
+    run_requests_traced(rg, requests, opts, None)
+}
+
+/// [`run_requests`] with an optional superstep trace sink; `None` is
+/// exactly `run_requests`. Each lane records its queries into a private
+/// per-query recorder (sharing the session recorder's clock) and the
+/// blocks are absorbed into `trace` in **request order** after the lane
+/// barrier — so the trace file lists whole-query blocks in submission
+/// order no matter how lanes interleaved.
+pub fn run_requests_traced(
+    rg: &ResidentGraph,
+    requests: &[QueryRequest],
+    opts: &BatchOptions,
+    trace: Option<&Arc<TraceRecorder>>,
+) -> Vec<QueryResponse> {
+    let clock = trace.map_or_else(Clock::real, |t| t.clock().clone());
+    let submitted_ns = clock.now_ns();
     let v = rg.num_vertices();
     // Admission: out-of-range roots fail their own slot only.
     let mut responses: Vec<Option<QueryResponse>> = requests
@@ -471,22 +494,43 @@ pub fn run_requests(
             assignment[j % lanes].push(q);
         }
 
+        let tracing = trace.is_some();
+        let clock_ref = &clock;
         let tasks: Vec<_> = assignment
             .into_iter()
             .zip(lane_budgets)
             .map(|(lane, budget)| {
                 let exec = ExecutionMode::from_threads(budget);
-                move || -> Vec<(usize, QueryResponse)> {
+                move || -> Vec<(usize, QueryResponse, Vec<TraceRecord>)> {
                     lane.into_iter()
-                        .map(|(i, req)| (i, run_one_request(rg, req, opts, exec, submitted)))
+                        .map(|(i, req)| {
+                            let (resp, block) = run_one_request(
+                                rg,
+                                req,
+                                opts,
+                                exec,
+                                clock_ref,
+                                submitted_ns,
+                                tracing,
+                            );
+                            (i, resp, block)
+                        })
                         .collect()
                 }
             })
             .collect();
 
+        let mut blocks: Vec<Vec<TraceRecord>> = Vec::new();
+        blocks.resize_with(requests.len(), Vec::new);
         for lane_out in pool::run_tasks(lanes, tasks) {
-            for (i, resp) in lane_out {
+            for (i, resp, block) in lane_out {
                 responses[i] = Some(resp);
+                blocks[i] = block;
+            }
+        }
+        if let Some(tr) = trace {
+            for block in blocks {
+                tr.absorb(block);
             }
         }
     }
@@ -497,41 +541,56 @@ pub fn run_requests(
         .collect()
 }
 
-/// Execute one request on a lane: arm the deadline token, run, classify.
+/// Execute one request on a lane: arm the deadline token (measured from
+/// batch submission on the session clock), run, classify. Returns the
+/// response plus the query's trace block (empty unless `tracing`).
 fn run_one_request(
     rg: &ResidentGraph,
     req: QueryRequest,
     opts: &BatchOptions,
     exec: ExecutionMode,
-    submitted: Instant,
-) -> QueryResponse {
-    let queue_s = submitted.elapsed().as_secs_f64();
+    clock: &Clock,
+    submitted_ns: u64,
+    tracing: bool,
+) -> (QueryResponse, Vec<TraceRecord>) {
+    let queue_s = clock.now_ns().saturating_sub(submitted_ns) as f64 / 1e9;
     let cancel = match req.deadline {
-        Some(d) => CancelToken::with_deadline(submitted + d),
+        Some(d) => {
+            let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+            CancelToken::with_deadline(clock.clone(), submitted_ns.saturating_add(ns))
+        }
         None => CancelToken::none(),
     };
     // Deadline already blown while queued behind the lane's earlier
     // queries: answer without consuming pooled state.
     if cancel.is_cancelled() {
-        return QueryResponse::failed(
+        let resp = QueryResponse::failed(
             req,
             QueryStatus::DeadlineExceeded,
             "deadline expired before execution started".into(),
-            QueryTimings { queue_s, service_s: 0.0, total_s: queue_s, cache_hit: false },
+            QueryTimings { queue_s, total_s: queue_s, ..QueryTimings::default() },
         );
+        return (resp, Vec::new());
     }
-    let t0 = Instant::now();
-    let res = execute_query(rg, req.algo, req.options, opts, exec, cancel);
-    let service_s = t0.elapsed().as_secs_f64();
-    let timings =
-        QueryTimings { queue_s, service_s, total_s: queue_s + service_s, cache_hit: false };
-    match res {
+    let local = tracing.then(|| Arc::new(TraceRecorder::new(clock.clone())));
+    let t0_ns = clock.now_ns();
+    let res = execute_query(rg, req.algo, req.options, opts, exec, cancel, local.as_ref());
+    let service_s = clock.now_ns().saturating_sub(t0_ns) as f64 / 1e9;
+    let timings = QueryTimings {
+        queue_s,
+        service_s,
+        cache_lookup_s: 0.0,
+        total_s: queue_s + service_s,
+        cache_hit: false,
+    };
+    let resp = match res {
         Ok(output) => QueryResponse::done(req, Arc::new(output), timings),
         Err(QueryError::Cancelled(e)) => {
             QueryResponse::failed(req, QueryStatus::DeadlineExceeded, e, timings)
         }
         Err(QueryError::Engine(e)) => QueryResponse::failed(req, QueryStatus::Rejected, e, timings),
-    }
+    };
+    (resp, local.map_or_else(Vec::new, |l| l.take_records()))
 }
 
 /// Run a mixed-algorithm batch over a resident graph — a thin adapter

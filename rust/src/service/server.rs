@@ -34,16 +34,17 @@
 // Serving is wall-clock territory by design: queue timestamps, deadline
 // arming, and latency attribution measure real time and never feed
 // traversal output (results stay bit-identical to standalone runs).
-#![allow(clippy::disallowed_methods)]
+// All timing reads go through the session's `obs::Clock`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::bfs::PolicyKind;
 use crate::engine::{CancelToken, CommMode, ExecutionMode};
 use crate::metrics::{CounterExt, ServeCounters, ServeCounts};
+use crate::obs::{Clock, LogHistogram};
 use crate::util::pool;
 
 use super::registry::ResidentGraph;
@@ -67,6 +68,9 @@ pub struct ServeOptions {
     pub cache_capacity: usize,
     /// Deadline applied to requests that do not carry their own.
     pub default_deadline: Option<Duration>,
+    /// Emit a Prometheus-style metrics snapshot every N answered
+    /// queries (plus one at session end); 0 disables snapshots.
+    pub metrics_every: usize,
 }
 
 impl Default for ServeOptions {
@@ -76,8 +80,22 @@ impl Default for ServeOptions {
             queue_depth: 64,
             cache_capacity: 64,
             default_deadline: None,
+            metrics_every: 0,
         }
     }
+}
+
+/// Per-session serving-latency histograms (log-bucketed, mergeable —
+/// DESIGN.md Section 16). Lanes record under one mutex; the histograms
+/// replace the sorted-`Vec` percentile path for serving latencies.
+#[derive(Default)]
+pub struct ServeHists {
+    /// Submission-to-response seconds of every answered query.
+    pub total: LogHistogram,
+    /// Service seconds of cold (engine-executed) completions.
+    pub cold: LogHistogram,
+    /// Service seconds of cache-hit completions.
+    pub hit: LogHistogram,
 }
 
 /// Everything one serving session produced.
@@ -89,6 +107,10 @@ pub struct ServeReport {
     pub counts: ServeCounts,
     /// Wall-clock of the whole session (producer plus queue drain).
     pub wall: Duration,
+    /// Prometheus-style snapshots taken every
+    /// [`ServeOptions::metrics_every`] answered queries, final state
+    /// last; empty when snapshots are disabled.
+    pub metrics: Vec<String>,
 }
 
 /// Cache key: the query plus every batch-level knob that affects the
@@ -213,7 +235,8 @@ impl ResultCache {
 struct Job {
     id: u64,
     request: QueryRequest,
-    submitted: Instant,
+    /// Session-clock reading at admission.
+    submitted_ns: u64,
 }
 
 struct QueueState {
@@ -225,11 +248,16 @@ struct QueueState {
 struct Session<'g> {
     rg: &'g ResidentGraph,
     opts: ServeOptions,
+    /// The session's one timing source (queue wait, deadlines, latency
+    /// attribution, snapshot rendering all read it).
+    clock: Clock,
     queue: Mutex<QueueState>,
     cond: Condvar,
     next_id: AtomicU64,
     counters: ServeCounters,
     responses: Mutex<Vec<(u64, QueryResponse)>>,
+    hists: Mutex<ServeHists>,
+    snapshots: Mutex<Vec<String>>,
 }
 
 /// The producer's handle into a running session: submit requests, get a
@@ -252,16 +280,75 @@ impl<'g> Session<'g> {
         Self {
             rg,
             opts,
+            clock: Clock::real(),
             queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
             cond: Condvar::new(),
             next_id: AtomicU64::new(0),
             counters: ServeCounters::default(),
             responses: Mutex::new(Vec::new()),
+            hists: Mutex::new(ServeHists::default()),
+            snapshots: Mutex::new(Vec::new()),
         }
     }
 
+    /// Record one answer: list it, fold its latency into the session
+    /// histograms, and emit a metrics snapshot every
+    /// [`ServeOptions::metrics_every`] answers.
     fn respond(&self, id: u64, resp: QueryResponse) {
-        self.responses.lock().expect("serve responses poisoned").push((id, resp));
+        let timings = resp.timings;
+        let done = resp.status == QueryStatus::Done;
+        let answered = {
+            let mut r = self.responses.lock().expect("serve responses poisoned");
+            r.push((id, resp));
+            r.len()
+        };
+        {
+            let mut h = self.hists.lock().expect("serve hists poisoned");
+            h.total.record_secs(timings.total_s);
+            if done {
+                if timings.cache_hit {
+                    h.hit.record_secs(timings.service_s);
+                } else {
+                    h.cold.record_secs(timings.service_s);
+                }
+            }
+        }
+        let every = self.opts.metrics_every;
+        if every > 0 && answered % every == 0 {
+            let snap = self.render_metrics();
+            self.snapshots.lock().expect("serve snapshots poisoned").push(snap);
+        }
+    }
+
+    /// Render the session's live state as Prometheus-style text: the
+    /// counter totals and derived rates, queue depth, pooled-state
+    /// occupancy, cache residency, and the three latency histograms.
+    fn render_metrics(&self) -> String {
+        use std::fmt::Write;
+        let c = self.counters.snapshot();
+        let queue_depth = self.queue.lock().expect("serve queue poisoned").jobs.len();
+        let pool = self.rg.states.stats();
+        let mut out = String::new();
+        let _ = writeln!(out, "totem_serve_submitted {}", c.submitted);
+        let _ = writeln!(out, "totem_serve_admitted {}", c.admitted);
+        let _ = writeln!(out, "totem_serve_rejected {}", c.rejected);
+        let _ = writeln!(out, "totem_serve_done {}", c.done);
+        let _ = writeln!(out, "totem_serve_deadline_exceeded {}", c.deadline_exceeded);
+        let _ = writeln!(out, "totem_serve_invalid_root {}", c.invalid_root);
+        let _ = writeln!(out, "totem_serve_cache_hits {}", c.cache_hits);
+        let _ = writeln!(out, "totem_serve_cache_misses {}", c.cache_misses);
+        let _ = writeln!(out, "totem_serve_rejection_rate {}", c.rejection_rate());
+        let _ = writeln!(out, "totem_serve_cache_hit_rate {}", c.cache_hit_rate());
+        let _ = writeln!(out, "totem_serve_queue_depth {queue_depth}");
+        let _ = writeln!(out, "totem_serve_pool_created {}", pool.created);
+        let _ = writeln!(out, "totem_serve_pool_recycled {}", pool.recycled);
+        let _ = writeln!(out, "totem_serve_pool_idle {}", pool.idle);
+        let _ = writeln!(out, "totem_serve_cache_entries {}", self.rg.cache.len());
+        let h = self.hists.lock().expect("serve hists poisoned");
+        h.total.render_prometheus("totem_serve_latency_seconds", &mut out);
+        h.cold.render_prometheus("totem_serve_cold_service_seconds", &mut out);
+        h.hit.render_prometheus("totem_serve_hit_service_seconds", &mut out);
+        out
     }
 
     fn submit(&self, mut request: QueryRequest) -> u64 {
@@ -294,7 +381,7 @@ impl<'g> Session<'g> {
         {
             let mut q = self.queue.lock().expect("serve queue poisoned");
             if !q.closed && q.jobs.len() < self.opts.queue_depth {
-                q.jobs.push_back(Job { id, request, submitted: Instant::now() });
+                q.jobs.push_back(Job { id, request, submitted_ns: self.clock.now_ns() });
                 self.counters.admitted.bump();
                 self.cond.notify_one();
                 return id;
@@ -334,17 +421,21 @@ impl<'g> Session<'g> {
                 }
             };
             let Some(job) = job else { return };
-            let resp = self.process(job.request, job.submitted, exec);
+            let resp = self.process(job.request, job.submitted_ns, exec);
             self.respond(job.id, resp);
         }
     }
 
     /// Execute one admitted query on a lane: deadline check, cache
-    /// lookup, then the shared per-query executor.
-    fn process(&self, req: QueryRequest, submitted: Instant, exec: ExecutionMode) -> QueryResponse {
-        let queue_s = submitted.elapsed().as_secs_f64();
+    /// lookup, then the shared per-query executor. All timing reads are
+    /// session-clock nanoseconds from `submitted_ns`.
+    fn process(&self, req: QueryRequest, submitted_ns: u64, exec: ExecutionMode) -> QueryResponse {
+        let queue_s = self.clock.now_ns().saturating_sub(submitted_ns) as f64 / 1e9;
         let cancel = match req.deadline {
-            Some(d) => CancelToken::with_deadline(submitted + d),
+            Some(d) => {
+                let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+                CancelToken::with_deadline(self.clock.clone(), submitted_ns.saturating_add(ns))
+            }
             None => CancelToken::none(),
         };
         // Expired while queued: answer without consuming pooled state.
@@ -354,20 +445,24 @@ impl<'g> Session<'g> {
                 req,
                 QueryStatus::DeadlineExceeded,
                 "deadline expired while queued".into(),
-                QueryTimings { queue_s, service_s: 0.0, total_s: queue_s, cache_hit: false },
+                QueryTimings { queue_s, total_s: queue_s, ..QueryTimings::default() },
             );
         }
         let caching = self.opts.cache_capacity > 0;
         let key = cache_key(req.algo, req.options, &self.opts.batch);
-        let t0 = Instant::now();
+        let t0_ns = self.clock.now_ns();
+        let mut cache_lookup_s = 0.0;
         if caching {
-            if let Some(output) = self.rg.cache.get(&key) {
+            let hit = self.rg.cache.get(&key);
+            cache_lookup_s = self.clock.now_ns().saturating_sub(t0_ns) as f64 / 1e9;
+            if let Some(output) = hit {
                 self.counters.cache_hits.bump();
                 self.counters.done.bump();
-                let service_s = t0.elapsed().as_secs_f64();
+                let service_s = self.clock.now_ns().saturating_sub(t0_ns) as f64 / 1e9;
                 let timings = QueryTimings {
                     queue_s,
                     service_s,
+                    cache_lookup_s,
                     total_s: queue_s + service_s,
                     cache_hit: true,
                 };
@@ -375,10 +470,16 @@ impl<'g> Session<'g> {
             }
             self.counters.cache_misses.bump();
         }
-        let res = execute_query(self.rg, req.algo, req.options, &self.opts.batch, exec, cancel);
-        let service_s = t0.elapsed().as_secs_f64();
-        let timings =
-            QueryTimings { queue_s, service_s, total_s: queue_s + service_s, cache_hit: false };
+        let res =
+            execute_query(self.rg, req.algo, req.options, &self.opts.batch, exec, cancel, None);
+        let service_s = self.clock.now_ns().saturating_sub(t0_ns) as f64 / 1e9;
+        let timings = QueryTimings {
+            queue_s,
+            service_s,
+            cache_lookup_s,
+            total_s: queue_s + service_s,
+            cache_hit: false,
+        };
         match res {
             Ok(output) => {
                 let output = Arc::new(output);
@@ -412,8 +513,8 @@ pub fn serve_session<F>(rg: &ResidentGraph, opts: &ServeOptions, producer: F) ->
 where
     F: FnOnce(&Submitter) + Send,
 {
-    let t0 = Instant::now();
     let session = Session::new(rg, *opts);
+    let t0_ns = session.clock.now_ns();
     {
         let session = &session;
         let lane_budgets = plan_lanes(&opts.batch, opts.batch.max_concurrency.max(1));
@@ -430,12 +531,20 @@ where
         // producer closes it, so all tasks must run concurrently.
         pool::run_tasks(tasks.len(), tasks);
     }
+    // Close the book with a final snapshot so short sessions still
+    // report at least one.
+    if opts.metrics_every > 0 {
+        let snap = session.render_metrics();
+        session.snapshots.lock().expect("serve snapshots poisoned").push(snap);
+    }
+    let wall = Duration::from_nanos(session.clock.now_ns().saturating_sub(t0_ns));
     let mut responses = session.responses.into_inner().expect("serve responses poisoned");
     responses.sort_by_key(|&(id, _)| id);
     ServeReport {
         responses: responses.into_iter().map(|(_, r)| r).collect(),
         counts: session.counters.snapshot(),
-        wall: t0.elapsed(),
+        wall,
+        metrics: session.snapshots.into_inner().expect("serve snapshots poisoned"),
     }
 }
 
@@ -591,6 +700,40 @@ mod tests {
             &BatchOptions { threads: 7, max_concurrency: 3, ..Default::default() },
         );
         assert_eq!(c, e, "thread budgets are result-invariant, so they share a key");
+    }
+
+    #[test]
+    fn metrics_snapshots_render_counters_and_histograms() {
+        let rg = resident();
+        let opts = ServeOptions {
+            batch: BatchOptions { threads: 1, max_concurrency: 1, ..Default::default() },
+            metrics_every: 2,
+            ..Default::default()
+        };
+        let report = serve_session(&rg, &opts, |s| {
+            s.submit(bfs(0));
+            s.submit(bfs(0));
+            s.submit(bfs(1));
+        });
+        // One periodic snapshot (after the 2nd answer) plus the final one.
+        assert!(report.metrics.len() >= 2, "got {} snapshots", report.metrics.len());
+        let last = report.metrics.last().unwrap();
+        assert!(last.contains("totem_serve_submitted 3"), "{last}");
+        assert!(last.contains("totem_serve_done 3"), "{last}");
+        assert!(last.contains("totem_serve_queue_depth 0"), "{last}");
+        assert!(last.contains("totem_serve_latency_seconds_count 3"), "{last}");
+        assert!(last.contains("totem_serve_hit_service_seconds_count 1"), "{last}");
+        assert!(last.contains("totem_serve_cold_service_seconds_count 2"), "{last}");
+        assert!(last.contains("totem_serve_cache_hits 1"), "{last}");
+        assert!(last.contains("totem_serve_pool_idle"), "{last}");
+        // Hit-path responses report where the service time went.
+        let hit = report.responses.iter().find(|r| r.timings.cache_hit).unwrap();
+        assert!(hit.timings.cache_lookup_s <= hit.timings.service_s);
+        // Snapshots off by default.
+        let quiet = serve_session(&rg, &ServeOptions::default(), |s| {
+            s.submit(bfs(2));
+        });
+        assert!(quiet.metrics.is_empty());
     }
 
     #[test]

@@ -71,7 +71,7 @@ fn serve_opts(lanes: usize, cache_capacity: usize) -> ServeOptions {
         batch: BatchOptions { threads: lanes, max_concurrency: lanes, ..Default::default() },
         queue_depth: 64,
         cache_capacity,
-        default_deadline: None,
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,170 @@
+//! Trace determinism (DESIGN.md Section 16): the observability layer
+//! must never perturb results, and the trace *itself* must be
+//! deterministic.
+//!
+//! Two contracts under test:
+//!
+//! * **On-vs-off equivalence** — a traced run's `parent`/`depth`/
+//!   per-level stats are bit-identical to the same run with tracing
+//!   disabled. The recorder only reads state the engine already
+//!   computes; it never feeds back into merge order or modeled costs.
+//! * **Byte-identical traces across thread counts** — under the virtual
+//!   clock (never advanced, so every `*_ns` field is 0) the exported
+//!   JSON-lines and chrome://tracing bytes are identical at 1, 2, 4 and
+//!   `TOTEM_DO_TEST_THREADS` worker threads: spans are aggregated
+//!   per-partition in (pid, chunk) order at barriers, so the record
+//!   stream is thread-count invariant.
+
+use std::sync::Arc;
+
+use totem_do::algo::{default_weights, run_sssp_traced};
+use totem_do::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
+use totem_do::engine::{ExecutionMode, SimAccelerator};
+use totem_do::graph::build_csr;
+use totem_do::graph::generator::{kronecker, GeneratorConfig};
+use totem_do::obs::{Clock, TraceRecorder};
+use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph};
+use totem_do::service::{run_requests_traced, AlgoQuery, BatchOptions, QueryRequest, ResidentGraph};
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 24, gpu_max_degree: 32 }
+}
+
+/// The tested thread ladder plus the CI matrix value
+/// (`TOTEM_DO_TEST_THREADS`), deduplicated.
+fn thread_ladder() -> Vec<usize> {
+    let mut ts = vec![1, 2, 4];
+    if let Some(t) = std::env::var("TOTEM_DO_TEST_THREADS").ok().and_then(|s| s.parse().ok()) {
+        if !ts.contains(&t) {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+fn exec(threads: usize) -> ExecutionMode {
+    ExecutionMode::from_threads(threads)
+}
+
+/// One traced hybrid BFS on the virtual clock: the run plus both exports.
+fn traced_bfs(pg: &PartitionedGraph, em: ExecutionMode, root: u32) -> (BfsRun, String, String) {
+    let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+    let mut sim = SimAccelerator::new(pg.parts.len(), pg.num_vertices);
+    let accel = if has_gpu { Some(&mut sim) } else { None };
+    let cfg =
+        HybridConfig { policy: PolicyKind::direction_optimized(), exec: em, ..Default::default() };
+    let mut runner = HybridRunner::new(pg, cfg, accel).unwrap();
+    let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
+    runner.set_trace(Some(rec.clone()));
+    let run = runner.run(root).unwrap();
+    (run, rec.to_jsonl(), rec.to_chrome())
+}
+
+fn untraced_bfs(pg: &PartitionedGraph, em: ExecutionMode, root: u32) -> BfsRun {
+    let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+    let mut sim = SimAccelerator::new(pg.parts.len(), pg.num_vertices);
+    let accel = if has_gpu { Some(&mut sim) } else { None };
+    let cfg =
+        HybridConfig { policy: PolicyKind::direction_optimized(), exec: em, ..Default::default() };
+    let mut runner = HybridRunner::new(pg, cfg, accel).unwrap();
+    runner.run(root).unwrap()
+}
+
+#[test]
+fn bfs_traces_are_byte_identical_across_thread_counts() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 21)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    for (s, gp) in [(2, 0), (2, 2)] {
+        let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+        let (base_run, base_jsonl, base_chrome) = traced_bfs(&pg, ExecutionMode::Sequential, root);
+        // The trace is real content, not an empty file agreeing with
+        // itself: a run banner, one record per level, and the paper's
+        // direction decision spelled out per level.
+        assert!(base_jsonl.lines().next().unwrap().contains("\"event\":\"run_start\""));
+        assert!(base_jsonl.lines().any(|l| l.contains("\"event\":\"level\"")));
+        assert!(
+            base_jsonl.contains("\"direction\":\"top_down\"")
+                || base_jsonl.contains("\"direction\":\"bottom_up\""),
+            "level records name their direction"
+        );
+        assert!(base_jsonl.lines().last().unwrap().contains("\"event\":\"run_end\""));
+        assert!(base_chrome.starts_with("{\"traceEvents\":["));
+        for threads in thread_ladder() {
+            let (run, jsonl, chrome) = traced_bfs(&pg, exec(threads), root);
+            assert_eq!(run.parent, base_run.parent, "{s}S{gp}G x{threads}: parents diverge");
+            assert_eq!(run.depth, base_run.depth, "{s}S{gp}G x{threads}: depths diverge");
+            assert_eq!(jsonl, base_jsonl, "{s}S{gp}G x{threads}: JSON-lines trace diverges");
+            assert_eq!(chrome, base_chrome, "{s}S{gp}G x{threads}: chrome trace diverges");
+        }
+    }
+}
+
+#[test]
+fn tracing_never_perturbs_bfs_results() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 7)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    for (s, gp) in [(2, 0), (2, 2)] {
+        let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+        for threads in thread_ladder() {
+            let plain = untraced_bfs(&pg, exec(threads), root);
+            let (traced, _, _) = traced_bfs(&pg, exec(threads), root);
+            let what = format!("{s}S{gp}G x{threads}");
+            assert_eq!(plain.parent, traced.parent, "{what}: tracing changed the parent tree");
+            assert_eq!(plain.depth, traced.depth, "{what}: tracing changed level assignments");
+            assert_eq!(plain.levels, traced.levels, "{what}: tracing changed per-level stats");
+            assert_eq!(plain.aggregation_bytes, traced.aggregation_bytes, "{what}");
+        }
+    }
+}
+
+#[test]
+fn sssp_traces_are_byte_identical_across_thread_counts() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 13)));
+    let (pg, _) = specialized_partition(&g, &hw(2, 1), &LayoutOptions::paper());
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let run_at = |threads: usize| {
+        let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
+        let run =
+            run_sssp_traced(&pg, root, 8, default_weights(), exec(threads), Some(rec.clone()))
+                .unwrap();
+        (run, rec.to_jsonl())
+    };
+    let (base_run, base_jsonl) = run_at(1);
+    assert!(base_jsonl.lines().any(|l| l.contains("\"event\":\"level\"")));
+    for threads in thread_ladder() {
+        let (run, jsonl) = run_at(threads);
+        assert_eq!(run.dist, base_run.dist, "x{threads}: distances diverge");
+        assert_eq!(run.parent, base_run.parent, "x{threads}: parents diverge");
+        assert_eq!(jsonl, base_jsonl, "x{threads}: sssp trace diverges");
+    }
+}
+
+#[test]
+fn batch_traces_are_byte_identical_across_lane_and_thread_counts() {
+    // The serving path: per-query trace blocks are recorded into local
+    // recorders on the session clock and absorbed in *submission* order
+    // after the pool barrier, so lane interleaving never reorders them.
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 5)));
+    let rg = ResidentGraph::build("td", g, &hw(2, 0), &LayoutOptions::paper(), 1);
+    let roots = [0u32, 3, 7, 11, 19, 23];
+    let requests: Vec<QueryRequest> =
+        roots.iter().map(|&r| QueryRequest::new(AlgoQuery::Bfs { root: r })).collect();
+    let run_at = |threads: usize, lanes: usize| {
+        let opts = BatchOptions { threads, max_concurrency: lanes, ..Default::default() };
+        let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
+        let responses = run_requests_traced(&rg, &requests, &opts, Some(&rec));
+        (responses.len(), rec.to_jsonl())
+    };
+    let (n1, base) = run_at(1, 1);
+    assert_eq!(n1, requests.len());
+    assert_eq!(
+        base.matches("\"event\":\"run_start\"").count(),
+        requests.len(),
+        "one trace block per query"
+    );
+    for (threads, lanes) in [(2, 2), (4, 2), (4, 4)] {
+        let (n, jsonl) = run_at(threads, lanes);
+        assert_eq!(n, requests.len());
+        assert_eq!(jsonl, base, "x{threads} lanes {lanes}: batch trace diverges");
+    }
+}
