@@ -39,7 +39,7 @@ use crate::engine::comm::CommBuffers;
 use crate::engine::{run_steps, CancelToken, Direction, ExecutionMode, LevelStats, PeWork};
 use crate::obs::{Clock, DecisionTrace, LevelTrace, PeTrace, TraceRecorder};
 use crate::partition::PartitionedGraph;
-use crate::util::pool;
+use crate::util::{pool, Bitmap};
 
 use super::state::ProgramState;
 use super::{SeedSet, VertexProgram};
@@ -84,6 +84,10 @@ pub struct ProgramRunner<'g, P: VertexProgram> {
     comm: CommBuffers,
     /// Per-partition materialized frontier queues (reused across rounds).
     queues: Vec<Vec<u32>>,
+    /// Global bitmap of border vertices (≥1 cross-partition edge); the
+    /// kernels classify their rows against it so the device model can
+    /// overlap interior compute with the exchange (DESIGN.md Section 17).
+    border: Bitmap,
     /// Cooperative cancellation, checked once per round at the BSP
     /// barrier. Defaults to the free never-fires token.
     cancel: CancelToken,
@@ -123,6 +127,7 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             state,
             comm: CommBuffers::new(pg),
             queues: vec![Vec::new(); np],
+            border: pg.border_bitmap(),
             cancel: CancelToken::default(),
             clock: Clock::real(),
             trace: None,
@@ -308,7 +313,7 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
 
             let mut decision = None;
             if let Some(p) = policy.as_mut() {
-                let view = self.coordinator_view();
+                let view = self.coordinator_view(frontier_size);
                 decision = Some(p.advance_explained(view));
             }
 
@@ -438,7 +443,10 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
 
     /// The §3.3 coordinator census over partition 0, with the BFS
     /// visited test generalized to [`VertexProgram::is_settled`].
-    fn coordinator_view(&self) -> CoordinatorView {
+    /// Called after `advance_frontiers`, so `current` is the frontier the
+    /// next round will expand; `prev_frontier_vertices` is the size of
+    /// the round just run (the adaptive tuner's growth denominator).
+    fn coordinator_view(&self, prev_frontier_vertices: u64) -> CoordinatorView {
         let pid = 0;
         let part = &self.pg.parts[pid];
         let mut frontier_out = 0u64;
@@ -452,7 +460,13 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
                 unexplored += part.degree(li) as u64;
             }
         }
-        CoordinatorView { frontier_out_edges: frontier_out, unexplored_edges: unexplored }
+        CoordinatorView {
+            frontier_out_edges: frontier_out,
+            unexplored_edges: unexplored,
+            next_frontier_vertices: self.state.global_frontier.count() as u64,
+            prev_frontier_vertices,
+            total_vertices: self.pg.num_vertices as u64,
+        }
     }
 
     /// Top-down round: materialize frontier queues, scatter in
@@ -487,11 +501,12 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             let program = &self.program;
             let values = &self.state.values;
             let queues = &self.queues;
+            let border = &self.border;
             let tasks: Vec<_> = plan
                 .iter()
                 .cloned()
                 .map(|(pid, range)| {
-                    move || scatter_chunk(pg, program, values, &queues[pid][range], pid)
+                    move || scatter_chunk(pg, program, values, &queues[pid][range], pid, border)
                 })
                 .collect();
             run_steps(exec, tasks)
@@ -577,10 +592,13 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
             let program = &self.program;
             let values = &self.state.values;
             let gf = &self.state.global_frontier;
+            let border = &self.border;
             let tasks: Vec<_> = plan
                 .iter()
                 .cloned()
-                .map(|(pid, range)| move || pull_chunk(pg, program, values, gf, pid, range))
+                .map(|(pid, range)| {
+                    move || pull_chunk(pg, program, values, gf, pid, range, border)
+                })
                 .collect();
             run_steps(exec, tasks)
         };
@@ -632,13 +650,17 @@ impl<'g, P: VertexProgram> ProgramRunner<'g, P> {
 }
 
 /// Pure top-down kernel: scatter along every out-edge of the chunk's
-/// frontier slice, against the pre-round value snapshot.
+/// frontier slice, against the pre-round value snapshot. Rows of border
+/// vertices are counted into the `border_*` work so the device model can
+/// overlap the interior remainder with the exchange — classification
+/// only, traversal is untouched.
 fn scatter_chunk<P: VertexProgram>(
     pg: &PartitionedGraph,
     program: &P,
     values: &[P::Value],
     queue: &[u32],
     pid: usize,
+    border: &Bitmap,
 ) -> ChunkDelta<P::Msg> {
     let part = &pg.parts[pid];
     let mut d = ChunkDelta::default();
@@ -646,6 +668,7 @@ fn scatter_chunk<P: VertexProgram>(
         let li = pg.local_of(u);
         let deg = part.degree(li) as u32;
         d.work.vertices_scanned += 1;
+        let row_start = d.work.edges_examined;
         let val_u = &values[u as usize];
         let (lo, hi) = (part.row_ptr[li] as usize, part.row_ptr[li + 1] as usize);
         for &w in &part.col[lo..hi] {
@@ -658,20 +681,27 @@ fn scatter_chunk<P: VertexProgram>(
                 }
             }
         }
+        if border.get(u as usize) {
+            d.work.border_vertices_scanned += 1;
+            d.work.border_edges_examined += d.work.edges_examined - row_start;
+        }
     }
     d
 }
 
 /// Pure bottom-up kernel: each unsettled vertex in the chunk's scan
 /// range probes the global frontier and pulls from its first in-frontier
-/// neighbour (Beamer early exit). Activations are always local.
+/// neighbour (Beamer early exit). Activations are always local. Border
+/// rows are classified into the `border_*` counters like the scatter
+/// kernel's.
 fn pull_chunk<P: VertexProgram>(
     pg: &PartitionedGraph,
     program: &P,
     values: &[P::Value],
-    global_frontier: &crate::util::bitmap::Bitmap,
+    global_frontier: &Bitmap,
     pid: usize,
     range: Range<usize>,
+    border: &Bitmap,
 ) -> ChunkDelta<P::Msg> {
     let part = &pg.parts[pid];
     let mut d = ChunkDelta::default();
@@ -681,6 +711,7 @@ fn pull_chunk<P: VertexProgram>(
             continue;
         }
         d.work.vertices_scanned += 1;
+        let row_start = d.work.edges_examined;
         let (lo, hi) = (part.row_ptr[li] as usize, part.row_ptr[li + 1] as usize);
         for &w in &part.col[lo..hi] {
             d.work.edges_examined += 1;
@@ -690,6 +721,10 @@ fn pull_chunk<P: VertexProgram>(
                 }
                 break;
             }
+        }
+        if border.get(gid as usize) {
+            d.work.border_vertices_scanned += 1;
+            d.work.border_edges_examined += d.work.edges_examined - row_start;
         }
     }
     d

@@ -10,7 +10,8 @@
 //! They also generate Fig 1 (per-level time + avg frontier degree) for the
 //! non-partitioned algorithm.
 
-use crate::engine::Direction;
+use crate::engine::state::PARENT_UNSET;
+use crate::engine::{decode_unvisited_degree, encode_unvisited_degree, Direction, PARENT_DEG_BASE};
 use crate::graph::Csr;
 use crate::util::Bitmap;
 
@@ -61,19 +62,28 @@ impl BaselineRun {
 }
 
 /// Run a baseline BFS over the whole CSR in one address space.
+///
+/// Bookkeeping is fused into the kernels (DESIGN.md Section 17): parents
+/// of unvisited vertices are degree-encoded (`PARENT_DEG_BASE - degree`),
+/// so claiming a vertex hands the claimer its degree and every counter the
+/// Beamer heuristic needs — next-frontier size/degree-sum and explored
+/// endpoints — accumulates as a side effect of the claim. No per-level
+/// frontier census or final O(V) reached scan remains.
 pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
     // Reporting-only wall clock through the seam (DESIGN.md Section 16);
     // no control-flow or output bit depends on it.
     let clock = crate::obs::Clock::real();
     let nv = g.num_vertices;
     let mut depth = vec![-1i32; nv];
-    let mut parent = vec![-1i64; nv];
+    let mut parent: Vec<i64> =
+        (0..nv as u32).map(|v| encode_unvisited_degree(g.degree(v) as u64)).collect();
     let mut visited = Bitmap::new(nv);
     let mut frontier: Vec<u32> = Vec::new(); // queue form (top-down)
     let mut frontier_bits = Bitmap::new(nv); // bitmap form (bottom-up)
     let mut next_bits = Bitmap::new(nv);
     let mut levels = Vec::new();
 
+    let root_deg = decode_unvisited_degree(parent[root as usize]);
     depth[root as usize] = 0;
     parent[root as usize] = root as i64;
     visited.set(root as usize);
@@ -81,18 +91,17 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
     frontier_bits.set(root as usize);
 
     let total_endpoints: u64 = g.num_directed_edges() as u64;
-    let mut explored_endpoints: u64 = g.degree(root) as u64;
+    let mut explored_endpoints: u64 = root_deg;
+    let mut reached: u64 = 1;
+    // Carried frontier census: size/degree-sum of the frontier about to be
+    // expanded, seeded by the root and thereafter produced by the claims
+    // of the previous level.
+    let mut frontier_size: u64 = 1;
+    let mut frontier_degree_sum: u64 = root_deg;
     let mut dir = Direction::TopDown;
     let mut level = 0u32;
 
-    loop {
-        let frontier_size = frontier_bits.count() as u64;
-        if frontier_size == 0 {
-            break;
-        }
-        let frontier_degree_sum: u64 =
-            frontier_bits.iter_ones().map(|v| g.degree(v as u32) as u64).sum();
-
+    while frontier_size > 0 {
         let mut rec = BaselineLevel {
             level,
             direction: dir,
@@ -104,6 +113,7 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
 
         next_bits.clear();
         let mut next_queue: Vec<u32> = Vec::new();
+        let mut next_degree_sum: u64 = 0;
         match dir {
             Direction::TopDown => {
                 rec.vertices_scanned = frontier.len() as u64;
@@ -112,11 +122,13 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
                         rec.edges_examined += 1;
                         if !visited.get(w as usize) {
                             visited.set(w as usize);
+                            let deg = decode_unvisited_degree(parent[w as usize]);
                             depth[w as usize] = depth[v as usize] + 1;
                             parent[w as usize] = v as i64;
                             next_bits.set(w as usize);
                             next_queue.push(w);
-                            explored_endpoints += g.degree(w) as u64;
+                            next_degree_sum += deg;
+                            explored_endpoints += deg;
                         }
                     }
                 }
@@ -135,11 +147,13 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
                         rec.edges_examined += 1;
                         if frontier_bits.get(w as usize) {
                             visited.set(v as usize);
+                            let deg = decode_unvisited_degree(parent[v as usize]);
                             depth[v as usize] = level as i32 + 1;
                             parent[v as usize] = w as i64;
                             next_bits.set(v as usize);
                             next_queue.push(v);
-                            explored_endpoints += g.degree(v) as u64;
+                            next_degree_sum += deg;
+                            explored_endpoints += deg;
                             break;
                         }
                     }
@@ -147,10 +161,12 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
             }
         }
         levels.push(rec);
+        reached += next_queue.len() as u64;
 
-        // Direction heuristics on exact global counters (Beamer).
+        // Direction heuristics on exact global counters (Beamer), all
+        // carried out of the claims above — no recount.
         if let BaselineKind::DirectionOptimized { alpha, beta } = kind {
-            let m_f: u64 = next_queue.iter().map(|&v| g.degree(v) as u64).sum();
+            let m_f = next_degree_sum;
             // `explored_endpoints` adds each vertex's degree exactly once,
             // at first visit, so it can never exceed the total degree sum
             // (`col.len()`). A `saturating_sub` here would silently clamp
@@ -172,17 +188,30 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
             };
         }
 
+        frontier_size = next_queue.len() as u64;
+        frontier_degree_sum = next_degree_sum;
         std::mem::swap(&mut frontier_bits, &mut next_bits);
         frontier = next_queue;
         level += 1;
     }
 
-    let mut reached = 0u64;
-    let mut endpoints = 0u64;
-    for v in 0..nv as u32 {
-        if depth[v as usize] >= 0 {
-            reached += 1;
-            endpoints += g.degree(v) as u64;
+    #[cfg(debug_assertions)]
+    {
+        let mut r = 0u64;
+        let mut e = 0u64;
+        for v in 0..nv as u32 {
+            if depth[v as usize] >= 0 {
+                r += 1;
+                e += g.degree(v) as u64;
+            }
+        }
+        debug_assert_eq!((r, e), (reached, explored_endpoints), "fused reached census drifted");
+    }
+    // Unreached vertices still hold their degree encoding; present the
+    // public -1 convention without a separate visited probe.
+    for p in parent.iter_mut() {
+        if *p <= PARENT_DEG_BASE {
+            *p = PARENT_UNSET;
         }
     }
     BaselineRun {
@@ -191,7 +220,7 @@ pub fn baseline_bfs(g: &Csr, root: u32, kind: BaselineKind) -> BaselineRun {
         parent,
         levels,
         reached_vertices: reached,
-        reached_edge_endpoints: endpoints,
+        reached_edge_endpoints: explored_endpoints,
         wall: std::time::Duration::from_nanos(clock.now_ns()),
     }
 }

@@ -42,8 +42,14 @@ use crate::util::{AtomicBitmap, Bitmap};
 /// * `global_next` — the shared next-level global frontier (atomic
 ///   fetch-or marking, racing safely with every other chunk).
 /// * `range` — this chunk's local-index slice of `0..scan_limit`.
+/// * `border` — global bitmap of vertices with at least one
+///   cross-partition edge; rows of border vertices are counted into the
+///   delta's `border_*` work so the device model can overlap the interior
+///   remainder with the boundary exchange (DESIGN.md Section 17).
+///   Classification only — traversal order and candidates are untouched.
 /// * `scratch` — the chunk's reusable output delta (hot path: no
 ///   allocation once warm).
+#[allow(clippy::too_many_arguments)] // the kernel seam: each input is a distinct engine artifact
 pub fn cpu_bottom_up(
     pg: &PartitionedGraph,
     pid: usize,
@@ -51,6 +57,7 @@ pub fn cpu_bottom_up(
     global_frontier: &Bitmap,
     global_next: &AtomicBitmap<'_>,
     range: Range<usize>,
+    border: &Bitmap,
     scratch: &mut ChunkScratch,
 ) {
     let part = &pg.parts[pid];
@@ -62,6 +69,7 @@ pub fn cpu_bottom_up(
             continue;
         }
         scratch.delta.work.vertices_scanned += 1;
+        let row_start = scratch.delta.work.edges_examined;
         for &w in part.neighbours(li) {
             scratch.delta.work.edges_examined += 1;
             if global_frontier.get(w as usize) {
@@ -70,6 +78,11 @@ pub fn cpu_bottom_up(
                 scratch.delta.activations.push((gid, w));
                 break; // early exit — the CPU's advantage over dense lanes
             }
+        }
+        if border.get(gid as usize) {
+            scratch.delta.work.border_vertices_scanned += 1;
+            scratch.delta.work.border_edges_examined +=
+                scratch.delta.work.edges_examined - row_start;
         }
     }
 }
@@ -103,10 +116,11 @@ mod tests {
         });
         let mut chunks: Vec<ChunkScratch> =
             ranges.iter().map(|_| ChunkScratch::new(pg.num_vertices)).collect();
+        let border = pg.border_bitmap();
         {
             let (slots, gnext) = st.split_for_superstep();
             for (r, scratch) in ranges.iter().zip(chunks.iter_mut()) {
-                cpu_bottom_up(pg, pid, slots[pid], gf, &gnext, r.clone(), scratch);
+                cpu_bottom_up(pg, pid, slots[pid], gf, &gnext, r.clone(), &border, scratch);
             }
         }
         let mut work = PeWork::default();

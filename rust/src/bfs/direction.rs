@@ -12,6 +12,11 @@
 //! * **Bottom-up → top-down**: gains are small in the tail, so all
 //!   partitions simply return to top-down after a fixed number of bottom-up
 //!   steps — no voting, no state exchange.
+//!
+//! [`PolicyKind::Adaptive`] (DESIGN.md Section 17) replaces the fixed
+//! thresholds with per-level effective alpha/beta derived from measured
+//! frontier growth — every input is already on hand in the fused census,
+//! so adaptivity costs no extra scans and stays coordinator-local.
 
 use crate::engine::Direction;
 
@@ -29,22 +34,59 @@ pub enum PolicyKind {
         /// return, §3.3; default 3).
         bu_steps: u32,
     },
+    /// Per-level adaptive thresholds (DESIGN.md Section 17): the
+    /// effective alpha scales with the measured frontier growth rate
+    /// (a frontier that doubled will be even bigger next level — switch
+    /// earlier), and the bottom-up return is Beamer's exact
+    /// `n_f < |V| / beta` rule with beta tightened as the frontier
+    /// collapses, instead of a blind fixed step count.
+    Adaptive {
+        /// Baseline alpha; the per-level effective value is
+        /// `clamp(alpha0 * growth, alpha0/4, alpha0*4)`.
+        alpha0: f64,
+        /// Baseline beta; the per-level effective value is
+        /// `clamp(beta0 * growth, beta0/4, beta0)` while bottom-up.
+        beta0: f64,
+        /// Safety bound on consecutive bottom-up steps.
+        bu_max: u32,
+    },
 }
 
 impl PolicyKind {
     pub fn direction_optimized() -> Self {
         PolicyKind::DirectionOptimized { alpha: 14.0, bu_steps: 3 }
     }
+
+    /// Adaptive defaults: Beamer's alpha=14/beta=24 as the baselines,
+    /// with an 8-step bottom-up safety bound.
+    pub fn adaptive() -> Self {
+        PolicyKind::Adaptive { alpha0: 14.0, beta0: 24.0, bu_max: 8 }
+    }
+
+    /// Does this policy ever read the coordinator's unexplored-edge
+    /// census? `AlwaysTopDown`'s decision is constant, so the unfused
+    /// (separate-census) driver path skips that scan entirely.
+    pub fn needs_view(&self) -> bool {
+        !matches!(self, PolicyKind::AlwaysTopDown)
+    }
 }
 
 /// What the coordinator partition sees at the end of a superstep — strictly
-/// local quantities (no cross-partition communication, the §3.3 point).
+/// local edge counters plus the (free, already-aggregated) frontier vertex
+/// totals the adaptive policy's growth estimate uses. No cross-partition
+/// communication beyond what the barrier already did — the §3.3 point.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CoordinatorView {
     /// Sum of degrees of the coordinator's vertices in the *next* frontier.
     pub frontier_out_edges: u64,
     /// Sum of degrees of the coordinator's still-unvisited vertices.
     pub unexplored_edges: u64,
+    /// Global vertex count of the upcoming frontier (all partitions).
+    pub next_frontier_vertices: u64,
+    /// Global vertex count of the frontier the superstep just processed.
+    pub prev_frontier_vertices: u64,
+    /// Total vertices in the graph (Beamer's `|V|` for the beta rule).
+    pub total_vertices: u64,
 }
 
 /// Everything that went into one direction decision — the explainability
@@ -57,13 +99,17 @@ pub struct DirectionDecision {
     pub frontier_out_edges: u64,
     /// Coordinator-local unexplored edges the heuristic compared.
     pub unexplored_edges: u64,
-    /// Beamer alpha in effect (0.0 for [`PolicyKind::AlwaysTopDown`]).
+    /// Alpha in effect for this decision: the configured constant for
+    /// the fixed policies (0.0 for [`PolicyKind::AlwaysTopDown`]), the
+    /// per-level tuned value for [`PolicyKind::Adaptive`].
     pub alpha: f64,
-    /// Fixed bottom-up step budget (0 for [`PolicyKind::AlwaysTopDown`]).
-    pub beta: u32,
+    /// Beta in effect for this decision. Fixed-policy runs report the
+    /// bottom-up step budget here (the §3.3 fixed-step return plays
+    /// beta's role); adaptive runs report the tuned Beamer beta.
+    pub beta: f64,
     /// Bottom-up steps taken so far (after this decision).
     pub bu_taken: u32,
-    /// Whether the one-shot fixed-step return has already fired.
+    /// Whether the one-shot return to top-down has already fired.
     pub switched_back: bool,
     /// The direction the decision selected for the next level.
     pub next: Direction,
@@ -98,8 +144,19 @@ impl DirectionPolicy {
     /// here — so tracing on vs off cannot diverge.
     pub fn advance_explained(&mut self, view: CoordinatorView) -> DirectionDecision {
         let (alpha, beta) = match self.kind {
-            PolicyKind::AlwaysTopDown => (0.0, 0),
-            PolicyKind::DirectionOptimized { alpha, bu_steps } => (alpha, bu_steps),
+            PolicyKind::AlwaysTopDown => (0.0, 0.0),
+            PolicyKind::DirectionOptimized { alpha, bu_steps } => (alpha, bu_steps as f64),
+            PolicyKind::Adaptive { alpha0, beta0, .. } => {
+                // Measured frontier growth; integer inputs, one division —
+                // identical on every thread count (the inputs come from
+                // the fused census maintained in merge order).
+                let growth = view.next_frontier_vertices as f64
+                    / (view.prev_frontier_vertices.max(1) as f64);
+                (
+                    (alpha0 * growth).clamp(alpha0 / 4.0, alpha0 * 4.0),
+                    (beta0 * growth).clamp(beta0 / 4.0, beta0),
+                )
+            }
         };
         match self.kind {
             PolicyKind::AlwaysTopDown => {}
@@ -120,6 +177,35 @@ impl DirectionPolicy {
                     if self.bu_taken >= bu_steps {
                         // Fixed-step return; all partitions take it
                         // simultaneously, no communication needed.
+                        self.current = Direction::TopDown;
+                        self.switched_back = true;
+                    }
+                }
+            },
+            PolicyKind::Adaptive { bu_max, .. } => match self.current {
+                Direction::TopDown => {
+                    // Same Beamer alpha rule, with the growth-scaled
+                    // effective alpha: an exploding frontier crosses the
+                    // threshold earlier, a shrinking one later.
+                    if !self.switched_back
+                        && view.frontier_out_edges as f64
+                            > view.unexplored_edges as f64 / alpha
+                        && view.frontier_out_edges > 0
+                    {
+                        self.current = Direction::BottomUp;
+                        self.bu_taken = 0;
+                    }
+                }
+                Direction::BottomUp => {
+                    self.bu_taken += 1;
+                    // Beamer's exact return rule (n_f < |V| / beta), with
+                    // beta tightened as the frontier collapses so tail
+                    // bottom-up scans are not wasted; bu_max is the
+                    // safety bound. One-shot, like the fixed policy.
+                    if (view.next_frontier_vertices as f64)
+                        < view.total_vertices as f64 / beta
+                        || self.bu_taken >= bu_max
+                    {
                         self.current = Direction::TopDown;
                         self.switched_back = true;
                     }
@@ -149,7 +235,19 @@ mod tests {
     use super::*;
 
     fn view(fo: u64, un: u64) -> CoordinatorView {
-        CoordinatorView { frontier_out_edges: fo, unexplored_edges: un }
+        CoordinatorView { frontier_out_edges: fo, unexplored_edges: un, ..Default::default() }
+    }
+
+    /// Full adaptive view: edge counters plus the frontier-size history
+    /// the growth estimate reads.
+    fn aview(fo: u64, un: u64, next_n: u64, prev_n: u64, total: u64) -> CoordinatorView {
+        CoordinatorView {
+            frontier_out_edges: fo,
+            unexplored_edges: un,
+            next_frontier_vertices: next_n,
+            prev_frontier_vertices: prev_n,
+            total_vertices: total,
+        }
     }
 
     #[test]
@@ -158,6 +256,9 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(p.advance(view(1_000_000, 1)), Direction::TopDown);
         }
+        assert!(!PolicyKind::AlwaysTopDown.needs_view());
+        assert!(PolicyKind::direction_optimized().needs_view());
+        assert!(PolicyKind::adaptive().needs_view());
     }
 
     #[test]
@@ -194,12 +295,60 @@ mod tests {
         assert_eq!(d.frontier_out_edges, 1_000);
         assert_eq!(d.unexplored_edges, 10_000);
         assert_eq!(d.alpha, 14.0);
-        assert_eq!(d.beta, 3);
+        assert_eq!(d.beta, 3.0);
         assert!(!d.switched_back);
         // AlwaysTopDown reports zeroed tuning knobs.
         let mut t = DirectionPolicy::new(PolicyKind::AlwaysTopDown);
         let d = t.advance_explained(view(1_000, 1));
-        assert_eq!((d.alpha, d.beta, d.next), (0.0, 0, Direction::TopDown));
+        assert_eq!((d.alpha, d.beta, d.next), (0.0, 0.0, Direction::TopDown));
+    }
+
+    #[test]
+    fn adaptive_scales_alpha_with_growth_and_clamps() {
+        let mut p = DirectionPolicy::new(PolicyKind::adaptive());
+        // Growth 2x: alpha_eff = 28 — a frontier of 1000 out-edges vs
+        // 20000 unexplored crosses 20000/28 ≈ 714 (it would NOT cross
+        // the baseline 20000/14 ≈ 1428).
+        let d = p.advance_explained(aview(1_000, 20_000, 200, 100, 100_000));
+        assert_eq!(d.alpha, 28.0);
+        assert_eq!(d.next, Direction::BottomUp);
+        // Explosive growth clamps at 4x the baseline.
+        let mut p = DirectionPolicy::new(PolicyKind::adaptive());
+        let d = p.advance_explained(aview(0, 20_000, 5_000, 1, 100_000));
+        assert_eq!(d.alpha, 56.0, "alpha_eff clamped to alpha0 * 4");
+        // Collapse clamps at a quarter of the baseline.
+        let mut p = DirectionPolicy::new(PolicyKind::adaptive());
+        let d = p.advance_explained(aview(0, 20_000, 1, 5_000, 100_000));
+        assert_eq!(d.alpha, 3.5, "alpha_eff clamped to alpha0 / 4");
+    }
+
+    #[test]
+    fn adaptive_returns_on_beamer_beta_not_fixed_steps() {
+        let mut p = DirectionPolicy::new(PolicyKind::adaptive());
+        // Enter bottom-up.
+        assert_eq!(p.advance(aview(1_000, 1_000, 2_000, 500, 10_000)), Direction::BottomUp);
+        // Frontier still large (growth 1 → beta_eff = 24; n_f = 2000 >=
+        // 10000/24): stay bottom-up.
+        assert_eq!(p.advance(aview(0, 500, 2_000, 2_000, 10_000)), Direction::BottomUp);
+        // Frontier collapsed (n_f = 100 < 10000/beta_eff): return early —
+        // a fixed bu_steps=3 policy would have run one more BU level.
+        let d = p.advance_explained(aview(0, 100, 100, 2_000, 10_000));
+        assert_eq!(d.next, Direction::TopDown);
+        assert_eq!(d.bu_taken, 2);
+        assert!(d.switched_back);
+        // One-shot: no re-entry even on a huge late frontier.
+        assert_eq!(p.advance(aview(1_000_000, 1, 5_000, 100, 10_000)), Direction::TopDown);
+    }
+
+    #[test]
+    fn adaptive_bu_max_is_a_safety_bound() {
+        let kind = PolicyKind::Adaptive { alpha0: 14.0, beta0: 24.0, bu_max: 2 };
+        let mut p = DirectionPolicy::new(kind);
+        assert_eq!(p.advance(aview(1_000, 1_000, 5_000, 500, 10_000)), Direction::BottomUp);
+        // Frontier never shrinks below |V|/beta, but bu_max forces the
+        // return after 2 steps.
+        assert_eq!(p.advance(aview(0, 500, 5_000, 5_000, 10_000)), Direction::BottomUp);
+        assert_eq!(p.advance(aview(0, 500, 5_000, 5_000, 10_000)), Direction::TopDown);
     }
 
     #[test]

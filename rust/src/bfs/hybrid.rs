@@ -51,9 +51,10 @@ use super::direction::{CoordinatorView, DirectionPolicy, PolicyKind};
 use super::top_down::cpu_top_down;
 use super::BfsRun;
 use crate::engine::comm::{CommBuffers, CommMode};
+use crate::engine::state::PARENT_UNSET;
 use crate::engine::{
     parallel, Accelerator, BfsState, CancelToken, ChunkScratch, Direction, ExecutionMode,
-    LevelStats, PeWork,
+    LevelStats, PeWork, PARENT_DEG_BASE,
 };
 use crate::obs::{Clock, DecisionTrace, LevelTrace, PeTrace, Span, SpanRing, TraceRecorder};
 use crate::partition::PartitionedGraph;
@@ -76,6 +77,15 @@ pub struct HybridConfig {
     /// hub-heavy frontier — little vertex count, huge edge work — still
     /// goes to the device.
     pub gpu_td_host_threshold: u64,
+    /// Fused per-level bookkeeping (DESIGN.md Section 17, the default):
+    /// frontier census and the coordinator's unexplored-edge count come
+    /// from the counters maintained at activation commit points — O(1)
+    /// per level. `false` re-enables the pre-fusion separate scans
+    /// (O(frontier) census + O(V) coordinator walk, gated by
+    /// [`PolicyKind::needs_view`]) for A/B pricing; the traversal and
+    /// every decision are bit-identical either way — debug builds assert
+    /// the scans against the fused counters at every level.
+    pub fused_census: bool,
 }
 
 impl Default for HybridConfig {
@@ -85,6 +95,7 @@ impl Default for HybridConfig {
             comm_mode: CommMode::Batched,
             exec: ExecutionMode::Sequential,
             gpu_td_host_threshold: 4096,
+            fused_census: true,
         }
     }
 }
@@ -122,6 +133,17 @@ pub struct HybridRunner<'g, A: Accelerator + ?Sized> {
     incoming: Bitmap,
     gpu_frontier: Vec<i32>,
     gpu_merge: Vec<u32>,
+    /// Vertices with at least one cross-partition edge (union of the
+    /// border-out tables), built once per runner. Kernels classify their
+    /// per-row work into border/interior halves against it so the device
+    /// model can overlap interior compute with the boundary exchange
+    /// (DESIGN.md Section 17). Classification only — never control flow.
+    border: Bitmap,
+    /// Per-partition border vertex count (owned bits of `border`), used to
+    /// apportion device-side GPU kernel work — the host never sees the
+    /// device kernel's per-row walk, so its border half is attributed by
+    /// the partition's border fraction, deterministically in integers.
+    border_count: Vec<u64>,
     /// Cooperative cancellation, checked once per superstep at the BSP
     /// barrier. Defaults to the free never-fires token.
     cancel: CancelToken,
@@ -194,6 +216,12 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             }
         }
         let np = pg.parts.len();
+        let border = pg.border_bitmap();
+        let border_count: Vec<u64> = pg
+            .parts
+            .iter()
+            .map(|p| p.gids.iter().filter(|&&gid| border.get(gid as usize)).count() as u64)
+            .collect();
         Ok(Self {
             state,
             comm: CommBuffers::new(pg),
@@ -204,6 +232,8 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             incoming: Bitmap::new(pg.num_vertices),
             gpu_frontier: Vec::new(),
             gpu_merge: Vec::new(),
+            border,
+            border_count,
             cancel: CancelToken::default(),
             clock: Clock::real(),
             trace: None,
@@ -288,11 +318,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         }
         let mut levels: Vec<LevelStats> = Vec::new();
         let mut level: u32 = 0;
-        // Last level's frontier size gates the parallel census: spawning
-        // workers to count a tail frontier of a few vertices costs more
-        // than the count (level 0's frontier is exactly the root).
-        const PARALLEL_CENSUS_MIN: u64 = 4096;
-        let mut prev_frontier = 1u64;
+        let needs_view = self.cfg.policy.needs_view();
 
         loop {
             // ---- cancellation checkpoint (superstep barrier) ----
@@ -315,36 +341,25 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             let frontier_sparse = self.state.frontiers[0].current.is_sparse();
 
             // ---- frontier census (drives Fig 1 and termination) ----
-            // Read-only per-partition sums; identical in either mode.
-            let mut frontier_size = 0u64;
-            let mut degree_sum = 0u64;
-            {
-                let census_mode = if prev_frontier >= PARALLEL_CENSUS_MIN {
-                    self.cfg.exec
-                } else {
-                    ExecutionMode::Sequential
-                };
-                let state = &self.state;
-                let pg = self.pg;
-                let tasks: Vec<_> = (0..np)
-                    .map(|pid| {
-                        move || {
-                            let mut size = 0u64;
-                            let mut deg = 0u64;
-                            for v in state.frontiers[pid].current.iter() {
-                                size += 1;
-                                deg += pg.parts[pid].degree(pg.local_of(v as u32)) as u64;
-                            }
-                            (size, deg)
-                        }
-                    })
-                    .collect();
-                for (s, d) in parallel::run_steps(census_mode, tasks) {
-                    frontier_size += s;
-                    degree_sum += d;
+            // Fused path (the default): the totals were maintained at the
+            // activation commit points of the previous superstep — O(1)
+            // here, no scan, no task fan-out (DESIGN.md Section 17). The
+            // unfused compat path recomputes them the pre-fusion way and
+            // charges that walk to `census_vertices` for the A/B pricing.
+            let (frontier_size, degree_sum) = self.state.frontier_totals();
+            let mut census_vertices = 0u64;
+            if !self.cfg.fused_census {
+                let mut scan_size = 0u64;
+                let mut scan_deg = 0u64;
+                for pid in 0..np {
+                    for v in self.state.frontiers[pid].current.iter() {
+                        scan_size += 1;
+                        scan_deg += self.pg.parts[pid].degree(self.pg.local_of(v as u32)) as u64;
+                    }
                 }
+                debug_assert_eq!((scan_size, scan_deg), (frontier_size, degree_sum));
+                census_vertices += scan_size;
             }
-            prev_frontier = frontier_size;
             if frontier_size == 0 {
                 break;
             }
@@ -358,6 +373,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                 pe_work: vec![PeWork::default(); np],
                 frontier_size,
                 frontier_degree_sum: degree_sum,
+                census_vertices,
                 ..Default::default()
             };
 
@@ -377,8 +393,37 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             // ---- coordinator's local direction decision (§3.3) ----
             // `advance_explained` is `advance` plus the decision record;
             // the state transition is identical, so the traced and
-            // untraced runs walk the same direction schedule.
-            let view = self.coordinator_view();
+            // untraced runs walk the same direction schedule. The view is
+            // read straight off the fused census — partition 0 owns the
+            // hubs (specialized placement), so its counters stand in for
+            // the coordinator's local scans at zero cost. The unfused
+            // compat path re-walks partition 0 the pre-fusion way (gated
+            // by `needs_view` — a constant-decision policy never reads
+            // it) and charges the walk to `census_vertices`.
+            let view = CoordinatorView {
+                frontier_out_edges: self.state.front_deg[0],
+                unexplored_edges: self.state.unexplored[0],
+                next_frontier_vertices: self.state.frontier_totals().0,
+                prev_frontier_vertices: frontier_size,
+                total_vertices: v_total as u64,
+            };
+            if !self.cfg.fused_census && needs_view {
+                let part = &self.pg.parts[0];
+                let mut frontier_out = 0u64;
+                for v in self.state.frontiers[0].current.iter() {
+                    frontier_out += part.degree(self.pg.local_of(v as u32)) as u64;
+                }
+                let mut unexplored = 0u64;
+                for li in 0..part.num_vertices() {
+                    let gid = part.gids[li];
+                    if !self.state.visited[0].get(gid as usize) {
+                        unexplored += part.degree(li) as u64;
+                    }
+                }
+                debug_assert_eq!(frontier_out, view.frontier_out_edges);
+                debug_assert_eq!(unexplored, view.unexplored_edges);
+                stats.census_vertices += part.num_vertices() as u64;
+            }
             let decision = policy.advance_explained(view);
 
             if let Some(tr) = &self.trace {
@@ -400,13 +445,23 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         }
 
         // ---- reached census (TEPS numerator) ----
-        let mut reached = 0u64;
-        let mut endpoints = 0u64;
-        for v in 0..v_total as u32 {
-            if self.state.depth[v as usize] >= 0 {
-                reached += 1;
-                endpoints += self.degree(v) as u64;
+        // Fused: every activation commit recorded the vertex in `touched`
+        // and decoded its degree out of the encoded parent slot, so both
+        // figures are already on hand — no O(V) pass (DESIGN.md
+        // Section 17). Debug builds recompute them the old way.
+        let reached = self.state.touched_len() as u64;
+        let endpoints = self.state.explored_endpoints();
+        #[cfg(debug_assertions)]
+        {
+            let mut r = 0u64;
+            let mut e = 0u64;
+            for v in 0..v_total as u32 {
+                if self.state.depth[v as usize] >= 0 {
+                    r += 1;
+                    e += self.degree(v) as u64;
+                }
             }
+            debug_assert_eq!((r, e), (reached, endpoints), "fused reached census drifted");
         }
 
         // Clean completion: the next reset may recycle in O(touched).
@@ -419,10 +474,19 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         if let Some(tr) = &self.trace {
             tr.run_end(levels.len(), reached, wall_ns);
         }
+        // Unreached vertices still hold their degree-encoded parent slots
+        // (the state keeps them for the next run's sparse recycle); the
+        // Graph500-facing output maps them back to the UNSET sentinel.
+        let parent_out: Vec<i64> = self
+            .state
+            .parent
+            .iter()
+            .map(|&p| if p <= PARENT_DEG_BASE { PARENT_UNSET } else { p })
+            .collect();
         Ok(BfsRun {
             root,
             depth: self.state.depth.clone(),
-            parent: self.state.parent.clone(),
+            parent: parent_out,
             levels,
             init_bytes,
             aggregation_bytes,
@@ -478,8 +542,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
     /// O(scan_limit) per partition *regardless* of frontier size — a
     /// single-hub frontier can still mean a full unvisited scan — so
     /// bottom-up levels always use the configured mode. Same outputs
-    /// either way; this is purely a scheduling choice (mirrors the census
-    /// gate in `run`).
+    /// either way; this is purely a scheduling choice.
     fn kernel_exec(&self, stats: &LevelStats) -> ExecutionMode {
         const PARALLEL_KERNEL_MIN: u64 = 128;
         match stats.direction {
@@ -512,6 +575,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             self.span_rings.push(SpanRing::with_capacity(4));
         }
         {
+            let border = &self.border;
             let (slots, gnext) = self.state.split_for_superstep();
             let kernel = &kernel;
             let clock = &self.clock;
@@ -534,10 +598,10 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
                     let start_ns = timer.as_ref().map(|(c, _)| c.now_ns());
                     match kernel {
                         ChunkKernel::TopDown { queues } => {
-                            cpu_top_down(pg, pid, slot, &gn, &queues[pid][range], scratch)
+                            cpu_top_down(pg, pid, slot, &gn, &queues[pid][range], border, scratch)
                         }
                         ChunkKernel::BottomUp { gf } => {
-                            cpu_bottom_up(pg, pid, slot, gf, &gn, range, scratch)
+                            cpu_bottom_up(pg, pid, slot, gf, &gn, range, border, scratch)
                         }
                     }
                     if let Some((c, ring)) = timer {
@@ -703,11 +767,14 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         // Pull phase: the aggregate was already built incrementally (every
         // activation marks `global_next`, which became `global_frontier`
         // at the last barrier); only the transfers are accounted here.
-        // Per-partition frontier sizes bound the sparse-list wire format
-        // (O(1) for sparse frontiers, one word scan for dense ones).
-        let counts: Vec<u64> =
-            (0..np).map(|p| self.state.frontiers[p].current.count() as u64).collect();
-        stats.comm = self.comm.pull_stats(pg, &counts);
+        // Per-partition frontier sizes bound the sparse-list wire format;
+        // the fused census already holds them — no bitmap scan.
+        debug_assert!(
+            (0..np).all(|p| self.state.front_size[p]
+                == self.state.frontiers[p].current.count() as u64),
+            "fused per-partition frontier counts drifted"
+        );
+        stats.comm = self.comm.pull_stats(pg, &self.state.front_size);
 
         // ---- chunk plan: carve each CPU partition's 0..scan_limit range
         // into up to `threads` edge-weight-balanced slices (the local
@@ -797,6 +864,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         work.edges_examined = r.edges_out as u64;
         work.pcie_bytes = r.pcie_bytes;
         work.pcie_transfers = r.pcie_transfers;
+        gpu_border_split(self.border_count[pid], n as u64, &mut work);
 
         // Route activations: local ones are owner-side activations with a
         // known parent; remote ones go to push buffers + contributions.
@@ -843,8 +911,17 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
             self.chunks.push(ChunkScratch::new(self.pg.num_vertices));
         }
         {
+            let border = &self.border;
             let (slots, gnext) = self.state.split_for_superstep();
-            cpu_top_down(self.pg, pid, slots[pid], &gnext, &self.queues[pid], &mut self.chunks[0]);
+            cpu_top_down(
+                self.pg,
+                pid,
+                slots[pid],
+                &gnext,
+                &self.queues[pid],
+                border,
+                &mut self.chunks[0],
+            );
         }
         let (mut work, crossing) = self.merge_chunk(pid, 0, level);
         // Newly activated local vertices must be mirrored to the device.
@@ -872,6 +949,7 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         let r = accel.bottom_up(pid, gf.words())?;
         work.pcie_bytes = r.pcie_bytes;
         work.pcie_transfers = r.pcie_transfers;
+        gpu_border_split(self.border_count[pid], work.vertices_scanned, &mut work);
         if r.count == 0 {
             return Ok(work);
         }
@@ -889,23 +967,20 @@ impl<'g, A: Accelerator + ?Sized> HybridRunner<'g, A> {
         Ok(work)
     }
 
-    /// The coordinator's strictly-local view for the switch decision.
-    fn coordinator_view(&self) -> CoordinatorView {
-        let pid = 0; // CPU partition 0 owns the hubs (specialized placement)
-        let part = &self.pg.parts[pid];
-        let mut frontier_out = 0u64;
-        for v in self.state.frontiers[pid].current.iter() {
-            frontier_out += part.degree(self.pg.local_of(v as u32)) as u64;
-        }
-        let mut unexplored = 0u64;
-        for li in 0..part.num_vertices() {
-            let gid = part.gids[li];
-            if !self.state.visited[pid].get(gid as usize) {
-                unexplored += part.degree(li) as u64;
-            }
-        }
-        CoordinatorView { frontier_out_edges: frontier_out, unexplored_edges: unexplored }
-    }
+}
+
+/// Attribute a *device-side* GPU kernel's border/interior work split by
+/// the partition's border-vertex fraction: the host never sees the device
+/// kernel's per-row walk, so the split the CPU kernels count exactly is
+/// approximated here as `work * border_vertices / part_vertices` —
+/// integer arithmetic on deterministic inputs, so the attribution is
+/// thread-count invariant like every other counter. Host-walked GPU
+/// frontiers go through `cpu_top_down` and count the real split.
+fn gpu_border_split(border_vertices: u64, part_vertices: u64, work: &mut PeWork) {
+    let n = part_vertices.max(1);
+    let b = border_vertices.min(n);
+    work.border_vertices_scanned = work.vertices_scanned * b / n;
+    work.border_edges_examined = work.edges_examined * b / n;
 }
 
 #[cfg(test)]
@@ -932,9 +1007,13 @@ mod tests {
         root: u32,
         exec: ExecutionMode,
     ) -> BfsRun {
+        let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, exec, ..Default::default() };
+        run_hybrid_cfg(g, cfg_hw, cfg, root)
+    }
+
+    fn run_hybrid_cfg(g: &Csr, cfg_hw: &HardwareConfig, cfg: HybridConfig, root: u32) -> BfsRun {
         let (pg, _) = specialized_partition(g, cfg_hw, &LayoutOptions::paper());
         let mut sim = SimAccelerator::new(pg.parts.len(), g.num_vertices);
-        let cfg = HybridConfig { policy, comm_mode: CommMode::Batched, exec, ..Default::default() };
         let accel = if cfg_hw.gpus > 0 { Some(&mut sim) } else { None };
         let mut runner = HybridRunner::new(&pg, cfg, accel).unwrap();
         runner.run(root).unwrap()
@@ -1081,22 +1160,84 @@ mod tests {
     }
 
     #[test]
+    fn unfused_compat_path_is_bit_identical_and_priced() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 2)));
+        let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        for cfg_hw in [hw(2, 0), hw(2, 2)] {
+            let fused = run_hybrid_cfg(&g, &cfg_hw, HybridConfig::default(), root);
+            let cfg = HybridConfig { fused_census: false, ..Default::default() };
+            let separate = run_hybrid_cfg(&g, &cfg_hw, cfg, root);
+            assert_eq!(fused.depth, separate.depth, "config {}", cfg_hw.label());
+            assert_eq!(fused.parent, separate.parent, "config {}", cfg_hw.label());
+            assert_eq!(fused.levels.len(), separate.levels.len());
+            for (a, b) in fused.levels.iter().zip(&separate.levels) {
+                assert_eq!(a.direction, b.direction, "level {}", a.level);
+                assert_eq!(a.frontier_size, b.frontier_size, "level {}", a.level);
+                assert_eq!(a.frontier_degree_sum, b.frontier_degree_sum, "level {}", a.level);
+                assert_eq!(a.pe_work, b.pe_work, "level {}", a.level);
+                assert_eq!(a.comm, b.comm, "level {}", a.level);
+                // The only divergence: the fused path never walks a
+                // census, the separate path always walks the frontier
+                // and (policy reads the view) partition 0.
+                assert_eq!(a.census_vertices, 0, "fused level {} priced a census", a.level);
+                assert!(b.census_vertices >= b.frontier_size, "level {}", a.level);
+            }
+        }
+    }
+
+    #[test]
+    fn always_top_down_compat_path_skips_the_unexplored_scan() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 1)));
+        let cfg = HybridConfig {
+            policy: PolicyKind::AlwaysTopDown,
+            fused_census: false,
+            ..Default::default()
+        };
+        let run = run_hybrid_cfg(&g, &hw(2, 0), cfg, 0);
+        let p0_nv = {
+            let (pg, _) = specialized_partition(&g, &hw(2, 0), &LayoutOptions::paper());
+            pg.parts[0].num_vertices() as u64
+        };
+        for l in &run.levels {
+            // A constant decision never reads the coordinator view, so
+            // the separate-census path charges only the frontier walk —
+            // the O(V) unexplored scan is skipped.
+            assert_eq!(l.census_vertices, l.frontier_size, "level {}", l.level);
+            assert!(l.census_vertices < p0_nv + l.frontier_size);
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_matches_reference_and_explores_both_directions() {
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(9, 2)));
+        let roots: Vec<u32> =
+            (0..g.num_vertices as u32).filter(|&v| g.degree(v) > 4).take(2).collect();
+        for root in roots {
+            for cfg_hw in [hw(2, 0), hw(2, 2)] {
+                let run = run_hybrid(&g, &cfg_hw, PolicyKind::adaptive(), root);
+                assert_eq!(run.depth, reference_depths(&g, root), "root {root}");
+                validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+                assert!(
+                    run.levels.iter().any(|l| l.direction == Some(Direction::BottomUp)),
+                    "adaptive policy never left top-down"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn parallel_mode_is_bit_identical_to_sequential() {
         let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 9)));
         let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
-        for cfg_hw in [hw(2, 0), hw(3, 0), hw(2, 2)] {
-            let seq = run_hybrid_exec(
-                &g, &cfg_hw, PolicyKind::direction_optimized(), root,
-                ExecutionMode::Sequential,
-            );
-            let par = run_hybrid_exec(
-                &g, &cfg_hw, PolicyKind::direction_optimized(), root,
-                ExecutionMode::Parallel(4),
-            );
-            assert_eq!(seq.depth, par.depth, "config {}", cfg_hw.label());
-            assert_eq!(seq.parent, par.parent, "config {}", cfg_hw.label());
-            assert_eq!(seq.levels, par.levels, "config {}", cfg_hw.label());
-            assert_eq!(seq.aggregation_bytes, par.aggregation_bytes);
+        for policy in [PolicyKind::direction_optimized(), PolicyKind::adaptive()] {
+            for cfg_hw in [hw(2, 0), hw(3, 0), hw(2, 2)] {
+                let seq = run_hybrid_exec(&g, &cfg_hw, policy, root, ExecutionMode::Sequential);
+                let par = run_hybrid_exec(&g, &cfg_hw, policy, root, ExecutionMode::Parallel(4));
+                assert_eq!(seq.depth, par.depth, "config {} {policy:?}", cfg_hw.label());
+                assert_eq!(seq.parent, par.parent, "config {} {policy:?}", cfg_hw.label());
+                assert_eq!(seq.levels, par.levels, "config {} {policy:?}", cfg_hw.label());
+                assert_eq!(seq.aggregation_bytes, par.aggregation_bytes);
+            }
         }
     }
 }

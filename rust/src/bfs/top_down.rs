@@ -30,7 +30,7 @@
 
 use crate::engine::{ChunkScratch, KernelSlot};
 use crate::partition::PartitionedGraph;
-use crate::util::AtomicBitmap;
+use crate::util::{AtomicBitmap, Bitmap};
 
 /// Run one top-down kernel chunk for CPU partition `pid`.
 ///
@@ -40,6 +40,11 @@ use crate::util::AtomicBitmap;
 ///   atomic fetch-or, racing safely with every other chunk.
 /// * `queue` — this chunk's slice of the partition's materialized
 ///   frontier queue (ascending gid within and across chunks).
+/// * `border` — global bitmap of vertices with at least one
+///   cross-partition edge; rows sourced from border vertices are counted
+///   into the delta's `border_*` work so the device model can overlap the
+///   interior remainder with the boundary exchange (DESIGN.md Section 17).
+///   Classification only — traversal order and candidates are untouched.
 /// * `scratch` — the chunk's reusable dedup marks + output delta (hot
 ///   path: no allocation once warm).
 pub fn cpu_top_down(
@@ -48,6 +53,7 @@ pub fn cpu_top_down(
     slot: KernelSlot<'_>,
     global_next: &AtomicBitmap<'_>,
     queue: &[u32],
+    border: &Bitmap,
     scratch: &mut ChunkScratch,
 ) {
     let part = &pg.parts[pid];
@@ -56,6 +62,7 @@ pub fn cpu_top_down(
 
     for &v in queue {
         let li = pg.local_of(v);
+        let row_start = scratch.delta.work.edges_examined;
         for &w in part.neighbours(li) {
             scratch.delta.work.edges_examined += 1;
             let wi = w as usize;
@@ -69,6 +76,11 @@ pub fn cpu_top_down(
             } else if !scratch.seen_or_mark(wi) {
                 scratch.delta.contribs.push((w, v));
             }
+        }
+        if border.get(v as usize) {
+            scratch.delta.work.border_vertices_scanned += 1;
+            scratch.delta.work.border_edges_examined +=
+                scratch.delta.work.edges_examined - row_start;
         }
     }
 }
@@ -103,10 +115,11 @@ mod tests {
         let ranges = crate::util::pool::split_ranges(queue.len(), nchunks);
         let mut chunks: Vec<ChunkScratch> =
             ranges.iter().map(|_| ChunkScratch::new(pg.num_vertices)).collect();
+        let border = pg.border_bitmap();
         {
             let (slots, gnext) = st.split_for_superstep();
             for (r, scratch) in ranges.iter().zip(chunks.iter_mut()) {
-                cpu_top_down(pg, pid, slots[pid], &gnext, &queue[r.clone()], scratch);
+                cpu_top_down(pg, pid, slots[pid], &gnext, &queue[r.clone()], &border, scratch);
             }
         }
         let mut work = PeWork::default();
@@ -146,6 +159,9 @@ mod tests {
         assert_eq!(work.edges_examined, 2);
         assert_eq!(work.activated, 1);
         assert_eq!(crossing, 1);
+        // Vertex 0 has a cross-partition edge, so its whole row is border.
+        assert_eq!(work.border_vertices_scanned, 1);
+        assert_eq!(work.border_edges_examined, 2);
         assert_eq!(st.depth[1], 1);
         assert_eq!(st.parent[1], 0);
         assert!(st.global_next.get(1), "local activation marks the shared next frontier");
@@ -247,12 +263,13 @@ mod tests {
         // for a later level touching the same targets — stale marks would
         // silently drop the new candidates.
         let pg = two_cpu(vec![(0, 1), (1, 2)], 3, vec![0, 0, 0]);
+        let border = pg.border_bitmap();
         let mut st = BfsState::new(&pg);
         let mut scratch = ChunkScratch::new(3);
         st.set_root(0, 0);
         {
             let (slots, gnext) = st.split_for_superstep();
-            cpu_top_down(&pg, 0, slots[0], &gnext, &[0], &mut scratch);
+            cpu_top_down(&pg, 0, slots[0], &gnext, &[0], &border, &mut scratch);
         }
         assert_eq!(scratch.delta.activations, vec![(1, 0)]);
         st.apply_step_delta(0, &scratch.delta, 0);
@@ -261,7 +278,7 @@ mod tests {
         // visited. Reuse the same scratch.
         {
             let (slots, gnext) = st.split_for_superstep();
-            cpu_top_down(&pg, 0, slots[0], &gnext, &[1], &mut scratch);
+            cpu_top_down(&pg, 0, slots[0], &gnext, &[1], &border, &mut scratch);
         }
         assert_eq!(scratch.delta.activations, vec![(2, 1)]);
     }

@@ -165,11 +165,24 @@ fn print_comm_stats(total: &CommStats, traversals: usize) {
 }
 
 fn policy(args: &Args) -> Result<PolicyKind> {
+    // `--adaptive` is shorthand for `--policy adaptive` (and wins over an
+    // explicit `--policy` so scripted ablations can toggle with one flag).
+    if args.has("adaptive") {
+        return Ok(PolicyKind::adaptive());
+    }
     match args.get("policy").unwrap_or("do") {
         "do" | "direction-optimized" => Ok(PolicyKind::direction_optimized()),
+        "adaptive" => Ok(PolicyKind::adaptive()),
         "td" | "top-down" => Ok(PolicyKind::AlwaysTopDown),
         other => bail!("unknown --policy {other:?}"),
     }
+}
+
+/// Device model honouring `--no-overlap`: serialize the modeled boundary
+/// exchange after compute instead of DESIGN.md Section 17's
+/// `max(interior, border + exchange)` superstep.
+fn device_model(args: &Args) -> DeviceModel {
+    DeviceModel { overlap: !args.has("no-overlap"), ..Default::default() }
 }
 
 /// Build a superstep trace recorder when `--trace`/`--trace-chrome` ask
@@ -353,7 +366,7 @@ pub fn cmd_bfs(args: &Args) -> Result<()> {
         None
     };
 
-    let device = DeviceModel::default();
+    let device = device_model(args);
     let energy = EnergyModel::default();
     let mut runner = HybridRunner::new(&pg, cfg, accel)?;
     let trace = trace_recorder(args);
@@ -997,7 +1010,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let algo = args.get("algo").unwrap_or("bfs");
     let options = algo_options(args, algo)?;
     let validate = args.has("validate");
-    let device = DeviceModel::default();
+    let device = device_model(args);
     println!(
         "serving graph={} V={} E={} config={} sched={:?} batch={} threads={} queue_depth={} \
          cache_cap={} deadline_ms={}",
@@ -1133,7 +1146,7 @@ pub fn cmd_baseline(args: &Args) -> Result<()> {
     let roots_n = args.get_parse("roots", 16usize)?;
     let roots =
         metrics::sample_roots(g.num_vertices, |v| g.degree(v), roots_n, args.get_parse("seed", 42)?);
-    let device = DeviceModel::default();
+    let device = device_model(args);
     let mut teps_model = Vec::new();
     for &root in &roots {
         let run = baseline_bfs(&g, root, kind);
@@ -1159,7 +1172,11 @@ pub fn usage() -> &'static str {
      COMMANDS:\n\
        bfs       run a hybrid BFS campaign\n\
                  --scale N | --graph FILE | --class twitter-sim|wiki-sim|lj-sim\n\
-                 --config 2S2G --partition spec|random --policy do|td\n\
+                 --config 2S2G --partition spec|random --policy do|td|adaptive\n\
+                 --adaptive (per-level alpha/beta tuned to measured frontier\n\
+                 growth; shorthand for --policy adaptive)\n\
+                 --no-overlap (serialize the modeled boundary exchange after\n\
+                 compute instead of overlapping it with interior work)\n\
                  --threads N (worker threads for graph generation, CSR build,\n\
                  partitioning, AND the partition kernels — each kernel fans out\n\
                  into up to N weight-balanced chunks; bit-identical to N=1)\n\
@@ -1221,6 +1238,7 @@ pub fn usage() -> &'static str {
                  --validate (per-query result lines replace --verbose/--strict)\n\
        baseline  single-address-space reference BFS\n\
                  --policy do|td --sockets N --naive --roots K --validate\n\
+                 --no-overlap (as in `bfs`)\n\
        generate  write a workload graph\n\
                  --scale N --edge-factor F --seed S | --class ... ; --out FILE[.bin]\n\
                  --threads N (parallel edge generation; same bytes as N=1)\n\

@@ -36,6 +36,14 @@ pub const SELL_WIDTHS: &[usize] = &[4, 16, 32];
 /// wider neighbour (each slice costs a kernel launch + PCIe round trip).
 pub const SELL_MIN_FRAC: f64 = 0.05;
 
+/// Modeled duration of one comm/compute-overlapped superstep (DESIGN.md
+/// Section 17): the border half of every kernel runs first and its outbox
+/// exchange proceeds while the interior half computes, so the level takes
+/// `max(interior, border + exchange)` instead of `busy + exchange`.
+pub fn overlapped_step_secs(interior: f64, border: f64, exchange: f64) -> f64 {
+    interior.max(border + exchange)
+}
+
 /// Result of one accelerator bottom-up level (matches
 /// `python/compile/model.py::bottom_up_level`, assembled across slices).
 #[derive(Clone, Debug)]

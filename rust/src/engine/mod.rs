@@ -46,7 +46,9 @@ pub use cancel::CancelToken;
 pub use comm::{CommMode, CommStats};
 pub use frontier::{Frontier, FrontierPair, GlobalFrontier};
 pub use parallel::{run_steps, ExecutionMode};
-pub use state::{BfsState, KernelSlot};
+pub use state::{
+    decode_unvisited_degree, encode_unvisited_degree, BfsState, KernelSlot, PARENT_DEG_BASE,
+};
 
 /// Traversal direction of a BFS level (paper Section 2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +95,13 @@ pub struct PeWork {
     /// Number of PCIe round-trips those bytes took (latency accounting —
     /// a SELL-sliced partition makes one trip per slice).
     pub pcie_transfers: u64,
+    /// The border-touching half of `edges_examined`: edges walked from
+    /// vertices that have at least one cross-partition edge. This half
+    /// must finish before the superstep's boundary exchange; the interior
+    /// remainder overlaps with it (DESIGN.md Section 17).
+    pub border_edges_examined: u64,
+    /// The border-touching half of `vertices_scanned` (same split).
+    pub border_vertices_scanned: u64,
 }
 
 impl PeWork {
@@ -102,6 +111,8 @@ impl PeWork {
         self.activated += other.activated;
         self.pcie_bytes += other.pcie_bytes;
         self.pcie_transfers += other.pcie_transfers;
+        self.border_edges_examined += other.border_edges_examined;
+        self.border_vertices_scanned += other.border_vertices_scanned;
     }
 }
 
@@ -197,6 +208,12 @@ pub struct LevelStats {
     /// Sum of degrees of frontier vertices (Fig 1's right axis is
     /// `frontier_degree_sum / frontier_size`).
     pub frontier_degree_sum: u64,
+    /// Vertices walked by *separate* (unfused) per-level bookkeeping:
+    /// the frontier census scan plus the coordinator's unexplored-edge
+    /// scan. Zero on the fused path — the whole point of DESIGN.md
+    /// Section 17 — and priced by the device model as serial stream
+    /// traffic when present.
+    pub census_vertices: u64,
     /// Communication performed this superstep.
     pub comm: CommStats,
 }

@@ -17,6 +17,28 @@ use crate::util::{AtomicBitmap, Bitmap};
 pub const PARENT_UNSET: i64 = -1;
 /// `parent` sentinel: reached via a remote push; resolved at aggregation.
 pub const PARENT_REMOTE: i64 = -2;
+/// Degree-encoded unvisited parents (GAP-style, DESIGN.md Section 17):
+/// while a vertex is unvisited, its `parent` slot stores
+/// `PARENT_DEG_BASE - out_degree`, so claiming it hands the claimer the
+/// vertex's degree for free and the per-level unexplored-edge census
+/// (`m_u`) becomes a side effect of activation instead of an O(V) scan.
+/// The base offsets past both sentinels above (a degree-0 vertex encodes
+/// as -3, never colliding with -1/-2); any value `<= PARENT_DEG_BASE` is
+/// an encoded degree.
+pub const PARENT_DEG_BASE: i64 = -3;
+
+/// Encode an unvisited vertex's out-degree into its `parent` slot.
+#[inline]
+pub fn encode_unvisited_degree(deg: u64) -> i64 {
+    PARENT_DEG_BASE - deg as i64
+}
+
+/// Recover the out-degree from a degree-encoded `parent` slot.
+#[inline]
+pub fn decode_unvisited_degree(p: i64) -> u64 {
+    debug_assert!(p <= PARENT_DEG_BASE, "parent {p} is not degree-encoded");
+    (PARENT_DEG_BASE - p) as u64
+}
 
 /// One partition's kernel-phase view of its own bitmaps (see
 /// [`BfsState::split_for_superstep`]). The slot is `Copy`: every *chunk*
@@ -46,8 +68,30 @@ pub struct BfsState {
     pub num_vertices: usize,
     /// Global depth; -1 = unreached. Written only by the owner partition.
     pub depth: Vec<i32>,
-    /// Global parent gid (or sentinel). Written only by the owner.
+    /// Global parent gid (or sentinel). Written only by the owner. While
+    /// a vertex is unvisited this holds its degree-encoded form
+    /// ([`PARENT_DEG_BASE`]` - degree`); activation decodes the degree
+    /// into the fused census counters and overwrites with the real
+    /// parent (or [`PARENT_REMOTE`]).
     pub parent: Vec<i64>,
+    /// Pristine degree-encoded parent image, baked once per shape; both
+    /// reset paths restore from here.
+    parent_init: Vec<i64>,
+    /// Per-partition total out-degree of owned vertices (the `m_u`
+    /// starting point restored on every reset).
+    part_degree_total: Vec<u64>,
+    /// Fused census (DESIGN.md Section 17), all updated at activation
+    /// commit points on the coordinating thread in deterministic merge
+    /// order. `unexplored[p]` is the out-degree sum of partition `p`'s
+    /// still-unvisited vertices (Beamer's `m_u`, per partition).
+    pub unexplored: Vec<u64>,
+    /// Current-frontier vertex count per partition.
+    pub front_size: Vec<u64>,
+    /// Current-frontier out-degree sum per partition (Beamer's `m_f`).
+    pub front_deg: Vec<u64>,
+    /// Next-frontier counters, promoted by [`Self::advance_frontiers`].
+    next_size: Vec<u64>,
+    next_deg: Vec<u64>,
     /// Per-partition visited bitmap (global-space; only owned bits set).
     pub visited: Vec<Bitmap>,
     /// Per-partition current/next frontier. `current` is adaptive
@@ -92,10 +136,30 @@ impl BfsState {
     pub fn new(pg: &PartitionedGraph) -> Self {
         let v = pg.num_vertices;
         let np = pg.parts.len();
+        // Bake the degree-encoded parent image and the per-partition
+        // degree totals once: every vertex starts as
+        // `PARENT_DEG_BASE - degree`, and `unexplored` starts at the
+        // partition's full degree sum.
+        let mut parent_init = vec![PARENT_DEG_BASE; v];
+        let mut part_degree_total = vec![0u64; np];
+        for (pid, part) in pg.parts.iter().enumerate() {
+            for li in 0..part.num_vertices() {
+                let deg = part.degree(li) as u64;
+                parent_init[part.gids[li] as usize] = encode_unvisited_degree(deg);
+                part_degree_total[pid] += deg;
+            }
+        }
         Self {
             num_vertices: v,
             depth: vec![-1; v],
-            parent: vec![PARENT_UNSET; v],
+            parent: parent_init.clone(),
+            parent_init,
+            unexplored: part_degree_total.clone(),
+            part_degree_total,
+            front_size: vec![0; np],
+            front_deg: vec![0; np],
+            next_size: vec![0; np],
+            next_deg: vec![0; np],
             visited: (0..np).map(|_| Bitmap::new(v)).collect(),
             frontiers: (0..np).map(|_| FrontierPair::new(v)).collect(),
             global_frontier: GlobalFrontier::new(v),
@@ -149,7 +213,7 @@ impl BfsState {
             for &t in &touched {
                 let t = t as usize;
                 self.depth[t] = -1;
-                self.parent[t] = PARENT_UNSET;
+                self.parent[t] = self.parent_init[t];
                 // Only the owner's bit is set, but ownership lives in the
                 // partitioning, not here — clearing the (mostly zero) bit
                 // in every partition bitmap is O(np) and branch-free.
@@ -160,7 +224,7 @@ impl BfsState {
             self.touched = touched;
         } else {
             self.depth.fill(-1);
-            self.parent.fill(PARENT_UNSET);
+            self.parent.copy_from_slice(&self.parent_init);
             for b in self.visited.iter_mut() {
                 b.clear();
             }
@@ -172,6 +236,14 @@ impl BfsState {
         }
         self.touched.clear();
         self.recyclable = false;
+        // Fused census back to pristine: no frontier, full unexplored
+        // degree mass. Unconditional — a cancelled run leaves counters
+        // mid-flight on either reset path.
+        self.unexplored.copy_from_slice(&self.part_degree_total);
+        self.front_size.fill(0);
+        self.front_deg.fill(0);
+        self.next_size.fill(0);
+        self.next_deg.fill(0);
         // Contribution arrays are epoch-tagged: bumping the epoch
         // invalidates every stale entry in O(1). On wrap-around, do the
         // full clear once per 2^32 runs.
@@ -215,6 +287,31 @@ impl BfsState {
         }
         self.global_frontier.bits.clear();
         self.global_next.clear();
+        // Keep the fused census consistent with the (now empty)
+        // frontiers; `unexplored` stays as-is until the next reset.
+        self.front_size.fill(0);
+        self.front_deg.fill(0);
+        self.next_size.fill(0);
+        self.next_deg.fill(0);
+    }
+
+    /// Current-frontier totals across all partitions: `(vertices,
+    /// out-degree sum)`. The O(1) replacement for the per-level census
+    /// scan — maintained at activation commit points (DESIGN.md
+    /// Section 17).
+    pub fn frontier_totals(&self) -> (u64, u64) {
+        (self.front_size.iter().sum(), self.front_deg.iter().sum())
+    }
+
+    /// Out-degree sum of every visited vertex (all partitions) — the
+    /// complement of `unexplored`, and exactly the reached-edge-endpoint
+    /// census a full O(V) pass would recompute.
+    pub fn explored_endpoints(&self) -> u64 {
+        self.part_degree_total
+            .iter()
+            .zip(&self.unexplored)
+            .map(|(total, un)| total - un)
+            .sum()
     }
 
     /// How many distinct vertices this run has activated so far (the
@@ -230,6 +327,12 @@ impl BfsState {
 
     /// Seed the root vertex (owned by `pid`).
     pub fn set_root(&mut self, pid: usize, root: u32) {
+        // The root lands directly in the *current* frontier: decode its
+        // degree out of the encoded parent slot into the level-0 census.
+        let deg = decode_unvisited_degree(self.parent[root as usize]);
+        self.unexplored[pid] -= deg;
+        self.front_size[pid] += 1;
+        self.front_deg[pid] += deg;
         self.depth[root as usize] = 0;
         self.parent[root as usize] = root as i64;
         self.touched.push(root);
@@ -248,6 +351,10 @@ impl BfsState {
     /// activation per vertex per run — the touched census relies on it).
     #[inline]
     pub fn activate_local(&mut self, pid: usize, v: u32, parent_gid: u32, level: u32) {
+        let deg = decode_unvisited_degree(self.parent[v as usize]);
+        self.unexplored[pid] -= deg;
+        self.next_size[pid] += 1;
+        self.next_deg[pid] += deg;
         self.visited[pid].set(v as usize);
         self.depth[v as usize] = level as i32;
         self.parent[v as usize] = parent_gid as i64;
@@ -266,6 +373,10 @@ impl BfsState {
         if self.visited[pid].get(v) {
             return false;
         }
+        let deg = decode_unvisited_degree(self.parent[v]);
+        self.unexplored[pid] -= deg;
+        self.next_size[pid] += 1;
+        self.next_deg[pid] += deg;
         self.visited[pid].set(v);
         self.depth[v] = level as i32;
         self.parent[v] = PARENT_REMOTE;
@@ -315,6 +426,11 @@ impl BfsState {
         }
         std::mem::swap(&mut self.global_frontier.bits, &mut self.global_next);
         self.global_next.clear();
+        // Promote the fused next-frontier census alongside the bitmaps.
+        self.front_size.copy_from_slice(&self.next_size);
+        self.front_deg.copy_from_slice(&self.next_deg);
+        self.next_size.fill(0);
+        self.next_deg.fill(0);
     }
 
     /// Split into per-partition kernel slots plus the shared atomic
@@ -352,6 +468,14 @@ impl BfsState {
         let vis = &mut self.visited[pid];
         for &(v, parent_gid) in &delta.activations {
             if !vis.test_and_set(v as usize) {
+                // Fused census: the winning claim decodes the vertex's
+                // degree out of its encoded parent slot. Applied in the
+                // same (pid, chunk) merge order as the claim itself, so
+                // the counters are thread-count invariant.
+                let deg = decode_unvisited_degree(self.parent[v as usize]);
+                self.unexplored[pid] -= deg;
+                self.next_size[pid] += 1;
+                self.next_deg[pid] += deg;
                 self.depth[v as usize] = (level + 1) as i32;
                 self.parent[v as usize] = parent_gid as i64;
                 self.touched.push(v);
@@ -494,8 +618,10 @@ mod tests {
         let bytes = st.reset();
         assert!(bytes > 0);
         assert!(st.depth.iter().all(|&d| d == -1));
-        assert!(st.parent.iter().all(|&p| p == PARENT_UNSET));
+        assert_eq!(st.parent, BfsState::new(&pg).parent, "degree-encoded init restored");
         assert!(st.visited.iter().all(|b| !b.any()));
+        assert_eq!(st.unexplored, st.part_degree_total, "full m_u mass restored");
+        assert_eq!(st.frontier_totals(), (0, 0));
         assert_eq!(st.contrib_entries, vec![0, 0]);
         // Epoch-tagged contributions are stale after reset: recording anew
         // must succeed, and aggregation must not see the old entry.
@@ -600,8 +726,10 @@ mod tests {
         let bytes_sparse = st.reset();
         assert_eq!(bytes_full, bytes_sparse, "modeled init bytes are recycle-invariant");
         assert!(st.depth.iter().all(|&d| d == -1));
-        assert!(st.parent.iter().all(|&p| p == PARENT_UNSET));
+        assert_eq!(st.parent, BfsState::new(&pg).parent, "degree-encoded init restored");
         assert!(st.visited.iter().all(|b| !b.any()));
+        assert_eq!(st.unexplored, st.part_degree_total);
+        assert_eq!(st.frontier_totals(), (0, 0));
         assert!(st.frontiers.iter().all(|f| !f.current.any() && !f.next.any()));
         assert!(!st.global_frontier.bits.any() && !st.global_next.any());
         assert_eq!(st.touched_len(), 0);
@@ -641,5 +769,28 @@ mod tests {
         st.merge_pushed(1, &incoming, 4);
         st.aggregate_parents().unwrap();
         assert_eq!(st.parent[5], 4, "fresh contribution wins");
+    }
+
+    #[test]
+    fn fused_census_tracks_every_activation_path() {
+        let pg = pg();
+        let mut st = BfsState::new(&pg);
+        // pg(): 6 vertices of degree 1 each, owned 3/3 by two partitions.
+        assert_eq!(st.part_degree_total, vec![3, 3]);
+        assert_eq!(st.unexplored, vec![3, 3]);
+        assert!(st.parent.iter().all(|&p| p == encode_unvisited_degree(1)));
+        st.set_root(0, 0);
+        assert_eq!(st.frontier_totals(), (1, 1), "root lands in the level-0 census");
+        assert_eq!(st.unexplored[0], 2);
+        st.activate_local(0, 1, 0, 1);
+        let mut incoming = Bitmap::new(6);
+        incoming.set(4);
+        st.merge_pushed(1, &incoming, 1);
+        let delta = StepDelta { activations: vec![(2, 5)], ..Default::default() };
+        st.apply_step_delta(0, &delta, 0);
+        st.advance_frontiers();
+        assert_eq!(st.frontier_totals(), (3, 3), "local + pushed + delta claims promoted");
+        assert_eq!(st.unexplored, vec![0, 2]);
+        assert_eq!(st.explored_endpoints(), 4, "complement of unexplored == visited degrees");
     }
 }

@@ -86,7 +86,11 @@ pub struct DecisionTrace {
     pub frontier_out_edges: u64,
     pub unexplored_edges: u64,
     pub alpha: f64,
-    pub beta: u32,
+    /// Beta in effect: the fixed bottom-up step budget for the fixed
+    /// policies, the per-level tuned Beamer beta for the adaptive policy.
+    /// `f64` Display keeps integral values bare (`3`, not `3.0`), so
+    /// fixed-policy records are byte-identical to the pre-adaptive form.
+    pub beta: f64,
     /// Bottom-up steps taken so far (compared against beta).
     pub bu_taken: u32,
     pub switched_back: bool,
@@ -395,7 +399,7 @@ mod tests {
                 frontier_out_edges: 9,
                 unexplored_edges: 100,
                 alpha: 14.0,
-                beta: 3,
+                beta: 3.0,
                 bu_taken: 0,
                 switched_back: false,
                 next_direction: "top_down",

@@ -294,6 +294,28 @@ impl PartitionedGraph {
         }
     }
 
+    /// Global-id membership bitmap of every *border* vertex: a vertex
+    /// with at least one edge into another partition (the union of all
+    /// `border_out` tables). The kernels use it to split their work into
+    /// a border-touching half — which must complete before the
+    /// superstep's boundary exchange — and an interior half that
+    /// overlaps with it (DESIGN.md Section 17). Built once per
+    /// partitioning; O(1) probes on the kernel hot path.
+    pub fn border_bitmap(&self) -> crate::util::Bitmap {
+        let mut bits = crate::util::Bitmap::new(self.num_vertices);
+        for (pid, part) in self.parts.iter().enumerate() {
+            for (q, table) in part.border_out.iter().enumerate() {
+                if q == pid {
+                    continue;
+                }
+                for &gid in table.iter() {
+                    bits.set(gid as usize);
+                }
+            }
+        }
+        bits
+    }
+
     /// Structural invariants (tests + post-construction checks).
     pub fn validate(&self, g: &Csr) -> Result<(), String> {
         if self.owner.len() != g.num_vertices || self.local_index.len() != g.num_vertices {

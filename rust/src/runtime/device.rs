@@ -10,6 +10,7 @@
 //! bench fits them to its target.
 
 use crate::bfs::{BaselineRun, BfsRun};
+use crate::engine::accel::overlapped_step_secs;
 use crate::engine::{Direction, PeWork};
 use crate::partition::{PartitionedGraph, ProcKind};
 
@@ -45,6 +46,13 @@ pub struct DeviceModel {
     pub qpi_lat: f64,
     /// BSP barrier cost per superstep (s).
     pub sync_lat: f64,
+    /// Comm/compute overlap (DESIGN.md Section 17): each kernel's
+    /// border-touching half must finish before the boundary exchange, but
+    /// the interior remainder runs concurrently with it — modeled level
+    /// step = `max(interior compute, border compute + exchange)` instead
+    /// of `busy + exchange`. `false` (`--no-overlap`) restores the
+    /// serialized pre-overlap formula.
+    pub overlap: bool,
 }
 
 impl Default for DeviceModel {
@@ -69,6 +77,7 @@ impl Default for DeviceModel {
             qpi_bw: 16.0e9,
             qpi_lat: 1e-6,
             sync_lat: 5e-6,
+            overlap: true,
         }
     }
 }
@@ -115,9 +124,20 @@ pub struct LevelTiming {
     pub direction: Option<Direction>,
     /// Busy seconds per partition (same index as `pg.parts`).
     pub pe_time: Vec<f64>,
+    /// The border-touching share of each partition's busy seconds — the
+    /// half that must complete before the boundary exchange; the
+    /// remainder (`pe_time - pe_border_time`) is interior compute that
+    /// overlaps with the exchange (DESIGN.md Section 17). Always
+    /// `<= pe_time` elementwise.
+    pub pe_border_time: Vec<f64>,
     /// Communication seconds (push or pull + PCIe kernel transfers).
     pub comm_time: f64,
-    /// max(pe) + comm + sync.
+    /// Seconds spent on *separate* per-level bookkeeping scans
+    /// (`LevelStats::census_vertices`, serial stream traffic). Zero on
+    /// the fused path.
+    pub census_time: f64,
+    /// With overlap: `max(interior, border + comm) + census + sync`;
+    /// without: `max(pe) + comm + census + sync`.
     pub total: f64,
 }
 
@@ -158,7 +178,16 @@ impl DeviceModel {
         for ls in &run.levels {
             let dir = ls.direction.unwrap_or(Direction::TopDown);
             let mut pe_time = vec![0.0f64; pg.parts.len()];
+            let mut pe_border_time = vec![0.0f64; pg.parts.len()];
             for (pid, work) in ls.pe_work.iter().enumerate() {
+                // The border-touching half of the kernel, priced through
+                // the same byte model as the whole (its counters are a
+                // subset, so border time <= pe time by construction).
+                let border_work = PeWork {
+                    edges_examined: work.border_edges_examined,
+                    vertices_scanned: work.border_vertices_scanned,
+                    ..Default::default()
+                };
                 match pg.parts[pid].kind {
                     ProcKind::Cpu { .. } => {
                         let mut eff = match dir {
@@ -168,25 +197,34 @@ impl DeviceModel {
                         if naive_layout {
                             eff *= self.cpu_naive_penalty;
                         }
-                        pe_time[pid] = cpu_bytes(work, dir) / (self.cpu_socket_bw * eff);
+                        let bw = self.cpu_socket_bw * eff;
+                        pe_time[pid] = cpu_bytes(work, dir) / bw;
+                        pe_border_time[pid] = cpu_bytes(&border_work, dir) / bw;
                     }
                     ProcKind::Gpu { .. } => {
                         if dir == Direction::TopDown && work.pcie_transfers == 0 {
                             // Host-walked tail frontier (no device call):
                             // priced at the host's top-down rate.
-                            pe_time[pid] =
-                                cpu_bytes(work, dir) / (self.cpu_socket_bw * self.cpu_eff_top_down);
+                            let bw = self.cpu_socket_bw * self.cpu_eff_top_down;
+                            pe_time[pid] = cpu_bytes(work, dir) / bw;
+                            pe_border_time[pid] = cpu_bytes(&border_work, dir) / bw;
                         } else {
                             // Kernel time + this device's own PCIe
                             // transfers (each GPU has its own x16 link;
                             // devices overlap with each other). One upload
                             // + one download per level; per-slice kernel
                             // launches ride the stream.
-                            let mut t = gpu_bytes(work, dir) / (self.gpu_bw * self.gpu_eff);
-                            t += work.pcie_bytes as f64 / self.pcie_bw
+                            let pcie = work.pcie_bytes as f64 / self.pcie_bw
                                 + 2.0 * self.pcie_lat
                                 + work.pcie_transfers as f64 * self.gpu_launch_lat;
-                            pe_time[pid] = t;
+                            pe_time[pid] =
+                                gpu_bytes(work, dir) / (self.gpu_bw * self.gpu_eff) + pcie;
+                            // The device's own PCIe round trip gates the
+                            // exchange too — results live device-side
+                            // until downloaded — so it counts as border.
+                            pe_border_time[pid] = gpu_bytes(&border_work, dir)
+                                / (self.gpu_bw * self.gpu_eff)
+                                + pcie;
                         }
                     }
                 }
@@ -194,23 +232,41 @@ impl DeviceModel {
             // BSP semantics: PEs of one superstep are busy concurrently,
             // so the level's compute cost is the max over PEs (the
             // slowest PE gates the barrier) — summing would model a
-            // serial machine. Frontier exchange (push or pull) is then
-            // serialized after compute, split by link class (hub-spoke:
-            // GPUs never talk directly). PCIe traffic spreads across the
-            // per-GPU x16 links.
+            // serial machine. Frontier exchange (push or pull) is split
+            // by link class (hub-spoke: GPUs never talk directly), PCIe
+            // traffic spreading across the per-GPU x16 links. With
+            // overlap on, only each kernel's border half must precede the
+            // exchange; the interior maxima run concurrently with it
+            // (DESIGN.md Section 17). Separate-bookkeeping scans (zero
+            // when fused) are serial stream traffic on the coordinator.
             let gpus = pg.parts.iter().filter(|p| p.kind.is_gpu()).count().max(1) as f64;
             let c = &ls.comm;
             let comm_time = (c.push_host.bytes + c.pull_host.bytes) as f64 / self.qpi_bw
                 + (c.push_host.msgs + c.pull_host.msgs) as f64 * self.qpi_lat
                 + (c.push_pcie.bytes + c.pull_pcie.bytes) as f64 / (self.pcie_bw * gpus)
                 + ((c.push_pcie.msgs + c.pull_pcie.msgs) as f64 / gpus).ceil() * self.pcie_lat;
+            let census_time = ls.census_vertices as f64 * 8.0
+                / (self.cpu_socket_bw * self.cpu_eff_stream);
             let busy = pe_time.iter().cloned().fold(0.0, f64::max);
+            let step = if self.overlap {
+                let interior = pe_time
+                    .iter()
+                    .zip(&pe_border_time)
+                    .map(|(t, b)| t - b)
+                    .fold(0.0, f64::max);
+                let border = pe_border_time.iter().cloned().fold(0.0, f64::max);
+                overlapped_step_secs(interior, border, comm_time)
+            } else {
+                busy + comm_time
+            };
             levels.push(LevelTiming {
                 level: ls.level,
                 direction: ls.direction,
                 pe_time,
+                pe_border_time,
                 comm_time,
-                total: busy + comm_time + self.sync_lat,
+                census_time,
+                total: step + census_time + self.sync_lat,
             });
         }
 
@@ -252,9 +308,7 @@ impl DeviceModel {
             let work = PeWork {
                 edges_examined: l.edges_examined,
                 vertices_scanned: l.vertices_scanned,
-                activated: 0,
-                pcie_bytes: 0,
-                pcie_transfers: 0,
+                ..Default::default()
             };
             let mut eff = match l.direction {
                 Direction::TopDown => self.cpu_eff_top_down,
@@ -268,7 +322,9 @@ impl DeviceModel {
                 level: l.level,
                 direction: Some(l.direction),
                 pe_time: vec![t],
+                pe_border_time: vec![0.0],
                 comm_time: 0.0,
+                census_time: 0.0,
                 total: t,
             });
         }
@@ -317,33 +373,130 @@ mod tests {
             t.init + t.levels.iter().map(|l| l.total).sum::<f64>() + t.aggregation;
         assert!((sum - t.total).abs() < 1e-12);
         for l in &t.levels {
-            assert!(l.total >= l.pe_time.iter().cloned().fold(0.0, f64::max));
+            // Interior compute never hides behind the exchange: the level
+            // lower-bounds at the slowest PE's interior half.
+            let interior = l
+                .pe_time
+                .iter()
+                .zip(&l.pe_border_time)
+                .map(|(t, b)| t - b)
+                .fold(0.0, f64::max);
+            assert!(l.total >= interior);
+            for (t, b) in l.pe_time.iter().zip(&l.pe_border_time) {
+                assert!(*b >= 0.0 && b <= t, "border half bounded by the whole kernel");
+            }
         }
     }
 
     #[test]
     fn level_busy_time_is_max_over_pes_not_sum() {
-        // Concurrency contract: each level's total is max(pe) + comm +
-        // sync; with >= 2 busy PEs a sum would exceed that bound.
+        // Concurrency contract, overlap off: each level's total is
+        // max(pe) + comm + census + sync; with >= 2 busy PEs a sum would
+        // exceed that bound.
         let (run, pg) = hybrid_run(2, 2, 12);
-        let m = DeviceModel::default();
+        let m = DeviceModel { overlap: false, ..Default::default() };
         let t = m.attribute(&run, &pg, false);
         let mut saw_multi_pe_level = false;
         for l in &t.levels {
             let max = l.pe_time.iter().cloned().fold(0.0, f64::max);
             let sum: f64 = l.pe_time.iter().sum();
             assert!(
-                (l.total - (max + l.comm_time + m.sync_lat)).abs() < 1e-12,
-                "level {}: total must be max-over-PEs + comm + sync",
+                (l.total - (max + l.comm_time + l.census_time + m.sync_lat)).abs() < 1e-12,
+                "level {}: total must be max-over-PEs + comm + census + sync",
                 l.level
             );
             if l.pe_time.iter().filter(|&&x| x > 0.0).count() >= 2 {
                 saw_multi_pe_level = true;
                 assert!(sum > max, "sum strictly exceeds max when 2+ PEs are busy");
-                assert!(l.total < sum + l.comm_time + m.sync_lat);
+                assert!(l.total < sum + l.comm_time + l.census_time + m.sync_lat);
             }
         }
         assert!(saw_multi_pe_level, "test graph must exercise multiple busy PEs");
+    }
+
+    #[test]
+    fn overlap_formula_holds_on_real_runs_and_never_loses() {
+        // DESIGN.md Section 17: with overlap on, the level step is
+        // max(interior, border + exchange) — always pinned, and never
+        // slower than the serialized busy + exchange form.
+        let (run, pg) = hybrid_run(2, 2, 12);
+        let on = DeviceModel::default();
+        let off = DeviceModel { overlap: false, ..Default::default() };
+        let t_on = on.attribute(&run, &pg, false);
+        let t_off = off.attribute(&run, &pg, false);
+        assert_eq!(t_on.levels.len(), t_off.levels.len());
+        for (a, b) in t_on.levels.iter().zip(&t_off.levels) {
+            let interior = a
+                .pe_time
+                .iter()
+                .zip(&a.pe_border_time)
+                .map(|(t, b)| t - b)
+                .fold(0.0, f64::max);
+            let border = a.pe_border_time.iter().cloned().fold(0.0, f64::max);
+            let step = interior.max(border + a.comm_time);
+            assert!(
+                (a.total - (step + a.census_time + on.sync_lat)).abs() < 1e-12,
+                "level {}: overlap total must be max(interior, border + comm) + census + sync",
+                a.level
+            );
+            assert!(a.total <= b.total + 1e-15, "level {}: overlap never slower", a.level);
+        }
+        assert!(t_on.total <= t_off.total);
+    }
+
+    #[test]
+    fn overlap_hides_exchange_behind_interior_compute() {
+        // Synthetic level with a large interior half and real exchange:
+        // the overlapped step must come in strictly under the serialized
+        // one, by exactly min(interior - border - comm gap) — here the
+        // exchange fully hides, so the gain is border + comm.
+        use crate::engine::comm::LinkTraffic;
+        use crate::engine::LevelStats;
+        let g = build_csr(&kronecker(&GeneratorConfig::graph500(6, 1)));
+        let hw =
+            HardwareConfig { cpu_sockets: 2, gpus: 0, gpu_mem_bytes: 0, gpu_max_degree: 32 };
+        let (pg, _) = specialized_partition(&g, &hw, &LayoutOptions::paper());
+        let mut ls = LevelStats {
+            level: 0,
+            direction: Some(Direction::TopDown),
+            pe_work: vec![PeWork::default(); pg.parts.len()],
+            frontier_size: 1,
+            frontier_degree_sum: 1,
+            ..Default::default()
+        };
+        ls.pe_work[0] = PeWork {
+            edges_examined: 1_000_000,
+            vertices_scanned: 10_000,
+            border_edges_examined: 50_000,
+            border_vertices_scanned: 500,
+            ..Default::default()
+        };
+        ls.comm.push_host = LinkTraffic { bytes: 100_000, msgs: 2 };
+        let run = crate::bfs::BfsRun {
+            root: 0,
+            depth: vec![0],
+            parent: vec![0],
+            levels: vec![ls],
+            init_bytes: 0,
+            aggregation_bytes: 0,
+            reached_vertices: 1,
+            reached_edge_endpoints: 0,
+            wall: std::time::Duration::ZERO,
+        };
+        let on = DeviceModel::default();
+        let off = DeviceModel { overlap: false, ..Default::default() };
+        let l_on = &on.attribute(&run, &pg, false).levels[0];
+        let l_off = &off.attribute(&run, &pg, false).levels[0];
+        let border = l_on.pe_border_time[0];
+        let interior = l_on.pe_time[0] - border;
+        assert!(border > 0.0 && interior > border + l_on.comm_time);
+        // Exchange fully hidden: step == interior.
+        assert!((l_on.total - (interior + on.sync_lat)).abs() < 1e-12);
+        // Serialized form pays busy + comm.
+        assert!(
+            (l_off.total - (l_on.pe_time[0] + l_on.comm_time + off.sync_lat)).abs() < 1e-12
+        );
+        assert!(l_on.total < l_off.total);
     }
 
     #[test]

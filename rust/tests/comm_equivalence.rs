@@ -164,6 +164,7 @@ fn dense_exchange_reference(
         policy.advance(CoordinatorView {
             frontier_out_edges: frontier_out,
             unexplored_edges: unexplored,
+            ..Default::default()
         });
         level += 1;
     }

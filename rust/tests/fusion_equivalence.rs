@@ -1,0 +1,197 @@
+//! Fused-bookkeeping equivalence (DESIGN.md Section 17).
+//!
+//! The tentpole claim of the hot-path fusion: maintaining the frontier
+//! census and the coordinator's unexplored-edge count *inside* the
+//! activation commit points changes no output bit — not the traversal,
+//! not the per-level schedule, not at any thread count — while deleting
+//! the separate O(frontier) + O(V) bookkeeping scans. Three contracts:
+//!
+//! * **Bit-identity** — fused vs separate (`fused_census: false`) runs
+//!   agree on parents, depths, and the full per-level schedule (the only
+//!   permitted difference is `census_vertices`, the priced cost of the
+//!   separate scans themselves) on skewed and uniform graphs, CPU-only
+//!   and hybrid, across the worker-thread ladder.
+//! * **Exact accounting** — the `m_u`/`m_f` values the direction policy
+//!   consumes (recorded per level in the decision trace) equal a from-
+//!   scratch recount over the final depth array at every level.
+//! * **Adaptive correctness** — the adaptive policy built on those fused
+//!   counters still computes a correct BFS.
+
+use std::sync::Arc;
+
+use totem_do::bfs::validate::validate_graph500;
+use totem_do::bfs::{BfsRun, HybridConfig, HybridRunner, PolicyKind};
+use totem_do::engine::{ExecutionMode, SimAccelerator};
+use totem_do::graph::generator::{erdos_renyi, kronecker, GeneratorConfig};
+use totem_do::graph::{build_csr, Csr};
+use totem_do::obs::{Clock, TraceRecorder};
+use totem_do::partition::{specialized_partition, HardwareConfig, LayoutOptions, PartitionedGraph};
+
+fn hw(s: usize, g: usize) -> HardwareConfig {
+    HardwareConfig { cpu_sockets: s, gpus: g, gpu_mem_bytes: 1 << 24, gpu_max_degree: 32 }
+}
+
+fn thread_ladder() -> Vec<usize> {
+    let mut ts = vec![1, 2, 4];
+    if let Some(t) = std::env::var("TOTEM_DO_TEST_THREADS").ok().and_then(|s| s.parse().ok()) {
+        if !ts.contains(&t) {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+fn run_with(
+    pg: &PartitionedGraph,
+    threads: usize,
+    root: u32,
+    policy: PolicyKind,
+    fused: bool,
+    trace: Option<Arc<TraceRecorder>>,
+) -> BfsRun {
+    let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
+    let mut sim = SimAccelerator::new(pg.parts.len(), pg.num_vertices);
+    let accel = if has_gpu { Some(&mut sim) } else { None };
+    let cfg = HybridConfig {
+        policy,
+        exec: ExecutionMode::from_threads(threads),
+        fused_census: fused,
+        ..Default::default()
+    };
+    let mut runner = HybridRunner::new(pg, cfg, accel).unwrap();
+    runner.set_trace(trace);
+    runner.run(root).unwrap()
+}
+
+fn reference_depths(g: &Csr, root: u32) -> Vec<i32> {
+    let mut depth = vec![-1i32; g.num_vertices];
+    depth[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbours(u) {
+            if depth[w as usize] < 0 {
+                depth[w as usize] = depth[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    depth
+}
+
+fn workloads() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("rmat", build_csr(&kronecker(&GeneratorConfig::graph500(10, 3)))),
+        ("er", build_csr(&erdos_renyi(1 << 10, 8 << 10, 5))),
+    ]
+}
+
+#[test]
+fn fused_bookkeeping_is_bit_identical_to_separate_scans() {
+    for (name, g) in workloads() {
+        let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        for (s, gp) in [(2, 0), (2, 2)] {
+            let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+            for policy in [PolicyKind::direction_optimized(), PolicyKind::adaptive()] {
+                let fused = run_with(&pg, 1, root, policy, true, None);
+                assert!(
+                    fused.levels.iter().all(|l| l.census_vertices == 0),
+                    "{name} {s}S{gp}G: fused path must not charge census scans"
+                );
+                for threads in thread_ladder() {
+                    let sep = run_with(&pg, threads, root, policy, false, None);
+                    let what = format!("{name} {s}S{gp}G x{threads} {policy:?}");
+                    assert_eq!(fused.parent, sep.parent, "{what}: parents diverge");
+                    assert_eq!(fused.depth, sep.depth, "{what}: depths diverge");
+                    assert_eq!(fused.levels.len(), sep.levels.len(), "{what}: schedule length");
+                    for (a, b) in fused.levels.iter().zip(&sep.levels) {
+                        assert_eq!(a.level, b.level, "{what}");
+                        assert_eq!(a.direction, b.direction, "{what}: direction schedule");
+                        assert_eq!(a.frontier_size, b.frontier_size, "{what}");
+                        assert_eq!(
+                            a.frontier_degree_sum, b.frontier_degree_sum,
+                            "{what}: fused degree census diverges"
+                        );
+                        assert_eq!(a.pe_work, b.pe_work, "{what}: kernel work diverges");
+                        assert_eq!(a.comm, b.comm, "{what}: comm diverges");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pull `"key":<u64>` out of a JSON-lines record without a parser
+/// dependency (the trace writer emits flat integer fields).
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let digits: String = line[at..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+#[test]
+fn traced_decision_counters_match_a_recount_over_final_depths() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(10, 9)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    for (s, gp) in [(2, 0), (2, 2)] {
+        let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+        let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
+        let run = run_with(
+            &pg,
+            1,
+            root,
+            PolicyKind::direction_optimized(),
+            true,
+            Some(rec.clone()),
+        );
+        let jsonl = rec.to_jsonl();
+        let part0 = &pg.parts[0];
+        let mut checked = 0usize;
+        for line in jsonl.lines() {
+            if !line.contains("\"event\":\"level\"") || line.contains("\"decision\":null") {
+                continue;
+            }
+            let level = field_u64(line, "level").unwrap() as i32;
+            let fo = field_u64(line, "frontier_out_edges").unwrap();
+            let mu = field_u64(line, "unexplored_edges").unwrap();
+            // The decision after level L sees partition 0's census of the
+            // *next* frontier (depth == L+1) and of everything not yet
+            // visited (depth > L+1 in the final labeling, or unreached).
+            let (mut fo_ref, mut mu_ref) = (0u64, 0u64);
+            for li in 0..part0.num_vertices() {
+                let d = run.depth[part0.gids[li] as usize];
+                let deg = part0.degree(li) as u64;
+                if d == level + 1 {
+                    fo_ref += deg;
+                }
+                if d < 0 || d > level + 1 {
+                    mu_ref += deg;
+                }
+            }
+            assert_eq!(fo, fo_ref, "{s}S{gp}G level {level}: m_f drifted from recount");
+            assert_eq!(mu, mu_ref, "{s}S{gp}G level {level}: m_u drifted from recount");
+            checked += 1;
+        }
+        assert!(checked >= 3, "{s}S{gp}G: expected several traced decisions, got {checked}");
+    }
+}
+
+#[test]
+fn adaptive_on_fused_counters_computes_correct_bfs() {
+    for (name, g) in workloads() {
+        let hubs: Vec<u32> = (0..g.num_vertices as u32).filter(|&v| g.degree(v) > 4).collect();
+        let roots = [hubs[0], hubs[hubs.len() / 2]];
+        for (s, gp) in [(2, 0), (2, 2)] {
+            let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+            for &root in &roots {
+                let run = run_with(&pg, 4, root, PolicyKind::adaptive(), true, None);
+                assert_eq!(
+                    run.depth,
+                    reference_depths(&g, root),
+                    "{name} {s}S{gp}G root {root}: adaptive depths diverge from reference"
+                );
+                validate_graph500(&g, root, &run.parent, &run.depth).unwrap();
+            }
+        }
+    }
+}

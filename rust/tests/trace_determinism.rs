@@ -47,17 +47,25 @@ fn exec(threads: usize) -> ExecutionMode {
 }
 
 /// One traced hybrid BFS on the virtual clock: the run plus both exports.
-fn traced_bfs(pg: &PartitionedGraph, em: ExecutionMode, root: u32) -> (BfsRun, String, String) {
+fn traced_bfs_policy(
+    pg: &PartitionedGraph,
+    em: ExecutionMode,
+    root: u32,
+    policy: PolicyKind,
+) -> (BfsRun, String, String) {
     let has_gpu = pg.parts.iter().any(|p| p.kind.is_gpu());
     let mut sim = SimAccelerator::new(pg.parts.len(), pg.num_vertices);
     let accel = if has_gpu { Some(&mut sim) } else { None };
-    let cfg =
-        HybridConfig { policy: PolicyKind::direction_optimized(), exec: em, ..Default::default() };
+    let cfg = HybridConfig { policy, exec: em, ..Default::default() };
     let mut runner = HybridRunner::new(pg, cfg, accel).unwrap();
     let rec = Arc::new(TraceRecorder::new(Clock::virtual_at(0)));
     runner.set_trace(Some(rec.clone()));
     let run = runner.run(root).unwrap();
     (run, rec.to_jsonl(), rec.to_chrome())
+}
+
+fn traced_bfs(pg: &PartitionedGraph, em: ExecutionMode, root: u32) -> (BfsRun, String, String) {
+    traced_bfs_policy(pg, em, root, PolicyKind::direction_optimized())
 }
 
 fn untraced_bfs(pg: &PartitionedGraph, em: ExecutionMode, root: u32) -> BfsRun {
@@ -95,6 +103,35 @@ fn bfs_traces_are_byte_identical_across_thread_counts() {
             assert_eq!(run.depth, base_run.depth, "{s}S{gp}G x{threads}: depths diverge");
             assert_eq!(jsonl, base_jsonl, "{s}S{gp}G x{threads}: JSON-lines trace diverges");
             assert_eq!(chrome, base_chrome, "{s}S{gp}G x{threads}: chrome trace diverges");
+        }
+    }
+}
+
+#[test]
+fn adaptive_traces_are_byte_identical_and_record_tuned_thresholds() {
+    let g = build_csr(&kronecker(&GeneratorConfig::graph500(11, 21)));
+    let root = (0..g.num_vertices as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    for (s, gp) in [(2, 0), (2, 2)] {
+        let (pg, _) = specialized_partition(&g, &hw(s, gp), &LayoutOptions::paper());
+        let (base_run, base_jsonl, base_chrome) =
+            traced_bfs_policy(&pg, ExecutionMode::Sequential, root, PolicyKind::adaptive());
+        // The tuner's per-level thresholds land in the decision records:
+        // a hub root explodes at level 0 (growth >> 4), so the growth
+        // clamp pins that level's alpha at 4 * alpha0 = 56. The f64
+        // Display path prints integral thresholds bare.
+        assert!(
+            base_jsonl.contains("\"alpha\":56"),
+            "tuned alpha missing from the adaptive trace"
+        );
+        assert!(base_jsonl.lines().any(|l| l.contains("\"event\":\"level\"")));
+        for threads in thread_ladder() {
+            let (run, jsonl, chrome) =
+                traced_bfs_policy(&pg, exec(threads), root, PolicyKind::adaptive());
+            let what = format!("{s}S{gp}G x{threads} adaptive");
+            assert_eq!(run.parent, base_run.parent, "{what}: parents diverge");
+            assert_eq!(run.depth, base_run.depth, "{what}: depths diverge");
+            assert_eq!(jsonl, base_jsonl, "{what}: JSON-lines trace diverges");
+            assert_eq!(chrome, base_chrome, "{what}: chrome trace diverges");
         }
     }
 }
